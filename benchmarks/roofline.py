@@ -1,0 +1,197 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, three terms in *seconds per step*:
+
+  compute    = HLO_dot_FLOPs_per_device / peak_FLOPs        (197e12 bf16)
+  memory     = HBM_bytes_per_device / HBM_bw                (819e9 B/s)
+  collective = collective_bytes_per_device / link_bw        (50e9 B/s)
+
+FLOPs and collective bytes come from the loop-corrected HLO analysis
+recorded by the dry-run (``dot_flops_per_device``, ``collectives``).  HBM
+bytes are analytic (XLA's ``bytes accessed`` is also loop-undercounted and
+conflates cache levels): per step we charge
+
+  train   : 2·params_local (read fwd+bwd w/ remat ≈ 3, write 1) + 2·opt
+            + grads + 2·activation-checkpoints + batch I/O
+  prefill : params_local + cache write + 2·activation stream
+  decode  : active-params read + cache read+write + state I/O
+
+MODEL_FLOPS = 6·N_active·tokens (train) / 2·N_active·tokens (inference) —
+the "useful" numerator; its ratio to HLO dot-FLOPs exposes remat/capacity
+waste per cell.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Optional
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.models.model import (  # noqa: E402
+    count_embedding_params,
+    count_params_analytic,
+)
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s per chip
+LINK_BW = 50e9  # B/s per ICI link
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·D (train) or 2·N_active·D (serve); D = processed tokens."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = count_params_analytic(cfg, active_only=True)
+    n_embed_in = cfg.vocab_size * cfg.d_model * max(cfg.n_codebooks, 1)
+    n = n_active - n_embed_in  # input-embedding gathers aren't matmul flops
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one token per sequence
+    return 2.0 * n * tokens
+
+
+def hbm_bytes_per_device(rec: dict) -> float:
+    """Analytic HBM traffic per device per step (see module docstring)."""
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["mesh_info"]["n_devices"]
+    p_bytes = rec["params_total"] * (2 if cfg.param_dtype == "bfloat16" else 4)
+    p_local = p_bytes / n_dev
+    opt_dt = rec.get("options", {}).get("opt_state_dtype", "float32")
+    opt_local = 2 * rec["params_total"] * (2 if opt_dt == "bfloat16" else 4) / n_dev
+    tokens_local = shape.global_batch * shape.seq_len / n_dev
+    act_ckpt = cfg.n_layers * tokens_local * cfg.d_model * 2  # bf16 residuals
+    if shape.kind == "train":
+        # params: read fwd + read (remat recompute) + read bwd-transpose ≈ 3
+        # reads + 1 write; grads 1 write + 1 read; opt read+write
+        return 4 * p_local + 2 * (p_bytes / n_dev) + 2 * opt_local + 2 * act_ckpt
+    if shape.kind == "prefill":
+        cache = _cache_bytes(cfg, shape) / n_dev
+        return p_local + cache + 2 * act_ckpt
+    # decode
+    active_bytes = rec["params_active"] * (
+        2 if cfg.param_dtype == "bfloat16" else 4
+    ) / n_dev
+    cache = _cache_bytes(cfg, shape) / n_dev
+    return active_bytes + cache  # cache read dominates; write is 1 token
+
+
+def _cache_bytes(cfg, shape) -> float:
+    B, T = shape.global_batch, shape.seq_len
+    total = 0.0
+    from repro.models.transformer import segment_layout
+
+    for pattern, count, _ in segment_layout(cfg):
+        for kind in pattern:
+            if kind == "attn":
+                total += count * 2 * B * T * cfg.n_kv_heads * cfg.head_dim * 2
+            elif kind == "local":
+                w = min(T, cfg.window)
+                total += count * 2 * B * w * cfg.n_kv_heads * cfg.head_dim * 2
+            elif kind == "mla":
+                a = cfg.mla
+                total += count * B * T * (a.kv_lora_rank + a.qk_rope_head_dim) * 2
+            elif kind == "ssm":
+                s = cfg.ssm
+                d_inner = s.expand * cfg.d_model
+                H = d_inner // s.head_dim
+                total += count * B * H * s.head_dim * s.d_state * 4
+            elif kind == "rglru":
+                w = cfg.rglru.lru_width or cfg.d_model
+                total += count * B * w * 4
+    return total
+
+
+def roofline_terms(rec: dict) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    flops = rec.get("dot_flops_per_device", 0.0)
+    coll_raw = sum(rec.get("collectives", {}).values())
+    # TPU projection: the CPU backend emulates bf16 dots in f32, dragging
+    # adjacent collectives to f32; on TPU they carry bf16 (half the bytes).
+    coll = coll_raw - 0.5 * rec.get("collective_bytes_f32", 0.0)
+    hbm = hbm_bytes_per_device(rec)
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm / HBM_BW
+    t_n = coll / LINK_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+                   key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    n_dev = rec["mesh_info"]["n_devices"]
+    hlo_total = flops * n_dev
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        "bound_step_s": max(t_c, t_m, t_n),
+        "mfu_upper_bound": (mf / n_dev / PEAK_FLOPS) / max(t_c, t_m, t_n)
+        if max(t_c, t_m, t_n) > 0
+        else 0.0,
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "collectives": rec.get("collectives", {}),
+        "collective_bytes_raw": coll_raw,
+        "collective_bytes_tpu_proj": coll,
+    }
+
+
+def load(path: str) -> list:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(paths) -> list:
+    rows = []
+    for p in paths:
+        for rec in load(p):
+            t = roofline_terms(rec)
+            if t:
+                rows.append(t)
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=[
+        "benchmarks/results/dryrun_single.json",
+    ])
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = table(args.paths)
+    hdr = (
+        f"{'arch':26s} {'shape':11s} {'mesh':8s} {'compute':>9s} {'memory':>9s}"
+        f" {'collectv':>9s} {'bound':>10s} {'useful':>7s} {'MFU_ub':>7s} {'GiB':>7s}"
+    )
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['arch']:26s} {r['shape']:11s} {r['mesh']:8s}"
+            f" {r['compute_s']*1e3:8.1f}ms {r['memory_s']*1e3:8.1f}ms"
+            f" {r['collective_s']*1e3:8.1f}ms {r['dominant']:>10s}"
+            f" {100*r['useful_ratio']:6.1f}% {100*r['mfu_upper_bound']:6.1f}%"
+            f" {r['peak_gib']:7.2f}"
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

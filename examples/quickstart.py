@@ -1,0 +1,45 @@
+"""Quickstart: reproduce the paper's Table 1 workload and predict QoS/cost.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import ServerlessSimulator
+from repro.core.cost import estimate_cost
+
+
+def main():
+    # The paper's reference workload: Poisson arrivals at 0.9 req/s, warm
+    # service 1.991 s, cold service 2.244 s, AWS-style 10-min expiration.
+    sim = ServerlessSimulator.from_rates(
+        arrival_rate=0.9,
+        warm_service_time=1.991,
+        cold_service_time=2.244,
+        expiration_threshold=600.0,
+        sim_time=1e5,
+        skip_time=100.0,
+        slots=64,
+    )
+    summary = sim.run(jax.random.key(0), replicas=4)
+
+    print("== steady-state prediction (paper Table 1) ==")
+    for k, v in summary.to_dict().items():
+        print(f"  {k:22s} {v:.6g}")
+    lo, hi = summary.cold_start_prob_ci()
+    print(f"  cold-start 95% CI      [{lo:.5f}, {hi:.5f}]")
+
+    cost = estimate_cost(summary)
+    print("== cost over the horizon (per Monte-Carlo replica) ==")
+    print(f"  developer requests   ${cost.developer_request_cost:.4f}")
+    print(f"  developer runtime    ${cost.developer_runtime_cost:.4f}")
+    print(f"  provider infra       ${cost.provider_infra_cost:.4f}")
+    print(f"  provider margin      {cost.provider_margin_ratio:.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""What-if analysis (paper §4.3 / Fig 5): sweep expiration thresholds ×
+arrival rates, print the QoS/cost grid and the SLO-optimal threshold.
+
+    PYTHONPATH=src python examples/whatif_analysis.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.core import ExpSimProcess, SimulationConfig
+from repro.core.whatif import sweep
+
+
+def main():
+    base = SimulationConfig(
+        arrival_process=ExpSimProcess(rate=0.9),
+        warm_service_process=ExpSimProcess(rate=1 / 1.991),
+        cold_service_process=ExpSimProcess(rate=1 / 2.244),
+        expiration_threshold=600.0,
+        sim_time=2e4,
+        skip_time=100.0,
+    )
+    rates = [0.2, 0.5, 1.0, 2.0]
+    thresholds = [60.0, 300.0, 600.0, 1200.0]
+    res = sweep(base, rates, thresholds, jax.random.key(0), replicas=2)
+
+    print("cold-start probability [%] (rows: threshold s, cols: rate req/s)")
+    print("          " + "".join(f"{r:>9.1f}" for r in rates))
+    for i, t in enumerate(thresholds):
+        row = "".join(f"{100*res.cold_start_prob[i, j]:>9.3f}" for j in range(len(rates)))
+        print(f"  {t:>6.0f}s {row}")
+
+    print("provider infra cost [$] per horizon")
+    print("          " + "".join(f"{r:>9.1f}" for r in rates))
+    for i, t in enumerate(thresholds):
+        row = "".join(f"{res.provider_cost[i, j]:>9.4f}" for j in range(len(rates)))
+        print(f"  {t:>6.0f}s {row}")
+
+    for j, rate in enumerate(rates):
+        best = res.best_threshold(j, max_cold_prob=0.01)
+        print(f"smallest threshold meeting 1% cold SLO @ {rate} req/s: {best:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

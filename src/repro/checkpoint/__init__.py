@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import CheckpointManager
+
+__all__ = ["CheckpointManager"]

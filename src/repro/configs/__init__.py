@@ -1,0 +1,25 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    SSMConfig,
+    RGLRUConfig,
+    ShapeSpec,
+    SHAPES,
+)
+from repro.configs.registry import get_config, list_archs, get_smoke_config
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "RGLRUConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "get_config",
+    "get_smoke_config",
+    "list_archs",
+]

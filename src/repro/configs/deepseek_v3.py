@@ -1,0 +1,71 @@
+"""deepseek-v3-671b [moe]: 61L d7168 128H vocab 129280, MLA + 256e top-8.
+
+[arXiv:2412.19437; hf] — Multi-head Latent Attention (q_lora 1536,
+kv_lora 512, nope 128 + rope 64, v 128); first 3 layers dense (d_ff
+18432); remaining 58 layers 1 shared + 256 routed experts top-8 (d_ff
+2048); multi-token prediction (depth 1).  ≈671B total / ≈37B active.
+"""
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,
+        head_dim=128,
+        d_ff=18432,  # dense prologue layers
+        vocab_size=129280,
+        segments=((("mla",), 3), (("mla",), 58)),
+        mla=MLAConfig(
+            q_lora_rank=1536,
+            kv_lora_rank=512,
+            qk_nope_head_dim=128,
+            qk_rope_head_dim=64,
+            v_head_dim=128,
+        ),
+        moe=MoEConfig(
+            n_experts=256,
+            top_k=8,
+            n_shared=1,
+            d_ff_expert=2048,
+            first_moe_layer=3,
+            moe_layer_period=1,
+        ),
+        mtp_depth=1,
+        param_dtype="bfloat16",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=16,
+        d_ff=160,
+        vocab_size=256,
+        segments=((("mla",), 1), (("mla",), 2)),
+        mla=MLAConfig(
+            q_lora_rank=32,
+            kv_lora_rank=16,
+            qk_nope_head_dim=16,
+            qk_rope_head_dim=8,
+            v_head_dim=16,
+        ),
+        moe=MoEConfig(
+            n_experts=4,
+            top_k=2,
+            n_shared=1,
+            d_ff_expert=32,
+            first_moe_layer=1,
+            moe_layer_period=1,
+        ),
+        mtp_depth=1,
+        remat=False,
+    )

@@ -1,0 +1,40 @@
+"""gemma-2b [dense]: 18L d2048 8H (MQA kv=1) d_ff 16384 vocab 256000.
+
+[arXiv:2403.08295; hf] — GeGLU, head_dim 256, MQA, tied embeddings with
+sqrt(d_model) input scaling.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=256000,
+        activation="gelu",
+        tie_embeddings=True,
+        embedding_scale=True,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma-2b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+        activation="gelu",
+        tie_embeddings=True,
+        embedding_scale=True,
+        remat=False,
+    )

@@ -1,0 +1,34 @@
+"""granite-8b [dense]: 36L d4096 32H (GQA kv=8) d_ff 14336 vocab 49152.
+
+[arXiv:2405.04324; hf] — llama-architecture code model: SwiGLU, GQA,
+untied embeddings.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-8b",
+        n_layers=36,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=14336,
+        vocab_size=49152,
+        rope_theta=10000.0,
+        activation="silu",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-8b-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=160,
+        vocab_size=256,
+        remat=False,
+    )

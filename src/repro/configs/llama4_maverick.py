@@ -1,0 +1,55 @@
+"""llama4-maverick-400b-a17b [moe]: 48L d5120 40H (GQA kv=8) vocab 202048.
+
+[hf:meta-llama/Llama-4-*; unverified] — alternating dense / MoE layers
+(d_ff 16384 dense; MoE = 1 shared + 128 routed experts, top-1, d_ff 8192
+each) ≈ 400B total / ≈17B active, early-fusion text backbone.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-400b-a17b",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=16384,  # dense (non-MoE) layers
+        vocab_size=202048,
+        rope_theta=500000.0,
+        segments=((("attn", "attn"), 24),),
+        moe=MoEConfig(
+            n_experts=128,
+            top_k=1,
+            n_shared=1,
+            d_ff_expert=8192,
+            first_moe_layer=1,
+            moe_layer_period=2,
+        ),
+        param_dtype="bfloat16",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama4-maverick-smoke",
+        n_layers=4,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=16,
+        d_ff=192,
+        vocab_size=256,
+        segments=((("attn", "attn"), 2),),
+        moe=MoEConfig(
+            n_experts=4,
+            top_k=1,
+            n_shared=1,
+            d_ff_expert=96,
+            first_moe_layer=1,
+            moe_layer_period=2,
+        ),
+        remat=False,
+    )

@@ -1,0 +1,45 @@
+"""musicgen-large [audio]: 48L d2048 32H (MHA kv=32) d_ff 8192 vocab 2048.
+
+[arXiv:2306.05284; hf] — decoder-only over EnCodec tokens: 4 codebooks
+(summed embeddings in, 4 LM heads out), plain GELU MLP (non-GLU).  The
+EnCodec/T5 frontends are STUBS: ``input_specs()`` supplies pre-tokenised
+codebook ids and 64 precomputed conditioning embeddings (prefix).  The
+delay-pattern interleave is a data-layer concern (see data/workload).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large",
+        n_layers=48,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab_size=2048,
+        activation="gelu",
+        ffn_type="mlp",
+        n_codebooks=4,
+        n_cond_embeds=64,
+        prefix_len=64,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        vocab_size=64,
+        activation="gelu",
+        ffn_type="mlp",
+        n_codebooks=4,
+        n_cond_embeds=8,
+        prefix_len=8,
+        remat=False,
+    )

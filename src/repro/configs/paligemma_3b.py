@@ -1,0 +1,46 @@
+"""paligemma-3b [vlm]: gemma-2b backbone + SigLIP stub, vocab 257216.
+
+[arXiv:2407.07726; hf] — the SigLIP-400M vision tower is a STUB per the
+assignment: ``input_specs()`` supplies 256 precomputed patch embeddings
+(B, 256, d_model); the backbone applies a prefix-LM mask (bidirectional
+attention over the image prefix, causal over text).
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab_size=257216,
+        activation="gelu",
+        tie_embeddings=True,
+        embedding_scale=True,
+        n_prefix_embeds=256,
+        prefix_len=256,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=2,
+        n_kv_heads=1,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=256,
+        activation="gelu",
+        tie_embeddings=True,
+        embedding_scale=True,
+        n_prefix_embeds=8,
+        prefix_len=8,
+        remat=False,
+    )

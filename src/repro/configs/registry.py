@@ -1,0 +1,54 @@
+"""Architecture registry (filled by the per-arch config modules)."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHS = [
+    "llama3_2_1b",
+    "granite_8b",
+    "gemma_2b",
+    "stablelm_12b",
+    "mamba2_2_7b",
+    "paligemma_3b",
+    "musicgen_large",
+    "llama4_maverick",
+    "deepseek_v3",
+    "recurrentgemma_9b",
+]
+
+# public ids (spec names) → module names
+ALIASES = {
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-8b": "granite_8b",
+    "gemma-2b": "gemma_2b",
+    "stablelm-12b": "stablelm_12b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "paligemma-3b": "paligemma_3b",
+    "musicgen-large": "musicgen_large",
+    "llama4-maverick-400b-a17b": "llama4_maverick",
+    "deepseek-v3-671b": "deepseek_v3",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+}
+
+
+def _module(arch: str):
+    name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "_"))
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ALIASES)}")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    return _module(arch).smoke_config()
+
+
+def list_archs() -> list[str]:
+    return sorted(ALIASES)

@@ -1,0 +1,37 @@
+"""stablelm-12b [dense]: 40L d5120 32H (GQA kv=8) d_ff 13824 vocab 100352.
+
+[hf:stabilityai/stablelm-2-12b] — SwiGLU, partial rotary (25%), per-head
+QK normalisation.
+"""
+
+from repro.configs.base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b",
+        n_layers=40,
+        d_model=5120,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=13824,
+        vocab_size=100352,
+        partial_rotary=0.25,
+        qk_norm=True,
+        activation="silu",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="stablelm-12b-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        partial_rotary=0.25,
+        qk_norm=True,
+        remat=False,
+    )

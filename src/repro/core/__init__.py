@@ -1,0 +1,58 @@
+"""SimFaaS core: vectorised serverless-platform performance simulation in JAX.
+
+This package is the reproduction of the paper's contribution
+(Mahmoudi & Khazaei, "SimFaaS: A Performance Simulator for Serverless
+Computing Platforms", 2021), re-architected for SIMD hardware: the
+event-driven loop becomes an arrival-driven ``lax.scan`` over a fixed-size
+instance pool with closed-form integration between arrivals, and thousands
+of Monte-Carlo replicas run under ``vmap``.
+
+Importing this package enables 64-bit mode in JAX: simulated clocks reach
+1e6+ seconds and sub-second billing resolution requires f64 accumulators.
+Model/serving code elsewhere in ``repro`` is dtype-explicit (bf16/f32) and
+unaffected.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from repro.core.processes import (  # noqa: E402
+    ExpSimProcess,
+    GaussianSimProcess,
+    DeterministicSimProcess,
+    WeibullSimProcess,
+    GammaSimProcess,
+    LogNormalSimProcess,
+    ParetoSimProcess,
+    BatchArrivalProcess,
+    SimProcess,
+)
+from repro.core.simulator import (  # noqa: E402
+    ServerlessSimulator,
+    SimulationConfig,
+    SimulationSummary,
+)
+from repro.core.temporal import (  # noqa: E402
+    InstanceSnapshot,
+    ServerlessTemporalSimulator,
+)
+from repro.core.par_simulator import ParServerlessSimulator  # noqa: E402
+
+__all__ = [
+    "SimProcess",
+    "ExpSimProcess",
+    "GaussianSimProcess",
+    "DeterministicSimProcess",
+    "WeibullSimProcess",
+    "GammaSimProcess",
+    "LogNormalSimProcess",
+    "ParetoSimProcess",
+    "BatchArrivalProcess",
+    "ServerlessSimulator",
+    "SimulationConfig",
+    "SimulationSummary",
+    "ServerlessTemporalSimulator",
+    "InstanceSnapshot",
+    "ParServerlessSimulator",
+]

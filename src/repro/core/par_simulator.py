@@ -1,0 +1,258 @@
+"""ParServerlessSimulator: per-instance concurrency value > 1.
+
+Paper §3.1: "we extended the ServerlessSimulator class to create
+ParServerlessSimulator, which simulates serverless platforms that allow
+[multiple requests] in the function instances but have a scaling algorithm
+similar to scale-per-request platforms" — the Knative / Cloud Run
+*concurrency value* pattern (Fig. 1).
+
+Semantics implemented (documented choices):
+* Each instance holds up to ``concurrency_value`` in-flight requests,
+  processed concurrently; per-request service times are i.i.d. draws
+  (processor-sharing slowdown is not modelled — same as the original tool).
+* Routing prefers the **newest instance with spare capacity** (consistent
+  with the base platform's newest-first policy and Fig. 1's packing).
+* A request that finds no spare capacity anywhere triggers a **cold start**
+  (new instance) unless the max concurrency level is reached → rejection.
+* An instance expires when it has been *fully idle* (no in-flight requests)
+  for ``expiration_threshold`` seconds.
+
+State per replica: ``finish[M, c]`` per-request-slot finish times,
+``creation[M]``, ``alive[M]``.  The instance-level lifecycle reuses the
+closed-form integrals with ``busy_until := max_j finish[:, j]``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulator import (
+    SimulationConfig,
+    SimulationSummary,
+    interval_integrals,
+    histogram_update,
+    _NEG_INF,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ParSimulationSummary(SimulationSummary):
+    """Adds the request-level concurrency integral."""
+
+    time_in_flight: Optional[np.ndarray] = None  # ∫ #in-flight-requests dt
+
+    @property
+    def avg_in_flight(self) -> float:
+        return float(self.time_in_flight.mean() / self.measured_time)
+
+    @property
+    def avg_instance_occupancy(self) -> float:
+        """Mean in-flight requests per *running* instance-second."""
+        return float(
+            self.time_in_flight.sum() / np.maximum(self.time_running.sum(), 1e-12)
+        )
+
+
+def _par_scan_fn(cfg: SimulationConfig, concurrency: int):
+    t_exp = cfg.expiration_threshold
+    t_end = cfg.sim_time
+    skip = cfg.skip_time
+    max_c = cfg.max_concurrency
+
+    def step(state, xs):
+        (alive, creation, finish, t_prev, acc) = state
+        dt, warm_s, cold_s = xs
+        t = t_prev + dt.astype(jnp.float64)
+        busy_until = finish.max(axis=1)
+
+        lo = jnp.clip(t_prev, skip, t_end)
+        hi = jnp.clip(t, skip, t_end)
+        run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
+        # request-level in-flight integral: every request slot contributes
+        # its overlap with the window (stale finishes clamp to zero).
+        in_flight_t = jnp.where(
+            alive[:, None], jnp.clip(jnp.minimum(finish, hi) - lo, 0.0, None), 0.0
+        ).sum()
+
+        if cfg.track_histogram:
+            hist = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
+        else:
+            hist = acc["hist"]
+
+        expire_time = busy_until + t_exp
+        expired_now = alive & (expire_time <= t)
+        lifespan_ok = expired_now & (expire_time > skip) & (expire_time <= t_end)
+        lifespan_sum = acc["lifespan_sum"] + jnp.where(
+            lifespan_ok, expire_time - creation, 0.0
+        ).sum()
+        lifespan_count = acc["lifespan_count"] + lifespan_ok.sum()
+        alive = alive & ~expired_now
+
+        active = t <= t_end
+        in_flight = (finish > t).sum(axis=1)  # per instance
+        has_cap = alive & (in_flight < concurrency)
+        any_cap = has_cap.any()
+        warm_idx = jnp.argmax(jnp.where(has_cap, creation, _NEG_INF))
+        free_mask = ~alive
+        any_free = free_mask.any()
+        free_idx = jnp.argmax(free_mask)
+        n_alive = alive.sum()
+
+        can_cold = (~any_cap) & (n_alive < max_c) & any_free
+        overflow = (~any_cap) & (n_alive < max_c) & (~any_free) & active
+        is_warm = any_cap & active
+        is_cold = can_cold & active
+        is_reject = (~any_cap) & (~can_cold) & active
+
+        inst = jnp.where(is_warm, warm_idx, free_idx)
+        # choose the first finished request-slot on the chosen instance
+        sub_free = finish[inst] <= t
+        sub = jnp.argmax(sub_free)
+        service = jnp.where(is_warm, warm_s, cold_s).astype(jnp.float64)
+        assign = is_warm | is_cold
+        # A cold start repurposes a (possibly stale) slot: wipe it first.
+        wiped_row = jnp.where(is_cold, jnp.full((concurrency,), _NEG_INF), finish[inst])
+        new_row = wiped_row.at[sub].set(
+            jnp.where(assign, t + service, wiped_row[sub])
+        )
+        finish = finish.at[inst].set(new_row)
+        creation = creation.at[inst].set(jnp.where(is_cold, t, creation[inst]))
+        alive = alive.at[inst].set(alive[inst] | is_cold)
+
+        counted = t > skip
+        acc = dict(
+            n_cold=acc["n_cold"] + (is_cold & counted),
+            n_warm=acc["n_warm"] + (is_warm & counted),
+            n_reject=acc["n_reject"] + (is_reject & counted),
+            time_running=acc["time_running"] + run_t,
+            time_idle=acc["time_idle"] + idle_t,
+            time_in_flight=acc["time_in_flight"] + in_flight_t,
+            sum_cold_resp=acc["sum_cold_resp"]
+            + jnp.where(is_cold & counted, cold_s, 0.0),
+            sum_warm_resp=acc["sum_warm_resp"]
+            + jnp.where(is_warm & counted, warm_s, 0.0),
+            lifespan_sum=lifespan_sum,
+            lifespan_count=lifespan_count,
+            overflow=acc["overflow"] + overflow,
+            hist=hist,
+        )
+        return (alive, creation, finish, t, acc), None
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _simulate_par_batch(cfg: SimulationConfig, concurrency: int, dts, warms, colds):
+    step = _par_scan_fn(cfg, concurrency)
+    m = cfg.slots
+
+    def one(dt_row, warm_row, cold_row):
+        z = jnp.zeros((), dtype=jnp.float64)
+        zi = jnp.zeros((), dtype=jnp.int64)
+        acc = dict(
+            n_cold=zi,
+            n_warm=zi,
+            n_reject=zi,
+            time_running=z,
+            time_idle=z,
+            time_in_flight=z,
+            sum_cold_resp=z,
+            sum_warm_resp=z,
+            lifespan_sum=z,
+            lifespan_count=zi,
+            overflow=zi,
+            hist=jnp.zeros((cfg.hist_bins,), dtype=jnp.float64),
+        )
+        state0 = (
+            jnp.zeros((m,), dtype=bool),
+            jnp.full((m,), _NEG_INF, dtype=jnp.float64),
+            jnp.full((m, concurrency), _NEG_INF, dtype=jnp.float64),
+            jnp.zeros((), jnp.float64),
+            acc,
+        )
+        state, _ = jax.lax.scan(step, state0, (dt_row, warm_row, cold_row))
+        (alive, creation, finish, t_prev, acc) = state
+        # tail flush
+        busy_until = finish.max(axis=1)
+        lo = jnp.clip(t_prev, cfg.skip_time, cfg.sim_time)
+        hi = jnp.asarray(cfg.sim_time, dtype=jnp.float64)
+        run_t, idle_t = interval_integrals(
+            alive, busy_until, cfg.expiration_threshold, lo, hi
+        )
+        in_flight_t = jnp.where(
+            alive[:, None], jnp.clip(jnp.minimum(finish, hi) - lo, 0.0, None), 0.0
+        ).sum()
+        acc["time_running"] = acc["time_running"] + run_t
+        acc["time_idle"] = acc["time_idle"] + idle_t
+        acc["time_in_flight"] = acc["time_in_flight"] + in_flight_t
+        if cfg.track_histogram:
+            acc["hist"] = histogram_update(
+                acc["hist"], alive, busy_until, cfg.expiration_threshold, lo, hi
+            )
+        expire_time = busy_until + cfg.expiration_threshold
+        tail_exp = alive & (expire_time <= hi) & (expire_time > cfg.skip_time)
+        acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
+            tail_exp, expire_time - creation, 0.0
+        ).sum()
+        acc["lifespan_count"] = acc["lifespan_count"] + tail_exp.sum()
+        return acc, t_prev
+
+    return jax.vmap(one)(dts, warms, colds)
+
+
+class ParServerlessSimulator:
+    """Concurrency-value platform simulator (Knative / Cloud Run style)."""
+
+    def __init__(self, config: SimulationConfig, concurrency_value: int = 1):
+        if concurrency_value < 1:
+            raise ValueError("concurrency_value must be >= 1")
+        self.config = config
+        self.concurrency_value = concurrency_value
+
+    def run(
+        self,
+        key: Array,
+        replicas: int = 8,
+        steps: Optional[int] = None,
+        samples=None,
+    ) -> ParSimulationSummary:
+        cfg = self.config
+        if samples is None:
+            n = steps or cfg.steps_needed()
+            k1, k2, k3 = jax.random.split(key, 3)
+            samples = (
+                cfg.arrival_process.sample(k1, (replicas, n)),
+                cfg.warm_service_process.sample(k2, (replicas, n)),
+                cfg.cold_service_process.sample(k3, (replicas, n)),
+            )
+        dts, warms, colds = samples
+        acc, t_last = _simulate_par_batch(cfg, self.concurrency_value, dts, warms, colds)
+        acc = jax.tree.map(np.asarray, acc)
+        t_last = np.asarray(t_last)
+        if (t_last < cfg.sim_time).any():
+            raise RuntimeError("arrivals ended before sim_time; pass larger steps")
+        if acc["overflow"].sum() > 0:
+            raise RuntimeError("instance-pool overflow; raise SimulationConfig.slots")
+        return ParSimulationSummary(
+            n_cold=acc["n_cold"],
+            n_warm=acc["n_warm"],
+            n_reject=acc["n_reject"],
+            time_running=acc["time_running"],
+            time_idle=acc["time_idle"],
+            sum_cold_resp=acc["sum_cold_resp"],
+            sum_warm_resp=acc["sum_warm_resp"],
+            lifespan_sum=acc["lifespan_sum"],
+            lifespan_count=acc["lifespan_count"],
+            measured_time=cfg.sim_time - cfg.skip_time,
+            histogram=acc["hist"] if cfg.track_histogram else None,
+            overflow=acc["overflow"],
+            time_in_flight=acc["time_in_flight"],
+        )

@@ -1,0 +1,155 @@
+"""Pure-Python event-driven reference simulator (the system-level oracle).
+
+This mirrors the *original* ``pacslab/simfaas`` event-driven architecture:
+a clock that advances to the next event among {arrival, instance departure,
+instance expiration}, instance objects with explicit state transitions, and
+newest-first warm routing.  It consumes the same pre-drawn sample arrays as
+the vectorised JAX simulator, so the two must agree **seed-exactly** on
+every cold/warm/reject decision and (to float tolerance) on every metric
+integral.  Used in tests and as the "ground truth" stand-in for the paper's
+AWS traces (no AWS access in this environment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Instance:
+    creation: float
+    busy_until: float  # running until here, idle afterwards
+
+    def is_idle(self, t: float) -> bool:
+        return self.busy_until <= t
+
+    def expire_time(self, t_exp: float) -> float:
+        return self.busy_until + t_exp
+
+
+@dataclasses.dataclass
+class PyRefResults:
+    n_cold: int = 0
+    n_warm: int = 0
+    n_reject: int = 0
+    time_running: float = 0.0
+    time_idle: float = 0.0
+    sum_cold_resp: float = 0.0
+    sum_warm_resp: float = 0.0
+    lifespan_sum: float = 0.0
+    lifespan_count: int = 0
+    histogram: Optional[np.ndarray] = None
+
+    @property
+    def cold_start_prob(self) -> float:
+        return self.n_cold / max(self.n_cold + self.n_warm, 1)
+
+    @property
+    def rejection_prob(self) -> float:
+        n = self.n_cold + self.n_warm + self.n_reject
+        return self.n_reject / max(n, 1)
+
+
+def simulate_pyref(
+    dts: np.ndarray,
+    warms: np.ndarray,
+    colds: np.ndarray,
+    expiration_threshold: float,
+    max_concurrency: int,
+    sim_time: float,
+    skip_time: float = 0.0,
+    hist_bins: int = 0,
+    routing: str = "newest",
+) -> PyRefResults:
+    """Event-driven simulation consuming pre-drawn samples.
+
+    ``dts/warms/colds`` are 1-D f32 arrays (one entry per arrival; the warm
+    and cold samples are both drawn per arrival, and whichever matches the
+    start type is consumed — the same convention as the JAX simulator).
+    """
+    t_exp = float(expiration_threshold)
+    res = PyRefResults()
+    hist = np.zeros(hist_bins, dtype=np.float64) if hist_bins else None
+    pool: List[_Instance] = []
+    t_prev = 0.0
+
+    def integrate(lo: float, hi: float):
+        """Exact integrals + histogram over (lo, hi] given the frozen pool."""
+        if hi <= lo:
+            return
+        for inst in pool:
+            run = min(inst.busy_until, hi) - lo
+            if run > 0:
+                res.time_running += run
+            idle = min(inst.expire_time(t_exp), hi) - max(inst.busy_until, lo)
+            if idle > 0:
+                res.time_idle += idle
+        if hist is not None:
+            events = sorted(
+                e for e in (i.expire_time(t_exp) for i in pool) if lo < e <= hi
+            )
+            n0 = sum(1 for i in pool if i.expire_time(t_exp) > lo)
+            prev = lo
+            count = n0
+            for e in events:
+                hist[min(count, hist_bins - 1)] += e - prev
+                prev, count = e, count - 1
+            hist[min(max(count, 0), hist_bins - 1)] += hi - prev
+
+    for dt, warm_s, cold_s in zip(
+        np.asarray(dts, np.float32),
+        np.asarray(warms, np.float32),
+        np.asarray(colds, np.float32),
+    ):
+        t = t_prev + float(dt)
+        lo = min(max(t_prev, skip_time), sim_time)
+        hi = min(max(t, skip_time), sim_time)
+        integrate(lo, hi)
+
+        # expire-first tie rule, matching the vectorised simulator
+        survivors = []
+        for inst in pool:
+            e = inst.expire_time(t_exp)
+            if e <= t:
+                if skip_time < e <= sim_time:
+                    res.lifespan_sum += e - inst.creation
+                    res.lifespan_count += 1
+            else:
+                survivors.append(inst)
+        pool[:] = survivors
+
+        if t > sim_time:
+            t_prev = t
+            continue
+
+        idle = [i for i in pool if i.is_idle(t)]
+        counted = t > skip_time
+        if idle:
+            pick = max if routing == "newest" else min
+            target = pick(idle, key=lambda i: i.creation)
+            target.busy_until = t + float(warm_s)
+            if counted:
+                res.n_warm += 1
+                res.sum_warm_resp += float(warm_s)
+        elif len(pool) < max_concurrency:
+            pool.append(_Instance(creation=t, busy_until=t + float(cold_s)))
+            if counted:
+                res.n_cold += 1
+                res.sum_cold_resp += float(cold_s)
+        else:
+            if counted:
+                res.n_reject += 1
+        t_prev = t
+
+    # tail flush (t_last, sim_time]
+    integrate(max(t_prev, skip_time), sim_time)
+    for inst in pool:
+        e = inst.expire_time(t_exp)
+        if skip_time < e <= sim_time:
+            res.lifespan_sum += e - inst.creation
+            res.lifespan_count += 1
+    res.histogram = hist
+    return res

@@ -1,0 +1,438 @@
+"""ServerlessSimulator: vectorised scale-per-request FaaS simulation.
+
+Semantics (faithful to the paper / original ``simfaas``):
+
+* An arrival with at least one *idle* instance is a **warm start** served by
+  the **newest** idle instance (max creation time — priority routing,
+  McGrath & Brenner 2017).
+* Otherwise, if the live-instance count is below the *maximum concurrency
+  level*, a new instance is created (**cold start**) and serves the request
+  (cold response time includes provisioning).
+* Otherwise the request is **rejected**.
+* An instance that stays idle for ``expiration_threshold`` seconds after
+  finishing its last request is terminated; tie with an arrival at the exact
+  same instant resolves expire-first (probability-zero for continuous
+  arrival processes).
+
+TPU-native re-architecture (see DESIGN.md §2): one ``lax.scan`` step per
+*arrival*; between consecutive arrivals every instance's trajectory
+(running → idle → expired) is closed-form, so exact time-integrals of the
+running/idle/total instance counts — the billing- and cost-relevant
+quantities — are accumulated analytically.  The sample path is *identical*
+to the event-driven original given the same random draws (cross-validated
+seed-exactly against ``core/pyref.py``).
+
+State layout per replica (struct-of-arrays over ``slots``):
+  ``alive``      bool[M]   instance exists
+  ``creation``   f64[M]    creation timestamp (routing priority)
+  ``busy_until`` f64[M]    finish time of the last assigned request; the
+                           instance is running until then, idle afterwards,
+                           and expires at ``busy_until + expiration_threshold``
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.processes import ExpSimProcess, SimProcess
+
+Array = jax.Array
+
+_NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SimulationConfig:
+    """Static simulation parameters (hashable: used as a jit static arg)."""
+
+    arrival_process: SimProcess
+    warm_service_process: SimProcess
+    cold_service_process: SimProcess
+    expiration_threshold: float = 600.0
+    max_concurrency: int = 1000
+    sim_time: float = 1e5
+    skip_time: float = 100.0  # warm-up transient excluded from metrics
+    slots: int = 64  # instance-pool array size (>= peak live instances)
+    # warm routing policy: "newest" (paper / McGrath & Brenner priority
+    # scheduling) or "oldest" (LRU-like) — §Routing study
+    routing: str = "newest"
+    scan_unroll: int = 1  # lax.scan unroll factor (perf knob, semantics-free)
+    track_histogram: bool = False
+    hist_bins: int = 65  # instance-count histogram bins [0, hist_bins)
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.skip_time >= self.sim_time:
+            raise ValueError("skip_time must be < sim_time")
+
+    def steps_needed(self) -> int:
+        """Upper bound on arrivals within ``sim_time`` (mean + 6 sigma)."""
+        m = self.arrival_process.mean()
+        n = self.sim_time / m
+        return int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
+
+
+@dataclasses.dataclass
+class SimulationSummary:
+    """Aggregated results.  Per-replica arrays retained for CIs."""
+
+    n_cold: np.ndarray
+    n_warm: np.ndarray
+    n_reject: np.ndarray
+    time_running: np.ndarray  # integral of running-instance count (s)
+    time_idle: np.ndarray
+    sum_cold_resp: np.ndarray
+    sum_warm_resp: np.ndarray
+    lifespan_sum: np.ndarray
+    lifespan_count: np.ndarray
+    measured_time: float
+    histogram: Optional[np.ndarray] = None  # [R, hist_bins] time at count=k
+    overflow: Optional[np.ndarray] = None
+
+    # ---- paper metrics -------------------------------------------------
+    @property
+    def n_requests(self) -> np.ndarray:
+        return self.n_cold + self.n_warm + self.n_reject
+
+    @property
+    def cold_start_prob(self) -> float:
+        served = self.n_cold + self.n_warm
+        return float(self.n_cold.sum() / np.maximum(served.sum(), 1))
+
+    @property
+    def rejection_prob(self) -> float:
+        return float(self.n_reject.sum() / np.maximum(self.n_requests.sum(), 1))
+
+    @property
+    def avg_running_count(self) -> float:
+        return float(self.time_running.mean() / self.measured_time)
+
+    @property
+    def avg_idle_count(self) -> float:
+        return float(self.time_idle.mean() / self.measured_time)
+
+    @property
+    def avg_server_count(self) -> float:
+        return self.avg_running_count + self.avg_idle_count
+
+    @property
+    def avg_lifespan(self) -> float:
+        return float(self.lifespan_sum.sum() / np.maximum(self.lifespan_count.sum(), 1))
+
+    @property
+    def avg_response_time(self) -> float:
+        served = np.maximum((self.n_cold + self.n_warm).sum(), 1)
+        return float((self.sum_cold_resp + self.sum_warm_resp).sum() / served)
+
+    @property
+    def avg_wasted_ratio(self) -> float:
+        """Idle / total instance-time — the provider's wasted capacity."""
+        total = self.time_running + self.time_idle
+        return float((self.time_idle.sum()) / np.maximum(total.sum(), 1e-12))
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - self.avg_wasted_ratio
+
+    def cold_start_prob_ci(self, z: float = 1.96) -> tuple[float, float]:
+        """Normal-approx CI over replicas (paper Fig. 4 methodology)."""
+        served = np.maximum(self.n_cold + self.n_warm, 1)
+        p = self.n_cold / served
+        se = p.std(ddof=1) / np.sqrt(len(p)) if len(p) > 1 else 0.0
+        return float(p.mean() - z * se), float(p.mean() + z * se)
+
+    def to_dict(self) -> dict:
+        return {
+            "cold_start_prob": self.cold_start_prob,
+            "rejection_prob": self.rejection_prob,
+            "avg_server_count": self.avg_server_count,
+            "avg_running_count": self.avg_running_count,
+            "avg_idle_count": self.avg_idle_count,
+            "avg_lifespan": self.avg_lifespan,
+            "avg_response_time": self.avg_response_time,
+            "avg_wasted_ratio": self.avg_wasted_ratio,
+            "n_requests": int(self.n_requests.sum()),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Closed-form interval integration (shared with temporal/par simulators)
+# ---------------------------------------------------------------------------
+
+
+def interval_integrals(alive, busy_until, exp_threshold, lo, hi):
+    """Exact ∫running and ∫idle instance-counts over window (lo, hi].
+
+    Per live slot: running on (lo, min(busy, hi)], idle on
+    (max(busy, lo), min(busy + T_exp, hi)].  Window may be empty (lo >= hi).
+    """
+    expire = busy_until + exp_threshold
+    run_t = jnp.clip(jnp.minimum(busy_until, hi) - lo, 0.0, None)
+    idle_t = jnp.clip(
+        jnp.minimum(expire, hi) - jnp.maximum(busy_until, lo), 0.0, None
+    )
+    run_t = jnp.where(alive, run_t, 0.0)
+    idle_t = jnp.where(alive, idle_t, 0.0)
+    return run_t.sum(), idle_t.sum()
+
+
+def histogram_update(hist, alive, busy_until, exp_threshold, lo, hi):
+    """Accumulate time spent at each total-instance-count within (lo, hi].
+
+    Between arrivals the count only decreases, at each slot's expiry time.
+    Sort expiry times inside the window; segment k (between consecutive
+    order statistics) has count n0 - k.
+    """
+    window = jnp.maximum(hi - lo, 0.0)
+    expire = jnp.where(alive, busy_until + exp_threshold, _NEG_INF)
+    n0 = (expire > lo).sum()  # live at window start
+    # Expiries inside the window; non-events map to hi (zero-length tail).
+    ev = jnp.where((expire > lo) & (expire <= hi), expire, hi)
+    ev = jnp.where(window > 0.0, ev, hi)
+    ev_sorted = jnp.sort(ev)
+    bounds = jnp.concatenate([jnp.array([0.0], dtype=ev.dtype) + lo, ev_sorted])
+    nxt = jnp.concatenate([ev_sorted, jnp.array([0.0], dtype=ev.dtype) + hi])
+    durations = jnp.clip(nxt - bounds, 0.0, None)
+    durations = jnp.where(window > 0.0, durations, 0.0)
+    counts = n0 - jnp.arange(bounds.shape[0])
+    idx = jnp.clip(counts, 0, hist.shape[0] - 1)
+    return hist.at[idx].add(durations)
+
+
+# ---------------------------------------------------------------------------
+# Single-replica scan
+# ---------------------------------------------------------------------------
+
+
+def _make_scan_fn(cfg: SimulationConfig):
+    t_exp = cfg.expiration_threshold
+    t_end = cfg.sim_time
+    skip = cfg.skip_time
+    max_c = cfg.max_concurrency
+
+    def step(state, xs):
+        (alive, creation, busy_until, t_prev, acc) = state
+        dt, warm_s, cold_s = xs
+        t = t_prev + dt.astype(jnp.float64)
+
+        # ---- exact integrals over the measurement window of this interval
+        lo = jnp.clip(t_prev, skip, t_end)
+        hi = jnp.clip(t, skip, t_end)
+        run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
+
+        if cfg.track_histogram:
+            hist = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
+        else:
+            hist = acc["hist"]
+
+        # ---- expirations strictly before (or at) the arrival
+        expire_time = busy_until + t_exp
+        expired_now = alive & (expire_time <= t)
+        lifespan_ok = expired_now & (expire_time > skip) & (expire_time <= t_end)
+        lifespan_sum = acc["lifespan_sum"] + jnp.where(
+            lifespan_ok, expire_time - creation, 0.0
+        ).sum()
+        lifespan_count = acc["lifespan_count"] + lifespan_ok.sum()
+        alive = alive & ~expired_now
+
+        # ---- routing
+        active = t <= t_end
+        idle_mask = alive & (busy_until <= t)
+        any_idle = idle_mask.any()
+        # priority by creation time: newest (paper) or oldest
+        priority = creation if cfg.routing == "newest" else -creation
+        warm_idx = jnp.argmax(jnp.where(idle_mask, priority, _NEG_INF))
+        free_mask = ~alive
+        any_free = free_mask.any()
+        free_idx = jnp.argmax(free_mask)  # first free slot
+        n_alive = alive.sum()
+
+        can_cold = (~any_idle) & (n_alive < max_c) & any_free
+        overflow = (~any_idle) & (n_alive < max_c) & (~any_free) & active
+        is_warm = any_idle & active
+        is_cold = can_cold & active
+        is_reject = (~any_idle) & (~can_cold) & active
+
+        chosen = jnp.where(is_warm, warm_idx, free_idx)
+        service = jnp.where(is_warm, warm_s, cold_s).astype(jnp.float64)
+        assign = is_warm | is_cold
+        new_busy = jnp.where(assign, t + service, busy_until[chosen])
+        busy_until = busy_until.at[chosen].set(new_busy)
+        new_creation = jnp.where(is_cold, t, creation[chosen])
+        creation = creation.at[chosen].set(new_creation)
+        alive = alive.at[chosen].set(alive[chosen] | is_cold)
+
+        counted = t > skip  # warm-up exclusion for request-level metrics
+        acc = dict(
+            n_cold=acc["n_cold"] + (is_cold & counted),
+            n_warm=acc["n_warm"] + (is_warm & counted),
+            n_reject=acc["n_reject"] + (is_reject & counted),
+            time_running=acc["time_running"] + run_t,
+            time_idle=acc["time_idle"] + idle_t,
+            sum_cold_resp=acc["sum_cold_resp"]
+            + jnp.where(is_cold & counted, cold_s, 0.0),
+            sum_warm_resp=acc["sum_warm_resp"]
+            + jnp.where(is_warm & counted, warm_s, 0.0),
+            lifespan_sum=lifespan_sum,
+            lifespan_count=lifespan_count,
+            overflow=acc["overflow"] + overflow,
+            hist=hist,
+        )
+        return (alive, creation, busy_until, t, acc), None
+
+    return step
+
+
+def _empty_acc(cfg: SimulationConfig):
+    z = jnp.zeros((), dtype=jnp.float64)
+    zi = jnp.zeros((), dtype=jnp.int64)
+    return dict(
+        n_cold=zi,
+        n_warm=zi,
+        n_reject=zi,
+        time_running=z,
+        time_idle=z,
+        sum_cold_resp=z,
+        sum_warm_resp=z,
+        lifespan_sum=z,
+        lifespan_count=zi,
+        overflow=zi,
+        hist=jnp.zeros((cfg.hist_bins,), dtype=jnp.float64),
+    )
+
+
+def _empty_pool(cfg: SimulationConfig):
+    m = cfg.slots
+    return (
+        jnp.zeros((m,), dtype=bool),
+        jnp.full((m,), _NEG_INF, dtype=jnp.float64),
+        jnp.full((m,), _NEG_INF, dtype=jnp.float64),
+    )
+
+
+def _flush(cfg: SimulationConfig, state):
+    """Integrate the tail (t_last, sim_time] after the final arrival."""
+    alive, creation, busy_until, t_prev, acc = state
+    t_exp = cfg.expiration_threshold
+    lo = jnp.clip(t_prev, cfg.skip_time, cfg.sim_time)
+    hi = jnp.asarray(cfg.sim_time, dtype=jnp.float64)
+    run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
+    acc["time_running"] = acc["time_running"] + run_t
+    acc["time_idle"] = acc["time_idle"] + idle_t
+    if cfg.track_histogram:
+        acc["hist"] = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
+    expire_time = busy_until + t_exp
+    tail_exp = alive & (expire_time <= hi) & (expire_time > cfg.skip_time)
+    acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
+        tail_exp, expire_time - creation, 0.0
+    ).sum()
+    acc["lifespan_count"] = acc["lifespan_count"] + tail_exp.sum()
+    return acc, t_prev
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _simulate_batch(cfg: SimulationConfig, dts, warms, colds, init_pool=None):
+    """vmap over replicas of the arrival-driven scan. Inputs: f32[R, N]."""
+
+    step = _make_scan_fn(cfg)
+
+    def one(dt_row, warm_row, cold_row):
+        pool = _empty_pool(cfg) if init_pool is None else init_pool
+        state0 = (*pool, jnp.zeros((), jnp.float64), _empty_acc(cfg))
+        state, _ = jax.lax.scan(
+            step, state0, (dt_row, warm_row, cold_row), unroll=cfg.scan_unroll
+        )
+        acc, t_last = _flush(cfg, state)
+        return acc, t_last
+
+    return jax.vmap(one)(dts, warms, colds)
+
+
+class ServerlessSimulator:
+    """Steady-state scale-per-request simulator (paper §3, §4.1).
+
+    >>> sim = ServerlessSimulator(SimulationConfig(...))
+    >>> summary = sim.run(jax.random.key(0), replicas=8)
+    >>> summary.cold_start_prob
+    """
+
+    def __init__(self, config: SimulationConfig):
+        self.config = config
+
+    @classmethod
+    def from_rates(
+        cls,
+        arrival_rate: float,
+        warm_service_time: float,
+        cold_service_time: float,
+        expiration_threshold: float = 600.0,
+        sim_time: float = 1e5,
+        **kw,
+    ) -> "ServerlessSimulator":
+        """Paper-style constructor (exponential processes, Table 1)."""
+        cfg = SimulationConfig(
+            arrival_process=ExpSimProcess(rate=arrival_rate),
+            warm_service_process=ExpSimProcess(rate=1.0 / warm_service_time),
+            cold_service_process=ExpSimProcess(rate=1.0 / cold_service_time),
+            expiration_threshold=expiration_threshold,
+            sim_time=sim_time,
+            **kw,
+        )
+        return cls(cfg)
+
+    def draw_samples(self, key: Array, replicas: int, steps: Optional[int] = None):
+        cfg = self.config
+        n = steps or cfg.steps_needed()
+        k1, k2, k3 = jax.random.split(key, 3)
+        dts = cfg.arrival_process.sample(k1, (replicas, n))
+        warms = cfg.warm_service_process.sample(k2, (replicas, n))
+        colds = cfg.cold_service_process.sample(k3, (replicas, n))
+        return dts, warms, colds
+
+    def run(
+        self,
+        key: Array,
+        replicas: int = 8,
+        steps: Optional[int] = None,
+        samples=None,
+    ) -> SimulationSummary:
+        cfg = self.config
+        if samples is None:
+            samples = self.draw_samples(key, replicas, steps)
+        dts, warms, colds = samples
+        acc, t_last = _simulate_batch(cfg, dts, warms, colds)
+        acc = jax.tree.map(np.asarray, acc)
+        t_last = np.asarray(t_last)
+        if (t_last < cfg.sim_time).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {t_last.min():.1f} < {cfg.sim_time}); "
+                "pass a larger `steps`"
+            )
+        if acc["overflow"].sum() > 0:
+            raise RuntimeError(
+                f"instance-pool overflow ({int(acc['overflow'].sum())} arrivals "
+                f"needed a slot beyond slots={cfg.slots} while below "
+                "max_concurrency); raise SimulationConfig.slots"
+            )
+        return SimulationSummary(
+            n_cold=acc["n_cold"],
+            n_warm=acc["n_warm"],
+            n_reject=acc["n_reject"],
+            time_running=acc["time_running"],
+            time_idle=acc["time_idle"],
+            sum_cold_resp=acc["sum_cold_resp"],
+            sum_warm_resp=acc["sum_warm_resp"],
+            lifespan_sum=acc["lifespan_sum"],
+            lifespan_count=acc["lifespan_count"],
+            measured_time=cfg.sim_time - cfg.skip_time,
+            histogram=acc["hist"] if cfg.track_histogram else None,
+            overflow=acc["overflow"],
+        )

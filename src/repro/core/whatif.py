@@ -1,0 +1,88 @@
+"""What-if analysis (paper §4.3 / Fig. 5): sweep platform configurations.
+
+The provider-facing workflow: grid over (arrival rate × expiration
+threshold) → predicted QoS (cold-start probability) and cost terms for each
+cell, so the platform can pick a workload-aware operating point.  All cells
+share one jit-compiled simulator; cells are independent Monte-Carlo runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.cost import BillingModel, estimate_cost
+from repro.core.processes import ExpSimProcess
+from repro.core.simulator import ServerlessSimulator, SimulationConfig
+
+
+@dataclasses.dataclass
+class WhatIfResult:
+    arrival_rates: np.ndarray  # [A]
+    expiration_thresholds: np.ndarray  # [E]
+    cold_start_prob: np.ndarray  # [E, A]
+    avg_server_count: np.ndarray  # [E, A]
+    avg_running_count: np.ndarray  # [E, A]
+    wasted_ratio: np.ndarray  # [E, A]
+    developer_cost: np.ndarray  # [E, A]
+    provider_cost: np.ndarray  # [E, A]
+
+    def best_threshold(self, arrival_idx: int, max_cold_prob: float) -> float:
+        """Smallest threshold meeting the cold-start SLO at a given load."""
+        ok = self.cold_start_prob[:, arrival_idx] <= max_cold_prob
+        if not ok.any():
+            return float(self.expiration_thresholds[-1])
+        return float(self.expiration_thresholds[np.argmax(ok)])
+
+
+def sweep(
+    base_config: SimulationConfig,
+    arrival_rates: Sequence[float],
+    expiration_thresholds: Sequence[float],
+    key,
+    replicas: int = 4,
+    billing: BillingModel = BillingModel(),
+) -> WhatIfResult:
+    a = np.asarray(list(arrival_rates), dtype=np.float64)
+    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
+    shape = (len(e), len(a))
+    out = {
+        k: np.zeros(shape)
+        for k in (
+            "cold",
+            "servers",
+            "running",
+            "wasted",
+            "dev_cost",
+            "prov_cost",
+        )
+    }
+    for i, exp_t in enumerate(e):
+        for j, rate in enumerate(a):
+            cfg = dataclasses.replace(
+                base_config,
+                arrival_process=ExpSimProcess(rate=float(rate)),
+                expiration_threshold=float(exp_t),
+            )
+            key, sub = jax.random.split(key)
+            summary = ServerlessSimulator(cfg).run(sub, replicas=replicas)
+            cost = estimate_cost(summary, billing)
+            out["cold"][i, j] = summary.cold_start_prob
+            out["servers"][i, j] = summary.avg_server_count
+            out["running"][i, j] = summary.avg_running_count
+            out["wasted"][i, j] = summary.avg_wasted_ratio
+            out["dev_cost"][i, j] = cost.developer_total
+            out["prov_cost"][i, j] = cost.provider_infra_cost
+    return WhatIfResult(
+        arrival_rates=a,
+        expiration_thresholds=e,
+        cold_start_prob=out["cold"],
+        avg_server_count=out["servers"],
+        avg_running_count=out["running"],
+        wasted_ratio=out["wasted"],
+        developer_cost=out["dev_cost"],
+        provider_cost=out["prov_cost"],
+    )

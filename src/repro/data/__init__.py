@@ -1,0 +1,2 @@
+"""Data substrate: deterministic synthetic token pipeline + request
+workload generators (the ``pacswg`` analogue for the serving platform)."""

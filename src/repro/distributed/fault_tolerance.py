@@ -1,0 +1,63 @@
+"""Fault tolerance & elasticity policies.
+
+On real fleets the runtime signals are device heartbeats and barrier
+timeouts; here the *mechanisms* are implemented and tested with simulated
+signals:
+
+* **elastic re-mesh**: given the healthy-device count, build the largest
+  valid (data, model) mesh (``launch.mesh.make_elastic_mesh``) and reshard
+  the checkpoint onto it (``CheckpointManager.restore(shardings=...)``);
+* **straggler mitigation**: the data pipeline is seekable, so a slow host
+  can be dropped at an epoch boundary and its shard re-split — policy
+  implemented as pure functions over the host set, unit-tested;
+* **checkpoint cadence policy**: optimal interval ≈ sqrt(2·MTBF·ckpt_cost)
+  (Young/Daly) — used by the launcher to pick ``checkpoint_every``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class HostStatus:
+    host_id: int
+    last_heartbeat: float
+    step_time_ema: float
+
+
+def detect_stragglers(
+    hosts: Sequence[HostStatus], now: float, heartbeat_timeout: float = 60.0,
+    slow_factor: float = 2.0,
+) -> tuple[list[int], list[int]]:
+    """Returns (dead_hosts, slow_hosts). Slow = step-time EMA > factor ×
+    median of the fleet."""
+    dead = [h.host_id for h in hosts if now - h.last_heartbeat > heartbeat_timeout]
+    alive = [h for h in hosts if now - h.last_heartbeat <= heartbeat_timeout]
+    if not alive:
+        return dead, []
+    times = sorted(h.step_time_ema for h in alive)
+    median = times[len(times) // 2]
+    slow = [h.host_id for h in alive if h.step_time_ema > slow_factor * median]
+    return dead, slow
+
+
+def resplit_data_shards(n_batches: int, healthy_hosts: Sequence[int]) -> dict:
+    """Deterministic re-assignment of batch shards to surviving hosts."""
+    return {
+        h: list(range(i, n_batches, len(healthy_hosts)))
+        for i, h in enumerate(sorted(healthy_hosts))
+    }
+
+
+def young_daly_interval(mtbf_seconds: float, checkpoint_cost_seconds: float) -> float:
+    """Optimal checkpoint interval (first-order Young/Daly)."""
+    return math.sqrt(2.0 * mtbf_seconds * checkpoint_cost_seconds)
+
+
+def steps_between_checkpoints(
+    mtbf_seconds: float, checkpoint_cost_seconds: float, step_seconds: float
+) -> int:
+    return max(1, int(young_daly_interval(mtbf_seconds, checkpoint_cost_seconds) / step_seconds))

@@ -1,0 +1,145 @@
+"""Logical-axis → mesh-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+One rules dict drives everything: parameter specs (via ``ParamBuilder`` in
+``spec`` mode), activation constraints (``models.layers.shard``) and
+input/cache specs.  ``make_rules`` adapts the canonical mapping to a
+concrete (mesh × arch × shape) cell, dropping any logical→mesh assignment
+that does not divide evenly (e.g. 8 kv-heads on a 16-way model axis ⇒
+replicated KV; batch=1 long-context decode ⇒ unsharded batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def make_rules(
+    mesh: Mesh,
+    cfg: ModelConfig,
+    shape: Optional[ShapeSpec] = None,
+    *,
+    fsdp: bool = True,
+) -> dict:
+    """Canonical rules, pruned for divisibility on this (arch × shape).
+
+    ``fsdp=False`` drops the secondary (data-axis) parameter sharding:
+    weights are TP-sharded over ``model`` only and replicated across data —
+    grads sync with one all-reduce instead of 3× per-layer all-gathers.
+    Right for models whose (params+opt)/TP fits HBM; the dry-run policy
+    picks it for <100B models (§Perf hillclimb 1).
+    """
+    multi_pod = "pod" in mesh.axis_names
+    rules: dict[str, object] = {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "embed": None,
+        "embed_fsdp": (
+            (("data", "pod") if multi_pod else ("data",)) if fsdp else None
+        ),
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "qkv": None,
+        "vocab": "model",
+        "experts": "model",
+        # Megatron-style sequence parallelism: the residual stream (and other
+        # token-pointwise tensors) shard their seq dim over the model axis;
+        # attention gathers seq, FFN/norm/CE stay token-parallel.
+        "residual_seq": "model",
+        # MoE dispatch buffer [E, capacity, D]: capacity rows over data
+        "expert_cap": ("data",),
+        "lora": None,
+        "state": None,
+        "conv": None,
+        "layers": None,
+        # KV-cache time dim: sharded over the model axis (split-KV decode —
+        # per-device partial attention + psum, and 16× less cache per chip)
+        "seq": "model",
+        "codebooks": None,
+    }
+
+    def prune(name: str, dim: int):
+        if rules[name] is not None and dim % _axis_size(mesh, rules[name]) != 0:
+            rules[name] = None
+
+    if fsdp:
+        prune("embed_fsdp", cfg.d_model)
+    prune("vocab", cfg.vocab_size)
+    prune("heads", cfg.n_heads)
+    prune("kv_heads", cfg.n_kv_heads)
+    prune("mlp", cfg.d_ff if cfg.d_ff else cfg.moe.d_ff_expert or 1)
+    if cfg.moe.n_experts:
+        prune("experts", cfg.moe.n_experts)
+    # ssm/rglru reuse "heads" for their inner width — prune on those too
+    if any("ssm" in p for p, _ in cfg.segments):
+        d_inner = cfg.ssm.expand * cfg.d_model
+        for dim in (
+            d_inner // cfg.ssm.head_dim,  # A_log/D/dt_bias
+            d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state,  # conv dim
+            2 * d_inner + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+            + d_inner // cfg.ssm.head_dim,  # in_proj out dim
+        ):
+            prune("heads", dim)
+    if any("rglru" in p for p, _ in cfg.segments):
+        prune("heads", cfg.rglru.lru_width or cfg.d_model)
+    if shape is not None:
+        if shape.global_batch % _axis_size(mesh, rules["batch"]) != 0:
+            rules["batch"] = None
+        seq = shape.seq_len if shape.kind != "decode" else 1
+        if seq % _axis_size(mesh, rules["residual_seq"]) != 0:
+            rules["residual_seq"] = None
+        cache_t = min(shape.seq_len, cfg.window) if cfg.window else shape.seq_len
+        if cache_t % _axis_size(mesh, rules["seq"]) != 0:
+            rules["seq"] = None
+    else:
+        rules["residual_seq"] = None
+        rules["seq"] = None
+    # flattened token dim (B*S): sharded over batch axes + seq axes jointly
+    tok_axes: tuple = ()
+    for r in (rules["batch"], rules["residual_seq"]):
+        if isinstance(r, str):
+            tok_axes += (r,)
+        elif r:
+            tok_axes += tuple(r)
+    rules["tokens"] = tok_axes or None
+    rules["__mesh__"] = mesh  # consumed by shard_map code paths (MoE)
+    return rules
+
+
+def named(mesh: Mesh, spec_tree):
+    """PartitionSpec tree → NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_specs(batch_shapes: dict, rules: dict) -> dict:
+    """Input-batch PartitionSpecs: leading dim = batch, rest replicated."""
+    b = rules.get("batch")
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        return P(b, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def replicated(tree):
+    return jax.tree.map(lambda _: P(), tree)

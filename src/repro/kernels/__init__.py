@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel module exposes ``<name>_pallas`` (pl.pallas_call + BlockSpec
+VMEM tiling); ``ops.py`` is the jit'd dispatch layer the models call;
+``ref.py`` collects the pure-jnp oracles.  Kernels: ``faas_event_step``
+(the paper's event loop — Monte-Carlo replicas × VMEM-resident instance
+pool), ``flash_attention``, ``decode_attention``, ``ssd_scan`` (Mamba-2),
+``rglru_scan`` (Griffin).
+"""

@@ -1,0 +1,142 @@
+"""Pallas TPU decode attention: one query token vs a long KV cache.
+
+Decode is memory-bound (the whole cache streams through once per token),
+so the kernel shape follows FlashDecoding: grid = (batch, kv_head,
+T-chunks) with the chunk axis innermost; the per-(b,h) online-softmax state
+for all G grouped q-heads sits in VMEM scratch.  Each kv tile is
+``[bk, D]`` — D is the minor (lane) dim, bk a multiple of 8 for sublane
+alignment; the q block ``[G, D]`` stays resident.
+
+Masking: entries at/after ``cache_len`` are invalid (the new token is at
+``cache_len - 1``); optional sliding window.
+
+Oracle: ``repro.models.attention.decode_attention_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _decode_kernel(
+    len_ref,  # SMEM-ish [1] int32 (per batch block)
+    q_ref,  # [1, 1, G, D]
+    k_ref,  # [1, bk, 1, D]
+    v_ref,  # [1, bk, 1, D]
+    o_ref,  # [1, 1, G, D]
+    m_scr,  # VMEM [G, 1]
+    l_scr,  # VMEM [G, 1]
+    acc_scr,  # VMEM [G, D]
+    *,
+    scale: float,
+    window: int,
+    softcap: float,
+    bk: int,
+    nk: int,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    cache_len = len_ref[0]
+    k_start = ki * bk
+    needed = k_start < cache_len
+    if window > 0:
+        needed = needed & (k_start + bk - 1 > cache_len - 1 - window)
+
+    @pl.when(needed)
+    def _tile():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32)  # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, bk]
+        s = s * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        t_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        valid = t_pos < cache_len
+        if window > 0:
+            valid = valid & (t_pos > cache_len - 1 - window)
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new[:, None]
+        l_scr[...] = l_new[:, None]
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        o_ref[0, 0, 0, :, :] = (
+            acc_scr[...] / jnp.maximum(l, 1e-37)[:, None]
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "scale", "bk", "interpret")
+)
+def decode_attention_pallas(
+    q,  # [B, Hq, D]
+    k_cache,  # [B, T, Hkv, D]
+    v_cache,
+    cache_len,  # [B] int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale=None,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    B, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    bk = min(bk, T)
+    assert T % bk == 0
+    nk = T // bk
+    # heads are kv-major (head h serves kv group h // G): [B, 1, Hkv, G, D]
+    qg = q.reshape(B, Hkv, G, D)[:, None]
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, softcap=softcap, bk=bk, nk=nk
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+            pl.BlockSpec((1, 1, 1, G, D), lambda b, h, j: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, G, D), lambda b, h, j: (b, 0, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, 1, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,181 @@
+"""Pallas TPU kernel for the SimFaaS hot loop: a block of arrivals applied
+to a block of Monte-Carlo replicas with the instance pool resident in VMEM.
+
+This is the paper's event-processing loop adapted to the TPU memory
+hierarchy: instead of a per-event HBM round-trip of the pool state (the
+``lax.scan`` formulation's behaviour on TPU), each kernel instance keeps its
+``[R_blk, M]`` pool slab in VMEM and sequentially applies ``K`` arrivals —
+HBM traffic collapses to (samples in + final state/accumulators out), i.e.
+``O(R·K)`` instead of ``O(R·K·M)``.
+
+Precision domain: the kernel state is f32 (TPU has no f64 VPU), so it is
+the *throughput* engine for many-replica CI estimation over horizons where
+f32 clocks are exact enough (t ≤ ~1e5 s keeps µs-scale billing error).  The
+f64 ``lax.scan`` simulator in ``repro.core`` remains the exactness path;
+``ref.py`` mirrors this kernel in pure f32 jnp so the two are bit-comparable.
+
+Semantics per arrival (identical to ``core.simulator``): expire idle
+instances past the threshold → route to the newest idle instance (warm) →
+else create (cold) → else reject; exact closed-form integration of
+running/idle instance-time between arrivals.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _faas_kernel(
+    # inputs (VMEM blocks)
+    alive_ref,  # f32 [Rb, M]  (0/1)
+    creation_ref,  # f32 [Rb, M]
+    busy_ref,  # f32 [Rb, M]
+    t0_ref,  # f32 [Rb, 1]
+    dt_ref,  # f32 [Rb, K]
+    warm_ref,  # f32 [Rb, K]
+    cold_ref,  # f32 [Rb, K]
+    # outputs
+    alive_out,
+    creation_out,
+    busy_out,
+    t_out,  # f32 [Rb, 1]
+    acc_out,  # f32 [Rb, 8]: cold, warm, reject, t_run, t_idle, resp_c, resp_w, overflow
+    *,
+    t_exp: float,
+    max_concurrency: int,
+    n_steps: int,
+):
+    alive = alive_ref[...]
+    creation = creation_ref[...]
+    busy = busy_ref[...]
+    t = t0_ref[...][:, 0]
+    m_slots = alive.shape[1]
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
+
+    def step(i, carry):
+        alive, creation, busy, t, acc = carry
+        dt = dt_ref[:, i]
+        warm_s = warm_ref[:, i]
+        cold_s = cold_ref[:, i]
+        t_new = t + dt
+
+        # exact integrals over (t, t_new]
+        expire = busy + t_exp
+        run_t = jnp.clip(jnp.minimum(busy, t_new[:, None]) - t[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, t_new[:, None]) - jnp.maximum(busy, t[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+
+        # expirations
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+
+        # routing: newest idle instance
+        idle = (alive > 0) & (busy <= t_new[:, None])
+        best = jnp.max(jnp.where(idle, creation, NEG), axis=1)
+        any_idle = best > NEG * 0.5
+        # first slot achieving the max (tie-break by slot index, as the ref)
+        is_best = idle & (creation >= best[:, None]) & any_idle[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+
+        free = alive <= 0
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+
+        can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
+        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free)
+        is_warm = any_idle
+        is_cold = can_cold
+        is_reject = (~any_idle) & (~can_cold)
+
+        chosen = jnp.where(is_warm, first_best, first_free)  # f32 slot id
+        service = jnp.where(is_warm, warm_s, cold_s)
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]
+        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+
+        acc = acc + jnp.stack(
+            [
+                is_cold.astype(jnp.float32),
+                is_warm.astype(jnp.float32),
+                is_reject.astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold, cold_s, 0.0),
+                jnp.where(is_warm, warm_s, 0.0),
+                overflow.astype(jnp.float32),
+            ],
+            axis=1,
+        )
+        return alive, creation, busy, t_new, acc
+
+    acc0 = jnp.zeros((alive.shape[0], 8), jnp.float32)
+    alive, creation, busy, t, acc = jax.lax.fori_loop(
+        0, n_steps, step, (alive, creation, busy, t, acc0)
+    )
+    alive_out[...] = alive
+    creation_out[...] = creation
+    busy_out[...] = busy
+    t_out[...] = t[:, None]
+    acc_out[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t_exp", "max_concurrency", "block_r", "interpret")
+)
+def faas_block_step_pallas(
+    alive,  # f32 [R, M] 0/1
+    creation,  # f32 [R, M]
+    busy,  # f32 [R, M]
+    t0,  # f32 [R]
+    dts,  # f32 [R, K]
+    warms,  # f32 [R, K]
+    colds,  # f32 [R, K]
+    *,
+    t_exp: float,
+    max_concurrency: int,
+    block_r: int = 8,
+    interpret: bool = False,
+):
+    R, M = alive.shape
+    K = dts.shape[1]
+    assert R % block_r == 0, (R, block_r)
+    grid = (R // block_r,)
+
+    state_spec = pl.BlockSpec((block_r, M), lambda r: (r, 0))
+    samp_spec = pl.BlockSpec((block_r, K), lambda r: (r, 0))
+    t_spec = pl.BlockSpec((block_r, 1), lambda r: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, 8), lambda r: (r, 0))
+
+    kernel = functools.partial(
+        _faas_kernel, t_exp=t_exp, max_concurrency=max_concurrency, n_steps=K
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[state_spec, state_spec, state_spec, t_spec, samp_spec, samp_spec, samp_spec],
+        out_specs=[state_spec, state_spec, state_spec, t_spec, acc_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, M), jnp.float32),
+            jax.ShapeDtypeStruct((R, M), jnp.float32),
+            jax.ShapeDtypeStruct((R, M), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, 8), jnp.float32),
+        ],
+        interpret=interpret,
+    )(alive, creation, busy, t0[:, None], dts, warms, colds)
+    alive_n, creation_n, busy_n, t_n, acc = out
+    return alive_n, creation_n, busy_n, t_n[:, 0], acc

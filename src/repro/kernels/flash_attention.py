@@ -1,0 +1,161 @@
+"""Pallas TPU flash attention (prefill/train forward).
+
+Tiling: grid = (batch, q_heads, nq, nk) with the kv index innermost (TPU
+grids execute minor-most sequentially), online-softmax state (m, l, acc)
+held in VMEM scratch across the kv sweep.  Block shapes are MXU-aligned
+(q/kv tiles multiples of 128 on the sequence dims, head_dim native).
+Causal masking skips fully-masked tiles via ``pl.when`` (no MXU issue, no
+HBM reads beyond the BlockSpec prefetch).  GQA folds the group into the
+q-head grid axis; k/v index_map divides by the group size so kv tiles are
+fetched once per kv head.
+
+Oracle: ``repro.models.attention.flash_attention_ref`` (same math, same
+tiling) — swept in ``tests/test_kernels.py`` with interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _flash_kernel(
+    q_ref,  # [1, bq, 1, D]
+    k_ref,  # [1, bk, 1, D]
+    v_ref,  # [1, bk, 1, D]
+    o_ref,  # [1, bq, 1, D]
+    m_scr,  # VMEM [bq, 1] f32
+    l_scr,  # VMEM [bq, 1] f32
+    acc_scr,  # VMEM [bq, D] f32
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    prefix_len: int,
+    softcap: float,
+    bq: int,
+    bk: int,
+    nk: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # tile reachable? (mirrors the ref's static skipping, but dynamic here)
+    reachable = True
+    if causal:
+        reachable = (k_start <= q_start + bq - 1) | (k_start < prefix_len)
+    if window > 0:
+        reachable = reachable & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(reachable)
+    def _tile():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)  # [bq, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # [bk, D]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        s = s * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        if causal:
+            allow = k_pos <= q_pos
+            if prefix_len > 0:
+                allow = allow | ((q_pos < prefix_len) & (k_pos < prefix_len))
+        else:
+            allow = jnp.ones((bq, bk), bool)
+        if window > 0:
+            allow = allow & (k_pos > q_pos - window)
+        s = jnp.where(allow, s, NEG_INF)
+
+        m_prev = m_scr[...][:, 0]
+        l_prev = l_scr[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [bq, D]
+        acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+        m_scr[...] = m_new[:, None]
+        l_scr[...] = l_new[:, None]
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_scr[...][:, 0]
+        out = acc_scr[...] / jnp.maximum(l, 1e-37)[:, None]
+        o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "prefix_len", "softcap", "scale", "bq", "bk",
+        "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q,  # [B, S, Hq, D]
+    k,  # [B, T, Hkv, D]
+    v,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap: float = 0.0,
+    scale=None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, prefix_len=prefix_len,
+        softcap=softcap, bq=bq, bk=bk, nk=nk,
+    )
+    grid = (B, Hq, nq, nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, i, j: (b, j, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, i, j: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )
+    return out(q, k, v)

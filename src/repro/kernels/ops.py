@@ -1,0 +1,69 @@
+"""Dispatch layer: jnp reference ↔ Pallas kernels.
+
+Models call these wrappers; the backend is selected globally (or per-call).
+On CPU (this container) the jnp references run/compile; on TPU the Pallas
+kernels take over.  ``interpret=True`` Pallas execution is used by the
+kernel test-suite to validate kernel bodies on CPU against the refs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+
+_BACKEND: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "repro_kernel_backend", default="ref"
+)  # "ref" | "pallas" | "pallas_interpret"
+
+
+@contextlib.contextmanager
+def kernel_backend(name: str):
+    assert name in ("ref", "pallas", "pallas_interpret")
+    token = _BACKEND.set(name)
+    try:
+        yield
+    finally:
+        _BACKEND.reset(token)
+
+
+def current_backend() -> str:
+    return _BACKEND.get()
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, prefix_len=0, softcap=0.0,
+                    q_chunk=1024, kv_chunk=1024, scale=None):
+    from repro.models.attention import flash_attention_ref
+
+    backend = _BACKEND.get()
+    if backend == "ref":
+        return flash_attention_ref(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            softcap=softcap, q_chunk=q_chunk, kv_chunk=kv_chunk, scale=scale,
+        )
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+        softcap=softcap, scale=scale, interpret=backend == "pallas_interpret",
+    )
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=0, softcap=0.0,
+                     scale=None):
+    from repro.models.attention import decode_attention_ref
+
+    backend = _BACKEND.get()
+    if backend == "ref":
+        return decode_attention_ref(
+            q, k_cache, v_cache, cache_len, window=window, softcap=softcap,
+            scale=scale,
+        )
+    from repro.kernels.decode_attention import decode_attention_pallas
+
+    return decode_attention_pallas(
+        q, k_cache, v_cache, cache_len, window=window, softcap=softcap,
+        scale=scale, interpret=backend == "pallas_interpret",
+    )

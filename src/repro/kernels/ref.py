@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every Pallas kernel (single import point for the
+kernel test-suite).  The model-level references live next to their blocks;
+this module re-exports them plus the FaaS-kernel reference, so each kernel
+has a ``kernels.ref`` counterpart as required by the repo convention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (  # noqa: F401
+    decode_attention_ref,
+    flash_attention_ref,
+    naive_attention,
+)
+from repro.models.rglru import rglru_scan_ref  # noqa: F401
+from repro.models.ssm import ssd_chunked_ref  # noqa: F401
+
+NEG = -1e30
+
+
+def ssd_scan_ref(xd, dA, Bh, Ch, chunk: int = 128):
+    """Same pre-folded interface as ``ssd_scan_pallas`` (B/C broadcast to
+    heads, xd = x·dt, dA = dt·A) → delegates to the chunked reference."""
+    dt_ones = jnp.ones(dA.shape, dA.dtype)
+    # reconstruct the (x, dt, A)-style call: ssd_chunked_ref folds dt into
+    # x and A internally, so pass xd as x with dt=1 and dA via A-per-step.
+    # Easiest exact route: inline the recurrence directly.
+    B, L, H, P = xd.shape
+    N = Bh.shape[-1]
+    state = jnp.zeros((B, H, P, N), jnp.float32)
+    ys = []
+    for t in range(L):  # small-shape oracle only (tests)
+        a = jnp.exp(dA[:, t])  # [B,H]
+        state = state * a[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xd[:, t], Bh[:, t]
+        )
+        ys.append(jnp.einsum("bhpn,bhn->bhp", state, Ch[:, t]))
+    del dt_ones
+    return jnp.stack(ys, axis=1), state
+
+
+def faas_block_step_ref(
+    alive, creation, busy, t0, dts, warms, colds, *, t_exp, max_concurrency
+):
+    """f32 jnp mirror of the Pallas FaaS event-step kernel (same arithmetic
+    order, same tie-breaks) — bit-comparable on CPU."""
+    R, M = alive.shape
+    K = dts.shape[1]
+    slot_iota = jnp.broadcast_to(
+        jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
+    )
+
+    def step(i, carry):
+        alive, creation, busy, t, acc = carry
+        t_new = t + dts[:, i]
+        expire = busy + t_exp
+        run_t = jnp.clip(jnp.minimum(busy, t_new[:, None]) - t[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, t_new[:, None]) - jnp.maximum(busy, t[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+        idle = (alive > 0) & (busy <= t_new[:, None])
+        best = jnp.max(jnp.where(idle, creation, NEG), axis=1)
+        any_idle = best > NEG * 0.5
+        is_best = idle & (creation >= best[:, None]) & any_idle[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+        free = alive <= 0
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+        can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
+        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free)
+        is_warm = any_idle
+        is_cold = can_cold
+        is_reject = (~any_idle) & (~can_cold)
+        chosen = jnp.where(is_warm, first_best, first_free)
+        service = jnp.where(is_warm, warms[:, i], colds[:, i])
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]
+        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        acc = acc + jnp.stack(
+            [
+                is_cold.astype(jnp.float32),
+                is_warm.astype(jnp.float32),
+                is_reject.astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold, colds[:, i], 0.0),
+                jnp.where(is_warm, warms[:, i], 0.0),
+                overflow.astype(jnp.float32),
+            ],
+            axis=1,
+        )
+        return alive, creation, busy, t_new, acc
+
+    acc0 = jnp.zeros((R, 8), jnp.float32)
+    return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))

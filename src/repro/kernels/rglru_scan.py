@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: RG-LRU linear recurrence ``h_t = a_t·h_{t-1} + b_t``.
+
+The recurrence is memory-bound (2 reads + 1 write per element, O(W) flops
+per step), so the kernel's job is to stream [L, W] through VMEM in chunks
+while the [1, Wb] hidden state stays resident — grid = (batch, W-blocks,
+L-chunks), time chunk innermost, sequential fori over rows inside the
+chunk.  Oracle: ``repro.models.rglru.rglru_scan_ref`` (associative scan).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, h_scr, *, q: int, nc: int):
+    z = pl.program_id(2)
+
+    @pl.when(z == 0)
+    def _init():
+        h_scr[...] = h0_ref[0, 0, :][None, :]
+
+    a = a_ref[0]  # [Q, Wb]
+    b = b_ref[0]
+
+    def step(i, h):
+        h = a[i][None, :] * h + b[i][None, :]
+        y_ref[0, i, :] = h[0]
+        return h
+
+    h = jax.lax.fori_loop(0, q, step, h_scr[...])
+    h_scr[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_w", "interpret"))
+def rglru_scan_pallas(
+    a,  # [B, L, W] f32 decay gates
+    b,  # [B, L, W] f32 gated inputs
+    h0=None,  # [B, W] initial state
+    *,
+    chunk: int = 128,
+    block_w: int = 512,
+    interpret: bool = False,
+):
+    B, L, W = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, W), a.dtype)
+    block_w = min(block_w, W)
+    chunk = min(chunk, L)
+    assert L % chunk == 0 and W % block_w == 0
+    nc = L // chunk
+    kernel = functools.partial(_rglru_kernel, q=chunk, nc=nc)
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, W // block_w, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_w), lambda bb, w, z: (bb, z, w)),
+            pl.BlockSpec((1, chunk, block_w), lambda bb, w, z: (bb, z, w)),
+            pl.BlockSpec((1, 1, block_w), lambda bb, w, z: (bb, 0, w)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_w), lambda bb, w, z: (bb, z, w)),
+        out_shape=jax.ShapeDtypeStruct((B, L, W), a.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_w), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0[:, None, :])
+    return y, y[:, -1]

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+Inputs are pre-folded (``xd = x·dt``, ``dA = dt·A``) so the kernel is pure
+matmul + cumsum work: per (batch, head) the chunk axis runs innermost with
+the [P, N] state in VMEM scratch:
+
+  intra-chunk:  y  = (C·Bᵀ ⊙ tril(exp(cum Δ)))·xd        (MXU, [Q,Q]·[Q,P])
+  cross-chunk:  y += exp(cum)·(C·stateᵀ);  state = exp(ΣΔ)·state + (decay·xd)ᵀ·B
+
+Block shapes: Q (chunk) × P (head dim) × N (state) — Q,N multiples of 128,
+P native (64).  Oracle: ``repro.models.ssm.ssd_chunked_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    xd_ref,  # [1, Q, 1, P]
+    dA_ref,  # [1, Q, 1]
+    b_ref,  # [1, Q, 1, N]
+    c_ref,  # [1, Q, 1, N]
+    y_ref,  # [1, Q, 1, P]
+    st_ref,  # out [1, 1, P, N] (final state, written on last chunk)
+    state_scr,  # VMEM [P, N] f32
+    *,
+    nc: int,
+):
+    z = pl.program_id(2)
+
+    @pl.when(z == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xd = xd_ref[0, :, 0, :].astype(jnp.float32)  # [Q, P]
+    dA = dA_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    Bm = b_ref[0, :, 0, :].astype(jnp.float32)  # [Q, N]
+    Cm = c_ref[0, :, 0, :].astype(jnp.float32)  # [Q, N]
+    Q = xd.shape[0]
+
+    cum = jnp.cumsum(dA)  # [Q]
+    # intra-chunk
+    seg = cum[:, None] - cum[None, :]  # [Q, Q]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(si <= ti, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    y = jax.lax.dot_general(
+        scores * decay, xd, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [Q, P]
+
+    # cross-chunk contribution from entering state
+    state = state_scr[...]
+    y = y + jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, N]·[P, N]ᵀ → [Q, P]
+
+    # state update
+    state_decay = jnp.exp(cum[-1] - cum)  # [Q]
+    new_state = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        xd * state_decay[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [P, N]
+    state_scr[...] = new_state
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(z == nc - 1)
+    def _final():
+        st_ref[0, 0, :, :] = new_state.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    xd,  # [B, L, H, P] = x * dt
+    dA,  # [B, L, H] = dt * A (negative)
+    Bm,  # [B, L, H, N] (groups already broadcast to heads)
+    Cm,  # [B, L, H, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    B, L, H, Pd = xd.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0
+    nc = L // chunk
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, Pd), lambda b, h, z: (b, z, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, z: (b, z, h)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, z: (b, z, h, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, h, z: (b, z, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, Pd), lambda b, h, z: (b, z, h, 0)),
+            pl.BlockSpec((1, 1, Pd, N), lambda b, h, z: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, H, Pd), xd.dtype),
+            jax.ShapeDtypeStruct((B, H, Pd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xd, dA, Bm, Cm)
+    return y, st

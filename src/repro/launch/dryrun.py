@@ -1,0 +1,307 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: 512 host
+devices stand in for 2 TPU v5e pods.  For each cell we record
+``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs/bytes) and the
+collective-transfer bytes parsed from the post-SPMD HLO — the inputs to
+EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out benchmarks/results/dryrun.json
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.distributed import sharding as shd  # noqa: E402
+from repro.launch import input_specs as ispec  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_info  # noqa: E402
+from repro.models.layers import activation_sharding  # noqa: E402
+from repro.models.model import build_model, count_params_analytic  # noqa: E402
+from repro.training import optimizer as opt_mod  # noqa: E402
+from repro.training.optimizer import AdamWConfig  # noqa: E402
+from repro.training.train_step import (  # noqa: E402
+    TrainStepConfig,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+SDS = jax.ShapeDtypeStruct
+
+_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter"
+    r"|all-to-all|collective-permute(?:-start)?)\b"
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimised HLO.
+
+    Lines look like:  ``%ag = bf16[2,1024]{...} all-gather(...)``; tuple
+    results list several shapes.  Bytes are per-participating-device (the
+    module is the per-device program).
+    """
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if m is None or "= " not in line:
+            continue
+        op = m.group(1).replace("-start", "")
+        # shapes on the LHS of the op name (the result), e.g. "%x = bf16[...] op"
+        lhs = line.split("= ", 1)[1]
+        lhs = lhs.split(m.group(1))[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+def _memory_dict(mem) -> dict:
+    return {
+        "argument_bytes": int(mem.argument_size_in_bytes),
+        "output_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes_est": int(
+            mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes
+        ),
+    }
+
+
+def default_options(arch: str, shape_name: str, optimized: bool = False) -> dict:
+    """Per-cell production memory policy (recorded in the result):
+    ≥100B-param models train with bf16 optimizer state + bf16 gradient
+    accumulation over 8 microbatches; ≥10B dense models accumulate over 2.
+
+    ``optimized`` applies the §Perf policy on top: <100B models drop FSDP
+    (params TP-sharded only, grads one all-reduce) — confirmed −28%
+    collective bytes on the dense train cells.
+    """
+    cfg = get_config(arch)
+    n = count_params_analytic(cfg)
+    opts: dict = {}
+    if SHAPES[shape_name].kind == "train":
+        if n >= 100e9:
+            opts = {
+                "opt_state_dtype": "bfloat16",
+                "grad_accum_dtype": "bfloat16",
+                "num_microbatches": 8,
+            }
+        elif n >= 10e9:
+            opts = {"num_microbatches": 2}
+    if optimized and n < 100e9:
+        opts["no_fsdp"] = True
+    return opts
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, options=None,
+               optimized: bool = False):
+    """Build + lower + compile one cell. Returns a result record."""
+    options = {**default_options(arch, shape_name, optimized), **(options or {})}
+    cfg = get_config(arch)
+    for k, v in options.get("config_overrides", {}).items():
+        cfg = dataclasses.replace(cfg, **v) if isinstance(v, dict) else dataclasses.replace(cfg, **{k: v})
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "options": {k: v for k, v in options.items() if k != "config_overrides"},
+    }
+    if shape.kind == "decode" and shape.seq_len > 100_000 and not cfg.supports_long_context:
+        rec["status"] = "skipped"
+        rec["reason"] = (
+            "long_500k requires sub-quadratic attention; this arch is pure "
+            "full-attention (see DESIGN.md §4)"
+        )
+        return rec
+
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.make_rules(mesh, cfg, shape, fsdp=not options.get("no_fsdp", False))
+    rec["mesh_info"] = mesh_info(mesh)
+    rec["params_total"] = count_params_analytic(cfg)
+    rec["params_active"] = count_params_analytic(cfg, active_only=True)
+
+    t0 = time.time()
+    with mesh, activation_sharding(rules):
+        param_sh = shd.named(mesh, model.param_specs(rules))
+        param_shapes = model.param_shapes()
+
+        if shape.kind == "train":
+            ts_cfg = TrainStepConfig(
+                adamw=AdamWConfig(state_dtype=options.get("opt_state_dtype", "float32")),
+                num_microbatches=options.get("num_microbatches", 1),
+                grad_accum_dtype=options.get("grad_accum_dtype", "float32"),
+                cast_params_bf16=options.get("cast_params_bf16", False),
+            )
+            step_fn = make_train_step(model, ts_cfg)
+            opt_shapes = opt_mod.opt_state_shapes(ts_cfg.adamw, param_shapes)
+            opt_sh = shd.named(
+                mesh,
+                opt_mod.opt_state_specs(
+                    model.param_specs(rules), ts_cfg.adamw.state_dtype
+                ),
+            )
+            batch = ispec.train_batch_specs(cfg, shape)
+            batch_sh = shd.named(mesh, shd.batch_specs(batch, rules))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, opt_sh, batch_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(
+                param_shapes, opt_shapes, batch, SDS((), jnp.int32)
+            )
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(model, max_len=shape.seq_len)
+            batch = ispec.prefill_batch_specs(cfg, shape)
+            batch_sh = shd.named(mesh, shd.batch_specs(batch, rules))
+            cache_sh = shd.named(mesh, model.cache_specs(shape.global_batch, shape.seq_len, rules))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, batch_sh),
+                out_shardings=(None, cache_sh, None),
+            )
+            lowered = jitted.lower(param_shapes, batch)
+        else:  # decode
+            step_fn = make_decode_step(model)
+            tokens, caches, cache_len = ispec.decode_input_specs(model, shape)
+            cache_sh = shd.named(mesh, model.cache_specs(shape.global_batch, shape.seq_len, rules))
+            b_rule = rules.get("batch")
+            tok_sh = shd.named(mesh, shd.batch_specs({"t": tokens}, rules)["t"])
+            len_sh = shd.named(
+                mesh, jax.sharding.PartitionSpec(b_rule)
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(param_sh, tok_sh, cache_sh, len_sh),
+                out_shardings=(None, cache_sh, len_sh),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(param_shapes, tokens, caches, cache_len)
+
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = _memory_dict(mem)
+    cost = compiled.cost_analysis() or {}
+    rec["flops_per_device"] = float(cost.get("flops", 0.0))
+    rec["bytes_accessed_per_device"] = float(cost.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    rec["collectives_raw"] = parse_collective_bytes(hlo_text)
+    from repro.launch.hlo_analysis import analyze
+
+    corrected = analyze(hlo_text)  # loop-trip-count corrected (per device)
+    rec["collectives"] = corrected["collectives"]
+    rec["collective_bytes_f32"] = corrected["collective_bytes_f32"]
+    rec["dot_flops_per_device"] = corrected["dot_flops"]
+    rec["n_while"] = corrected["n_while"]
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt-state-dtype", default="auto")
+    ap.add_argument("--grad-accum-dtype", default="auto")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf sharding policy (no-FSDP <100B)")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    options = {}
+    if args.opt_state_dtype != "auto":
+        options["opt_state_dtype"] = args.opt_state_dtype
+    if args.grad_accum_dtype != "auto":
+        options["grad_accum_dtype"] = args.grad_accum_dtype
+    if args.microbatches > 0:
+        options["num_microbatches"] = args.microbatches
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch} × {shape} × {'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = lower_cell(arch, shape, multi, options, args.optimized)
+                except Exception as e:  # noqa: BLE001 — record, keep sweeping
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                results.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    peak = rec["memory"]["peak_bytes_est"] / 2**30
+                    extra = (
+                        f" peak {peak:.2f} GiB/dev, {rec['flops_per_device']:.3g} "
+                        f"flops/dev, lower {rec['lower_s']}s compile {rec['compile_s']}s"
+                    )
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {len(results)} records to {args.out}")
+    n_err = sum(r["status"] == "error" for r in results)
+    if n_err:
+        raise SystemExit(f"{n_err} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,223 @@
+"""Loop-corrected cost extraction from optimised (post-SPMD) HLO text.
+
+XLA's ``cost_analysis()`` and any naive text scan count a ``while`` body
+**once**, but our layer stacks, microbatch accumulation and CE chunking are
+all scans — undercounting FLOPs/collectives by 8–64×.  This module parses
+the HLO module into computations, recovers each while-loop's trip count
+from its condition's comparison constant (jax scans lower to
+``compare(counter, constant(N))``), propagates multipliers down the call
+graph (while bodies, fusions, calls, conditionals), and then sums
+
+* ``dot`` FLOPs  = 2 · |result| · (contracted extent)   × multiplier
+* collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute result bytes)                      × multiplier
+
+Everything is per-device (the module is the per-partition program).
+Verified against hand-counted FLOPs on an unrolled-vs-scanned model in
+``tests/test_hlo_analysis.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_CALLED = re.compile(
+    r"(?:body|condition|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?"
+)
+_COLLECTIVE = re.compile(
+    r"\b(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter"
+    r"|all-to-all|collective-permute(?:-start)?)\("
+)
+
+
+def _shape_elems(text: str) -> List[tuple]:
+    """All (dtype, [dims]) in a shape string (tuples yield several)."""
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_elems(text))
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_shape_text: str
+    body: str  # full RHS text
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and "{" in line:
+                cur = Computation(m.group(1), [])
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, rhs = m.groups()
+            # result shape: the leading shape expr(s) of the RHS
+            paren = rhs.find(" ")
+            shape_text = rhs.split("=", 1)[0]
+            cur.instructions.append(Instruction(name, rhs, rhs))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Max integer constant in the loop condition (jax scan: counter < N)."""
+    best = 1
+    for ins in cond.instructions:
+        for m in re.finditer(r"constant\((\d+)\)", ins.body):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def build_multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, int]:
+    """Computation → product of enclosing while trip counts."""
+    mult: Dict[str, int] = {}
+
+    def visit(name: str, m: int):
+        if name not in comps:
+            return
+        # keep the max multiplier (a computation reused at different depths
+        # is rare; max is the conservative-correct choice for totals)
+        if mult.get(name, 0) >= m:
+            return
+        mult[name] = m
+        comp = comps[name]
+        for ins in comp.instructions:
+            called = _CALLED.findall(ins.body)
+            names = []
+            for grp in called:
+                names += [x.strip().lstrip("%") for x in grp.split(",")]
+            if " while(" in ins.body or ins.body.startswith("while("):
+                cond_m = re.search(r"condition=%?([\w\.\-]+)", ins.body)
+                body_m = re.search(r"body=%?([\w\.\-]+)", ins.body)
+                trips = 1
+                if cond_m and cond_m.group(1) in comps:
+                    trips = _trip_count(comps[cond_m.group(1)])
+                if body_m:
+                    visit(body_m.group(1), m * trips)
+                if cond_m:
+                    visit(cond_m.group(1), m * trips)
+                continue
+            for n in names:
+                visit(n, m)
+
+    visit(entry, 1)
+    return mult
+
+
+def _find_entry(comps: Dict[str, Computation], hlo: str) -> str:
+    m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    return max(comps, key=lambda c: len(comps[c].instructions))
+
+
+def _dot_flops(comp: Computation, shapes: Dict[str, str]) -> float:
+    total = 0.0
+    for ins in comp.instructions:
+        if " dot(" not in ins.body and not ins.body.startswith("dot("):
+            continue
+        elems = _shape_elems(ins.body.split(" dot(")[0].split("(")[0])
+        if not elems:
+            continue
+        result_elems = sum(n for _, n in elems)
+        mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.body)
+        operands = re.findall(r"dot\(%?([\w\.\-]+),", ins.body)
+        contracted = 1
+        if mm and operands:
+            lhs_shape = shapes.get(operands[0])
+            if lhs_shape:
+                dims_m = _SHAPE.search(lhs_shape)
+                if dims_m:
+                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                    for idx in mm.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contracted *= dims[int(idx)]
+        total += 2.0 * result_elems * contracted
+    return total
+
+
+def analyze(hlo: str) -> dict:
+    """Returns loop-corrected per-device totals:
+    {"dot_flops", "collectives": {op: bytes}, "n_while", ...}."""
+    comps = parse_computations(hlo)
+    entry = _find_entry(comps, hlo)
+    mult = build_multipliers(comps, entry)
+
+    # result-shape table (per computation scope flattened; names are unique
+    # enough in optimised HLO for dot operands)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instructions:
+            shapes.setdefault(ins.name, ins.body.split(" ")[0])
+
+    flops = 0.0
+    coll: Dict[str, float] = {}
+    coll_f32 = 0.0
+    n_while = 0
+    for comp in comps.values():
+        m = mult.get(comp.name, 0)
+        if m == 0:
+            continue
+        flops += m * _dot_flops(comp, shapes)
+        for ins in comp.instructions:
+            if " while(" in ins.body:
+                n_while += 1
+            cm = _COLLECTIVE.search(ins.body)
+            if cm:
+                op = cm.group(1).replace("-start", "")
+                result = ins.body.split(cm.group(1))[0]
+                nbytes = _bytes_of(result)
+                coll[op] = coll.get(op, 0.0) + m * nbytes
+                coll_f32 += m * sum(
+                    n * _DTYPE_BYTES[dt]
+                    for dt, n in _shape_elems(result)
+                    if dt == "f32"
+                )
+    return {
+        "dot_flops": flops,
+        "collectives": coll,
+        "collective_bytes_total": sum(coll.values()),
+        # f32 share: the CPU backend emulates bf16 dots in f32, so GSPMD
+        # materialises f32 operands around them; on TPU these collectives
+        # carry bf16.  The roofline reports both raw and the TPU projection
+        # (f32 share halved) for bf16-compute models.
+        "collective_bytes_f32": coll_f32,
+        "n_while": n_while,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,67 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers
+train/serve steps against these.  Modality frontends are stubs: the VLM
+cell ships precomputed patch embeddings, the audio cell precomputed
+conditioning embeddings + EnCodec token ids (per the assignment).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import BuiltModel
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    S_tok = S - cfg.n_prefix_embeds - cfg.n_cond_embeds
+    tok_shape = (B, S_tok, cfg.n_codebooks) if cfg.n_codebooks else (B, S_tok)
+    spec = {
+        "tokens": SDS(tok_shape, jnp.int32),
+        "labels": SDS(tok_shape, jnp.int32),
+    }
+    if cfg.n_prefix_embeds:
+        spec["patch_embeds"] = SDS(
+            (B, cfg.n_prefix_embeds, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.n_cond_embeds:
+        spec["cond_embeds"] = SDS((B, cfg.n_cond_embeds, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    spec = train_batch_specs(cfg, shape)
+    spec.pop("labels")
+    return spec
+
+
+def decode_input_specs(model: BuiltModel, shape: ShapeSpec) -> Tuple[dict, tuple, SDS]:
+    """(token specs, cache shapes, cache_len spec) for one decode step with
+    a cache of ``seq_len`` capacity holding seq_len-1 tokens."""
+    cfg = model.cfg
+    B, T = shape.global_batch, shape.seq_len
+    tok_shape = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    tokens = SDS(tok_shape, jnp.int32)
+    caches = model.cache_shapes(B, T)
+    cache_len = SDS((B,), jnp.int32)
+    return tokens, caches, cache_len
+
+
+def input_specs(model: BuiltModel, shape: ShapeSpec):
+    """Dispatch on the cell kind. Returns kwargs-dict of SDS pytrees."""
+    cfg = model.cfg
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        tokens, caches, cache_len = decode_input_specs(model, shape)
+        return {"tokens_t": tokens, "caches": caches, "cache_len": cache_len}
+    raise ValueError(shape.kind)

@@ -1,0 +1,46 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as functions, never module-level constants: importing this module
+must not touch jax device state (the dry-run pins the device count *before*
+first jax init; smoke tests must keep seeing 1 CPU device).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (256-chip v5e pod); 2×16×16 (two pods) when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(
+    n_devices: Optional[int] = None, model_parallelism: int = 16
+):
+    """Largest valid (data, model) grid for the devices actually healthy —
+    the elastic-scaling entry point used after node failures.
+
+    Shrinks model parallelism if the fleet is smaller than one TP group;
+    otherwise drops stragglers to the largest multiple of ``model_parallelism``.
+    """
+    if n_devices is None:
+        n_devices = jax.device_count()
+    model = min(model_parallelism, n_devices)
+    while n_devices % model:
+        model //= 2
+    data = n_devices // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axis_names": tuple(mesh.axis_names),
+        "shape": tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+        "n_devices": int(np.prod([mesh.shape[a] for a in mesh.axis_names])),
+    }

@@ -1,0 +1,64 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Boots the scale-per-request platform around real (reduced-config) model
+replicas: measures this host's cold/warm service times, plans the
+expiration threshold with the SimFaaS core against the target rate/SLO,
+replays a Poisson workload and prints predicted-vs-observed QoS.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--rate", type=float, default=0.2, help="req/s")
+    ap.add_argument("--horizon", type=float, default=20000.0)
+    ap.add_argument("--cold-slo", type=float, default=0.05)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.data.workload import poisson_arrivals
+    from repro.serving.autoscale import plan_expiration_threshold
+    from repro.serving.engine import Replica
+    from repro.serving.platform import ServerlessPlatform
+
+    cfg = get_smoke_config(args.arch)
+    print(f"[serve] measuring {cfg.name} on this host...")
+    rep = Replica(cfg, max_len=args.prompt_len + args.new_tokens + 8)
+    cold_s = rep.init_seconds + rep.warmup(1, args.prompt_len)
+    g = rep.generate(np.zeros((1, args.prompt_len), np.int32), args.new_tokens)
+    warm_s = g.prefill_s + g.decode_s
+    print(f"[serve] cold {cold_s:.2f}s, warm {warm_s:.3f}s")
+
+    plan = plan_expiration_threshold(
+        args.rate, warm_s, cold_s, args.cold_slo, sim_time=args.horizon
+    )
+    print(
+        f"[serve] threshold {plan.expiration_threshold:.0f}s → predicted "
+        f"cold {plan.predicted_cold_prob:.3%}, replicas "
+        f"{plan.predicted_avg_replicas:.2f}, wasted {plan.predicted_wasted_ratio:.1%}"
+    )
+
+    rng = np.random.default_rng(0)
+    platform = ServerlessPlatform(
+        cold_time_fn=lambda r: float(rng.exponential(cold_s)),
+        warm_time_fn=lambda r: float(rng.exponential(warm_s)),
+        expiration_threshold=plan.expiration_threshold,
+    )
+    obs = platform.run(poisson_arrivals(args.rate, args.horizon), args.horizon)
+    print(
+        f"[serve] observed cold {obs.cold_start_prob:.3%}, replicas "
+        f"{obs.avg_total_replicas:.2f}, wasted {obs.wasted_ratio:.1%}, "
+        f"resp {obs.avg_response_time:.3f}s over {len(obs.records)} requests"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+On this CPU container it trains reduced (smoke) configs end-to-end; on a
+real fleet the same entry point builds the production mesh, shards params
+per ``distributed.sharding`` and runs the identical loop (the dry-run
+proves those steps compile for every assigned architecture).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/repro_launch_train")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default=None, choices=[None, "int8"])
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import PipelineConfig
+    from repro.training.optimizer import AdamWConfig
+    from repro.training.train_loop import TrainLoopConfig, train
+    from repro.training.train_step import TrainStepConfig
+
+    cfg = get_smoke_config(args.arch)
+    pcfg = PipelineConfig(global_batch=args.batch, seq_len=args.seq)
+    loop = TrainLoopConfig(
+        total_steps=args.steps,
+        checkpoint_every=max(args.steps // 5, 5),
+        checkpoint_dir=args.ckpt,
+    )
+    ts = TrainStepConfig(
+        adamw=AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps),
+        num_microbatches=args.microbatches,
+        compression=args.compression,
+    )
+
+    def log(step, m):
+        if step % 10 == 0:
+            print(f"step {step:4d}  loss {m['loss']:.4f}  {m['step_s']:.2f}s",
+                  flush=True)
+
+    _, _, hist = train(cfg, pcfg, loop, ts, on_metrics=log)
+    print(f"done: {len(hist)} steps, final loss {hist[-1][1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

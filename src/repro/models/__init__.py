@@ -1,0 +1,8 @@
+"""Model substrate: the 10 assigned architectures in pure JAX.
+
+Every architecture is expressed as a ``ModelConfig`` (see
+``repro.configs``) consumed by ``build_model``, which returns init /
+train-loss / prefill / decode callables composed from the blocks in this
+package.  All code is dtype-explicit (bf16 compute / configurable param
+dtype) and sharding-annotation friendly.
+"""

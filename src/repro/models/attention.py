@@ -1,0 +1,196 @@
+"""Attention: tiled online-softmax (flash-style) reference + decode path.
+
+``flash_attention_ref`` is the pure-jnp oracle mirrored by the Pallas kernel
+in ``repro.kernels.flash_attention``; the model stack calls through
+``repro.kernels.ops`` so the backend (jnp ref / Pallas) is switchable.
+
+Tiling is static python-loop over (q-chunk × kv-chunk) with exact triangular
+skipping — causal FLOPs are the true ~half of full attention, so compiled
+cost_analysis reflects useful work (roofline §Perf reads from it).
+
+Supports: MHA/GQA/MQA (grouped einsum, no kv repeat materialised), causal,
+bidirectional-prefix (VLM prefix-LM), sliding window (local attention),
+attention logit soft-capping, partial rotary applied by the caller.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38  # large negative for masked logits (bf16-safe)
+
+
+def grad_dtype_guard(x: jax.Array) -> jax.Array:
+    """Identity whose cotangent is cast back to the primal dtype.
+
+    The tile einsums accumulate in f32 (``preferred_element_type``), so
+    their VJP emits f32 cotangents; without this guard every [B,S,D]-scale
+    gradient upstream of attention becomes f32 — 2× the activation-gradient
+    memory and bandwidth for zero accuracy benefit (the f32 accumulation
+    already happened)."""
+
+    @jax.custom_vjp
+    def _ident(y):
+        return y
+
+    _ident.defvjp(lambda y: (y, None), lambda _, g: (g.astype(x.dtype),))
+    return _ident(x)
+
+
+def _mask_block(
+    q_pos: jax.Array,  # [qc]
+    k_pos: jax.Array,  # [kc]
+    causal: bool,
+    window: int,
+    prefix_len: int,
+):
+    """Boolean [qc, kc] allow-mask for one tile."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    if causal:
+        allow = k <= q
+    else:
+        allow = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if prefix_len > 0:
+        allow = allow | ((q < prefix_len) & (k < prefix_len))
+    if window > 0:
+        allow = allow & (k > q - window)
+    return allow
+
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, S, Hq, D]
+    k: jax.Array,  # [B, T, Hkv, D]
+    v: jax.Array,  # [B, T, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    prefix_len: int = 0,
+    softcap: float = 0.0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    assert S % q_chunk == 0 and T % kv_chunk == 0
+
+    q, k, v = grad_dtype_guard(q), grad_dtype_guard(k), grad_dtype_guard(v)
+    qg = q.reshape(B, S, Hkv, G, D)
+
+    # One tile of the online-softmax update.  Checkpointed: the backward
+    # pass recomputes the tile's probabilities from (q, k) instead of
+    # keeping every tile's [.., qc, kc] score matrix alive — the flash
+    # backward structure, without which layer-level remat holds O(S²/tile)
+    # f32 residuals.
+    @jax.checkpoint
+    def tile_update(q_blk, k_blk, v_blk, m, l, acc, q_pos, k_pos):
+        s = jnp.einsum(
+            "bqngd,bknd->bnqgk", q_blk, k_blk, preferred_element_type=jnp.float32
+        )
+        s = jnp.swapaxes(s, 2, 3) * scale  # [B, Hkv, G, qc, kc]
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        allow = _mask_block(q_pos, k_pos, causal, window, prefix_len)
+        s = jnp.where(allow[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum(
+            "bngqk,bknd->bngqd",
+            p.astype(v_blk.dtype),
+            v_blk,
+            preferred_element_type=jnp.float32,
+        )
+        acc = acc * corr[..., None] + pv
+        return m_new, l, acc
+
+    out_chunks = []
+    for qi in range(S // q_chunk):
+        q_start, q_end = qi * q_chunk, (qi + 1) * q_chunk
+        q_pos = jnp.arange(q_start, q_end)
+        q_blk = qg[:, q_start:q_end]  # [B, qc, Hkv, G, D]
+        m = jnp.full((B, Hkv, G, q_chunk), NEG_INF, dtype=jnp.float32)
+        l = jnp.zeros((B, Hkv, G, q_chunk), dtype=jnp.float32)
+        acc = jnp.zeros((B, Hkv, G, q_chunk, D), dtype=jnp.float32)
+        for ki in range(T // kv_chunk):
+            k_start, k_end = ki * kv_chunk, (ki + 1) * kv_chunk
+            # static tile skipping: strictly-future tiles (unless reachable
+            # through the bidirectional prefix) and out-of-window tiles
+            if causal and k_start > q_end - 1 and k_start >= prefix_len:
+                continue
+            if window > 0 and k_end - 1 <= q_start - window:
+                continue
+            k_pos = jnp.arange(k_start, k_end)
+            m, l, acc = tile_update(
+                q_blk, k[:, k_start:k_end], v[:, k_start:k_end], m, l, acc,
+                q_pos, k_pos,
+            )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        out_chunks.append(out.astype(q.dtype))  # [B, Hkv, G, qc, D]
+    out = jnp.concatenate(out_chunks, axis=3)  # [B, Hkv, G, S, D]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, Hq, D] — one new token per sequence
+    k_cache: jax.Array,  # [B, T, Hkv, D]
+    v_cache: jax.Array,  # [B, T, Hkv, D]
+    cache_len: jax.Array,  # [B] valid prefix length (new token at index len-1)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum(
+        "bngd,btnd->bngt", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    t_pos = jnp.arange(T)[None, :]  # [1, T]
+    valid = t_pos < cache_len[:, None]
+    if window > 0:
+        valid = valid & (t_pos > cache_len[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bngt,btnd->bngd",
+        p.astype(v_cache.dtype),
+        v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def naive_attention(
+    q, k, v, *, causal=True, window=0, prefix_len=0, softcap=0.0, scale=None
+):
+    """O(S·T) full-materialisation attention — test oracle for the oracle."""
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D**-0.5
+    qg = q.reshape(B, S, Hkv, G, D)
+    s = jnp.einsum("bqngd,btnd->bnqgt", qg, k, preferred_element_type=jnp.float32)
+    s = jnp.swapaxes(s, 2, 3) * scale  # [B,Hkv,G,S,T]
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    allow = _mask_block(jnp.arange(S), jnp.arange(T), causal, window, prefix_len)
+    s = jnp.where(allow[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngqt,btnd->bqngd", p.astype(v.dtype), v)
+    return out.reshape(B, S, Hq, D).astype(q.dtype)

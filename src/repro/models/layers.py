@@ -1,0 +1,186 @@
+"""Shared neural blocks: norms, rotary embeddings, GLU FFNs, annotations."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.param import DEFAULT_RULES
+
+# ---------------------------------------------------------------------------
+# Logical-axis activation annotations (no-op outside a sharding context)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: contextvars.ContextVar[Optional[dict]] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict):
+    token = _ACTIVE_RULES.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axis names (rule lookup)."""
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    axes = [rules.get(l) if l is not None else None for l in logical]
+    seen: set = set()
+    clean = []
+    for a in axes:
+        names = a if isinstance(a, tuple) else (a,) if a else ()
+        if any(n in seen for n in names):
+            clean.append(None)
+        else:
+            seen.update(names)
+            clean.append(a)
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm: statistics in f32, application in the compute dtype.
+
+    Computing the *apply* in f32 would materialise f32 [tokens, d_model]
+    activations (and f32 cotangents) at every norm site — 2× activation
+    memory for no accuracy benefit over f32-stats/bf16-apply (the standard
+    TPU LLM recipe)."""
+    var = jnp.mean(
+        jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+    )
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def build_rms_norm(b, d: int):
+    return {"scale": b.param((d,), ("embed",), init="ones")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (supports partial rotary + NTK-free base)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float, partial: float = 1.0):
+    rot_dim = int(head_dim * partial) // 2 * 2
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / max(rot_dim, 1)
+    inv_freq = 1.0 / (theta**exponent)
+    return inv_freq, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, partial: float = 1.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    head_dim = x.shape[-1]
+    inv_freq, rot_dim = rope_frequencies(head_dim, theta, partial)
+    if rot_dim == 0:
+        return x
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # [..., S, rd/2]
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x1, x2 = x_rot[..., ::2], x_rot[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Gated-linear-unit FFN (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def build_glu_ffn(b, d_model: int, d_ff: int, ffn_type: str = "glu"):
+    p = {
+        "w_up": b.param((d_model, d_ff), ("embed_fsdp", "mlp")),
+        "w_down": b.param((d_ff, d_model), ("mlp", "embed_fsdp")),
+    }
+    if ffn_type == "glu":
+        p["w_gate"] = b.param((d_model, d_ff), ("embed_fsdp", "mlp"))
+    return p
+
+
+def glu_ffn(params, x: jax.Array, activation: str = "silu") -> jax.Array:
+    dtype = x.dtype
+    act = jax.nn.silu if activation == "silu" else _gelu_tanh
+    up = x @ params["w_up"].astype(dtype)
+    if "w_gate" in params:  # GLU variant (SwiGLU / GeGLU)
+        h = act(x @ params["w_gate"].astype(dtype)) * up
+    else:  # plain 2-layer MLP (e.g. MusicGen)
+        h = act(up)
+    h = shard(h, "batch", "residual_seq", "mlp")
+    return h @ params["w_down"].astype(dtype)
+
+
+def _gelu_tanh(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def build_embedding(b, vocab: int, d_model: int):
+    return {"table": b.param((vocab, d_model), ("vocab", "embed_fsdp"), init="embed")}
+
+
+def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
+    from repro.models.attention import grad_dtype_guard
+
+    table = grad_dtype_guard(params["table"].astype(compute_dtype))
+    # The gather of a vocab-sharded table all-gathers the table; without
+    # the barrier XLA reorders the bf16 convert *after* that all-gather and
+    # moves 2× the bytes.  (Found via HLO collective audit — §Perf.)
+    table = jax.lax.optimization_barrier(table)
+    return table[tokens]
+
+
+def unembed(params, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = (x @ params["table"].astype(x.dtype).T).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def build_linear_head(b, d_model: int, vocab: int):
+    return {"w": b.param((d_model, vocab), ("embed_fsdp", "vocab"))}
+
+
+def linear_head(params, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = (x @ params["w"].astype(x.dtype)).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array, mask=None):
+    """Mean CE over valid tokens; logits f32 [.., V], labels int [..]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

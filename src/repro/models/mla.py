@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Queries are low-rank (q_lora_rank); keys/values are compressed into a
+``kv_lora_rank``-dim latent ``c_kv`` plus a shared (MQA-like) rotary key of
+``qk_rope_head_dim`` dims.  The decode KV cache stores only
+``kv_lora_rank + qk_rope_head_dim`` floats per token (the paper's 93 %
+cache shrink) — decode uses the **absorbed** form: ``W_uk`` folds into the
+query and ``W_uv`` into the output projection, so attention runs directly
+against the latent cache like a 1-kv-head MQA with head_dim 512+64.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import flash_attention_ref
+from repro.models.layers import apply_rope, build_rms_norm, rms_norm, shard
+
+
+def build_mla(b, cfg: ModelConfig):
+    a = cfg.mla
+    d = cfg.d_model
+    H = cfg.n_heads
+    qk_dim = a.qk_nope_head_dim + a.qk_rope_head_dim
+    return {
+        "w_dq": b.param((d, a.q_lora_rank), ("embed_fsdp", "lora")),
+        "q_norm": build_rms_norm(b, a.q_lora_rank),
+        "w_uq": b.param((a.q_lora_rank, H, qk_dim), ("lora", "heads", "qkv")),
+        "w_dkv": b.param(
+            (d, a.kv_lora_rank + a.qk_rope_head_dim), ("embed_fsdp", "lora")
+        ),
+        "kv_norm": build_rms_norm(b, a.kv_lora_rank),
+        "w_uk": b.param(
+            (a.kv_lora_rank, H, a.qk_nope_head_dim), ("lora", "heads", "qkv")
+        ),
+        "w_uv": b.param((a.kv_lora_rank, H, a.v_head_dim), ("lora", "heads", "qkv")),
+        "w_o": b.param((H, a.v_head_dim, d), ("heads", "qkv", "embed_fsdp")),
+    }
+
+
+def _project_q(params, x, cfg, positions):
+    a = cfg.mla
+    dtype = x.dtype
+    cq = x @ params["w_dq"].astype(dtype)
+    cq = rms_norm(params["q_norm"]["scale"], cq, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhd->bshd", cq, params["w_uq"].astype(dtype))
+    q_nope = q[..., : a.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., a.qk_nope_head_dim :], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(params, x, cfg, positions):
+    a = cfg.mla
+    dtype = x.dtype
+    ckv_full = x @ params["w_dkv"].astype(dtype)
+    c_kv = rms_norm(
+        params["kv_norm"]["scale"], ckv_full[..., : a.kv_lora_rank], cfg.norm_eps
+    )
+    k_rope = ckv_full[..., a.kv_lora_rank :][:, :, None, :]  # [B,S,1,rope_d]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_attention(params, x, cfg: ModelConfig, positions):
+    """Prefill/train path: materialise per-head K/V from the latent."""
+    a = cfg.mla
+    dtype = x.dtype
+    q_nope, q_rope = _project_q(params, x, cfg, positions)
+    c_kv, k_rope = _project_kv_latent(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uk"].astype(dtype))
+    v = jnp.einsum("bsr,rhd->bshd", c_kv, params["w_uv"].astype(dtype))
+    H = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :], (*k_rope.shape[:2], H, a.qk_rope_head_dim)
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+    # v_head_dim may differ from qk dim: pad v for the shared kernel, slice out
+    pad = q.shape[-1] - a.v_head_dim
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    out = flash_attention_ref(q, k, v_p, causal=True, scale=scale)
+    out = out[..., : a.v_head_dim]
+    out = shard(out, "batch", None, "heads", None)
+    return jnp.einsum("bshd,hdo->bso", out, params["w_o"].astype(dtype))
+
+
+def mla_decode(params, x, cfg: ModelConfig, latent_cache, rope_cache, cache_len):
+    """Absorbed-form decode against the latent cache.
+
+    x: [B, 1, D]; latent_cache: [B, T, kv_lora]; rope_cache: [B, T, rope_d];
+    the new token's latents must already be written at ``cache_len - 1``.
+    """
+    a = cfg.mla
+    dtype = x.dtype
+    B = x.shape[0]
+    positions = (cache_len - 1)[:, None]  # [B,1]
+    q_nope, q_rope = _project_q(params, x, cfg, positions)  # [B,1,H,*]
+    # absorb W_uk: query in latent space
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, params["w_uk"].astype(dtype))
+    q_lat, q_rope = q_lat[:, 0], q_rope[:, 0]  # [B,H,r], [B,H,rope_d]
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum(
+        "bhr,btr->bht", q_lat, latent_cache, preferred_element_type=jnp.float32
+    )
+    s = s + jnp.einsum(
+        "bhd,btd->bht", q_rope, rope_cache, preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    t_pos = jnp.arange(latent_cache.shape[1])[None, :]
+    s = jnp.where((t_pos < cache_len[:, None])[:, None, :], s, -2.3819763e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum(
+        "bht,btr->bhr", p.astype(latent_cache.dtype), latent_cache
+    )  # [B,H,r]
+    # absorb W_uv on the way out
+    out = jnp.einsum("bhr,rhd->bhd", out_lat, params["w_uv"].astype(dtype))
+    out = jnp.einsum("bhd,hdo->bo", out, params["w_o"].astype(dtype))
+    return out[:, None, :]
+
+
+def mla_new_latents(params, x, cfg: ModelConfig, positions):
+    """Compute the latent/rope entries to append to the cache for new tokens."""
+    return _project_kv_latent(params, x, cfg, positions)

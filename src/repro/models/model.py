@@ -1,0 +1,494 @@
+"""build_model: assemble a ModelConfig into init / train / prefill / decode.
+
+Families:
+* plain LM (llama/granite/gemma/stablelm/llama4/deepseek/mamba2/griffin):
+  batch = {tokens [B,S], labels [B,S], loss_mask [B,S]?}
+* VLM (paligemma): + patch_embeds [B,P,D] prepended, prefix-LM mask over P
+* audio (musicgen): tokens/labels [B,S,K] multi-codebook, cond_embeds
+  [B,C,D] prepended conditioning prefix
+
+Cross-entropy is computed **chunked over the sequence** (scan + remat) so
+[B,S,V] logits are never materialised — with 128k–256k vocabularies the
+full logits tensor would dominate memory at train_4k shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import (
+    build_embedding,
+    build_rms_norm,
+    embed,
+    rms_norm,
+    softmax_cross_entropy,
+    unembed,
+    build_linear_head,
+    linear_head,
+    shard,
+)
+from repro.models.param import ParamBuilder
+
+CE_CHUNK = 512  # sequence-chunk for the chunked cross-entropy
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+
+def build_params(b: ParamBuilder, cfg: ModelConfig):
+    p: dict[str, Any] = {}
+    if cfg.n_codebooks > 0:
+        p["embed"] = {
+            "table": b.param(
+                (cfg.n_codebooks, cfg.vocab_size, cfg.d_model),
+                ("codebooks", "vocab", "embed_fsdp"),
+                init="embed",
+            )
+        }
+        p["heads"] = {
+            "w": b.param(
+                (cfg.n_codebooks, cfg.d_model, cfg.vocab_size),
+                ("codebooks", "embed_fsdp", "vocab"),
+            )
+        }
+    else:
+        p["embed"] = build_embedding(b, cfg.vocab_size, cfg.d_model)
+        if not cfg.tie_embeddings:
+            p["head"] = build_linear_head(b, cfg.d_model, cfg.vocab_size)
+    p["blocks"] = tf.build_blocks(b, cfg)
+    p["final_norm"] = build_rms_norm(b, cfg.d_model)
+    if cfg.mtp_depth > 0:
+        p["mtp"] = {
+            "proj": b.param((2 * cfg.d_model, cfg.d_model), ("embed_fsdp", "embed")),
+            "norm_h": build_rms_norm(b, cfg.d_model),
+            "norm_e": build_rms_norm(b, cfg.d_model),
+            "layer": tf.build_layer(b, cfg, "attn" if cfg.mla is None else "mla", False),
+        }
+    return p
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count from the shape tree (no allocation).
+
+    ``active_only``: MoE routed experts contribute top_k/n_experts of their
+    size (shared experts and dense params fully) — the N in 6·N_active·D.
+    """
+    b = ParamBuilder(mode="shape")
+    tree = build_params(b, cfg)
+
+    def _count(path, leaf):
+        n = int(np.prod(leaf.shape))
+        if active_only and cfg.moe.n_experts > 0:
+            keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+            if "experts" in keys:
+                n = int(n * cfg.moe.top_k / cfg.moe.n_experts)
+        return n
+
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        total += _count(path, leaf)
+    return total
+
+
+def count_embedding_params(cfg: ModelConfig) -> int:
+    n = cfg.vocab_size * cfg.d_model * max(cfg.n_codebooks, 1)
+    if cfg.n_codebooks > 0 or not cfg.tie_embeddings:
+        n *= 2  # separate unembedding
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Embedding / heads per family
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, tokens, cfg: ModelConfig):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.n_codebooks > 0:  # [B,S,K] → sum of per-codebook embeddings
+        tables = params["embed"]["table"].astype(cdt)  # [K,V,D]
+        x = jnp.zeros((*tokens.shape[:2], cfg.d_model), cdt)
+        for kb in range(cfg.n_codebooks):
+            x = x + tables[kb][tokens[..., kb]]
+        return x
+    return embed(params["embed"], tokens, cdt)
+
+
+def _logits_fn(params, cfg: ModelConfig):
+    """Returns h_chunk [B,c,D] → logits (f32)."""
+    if cfg.n_codebooks > 0:
+        w = params["heads"]["w"]
+
+        def fn(h):
+            return jnp.einsum("bcd,kdv->bckv", h, w.astype(h.dtype)).astype(
+                jnp.float32
+            )
+
+        return fn
+    if cfg.tie_embeddings:
+        return lambda h: unembed(params["embed"], h, cfg.logit_softcap)
+    return lambda h: linear_head(params["head"], h, cfg.logit_softcap)
+
+
+def _prefix_embeds(params, batch, cfg: ModelConfig):
+    """Precomputed modality-frontend embeddings to prepend (VLM/audio)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.n_prefix_embeds > 0:
+        return batch["patch_embeds"].astype(cdt)
+    if cfg.n_cond_embeds > 0:
+        return batch["cond_embeds"].astype(cdt)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def backbone(params, x, cfg: ModelConfig, positions, collect_cache=False):
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    x = shard(x, "batch", "residual_seq", "embed")
+    x, aux, caches = tf.apply_blocks(
+        params["blocks"], x, cfg, positions, collect_cache=collect_cache
+    )
+    x = rms_norm(params["final_norm"]["scale"], x, cfg.norm_eps)
+    return x, aux, caches
+
+
+def chunked_ce(h, logits_fn, labels, mask, n_codebooks=0, chunk=CE_CHUNK):
+    """Mean CE without materialising [B,S,V]; remat'd scan over seq chunks."""
+    B, S = h.shape[0], h.shape[1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    hs = jnp.moveaxis(h.reshape(B, n, chunk, -1), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, chunk, *labels.shape[2:]), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        h_c, l_c, m_c = inp
+        logits = logits_fn(h_c)  # [B,c,V] or [B,c,K,V]
+        if n_codebooks > 0:
+            logits = shard(logits, "batch", None, None, "vocab")
+        else:
+            logits = shard(logits, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, l_c[..., None], axis=-1)[..., 0]
+        nll = logz - gold  # [B,c] or [B,c,K]
+        if n_codebooks > 0:
+            nll = nll.mean(-1)
+        m = m_c.astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + (nll * m).sum(), cnt + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls, ms)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _assemble_inputs(params, batch, cfg: ModelConfig):
+    """Returns (x_embed [B,S,D], labels, loss_mask, positions)."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    prefix = _prefix_embeds(params, batch, cfg)
+    labels = batch["labels"]
+    B = tokens.shape[0]
+    if prefix is not None:
+        x = jnp.concatenate([prefix, x], axis=1)
+        P = prefix.shape[1]
+        # prefix positions carry no next-token loss
+        pad_lab = jnp.zeros((B, P, *labels.shape[2:]), labels.dtype)
+        labels = jnp.concatenate([pad_lab, labels], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((B, P), jnp.float32), batch.get(
+                "loss_mask", jnp.ones(tokens.shape[:2], jnp.float32)
+            )],
+            axis=1,
+        )
+    else:
+        mask = batch.get("loss_mask", jnp.ones(tokens.shape[:2], jnp.float32))
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, labels, mask, positions
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    x, labels, mask, positions = _assemble_inputs(params, batch, cfg)
+    h, aux, _ = backbone(params, x, cfg, positions)
+    loss = chunked_ce(h, _logits_fn(params, cfg), labels, mask, cfg.n_codebooks)
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp_depth > 0:
+        mtp_l = _mtp_loss(params, h, batch, cfg, positions)
+        metrics["mtp"] = mtp_l
+        loss = loss + 0.3 * mtp_l
+    total = loss + aux
+    metrics["loss"] = total
+    return total, metrics
+
+
+def _mtp_loss(params, h, batch, cfg: ModelConfig, positions):
+    """DeepSeek-V3 multi-token prediction (depth 1, shared unembedding):
+    h'_t = layer(W_p [norm(h_t); norm(emb(tok_{t+1}))]) predicts label_{t+1}
+    (i.e. token t+2)."""
+    p = params["mtp"]
+    tokens, labels = batch["tokens"], batch["labels"]
+    cdt = jnp.dtype(cfg.compute_dtype)
+    emb_next = embed(params["embed"], tokens, cdt)  # emb(tok_t)
+    # shift: at position t use emb(tok_{t+1}); last position has no target
+    emb_next = jnp.roll(emb_next, -1, axis=1)
+    hh = jnp.concatenate(
+        [
+            rms_norm(p["norm_h"]["scale"], h, cfg.norm_eps),
+            rms_norm(p["norm_e"]["scale"], emb_next, cfg.norm_eps),
+        ],
+        axis=-1,
+    )
+    hh = hh @ p["proj"].astype(cdt)
+    kind = "attn" if cfg.mla is None else "mla"
+    hh, _, _ = tf.apply_layer(p["layer"], hh, cfg, kind, False, positions)
+    mtp_labels = jnp.roll(labels, -1, axis=1)
+    mask = jnp.ones(tokens.shape[:2], jnp.float32).at[:, -2:].set(0.0)
+    return chunked_ce(hh, _logits_fn(params, cfg), mtp_labels, mask, cfg.n_codebooks)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def build_cache(b: ParamBuilder, cfg: ModelConfig, batch: int, max_len: int):
+    """Decode-cache pytree via a ParamBuilder (init zeros / shape / spec)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    segs = []
+    for pattern, count, flags in tf.segment_layout(cfg):
+        elems = []
+        for kind in pattern:
+            if kind in ("attn", "local"):
+                T = min(max_len, cfg.window) if kind == "local" else max_len
+                elems.append(
+                    {
+                        "k": b.param(
+                            (count, batch, T, cfg.n_kv_heads, cfg.head_dim),
+                            ("layers", "batch", "seq", "kv_heads", "qkv"),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                        "v": b.param(
+                            (count, batch, T, cfg.n_kv_heads, cfg.head_dim),
+                            ("layers", "batch", "seq", "kv_heads", "qkv"),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                    }
+                )
+            elif kind == "mla":
+                a = cfg.mla
+                elems.append(
+                    {
+                        "lat": b.param(
+                            (count, batch, max_len, a.kv_lora_rank),
+                            ("layers", "batch", "seq", "lora"),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                        "rope": b.param(
+                            (count, batch, max_len, a.qk_rope_head_dim),
+                            ("layers", "batch", "seq", None),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                    }
+                )
+            elif kind == "ssm":
+                s = cfg.ssm
+                d_inner = s.expand * cfg.d_model
+                H = d_inner // s.head_dim
+                conv_dim = d_inner + 2 * s.n_groups * s.d_state
+                elems.append(
+                    {
+                        "state": b.param(
+                            (count, batch, H, s.head_dim, s.d_state),
+                            ("layers", "batch", "heads", None, "state"),
+                            init="zeros",
+                            dtype=jnp.float32,
+                        ),
+                        "conv": b.param(
+                            (count, batch, s.d_conv - 1, conv_dim),
+                            ("layers", "batch", None, "heads"),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                    }
+                )
+            elif kind == "rglru":
+                w = cfg.rglru.lru_width or cfg.d_model
+                elems.append(
+                    {
+                        "h": b.param(
+                            (count, batch, w),
+                            ("layers", "batch", "heads"),
+                            init="zeros",
+                            dtype=jnp.float32,
+                        ),
+                        "conv": b.param(
+                            (count, batch, cfg.rglru.d_conv - 1, w),
+                            ("layers", "batch", None, "heads"),
+                            init="zeros",
+                            dtype=cdt,
+                        ),
+                    }
+                )
+            else:
+                raise ValueError(kind)
+        segs.append(tuple(elems))
+    return tuple(segs)
+
+
+def _prefill_to_decode_cache(prefill_caches, cfg: ModelConfig, max_len: int, seq_len):
+    """Convert apply_blocks prefill outputs into the decode-cache layout."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    segs = []
+    for (pattern, count, flags), seg_cache in zip(
+        tf.segment_layout(cfg), prefill_caches
+    ):
+        elems = []
+        for e, kind in enumerate(pattern):
+            entry = seg_cache[e]
+            if kind == "attn":
+                k, v = entry  # [count,B,S,Hkv,D]
+                pad = max_len - k.shape[2]
+                pad_cfg = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                elems.append(
+                    {
+                        "k": jnp.pad(k.astype(cdt), pad_cfg),
+                        "v": jnp.pad(v.astype(cdt), pad_cfg),
+                    }
+                )
+            elif kind == "local":
+                k, v = entry
+                w = min(max_len, cfg.window)
+                S = k.shape[2]
+                if S >= w:
+                    roll = int(S % w)
+                    k_r = jnp.roll(k[:, :, S - w :], roll, axis=2)
+                    v_r = jnp.roll(v[:, :, S - w :], roll, axis=2)
+                else:
+                    k_r = jnp.pad(k, ((0, 0), (0, 0), (0, w - S), (0, 0), (0, 0)))
+                    v_r = jnp.pad(v, ((0, 0), (0, 0), (0, w - S), (0, 0), (0, 0)))
+                elems.append({"k": k_r.astype(cdt), "v": v_r.astype(cdt)})
+            elif kind == "mla":
+                lat, rope = entry
+                pad = max_len - lat.shape[2]
+                elems.append(
+                    {
+                        "lat": jnp.pad(
+                            lat.astype(cdt), ((0, 0), (0, 0), (0, pad), (0, 0))
+                        ),
+                        "rope": jnp.pad(
+                            rope.astype(cdt), ((0, 0), (0, 0), (0, pad), (0, 0))
+                        ),
+                    }
+                )
+            elif kind == "ssm":
+                state, conv_tail = entry
+                elems.append(
+                    {
+                        "state": state.astype(jnp.float32),
+                        "conv": conv_tail.astype(cdt),
+                    }
+                )
+            elif kind == "rglru":
+                h_last, conv_tail = entry
+                elems.append(
+                    {"h": h_last.astype(jnp.float32), "conv": conv_tail.astype(cdt)}
+                )
+            else:
+                raise ValueError(kind)
+        segs.append(tuple(elems))
+    return tuple(segs)
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Returns (last-token logits, decode caches, cache_len [B])."""
+    tokens = batch["tokens"]
+    x = _embed_tokens(params, tokens, cfg)
+    pre = _prefix_embeds(params, batch, cfg)
+    if pre is not None:
+        x = jnp.concatenate([pre, x], axis=1)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h, _, caches = backbone(params, x, cfg, positions, collect_cache=True)
+    logits = _logits_fn(params, cfg)(h[:, -1:])
+    caches = _prefill_to_decode_cache(caches, cfg, max_len, S)
+    cache_len = jnp.full((B,), S, jnp.int32)
+    return logits, caches, cache_len
+
+
+def decode_step(params, tokens_t, caches, cache_len, cfg: ModelConfig):
+    """tokens_t: [B,1] (or [B,1,K] audio). Returns (logits, caches, len+1)."""
+    x = _embed_tokens(params, tokens_t, cfg)
+    if cfg.embedding_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    x, new_caches = tf.apply_blocks_decode(params["blocks"], x, cfg, caches, cache_len)
+    x = rms_norm(params["final_norm"]["scale"], x, cfg.norm_eps)
+    logits = _logits_fn(params, cfg)(x)
+    return logits, new_caches, cache_len + 1
+
+
+# ---------------------------------------------------------------------------
+# Public handle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BuiltModel:
+    cfg: ModelConfig
+
+    def init(self, key) -> Any:
+        b = ParamBuilder(mode="init", key=key, param_dtype=jnp.dtype(self.cfg.param_dtype))
+        return build_params(b, self.cfg)
+
+    def param_shapes(self):
+        return build_params(ParamBuilder(mode="shape", param_dtype=jnp.dtype(self.cfg.param_dtype)), self.cfg)
+
+    def param_specs(self, rules=None):
+        return build_params(
+            ParamBuilder(mode="spec", rules=rules, param_dtype=jnp.dtype(self.cfg.param_dtype)), self.cfg
+        )
+
+    def train_loss(self, params, batch):
+        return train_loss(params, batch, self.cfg)
+
+    def prefill(self, params, batch, max_len: int):
+        return prefill(params, batch, self.cfg, max_len)
+
+    def decode_step(self, params, tokens_t, caches, cache_len):
+        return decode_step(params, tokens_t, caches, cache_len, self.cfg)
+
+    def init_cache(self, batch: int, max_len: int):
+        return build_cache(ParamBuilder(mode="init"), self.cfg, batch, max_len)
+
+    def cache_shapes(self, batch: int, max_len: int):
+        return build_cache(ParamBuilder(mode="shape"), self.cfg, batch, max_len)
+
+    def cache_specs(self, batch: int, max_len: int, rules=None):
+        return build_cache(
+            ParamBuilder(mode="spec", rules=rules), self.cfg, batch, max_len
+        )
+
+
+def build_model(cfg: ModelConfig) -> BuiltModel:
+    return BuiltModel(cfg)

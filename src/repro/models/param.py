@@ -1,0 +1,107 @@
+"""Parameter construction with logical sharding axes.
+
+Every module builds its parameters through a ``ParamBuilder``; the same
+build code runs in three modes so the parameter pytree, its
+``PartitionSpec`` tree and its ``ShapeDtypeStruct`` tree are structurally
+identical by construction:
+
+* ``init``  — materialise initialised arrays (smoke tests, examples)
+* ``spec``  — produce ``PartitionSpec`` per param from logical→mesh rules
+* ``shape`` — produce ``ShapeDtypeStruct`` stand-ins (dry-run: no allocation)
+
+Logical axes used across the model zoo:
+``embed`` (d_model), ``mlp`` (d_ff), ``heads``, ``kv_heads``, ``qkv``
+(head_dim), ``vocab``, ``experts``, ``lora``, ``state``, ``conv``,
+``layers`` (stacked scan axis — never sharded).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "embed": None,
+    "embed_fsdp": "data",  # weight d_model dim (ZeRO-3 style secondary shard)
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": None,
+    "vocab": "model",
+    "experts": "model",
+    "lora": None,
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "seq": None,
+    "codebooks": None,
+}
+
+
+@dataclasses.dataclass
+class ParamBuilder:
+    mode: str  # "init" | "spec" | "shape"
+    key: Optional[jax.Array] = None
+    rules: Optional[dict] = None
+    param_dtype: jnp.dtype = jnp.float32
+    _counter: int = 0
+
+    def _next_key(self):
+        self._counter += 1
+        return jax.random.fold_in(self.key, self._counter)
+
+    def param(
+        self,
+        shape: Sequence[int],
+        logical: Sequence[Optional[str]],
+        init: str = "normal",
+        scale: Optional[float] = None,
+        dtype: Optional[jnp.dtype] = None,
+    ):
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(logical), (shape, logical)
+        dtype = dtype or self.param_dtype
+        if self.mode == "spec":
+            rules = self.rules if self.rules is not None else DEFAULT_RULES
+            axes = [rules.get(l) if l is not None else None for l in logical]
+            # a mesh axis may appear at most once in a spec
+            seen: set = set()
+            clean = []
+            for a in axes:
+                names = a if isinstance(a, tuple) else (a,) if a else ()
+                if any(n in seen for n in names):
+                    clean.append(None)
+                else:
+                    seen.update(names)
+                    clean.append(a)
+            return P(*clean)
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        k = self._next_key()  # random inits only (caches init keyless)
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+            return (scale * jax.random.normal(k, shape)).astype(dtype)
+        if init == "embed":
+            return (0.02 * jax.random.normal(k, shape)).astype(dtype)
+        if init == "uniform_dt":  # mamba dt bias init in [dt_min, dt_max]
+            u = jax.random.uniform(k, shape)
+            return u.astype(dtype)
+        raise ValueError(f"unknown init {init}")
+
+
+def build_tree(build_fn, cfg, mode="init", key=None, rules=None, param_dtype=None):
+    pd = jnp.dtype(param_dtype or cfg.param_dtype)
+    b = ParamBuilder(mode=mode, key=key, rules=rules, param_dtype=pd)
+    return build_fn(b, cfg)

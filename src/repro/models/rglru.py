@@ -1,0 +1,129 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    a_t = a^(c * r_t),  a = sigmoid(Lambda) (learned decay, c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the linear recurrence
+(h = a*h + b composes associatively); decode is a single fused step.  The
+full *recurrent block* wraps the RG-LRU with the Griffin layout: linear in,
+short causal depthwise conv, gated branch, linear out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import shard
+from repro.models.ssm import causal_conv1d
+
+
+def rglru_scan_ref(a: jax.Array, b: jax.Array, h0=None):
+    """Associative linear recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: [B, L, W] (f32). Returns (h [B, L, W], h_last [B, W]).
+    """
+    if h0 is not None:
+        # fold h0 into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_step(a_t, b_t, h_prev):
+    """Single decode step."""
+    h = a_t * h_prev + b_t
+    return h, h
+
+
+def _gates(params, x, c_constant):
+    """Compute (a, gated_input) in f32. x: [B, L, W]."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32) + params["b_x"])
+    log_a = -c_constant * jax.nn.softplus(params["lambda_p"]) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) in a numerically safe form
+    multiplier = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, multiplier * i * xf
+
+
+def build_rglru(b, cfg: ModelConfig):
+    w = cfg.rglru.lru_width or cfg.d_model
+    return {
+        "w_a": b.param((w, w), ("heads", None), scale=0.02),
+        "b_a": b.param((w,), ("heads",), init="zeros", dtype=jnp.float32),
+        "w_x": b.param((w, w), ("heads", None), scale=0.02),
+        "b_x": b.param((w,), ("heads",), init="zeros", dtype=jnp.float32),
+        "lambda_p": b.param((w,), ("heads",), init="uniform_dt", dtype=jnp.float32),
+    }
+
+
+def rglru(params, x, cfg: ModelConfig, h0=None):
+    a, bb = _gates(params, x, cfg.rglru.c_constant)
+    h, h_last = rglru_scan_ref(a, bb, h0)
+    return h.astype(x.dtype), h_last
+
+
+def rglru_decode(params, x_t, cfg: ModelConfig, h_prev):
+    """x_t: [B, 1, W]; h_prev: [B, W] (f32)."""
+    a, bb = _gates(params, x_t, cfg.rglru.c_constant)
+    h, _ = rglru_step(a[:, 0], bb[:, 0], h_prev)
+    return h[:, None, :].astype(x_t.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# Griffin recurrent block (linear → conv → RG-LRU, gated, linear out)
+# ---------------------------------------------------------------------------
+
+
+def build_recurrent_block(b, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    return {
+        "in_proj": b.param((d, w), ("embed_fsdp", "heads")),
+        "gate_proj": b.param((d, w), ("embed_fsdp", "heads")),
+        "conv_w": b.param((cfg.rglru.d_conv, w), ("conv", "heads"), scale=0.5),
+        "conv_b": b.param((w,), ("heads",), init="zeros"),
+        "lru": build_rglru(b, cfg),
+        "out_proj": b.param((w, d), ("heads", "embed_fsdp")),
+    }
+
+
+def recurrent_block(params, x, cfg: ModelConfig):
+    """Train/prefill. x: [B, L, D] → ([B, L, D], (h_last, conv_tail))."""
+    dtype = x.dtype
+    u_raw = x @ params["in_proj"].astype(dtype)
+    gate = jax.nn.gelu(x @ params["gate_proj"].astype(dtype), approximate=True)
+    u = causal_conv1d(
+        u_raw, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype)
+    )
+    h, h_last = rglru(params["lru"], u, cfg)
+    h = shard(h, "batch", "residual_seq", "heads")
+    y = (h * gate) @ params["out_proj"].astype(dtype)
+    conv_tail = u_raw[:, -(cfg.rglru.d_conv - 1) :, :]  # raw conv window for decode
+    return y, (h_last, conv_tail)
+
+
+def recurrent_block_decode(params, x_t, cfg: ModelConfig, h_prev, conv_state):
+    """Decode one token. conv_state: [B, K-1, W] raw in_proj outputs."""
+    dtype = x_t.dtype
+    u_t = x_t @ params["in_proj"].astype(dtype)  # [B,1,W]
+    gate = jax.nn.gelu(x_t @ params["gate_proj"].astype(dtype), approximate=True)
+    window = jnp.concatenate([conv_state, u_t], axis=1)  # [B,K,W]
+    w = params["conv_w"].astype(dtype)
+    u = (window * w[None]).sum(axis=1, keepdims=True) + params["conv_b"].astype(dtype)
+    new_conv_state = window[:, 1:]
+    h, h_new = rglru_decode(params["lru"], u, cfg, h_prev)
+    y = (h * gate) @ params["out_proj"].astype(dtype)
+    return y, (h_new, new_conv_state)

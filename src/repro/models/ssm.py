@@ -1,0 +1,246 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Chunked exact algorithm (arXiv:2405.21060 §6): the sequence is split into
+chunks of ``Q`` tokens; within a chunk the output is an attention-like
+quadratic form masked by cumulative decay; across chunks a (small) state of
+shape [H, P, N] is carried by a scan.  The chunk loop is the pure-jnp oracle
+for the Pallas ``ssd_scan`` kernel.
+
+Block structure (mamba2): in_proj → (z, x, B, C, dt); short causal depthwise
+conv over (x, B, C); SSD; gated RMSNorm; out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import build_rms_norm, rms_norm, shard
+
+
+def ssd_chunked_ref(
+    x: jax.Array,  # [B, L, H, P] inputs (already conv'd / gated)
+    dt: jax.Array,  # [B, L, H] softplus'd step sizes
+    A: jax.Array,  # [H] negative decay rates
+    Bm: jax.Array,  # [B, L, G, N]
+    Cm: jax.Array,  # [B, L, G, N]
+    chunk: int = 256,
+    initial_state=None,  # [B, H, P, N]
+):
+    """Returns (y [B, L, H, P], final_state [B, H, P, N])."""
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L_orig = L
+    if L % chunk:  # pad tail with dt=0 tokens (decay 1, zero input: no-ops)
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        L = L + pad
+    nc = L // chunk
+    hpg = H // G
+
+    # fold dt into x and decay: dA = dt * A (negative), dBx = dt * x
+    dA = dt * A[None, None, :]  # [B, L, H]
+    xd = x * dt[..., None]  # [B, L, H, P]
+
+    xc = xd.reshape(Bsz, nc, chunk, H, P)
+    dAc = dA.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N)
+
+    # cumulative decay within chunk: cum[t] = sum_{u<=t} dA[u]
+    cum = jnp.cumsum(dAc, axis=2)  # [B, nc, Q, H]
+
+    # --- intra-chunk (diagonal blocks): attention-like with decay mask
+    # L_mask[t, s] = exp(cum[t] - cum[s]) for s <= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    # scores[t,s] = C_t · B_s  (per group, broadcast over heads in group)
+    scores = jnp.einsum("bzqgn,bzsgn->bzqsg", Cc, Bc)  # [B,nc,Q,Q,G]
+    scores = jnp.repeat(scores, hpg, axis=-1)  # [B,nc,Q,Q,H]
+    y_diag = jnp.einsum("bzqsh,bzqsh,bzshp->bzqhp", scores, decay, xc)
+
+    # --- chunk states: state_z = sum_s exp(cum[last] - cum[s]) B_s x_s
+    last = cum[:, :, -1:, :]  # [B,nc,1,H]
+    state_decay = jnp.exp(last - cum)  # [B,nc,Q,H]
+    Bh = jnp.repeat(Bc, hpg, axis=3).reshape(Bsz, nc, chunk, H, N)
+    Ch = jnp.repeat(Cc, hpg, axis=3).reshape(Bsz, nc, chunk, H, N)
+    chunk_states = jnp.einsum("bzshn,bzsh,bzshp->bzhpn", Bh, state_decay, xc)
+
+    # --- inter-chunk scan: carry state across chunks
+    chunk_total_decay = jnp.exp(jnp.sum(dAc, axis=2))  # [B,nc,H]
+
+    def scan_fn(carry, inp):
+        st = carry  # [B,H,P,N]
+        new_states, total_decay = inp  # [B,H,P,N], [B,H]
+        st_out = st  # state entering this chunk
+        st = st * total_decay[..., None, None] + new_states
+        return st, st_out
+
+    init = (
+        jnp.zeros((Bsz, H, P, N), x.dtype) if initial_state is None else initial_state
+    )
+    final_state, entering = jax.lax.scan(
+        scan_fn,
+        init,
+        (
+            jnp.moveaxis(chunk_states, 1, 0),
+            jnp.moveaxis(chunk_total_decay, 1, 0),
+        ),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,nc,H,P,N]
+
+    # --- inter-chunk contribution: y_t += C_t · (decay_to_t * state_in)
+    in_decay = jnp.exp(cum)  # [B,nc,Q,H]
+    y_off = jnp.einsum("bzqhn,bzqh,bzhpn->bzqhp", Ch, in_decay, entering)
+
+    y = (y_diag + y_off).reshape(Bsz, L, H, P)
+    return y[:, :L_orig], final_state
+
+
+def ssd_decode_step(
+    state: jax.Array,  # [B, H, P, N]
+    x_t: jax.Array,  # [B, H, P]
+    dt_t: jax.Array,  # [B, H]
+    A: jax.Array,  # [H]
+    B_t: jax.Array,  # [B, G, N]
+    C_t: jax.Array,  # [B, G, N]
+):
+    """Single-token recurrent update: O(1) per token (long_500k decode)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    hpg = H // G
+    dA = jnp.exp(dt_t * A[None, :])  # [B,H]
+    Bh = jnp.repeat(B_t, hpg, axis=1)  # [B,H,N]
+    Ch = jnp.repeat(C_t, hpg, axis=1)
+    new_state = state * dA[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x_t * dt_t[..., None], Bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Full mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def build_mamba2_block(b, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    H = d_inner // s.head_dim
+    G = s.n_groups
+    conv_dim = d_inner + 2 * G * s.d_state
+    return {
+        "in_proj": b.param(
+            (d, 2 * d_inner + 2 * G * s.d_state + H), ("embed_fsdp", "heads")
+        ),
+        "conv_w": b.param((s.d_conv, conv_dim), ("conv", "heads"), scale=0.5),
+        "conv_b": b.param((conv_dim,), ("heads",), init="zeros"),
+        "A_log": b.param((H,), ("heads",), init="uniform_dt"),
+        "D": b.param((H,), ("heads",), init="ones"),
+        "dt_bias": b.param((H,), ("heads",), init="uniform_dt"),
+        "norm": build_rms_norm(b, d_inner),
+        "out_proj": b.param((d_inner, d), ("heads", "embed_fsdp")),
+    }
+
+
+def _split_in_proj(zxbcdt, d_inner, G, N, H):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner : 2 * d_inner]
+    Bm = zxbcdt[..., 2 * d_inner : 2 * d_inner + G * N]
+    Cm = zxbcdt[..., 2 * d_inner + G * N : 2 * d_inner + 2 * G * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * G * N :]
+    return z, x, Bm, Cm, dt
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv: x [B, L, C], w [K, C] → [B, L, C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4)
+        out = out + pad[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def mamba2_block(params, x, cfg: ModelConfig):
+    """Train/prefill path. x: [B, L, D] → ([B, L, D], final_state)."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    dtype = x.dtype
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xs, Bm, Cm, dt = _split_in_proj(zxbcdt, d_inner, G, N, H)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(
+        causal_conv1d(conv_in, params["conv_w"].astype(dtype), params["conv_b"].astype(dtype))
+    )
+    xs = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner : d_inner + G * N]
+    Cm = conv_out[..., d_inner + G * N :]
+    B_, L = x.shape[0], x.shape[1]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, state = ssd_chunked_ref(
+        xs.reshape(B_, L, H, s.head_dim).astype(jnp.float32),
+        dt,
+        A,
+        Bm.reshape(B_, L, G, N).astype(jnp.float32),
+        Cm.reshape(B_, L, G, N).astype(jnp.float32),
+        chunk=min(s.chunk_size, L),
+    )
+    y = y + xs.reshape(B_, L, H, s.head_dim).astype(jnp.float32) * params["D"].astype(
+        jnp.float32
+    )[None, None, :, None]
+    y = y.reshape(B_, L, d_inner).astype(dtype)
+    y = rms_norm(params["norm"]["scale"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = shard(y, "batch", "residual_seq", "heads")
+    conv_tail = conv_in[:, -(s.d_conv - 1) :, :]  # raw window for decode
+    return y @ params["out_proj"].astype(dtype), (state, conv_tail)
+
+
+def mamba2_decode(params, x_t, cfg: ModelConfig, ssm_state, conv_state):
+    """Single-token decode. x_t: [B, 1, D]; conv_state: [B, K-1, conv_dim]."""
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    G, N = s.n_groups, s.d_state
+    dtype = x_t.dtype
+    zxbcdt = x_t @ params["in_proj"].astype(dtype)
+    z, xs, Bm, Cm, dt = _split_in_proj(zxbcdt, d_inner, G, N, H)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # [B,1,conv_dim]
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # [B,K,conv_dim]
+    w = params["conv_w"].astype(dtype)
+    conv_out = jax.nn.silu(
+        (window * w[None]).sum(axis=1, keepdims=True) + params["conv_b"].astype(dtype)
+    )
+    new_conv_state = window[:, 1:]
+    xs = conv_out[..., :d_inner]
+    Bm = conv_out[..., d_inner : d_inner + G * N]
+    Cm = conv_out[..., d_inner + G * N :]
+    B_ = x_t.shape[0]
+    dt = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(
+        ssm_state,
+        xs[:, 0].reshape(B_, H, s.head_dim).astype(jnp.float32),
+        dt,
+        A,
+        Bm[:, 0].reshape(B_, G, N).astype(jnp.float32),
+        Cm[:, 0].reshape(B_, G, N).astype(jnp.float32),
+    )
+    y = y + xs[:, 0].reshape(B_, H, s.head_dim).astype(jnp.float32) * params[
+        "D"
+    ].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B_, 1, d_inner).astype(dtype)
+    y = rms_norm(params["norm"]["scale"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"].astype(dtype), new_state, new_conv_state

@@ -1,0 +1,334 @@
+"""Layer assembly: mixer blocks (attn/mla/ssm/rglru/local) + FFN, stacked
+into scanned segments with activation rematerialisation.
+
+Parameters for each (segment, pattern-element) are stacked along a leading
+``layers`` axis and the segment body is ``lax.scan``-ed ``count`` times —
+HLO size stays O(unique blocks), not O(n_layers), keeping 61-layer models
+compilable in seconds.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_rope,
+    build_glu_ffn,
+    build_rms_norm,
+    glu_ffn,
+    rms_norm,
+    shard,
+)
+from repro.kernels import ops as kops
+from repro.models.layers import _ACTIVE_RULES
+
+
+def apply_moe(params, x, cfg: ModelConfig):
+    """MoE dispatch: shard_map EP path under a mesh, local path otherwise."""
+    rules = _ACTIVE_RULES.get()
+    mesh = rules.get("__mesh__") if rules else None
+    if mesh is not None and rules.get("experts"):
+        from repro.models.moe_sharded import moe_ffn_sharded
+
+        return moe_ffn_sharded(params, x, cfg, rules, mesh)
+    return moe_mod.moe_ffn(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def build_attention(b, cfg: ModelConfig):
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": b.param((d, H, D), ("embed_fsdp", "heads", "qkv")),
+        "wk": b.param((d, Hkv, D), ("embed_fsdp", "kv_heads", "qkv")),
+        "wv": b.param((d, Hkv, D), ("embed_fsdp", "kv_heads", "qkv")),
+        "wo": b.param((H, D, d), ("heads", "qkv", "embed_fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = build_rms_norm(b, D)
+        p["k_norm"] = build_rms_norm(b, D)
+    return p
+
+
+def _qkv(params, x, cfg: ModelConfig, positions):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if cfg.qk_norm:
+        q = rms_norm(params["q_norm"]["scale"], q, cfg.norm_eps)
+        k = rms_norm(params["k_norm"]["scale"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _ref_tiles(S: int) -> int:
+    """q/kv tile size for the jnp flash reference: bounds the per-tile score
+    buffer while keeping the static tile count (HLO size) manageable."""
+    return max(min(S // 8, 1024), 128)
+
+
+def attention_block(params, x, cfg: ModelConfig, positions, *, window=0):
+    """Train/prefill self-attention. Returns (out, (k, v) for caching)."""
+    q, k, v = _qkv(params, x, cfg, positions)
+    tile = _ref_tiles(x.shape[1])
+    out = kops.flash_attention(
+        q,
+        k,
+        v,
+        causal=True,
+        window=window,
+        prefix_len=cfg.prefix_len,
+        softcap=cfg.attn_logit_softcap,
+        q_chunk=tile,
+        kv_chunk=tile,
+    )
+    out = shard(out, "batch", None, "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def attention_decode(params, x_t, cfg: ModelConfig, cache, cache_len, *, window=0):
+    """Decode one token. cache: dict(k, v) [B, T, Hkv, D] (ring if window)."""
+    B = x_t.shape[0]
+    positions = cache_len[:, None]  # new token position
+    q, k_new, v_new = _qkv(params, x_t, cfg, positions)
+    k_cache, v_cache = cache["k"], cache["v"]
+    T = k_cache.shape[1]
+    if window > 0:
+        slot = cache_len % T  # ring slot
+    else:
+        slot = jnp.minimum(cache_len, T - 1)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, slot].set(k_new[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v_new[:, 0].astype(v_cache.dtype))
+    valid_len = jnp.minimum(cache_len + 1, T)
+    out = kops.decode_attention(
+        q[:, 0],
+        k_cache,
+        v_cache,
+        valid_len,
+        window=0,  # ring buffer already bounds the window
+        softcap=cfg.attn_logit_softcap,
+    )
+    y = jnp.einsum("bhk,hkd->bd", out, params["wo"].astype(x_t.dtype))
+    return y[:, None], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Layer = norm → mixer → residual; norm → ffn → residual
+# ---------------------------------------------------------------------------
+
+
+def build_layer(b, cfg: ModelConfig, kind: str, use_moe: bool):
+    p = {
+        "ln1": build_rms_norm(b, cfg.d_model),
+        "ln2": build_rms_norm(b, cfg.d_model),
+    }
+    if kind in ("attn", "local"):
+        p["mixer"] = build_attention(b, cfg)
+    elif kind == "mla":
+        p["mixer"] = mla_mod.build_mla(b, cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm_mod.build_mamba2_block(b, cfg)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.build_recurrent_block(b, cfg)
+    else:
+        raise ValueError(kind)
+    if kind == "ssm":
+        p.pop("ln2")  # mamba2 blocks have no separate FFN
+    elif use_moe:
+        p["ffn"] = moe_mod.build_moe_ffn(b, cfg)
+    else:
+        p["ffn"] = build_glu_ffn(b, cfg.d_model, cfg.d_ff, cfg.ffn_type)
+    return p
+
+
+def apply_layer(params, x, cfg: ModelConfig, kind: str, use_moe: bool, positions):
+    """Train/prefill. Returns (x, aux_loss, cache_entry)."""
+    h = rms_norm(params["ln1"]["scale"], x, cfg.norm_eps)
+    if kind == "attn":
+        mixed, cache = attention_block(params["mixer"], h, cfg, positions)
+    elif kind == "local":
+        mixed, cache = attention_block(
+            params["mixer"], h, cfg, positions, window=cfg.window
+        )
+    elif kind == "mla":
+        mixed = mla_mod.mla_attention(params["mixer"], h, cfg, positions)
+        lat, rope = mla_mod.mla_new_latents(params["mixer"], h, cfg, positions)
+        cache = (lat, rope)
+    elif kind == "ssm":
+        mixed, state = ssm_mod.mamba2_block(params["mixer"], h, cfg)
+        cache = state
+    elif kind == "rglru":
+        mixed, state = rglru_mod.recurrent_block(params["mixer"], h, cfg)
+        cache = state
+    else:
+        raise ValueError(kind)
+    x = x + mixed
+    aux = jnp.zeros((), jnp.float32)
+    if kind != "ssm":
+        h2 = rms_norm(params["ln2"]["scale"], x, cfg.norm_eps)
+        if use_moe:
+            ffn_out, aux = apply_moe(params["ffn"], h2, cfg)
+            if cfg.moe.n_shared > 0:
+                pass  # shared expert handled inside the MoE modules
+        else:
+            ffn_out = glu_ffn(params["ffn"], h2, cfg.activation)
+        x = x + ffn_out
+    x = shard(x, "batch", "residual_seq", "embed")
+    return x, aux, cache
+
+
+def apply_layer_decode(params, x_t, cfg, kind, use_moe, cache, cache_len):
+    h = rms_norm(params["ln1"]["scale"], x_t, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        w = cfg.window if kind == "local" else 0
+        mixed, new_cache = attention_decode(
+            params["mixer"], h, cfg, cache, cache_len, window=w
+        )
+    elif kind == "mla":
+        lat_c, rope_c = cache["lat"], cache["rope"]
+        pos = cache_len[:, None]
+        lat_new, rope_new = mla_mod.mla_new_latents(params["mixer"], h, cfg, pos)
+        bidx = jnp.arange(x_t.shape[0])
+        slot = jnp.minimum(cache_len, lat_c.shape[1] - 1)
+        lat_c = lat_c.at[bidx, slot].set(lat_new[:, 0].astype(lat_c.dtype))
+        rope_c = rope_c.at[bidx, slot].set(rope_new[:, 0].astype(rope_c.dtype))
+        mixed = mla_mod.mla_decode(params["mixer"], h, cfg, lat_c, rope_c, cache_len + 1)
+        new_cache = {"lat": lat_c, "rope": rope_c}
+    elif kind == "ssm":
+        mixed, ssm_state, conv_state = ssm_mod.mamba2_decode(
+            params["mixer"], h, cfg, cache["state"], cache["conv"]
+        )
+        new_cache = {"state": ssm_state, "conv": conv_state}
+    elif kind == "rglru":
+        mixed, (h_new, conv_state) = rglru_mod.recurrent_block_decode(
+            params["mixer"], h, cfg, cache["h"], cache["conv"]
+        )
+        new_cache = {"h": h_new, "conv": conv_state}
+    else:
+        raise ValueError(kind)
+    x_t = x_t + mixed
+    if kind != "ssm":
+        h2 = rms_norm(params["ln2"]["scale"], x_t, cfg.norm_eps)
+        if use_moe:
+            ffn_out, _ = apply_moe(params["ffn"], h2, cfg)
+        else:
+            ffn_out = glu_ffn(params["ffn"], h2, cfg.activation)
+        x_t = x_t + ffn_out
+    return x_t, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Segment stacking
+# ---------------------------------------------------------------------------
+
+
+def segment_layout(cfg: ModelConfig):
+    """[(pattern, count, [use_moe per elem], [kinds])] with MoE consistency
+    checked across scan repetitions."""
+    out = []
+    layer = 0
+    for pattern, count in cfg.segments:
+        flags = []
+        for e, kind in enumerate(pattern):
+            moes = {cfg.is_moe_layer(layer + r * len(pattern) + e) for r in range(count)}
+            if len(moes) != 1:
+                raise ValueError(
+                    f"{cfg.name}: MoE layers not scan-uniform in segment {pattern}"
+                )
+            flags.append(moes.pop())
+        out.append((pattern, count, flags))
+        layer += len(pattern) * count
+    return out
+
+
+def build_blocks(b, cfg: ModelConfig):
+    """Stacked params: tuple over segments → tuple over elems → stacked dict."""
+    segments = []
+    for pattern, count, flags in segment_layout(cfg):
+        elems = []
+        for kind, use_moe in zip(pattern, flags):
+            reps = [build_layer(b, cfg, kind, use_moe) for _ in range(count)]
+            if b.mode == "init":
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs, 0), *reps)
+            elif b.mode == "shape":
+                stacked = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((count, *s.shape), s.dtype), reps[0]
+                )
+            else:  # spec: prepend the (never-sharded) layers axis
+                stacked = jax.tree.map(
+                    lambda p: type(p)(*(None, *p)), reps[0]
+                )
+            elems.append(stacked)
+        segments.append(tuple(elems))
+    return tuple(segments)
+
+
+def apply_blocks(block_params, x, cfg: ModelConfig, positions, collect_cache=False):
+    """Train/prefill over all segments. Returns (x, aux_sum, caches)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for (pattern, count, flags), seg_params in zip(segment_layout(cfg), block_params):
+        def body(carry, rep_params):
+            x = carry
+            aux_sum = jnp.zeros((), jnp.float32)
+            cache_entries = []
+            for elem_params, kind, use_moe in zip(rep_params, pattern, flags):
+                x, aux, cache = apply_layer(
+                    elem_params, x, cfg, kind, use_moe, positions
+                )
+                aux_sum = aux_sum + aux
+                cache_entries.append(cache)
+            return x, (aux_sum, tuple(cache_entries) if collect_cache else None)
+
+        if cfg.remat:
+            policy = (
+                jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                if cfg.remat_policy == "save_dots"
+                else None
+            )
+            body = jax.checkpoint(body, policy=policy)
+        x, (auxs, seg_cache) = jax.lax.scan(body, x, seg_params)
+        aux_total = aux_total + auxs.sum()
+        caches.append(seg_cache)
+    return x, aux_total, tuple(caches)
+
+
+def apply_blocks_decode(block_params, x_t, cfg: ModelConfig, caches, cache_len):
+    new_caches = []
+    for (pattern, count, flags), seg_params, seg_cache in zip(
+        segment_layout(cfg), block_params, caches
+    ):
+        def body(carry, inp):
+            x = carry
+            rep_params, rep_cache = inp
+            new_entries = []
+            for elem_params, kind, use_moe, cache in zip(
+                rep_params, pattern, flags, rep_cache
+            ):
+                x, nc = apply_layer_decode(
+                    elem_params, x, cfg, kind, use_moe, cache, cache_len
+                )
+                new_entries.append(nc)
+            return x, tuple(new_entries)
+
+        x_t, seg_new = jax.lax.scan(body, x_t, (seg_params, seg_cache))
+        new_caches.append(seg_new)
+    return x_t, tuple(new_caches)

@@ -1,0 +1,4 @@
+"""Serverless model-serving platform: SimFaaS semantics as the control
+plane over model replicas (scale-per-request, newest-first routing,
+expiration-threshold reaping), with the core simulator as its offline
+capacity planner."""

@@ -1,0 +1,59 @@
+"""Simulator-driven capacity planning (paper §4.3/§4.4 as a feature).
+
+Given a measured workload (arrival rate, warm/cold service times), the
+planner sweeps expiration thresholds through the core simulator and picks
+the smallest threshold meeting a cold-start SLO — the provider-facing
+what-if workflow, wired to the live platform's configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.processes import ExpSimProcess
+from repro.core.simulator import ServerlessSimulator, SimulationConfig
+from repro.core.whatif import sweep
+
+
+@dataclasses.dataclass
+class PlanResult:
+    expiration_threshold: float
+    predicted_cold_prob: float
+    predicted_avg_replicas: float
+    predicted_wasted_ratio: float
+
+
+def plan_expiration_threshold(
+    arrival_rate: float,
+    warm_time: float,
+    cold_time: float,
+    cold_slo: float,
+    candidate_thresholds=(30.0, 60.0, 120.0, 300.0, 600.0, 1200.0),
+    sim_time: float = 2e4,
+    seed: int = 0,
+    replicas: int = 4,
+) -> PlanResult:
+    base = SimulationConfig(
+        arrival_process=ExpSimProcess(rate=arrival_rate),
+        warm_service_process=ExpSimProcess(rate=1.0 / warm_time),
+        cold_service_process=ExpSimProcess(rate=1.0 / cold_time),
+        sim_time=sim_time,
+        skip_time=min(100.0, sim_time / 100),
+    )
+    result = sweep(
+        base,
+        arrival_rates=[arrival_rate],
+        expiration_thresholds=candidate_thresholds,
+        key=jax.random.key(seed),
+        replicas=replicas,
+    )
+    best = result.best_threshold(0, cold_slo)
+    i = list(result.expiration_thresholds).index(best)
+    return PlanResult(
+        expiration_threshold=best,
+        predicted_cold_prob=float(result.cold_start_prob[i, 0]),
+        predicted_avg_replicas=float(result.avg_server_count[i, 0]),
+        predicted_wasted_ratio=float(result.wasted_ratio[i, 0]),
+    )

@@ -1,0 +1,93 @@
+"""Serving engine: a model replica with batched prefill + decode.
+
+One ``Replica`` = initialised params + jitted prefill/decode + KV-cache
+pool of fixed capacity.  ``generate`` runs batched greedy decoding.  The
+platform's ``replica_factory`` builds these; cold-start time on real
+hardware = weight init/load + first-call compile, both measured here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray  # [B, new_tokens]
+    prefill_s: float
+    decode_s: float
+
+
+class Replica:
+    def __init__(self, cfg: ModelConfig, max_len: int = 512, seed: int = 0):
+        t0 = time.perf_counter()
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.max_len = max_len
+        self.params = self.model.init(jax.random.key(seed))
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, max_len)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+        self.init_seconds = time.perf_counter() - t0
+        self._warmed = False
+
+    def warmup(self, batch_size: int, prompt_len: int) -> float:
+        """First-call compile = the 'application initialising' phase."""
+        t0 = time.perf_counter()
+        batch = self._dummy_batch(batch_size, prompt_len)
+        logits, caches, cache_len = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        if self.cfg.n_codebooks:
+            tok = tok.reshape(tok.shape[0], 1, self.cfg.n_codebooks)
+        self._decode(self.params, tok, caches, cache_len)
+        jax.block_until_ready(logits)
+        self._warmed = True
+        return time.perf_counter() - t0
+
+    def _dummy_batch(self, b: int, s: int) -> dict:
+        cfg = self.cfg
+        tok_shape = (b, s, cfg.n_codebooks) if cfg.n_codebooks else (b, s)
+        batch = {"tokens": jnp.zeros(tok_shape, jnp.int32)}
+        if cfg.n_prefix_embeds:
+            batch["patch_embeds"] = jnp.zeros(
+                (b, cfg.n_prefix_embeds, cfg.d_model), jnp.float32
+            )
+        if cfg.n_cond_embeds:
+            batch["cond_embeds"] = jnp.zeros(
+                (b, cfg.n_cond_embeds, cfg.d_model), jnp.float32
+            )
+        return batch
+
+    def generate(self, tokens: np.ndarray, new_tokens: int = 16, extras=None):
+        """Greedy decode. tokens: [B, S] (or [B, S, K] audio)."""
+        batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+        if extras:
+            batch.update(extras)
+        t0 = time.perf_counter()
+        logits, caches, cache_len = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        out = []
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for _ in range(new_tokens):
+            tok_in = tok[:, None]
+            if self.cfg.n_codebooks:
+                tok_in = tok.reshape(tok.shape[0], 1, -1)
+            logits, caches, cache_len = self._decode(
+                self.params, tok_in, caches, cache_len
+            )
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        t2 = time.perf_counter()
+        arr = np.stack(out, axis=1)
+        return GenerationResult(tokens=arr, prefill_s=t1 - t0, decode_s=t2 - t1)

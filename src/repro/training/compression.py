@@ -1,0 +1,65 @@
+"""Gradient compression for cross-replica reduction.
+
+Two schemes, both with tests asserting the convergence-relevant invariants:
+
+* **int8 quantised all-reduce**: per-tensor-row max-abs scales, quantise →
+  (psum happens in the optimizer's reduction) → dequantise.  Under pure
+  jit-GSPMD the reduction is implicit, so this is implemented as a
+  quantise/dequantise *round-trip on the gradients* before the optimizer —
+  on the wire this is what an int8 collective would carry, and the
+  numerical effect on training is identical.
+
+* **top-k sparsification with error feedback**: keep the k largest-|g|
+  entries per tensor, accumulate the residual locally and re-inject it
+  next step (Stich et al.) — the error-feedback memory makes the scheme
+  convergent despite >90 % sparsity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_roundtrip(grads):
+    """Quantise each gradient leaf to int8 with per-row scales and back."""
+
+    def q(g):
+        if g.ndim == 0:
+            return g
+        flat = g.reshape(g.shape[0], -1).astype(jnp.float32)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q8 = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+        deq = q8.astype(jnp.float32) * scale
+        return deq.reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(q, grads)
+
+
+def topk_with_error_feedback(grads, error_state, k_frac: float = 0.05):
+    """Returns (sparse_grads, new_error_state)."""
+
+    def one(g, e):
+        if g.ndim == 0:
+            return g, e
+        acc = g.astype(jnp.float32) + e
+        flat = acc.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_frac))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(flat) >= thresh
+        sent = jnp.where(mask, flat, 0.0)
+        residual = flat - sent
+        return sent.reshape(g.shape).astype(g.dtype), residual.reshape(g.shape)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error_state)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,206 @@
+"""In-house AdamW (no external deps) with global-norm clipping, cosine
+schedule, and selectable optimizer-state dtype:
+
+* ``float32`` — reference.
+* ``bfloat16`` — halves the dominant memory term for the 400B/671B MoE
+  cells (recorded in EXPERIMENTS.md §Dry-run).
+* ``int8`` — 8-bit Adam: m linear-int8 (per-row max-abs scale), v
+  **log-domain** affine int8 (linear quantisation of v zeroes small second
+  moments and the update explodes — refuted first attempt, see §Perf).
+  ~4× less state than f32; training quality verified by the
+  loss-decreases + first-step-equality tests in ``tests/test_training.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    state_dtype: str = "float32"  # "float32" | "bfloat16" | "int8"
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def _scale_shape(shape):
+    return shape[:-1] + (1,) if len(shape) else ()
+
+
+def quantize_state(x32):
+    """Signed linear int8 with per-row max-abs scale (for m: zero-mean)."""
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale}
+
+
+def dequantize_state(qs):
+    return qs["q"].astype(jnp.float32) * qs["s"]
+
+
+_V_FLOOR = 1e-16
+
+
+def quantize_state_log(v32):
+    """Log-domain affine int8 for the second moment.
+
+    v spans ~16 decades; linear int8 zeroes small entries and the Adam
+    denominator explodes (observed: loss 5.6 → 2.4e4 — refuted iteration,
+    kept in §Perf log).  In log-space the 254-step grid gives ≤ ~8 %
+    multiplicative error on sqrt(v) regardless of magnitude."""
+    lv = jnp.log(jnp.maximum(v32, _V_FLOOR))
+    lo = jnp.min(lv, axis=-1, keepdims=True)
+    hi = jnp.max(lv, axis=-1, keepdims=True)
+    scale = jnp.maximum((hi - lo) / 254.0, 1e-8)
+    q = jnp.clip(jnp.round((lv - lo) / scale) - 127, -127, 127).astype(jnp.int8)
+    return {"q": q, "lo": lo, "s": scale}
+
+
+def dequantize_state_log(qs):
+    lv = (qs["q"].astype(jnp.float32) + 127.0) * qs["s"] + qs["lo"]
+    v = jnp.exp(lv)
+    return jnp.where(v <= _V_FLOOR * 1.0001, 0.0, v)
+
+
+def init_opt_state(cfg: AdamWConfig, params):
+    if cfg.state_dtype == "int8":
+        def zeros_m(p):
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(_scale_shape(p.shape), jnp.float32),
+            }
+
+        def zeros_v(p):
+            return {
+                "q": jnp.full(p.shape, -127, jnp.int8),
+                "lo": jnp.full(_scale_shape(p.shape), jnp.log(_V_FLOOR), jnp.float32),
+                "s": jnp.full(_scale_shape(p.shape), 1e-8, jnp.float32),
+            }
+
+        return {
+            "m": jax.tree.map(zeros_m, params),
+            "v": jax.tree.map(zeros_v, params),
+        }
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def opt_state_shapes(cfg: AdamWConfig, param_shapes):
+    if cfg.state_dtype == "int8":
+        def sds_m(p):
+            return {
+                "q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                "s": jax.ShapeDtypeStruct(_scale_shape(p.shape), jnp.float32),
+            }
+
+        def sds_v(p):
+            return {
+                "q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                "lo": jax.ShapeDtypeStruct(_scale_shape(p.shape), jnp.float32),
+                "s": jax.ShapeDtypeStruct(_scale_shape(p.shape), jnp.float32),
+            }
+
+        return {
+            "m": jax.tree.map(sds_m, param_shapes),
+            "v": jax.tree.map(sds_v, param_shapes),
+        }
+    dt = jnp.dtype(cfg.state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"m": jax.tree.map(sds, param_shapes), "v": jax.tree.map(sds, param_shapes)}
+
+
+def opt_state_specs(param_specs, state_dtype: str = "float32"):
+    if state_dtype == "int8":
+        from jax.sharding import PartitionSpec as P
+
+        def spec_m(ps):
+            s_spec = P(*ps[:-1], None) if len(ps) else P()
+            return {"q": ps, "s": s_spec}
+
+        def spec_v(ps):
+            s_spec = P(*ps[:-1], None) if len(ps) else P()
+            return {"q": ps, "lo": s_spec, "s": s_spec}
+
+        is_p = lambda x: isinstance(x, P)
+        return {
+            "m": jax.tree.map(spec_m, param_specs, is_leaf=is_p),
+            "v": jax.tree.map(spec_v, param_specs, is_leaf=is_p),
+        }
+    return {"m": param_specs, "v": param_specs}
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params, step):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_schedule(cfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - cfg.b1**t
+    bc2 = 1.0 - cfg.b2**t
+    int8 = cfg.state_dtype == "int8"
+    sdt = jnp.dtype(cfg.state_dtype if not int8 else "float32")
+
+    def upd_flat(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_in = dequantize_state(m) if int8 else m.astype(jnp.float32)
+        v_in = dequantize_state_log(v) if int8 else v.astype(jnp.float32)
+        m32 = cfg.b1 * m_in + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v_in + (1 - cfg.b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/bias-like 1-D params
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        if int8:
+            return (
+                new_p.astype(p.dtype),
+                quantize_state(m32),
+                quantize_state_log(v32),
+            )
+        return new_p.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    # NOTE(perf log): a lax.map-over-layer-slices variant of this update was
+    # tried to bound f32 temporaries; it *increased* peak temp by ~40% (the
+    # scan double-buffers full stacked outputs and blocks elementwise
+    # fusion).  Hypothesis refuted — recorded in EXPERIMENTS.md §Perf.
+    upd = upd_flat
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v}, metrics

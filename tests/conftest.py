@@ -1,0 +1,17 @@
+"""Test config: x64 enabled globally (repro.core import), so the model
+stack is exercised under the strictest dtype regime; hypothesis tuned for
+CI-speed determinism.  Tests see exactly 1 CPU device (multi-device
+behaviour is tested via subprocesses that set
+``--xla_force_host_platform_device_count`` before jax initialises)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import repro.core  # noqa: F401, E402  (enables jax x64)
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

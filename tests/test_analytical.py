@@ -1,0 +1,109 @@
+"""Closed-form oracles vs simulation: Little's law, M/G/∞ insensitivity,
+Erlang-B loss limit, monotonicity properties."""
+
+import dataclasses
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeterministicSimProcess,
+    ExpSimProcess,
+    ServerlessSimulator,
+    SimulationConfig,
+)
+from repro.core import analytical as ana
+
+
+def run(cfg, seed=0, replicas=4):
+    return ServerlessSimulator(cfg).run(jax.random.key(seed), replicas=replicas)
+
+
+def base_cfg(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=1.0),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.45),
+        expiration_threshold=30.0,
+        sim_time=4000.0,
+        skip_time=100.0,
+        slots=64,
+    )
+    d.update(kw)
+    return SimulationConfig(**d)
+
+
+def test_littles_law_running_count():
+    cfg = base_cfg()
+    s = run(cfg)
+    # cold starts are rare here; E[S] ≈ warm mean
+    expected = ana.littles_law_running(1.0, 2.0)
+    np.testing.assert_allclose(s.avg_running_count, expected, rtol=0.05)
+
+
+def test_mginf_insensitivity():
+    """Running-count mean depends only on E[S] (M/G/∞): deterministic vs
+    exponential service with the same mean must agree."""
+    s_exp = run(base_cfg())
+    s_det = run(
+        base_cfg(
+            warm_service_process=DeterministicSimProcess(interval=2.0),
+            cold_service_process=DeterministicSimProcess(interval=2.2),
+        )
+    )
+    np.testing.assert_allclose(
+        s_exp.avg_running_count, s_det.avg_running_count, rtol=0.06
+    )
+
+
+def test_erlang_b_loss_limit():
+    """T_exp → 0 with m instances ⇒ M/G/m/m loss: rejection ≈ Erlang-B."""
+    m = 3
+    cfg = base_cfg(
+        expiration_threshold=1e-6,
+        max_concurrency=m,
+        slots=m,
+        sim_time=8000.0,
+        cold_service_process=ExpSimProcess(rate=0.5),  # = warm: pure loss sys
+    )
+    s = run(cfg, replicas=8)
+    expected = ana.erlang_b(offered_load=1.0 * 2.0, servers=m)
+    np.testing.assert_allclose(s.rejection_prob, expected, rtol=0.08)
+
+
+def test_light_traffic_cold_prob():
+    """λ·T_exp small ⇒ p_cold ≈ e^(−λT_exp) (single-instance renewal)."""
+    cfg = base_cfg(
+        arrival_process=ExpSimProcess(rate=0.05),
+        warm_service_process=ExpSimProcess(rate=2.0),
+        cold_service_process=ExpSimProcess(rate=1.8),
+        expiration_threshold=10.0,
+        sim_time=60000.0,
+    )
+    s = run(cfg, replicas=8)
+    expected = ana.single_instance_renewal_cold_prob(0.05, 10.0)
+    np.testing.assert_allclose(s.cold_start_prob, expected, rtol=0.12)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_cold_prob_monotone_in_threshold(seed):
+    """Longer expiration thresholds never increase cold-start probability
+    (statistically, same arrival sample size)."""
+    probs = []
+    for t_exp in (2.0, 10.0, 60.0):
+        cfg = base_cfg(expiration_threshold=t_exp, sim_time=3000.0)
+        probs.append(run(cfg, seed=seed, replicas=4).cold_start_prob)
+    assert probs[0] >= probs[1] - 0.02
+    assert probs[1] >= probs[2] - 0.02
+
+
+def test_deterministic_regimes():
+    assert ana.deterministic_cold_start_prob(10.0, 3.0, 2.0) == 1.0
+    assert ana.deterministic_cold_start_prob(4.0, 3.0, 2.0) == 0.0
+
+
+def test_erlang_b_values():
+    # classic table value: E_B(A=2, m=3) ≈ 0.2105
+    np.testing.assert_allclose(ana.erlang_b(2.0, 3), 0.21052631578, rtol=1e-9)

@@ -1,0 +1,141 @@
+"""Checkpoint manager + data pipeline + fault-tolerance policies."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_smoke_config
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.distributed import fault_tolerance as ft
+
+
+class TestCheckpointManager:
+    def _tree(self, seed=0):
+        k = jax.random.key(seed)
+        return {
+            "a": jax.random.normal(k, (8, 4)),
+            "nested": {"b": jnp.arange(5), "c": jnp.float32(2.5)},
+        }
+
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        tree = self._tree()
+        mgr.save(10, tree)
+        assert mgr.latest_step() == 10
+        out = mgr.restore(10, jax.tree.map(jnp.zeros_like, tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_incomplete_checkpoint_ignored(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(5, self._tree())
+        # simulate a crash mid-write: directory without manifest
+        os.makedirs(tmp_path / "step_00000009")
+        assert mgr.latest_step() == 5
+
+    def test_gc_keeps_latest(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, self._tree(s))
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(tmp_path) if n.startswith("step_")
+        )
+        assert steps == [3, 4]
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, self._tree())
+        with pytest.raises(ValueError, match="structure mismatch"):
+            mgr.restore(1, {"different": jnp.zeros((2,))})
+
+
+class TestPipeline:
+    CFG = get_smoke_config("llama3.2-1b")
+
+    def test_deterministic_and_seekable(self):
+        p = TokenPipeline(self.CFG, PipelineConfig(global_batch=4, seq_len=32, seed=7))
+        b1 = p.batch_at(12)
+        b2 = p.batch_at(12)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+        b3 = p.batch_at(13)
+        assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+    def test_host_sharding_disjoint(self):
+        full = TokenPipeline(
+            self.CFG, PipelineConfig(global_batch=8, seq_len=32, seed=7)
+        )
+        h0 = TokenPipeline(
+            self.CFG,
+            PipelineConfig(global_batch=8, seq_len=32, seed=7, host_id=0, n_hosts=2),
+        )
+        h1 = TokenPipeline(
+            self.CFG,
+            PipelineConfig(global_batch=8, seq_len=32, seed=7, host_id=1, n_hosts=2),
+        )
+        assert h0.batch_at(0)["tokens"].shape[0] == 4
+        assert not np.array_equal(
+            np.asarray(h0.batch_at(0)["tokens"]), np.asarray(h1.batch_at(0)["tokens"])
+        )
+
+    def test_labels_are_shifted_tokens(self):
+        p = TokenPipeline(self.CFG, PipelineConfig(global_batch=2, seq_len=16))
+        b = p.batch_at(0)
+        np.testing.assert_array_equal(
+            np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1])
+        )
+
+    def test_multimodal_batches(self):
+        vlm = get_smoke_config("paligemma-3b")
+        p = TokenPipeline(vlm, PipelineConfig(global_batch=2, seq_len=24))
+        b = p.batch_at(0)
+        assert b["patch_embeds"].shape == (2, vlm.n_prefix_embeds, vlm.d_model)
+        audio = get_smoke_config("musicgen-large")
+        p = TokenPipeline(audio, PipelineConfig(global_batch=2, seq_len=24))
+        b = p.batch_at(0)
+        assert b["tokens"].shape[-1] == audio.n_codebooks
+
+
+class TestFaultTolerance:
+    def test_detect_stragglers(self):
+        hosts = [
+            ft.HostStatus(0, last_heartbeat=100.0, step_time_ema=1.0),
+            ft.HostStatus(1, last_heartbeat=100.0, step_time_ema=1.1),
+            ft.HostStatus(2, last_heartbeat=100.0, step_time_ema=5.0),
+            ft.HostStatus(3, last_heartbeat=10.0, step_time_ema=1.0),
+        ]
+        dead, slow = ft.detect_stragglers(hosts, now=120.0)
+        assert dead == [3] and slow == [2]
+
+    def test_resplit_shards_cover_everything(self):
+        shards = ft.resplit_data_shards(10, [0, 2, 5])
+        got = sorted(i for v in shards.values() for i in v)
+        assert got == list(range(10))
+
+    def test_young_daly(self):
+        assert ft.steps_between_checkpoints(3600.0, 30.0, 2.0) == int(
+            np.sqrt(2 * 3600 * 30) / 2
+        )
+
+    def test_elastic_mesh_shapes(self):
+        from repro.launch.mesh import make_elastic_mesh
+
+        m = make_elastic_mesh(n_devices=1, model_parallelism=16)
+        assert tuple(m.shape[a] for a in m.axis_names) == (1, 1)
+
+    def test_checkpoint_reshard_restore(self, tmp_path):
+        """Restore onto explicit shardings (elastic restart path)."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mgr = CheckpointManager(str(tmp_path))
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        mgr.save(1, tree)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        out = mgr.restore(1, tree, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+        assert out["w"].sharding == sh["w"]

@@ -1,0 +1,117 @@
+"""ParServerlessSimulator (concurrency > 1) and temporal simulator."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import (
+    ExpSimProcess,
+    InstanceSnapshot,
+    ParServerlessSimulator,
+    ServerlessSimulator,
+    ServerlessTemporalSimulator,
+    SimulationConfig,
+)
+
+
+def base_cfg(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=1.2),
+        warm_service_process=ExpSimProcess(rate=0.8),
+        cold_service_process=ExpSimProcess(rate=0.6),
+        expiration_threshold=15.0,
+        sim_time=800.0,
+        skip_time=20.0,
+        slots=48,
+    )
+    d.update(kw)
+    return SimulationConfig(**d)
+
+
+class TestParSimulator:
+    def test_c1_equals_base_seed_exactly(self):
+        cfg = base_cfg()
+        key = jax.random.key(0)
+        base = ServerlessSimulator(cfg)
+        samples = base.draw_samples(key, replicas=2)
+        s_base = base.run(key, samples=samples)
+        s_par = ParServerlessSimulator(cfg, concurrency_value=1).run(
+            key, samples=samples
+        )
+        np.testing.assert_array_equal(s_base.n_cold, s_par.n_cold)
+        np.testing.assert_array_equal(s_base.n_warm, s_par.n_warm)
+        np.testing.assert_array_equal(s_base.n_reject, s_par.n_reject)
+        np.testing.assert_allclose(s_base.time_running, s_par.time_running, rtol=1e-9)
+        np.testing.assert_allclose(s_base.time_idle, s_par.time_idle, rtol=1e-9)
+
+    def test_high_concurrency_single_instance(self):
+        """c = ∞ (≥ any in-flight count) ⇒ after the first cold start the
+        single instance absorbs everything arriving within its lifetime."""
+        cfg = base_cfg(expiration_threshold=1e6, sim_time=400.0, skip_time=0.0)
+        s = ParServerlessSimulator(cfg, concurrency_value=4096).run(
+            jax.random.key(1), replicas=4
+        )
+        assert (np.asarray(s.n_cold) == 1).all()
+        assert s.rejection_prob == 0.0
+
+    def test_in_flight_littles_law(self):
+        """avg in-flight requests = λ(1−p_rej)·E[S] regardless of packing."""
+        cfg = base_cfg(sim_time=4000.0)
+        s = ParServerlessSimulator(cfg, concurrency_value=3).run(
+            jax.random.key(2), replicas=4
+        )
+        np.testing.assert_allclose(s.avg_in_flight, 1.2 * (1 / 0.8), rtol=0.06)
+
+    def test_fewer_instances_with_concurrency(self):
+        cfg = base_cfg(sim_time=2000.0)
+        s1 = ParServerlessSimulator(cfg, concurrency_value=1).run(
+            jax.random.key(3), replicas=4
+        )
+        s4 = ParServerlessSimulator(cfg, concurrency_value=4).run(
+            jax.random.key(3), replicas=4
+        )
+        assert s4.avg_server_count < s1.avg_server_count  # paper Fig. 1
+
+
+class TestTemporalSimulator:
+    def test_initial_state_counts(self):
+        cfg = base_cfg(sim_time=60.0, skip_time=0.0)
+        init = [
+            InstanceSnapshot(age=100.0, remaining=5.0),
+            InstanceSnapshot(age=50.0, remaining=2.0),
+            InstanceSnapshot(age=30.0, idle_for=3.0),
+        ]
+        sim = ServerlessTemporalSimulator(cfg, init)
+        grid = np.array([0.01, 1.0, 30.0])
+        out = sim.run(jax.random.key(0), grid, replicas=32)
+        # at t≈0: 2 running, 1 idle in every replica
+        np.testing.assert_allclose(out.running_at[0], 2.0, atol=0.2)
+        np.testing.assert_allclose(out.idle_at[0], 1.0, atol=0.3)
+
+    def test_converges_to_steady_state(self):
+        cfg = base_cfg(sim_time=600.0, skip_time=0.0)
+        sim = ServerlessTemporalSimulator(cfg, [])
+        grid = np.array([550.0, 575.0, 599.0])
+        out = sim.run(jax.random.key(1), grid, replicas=48)
+        steady = ServerlessSimulator(base_cfg(sim_time=3000.0)).run(
+            jax.random.key(2), replicas=4
+        )
+        np.testing.assert_allclose(
+            out.running_at.mean(), steady.avg_running_count, rtol=0.15
+        )
+        np.testing.assert_allclose(
+            out.total_at.mean(),
+            steady.avg_server_count,
+            rtol=0.15,
+        )
+
+    def test_cold_prob_curve_decreasing_from_empty(self):
+        """From an empty platform the cold-start indicator starts at 1 and
+        falls as the warm pool builds."""
+        cfg = base_cfg(sim_time=120.0, skip_time=0.0)
+        sim = ServerlessTemporalSimulator(cfg, [])
+        grid = np.array([0.05, 5.0, 60.0, 110.0])
+        out = sim.run(jax.random.key(3), grid, replicas=64)
+        assert out.cold_prob_at[0] > 0.9
+        assert out.cold_prob_at[-1] < out.cold_prob_at[0]

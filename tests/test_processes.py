@@ -1,0 +1,56 @@
+"""SimProcess distributions: means, positivity, analytical handles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BatchArrivalProcess,
+    DeterministicSimProcess,
+    ExpSimProcess,
+    GammaSimProcess,
+    GaussianSimProcess,
+    LogNormalSimProcess,
+    ParetoSimProcess,
+    WeibullSimProcess,
+)
+from repro.core.metrics import compare_with_analytical_cdf, empirical_cdf
+
+PROCS = [
+    ExpSimProcess(rate=0.7),
+    DeterministicSimProcess(interval=2.5),
+    GaussianSimProcess(mu=5.0, sigma=0.5),
+    WeibullSimProcess(shape_k=1.5, scale=2.0),
+    GammaSimProcess(shape_k=2.0, scale=1.5),
+    LogNormalSimProcess(mu=0.3, sigma=0.4),
+    ParetoSimProcess(alpha=3.0, x_m=1.0),
+]
+
+
+@pytest.mark.parametrize("proc", PROCS, ids=lambda p: type(p).__name__)
+def test_mean_and_positivity(proc):
+    s = proc.sample(jax.random.key(0), (200_000,))
+    assert (np.asarray(s) > 0).all()
+    assert np.isfinite(np.asarray(s)).all()
+    np.testing.assert_allclose(np.asarray(s).mean(), proc.mean(), rtol=0.05)
+
+
+def test_exponential_cdf_matches():
+    proc = ExpSimProcess(rate=1.3)
+    s = proc.sample(jax.random.key(1), (100_000,))
+    stats = compare_with_analytical_cdf(np.asarray(s), lambda x: 1 - np.exp(-1.3 * x))
+    assert stats["ks"] < 0.01
+
+
+def test_batch_arrival_structure():
+    proc = BatchArrivalProcess(base=ExpSimProcess(rate=0.5), batch_size=4)
+    s = np.asarray(proc.sample(jax.random.key(2), (64,)))
+    assert (s[np.arange(64) % 4 != 0] == 0).all()
+    assert (s[np.arange(64) % 4 == 0] > 0).all()
+    np.testing.assert_allclose(proc.mean(), 0.5, rtol=1e-6)
+
+
+def test_empirical_cdf_monotone():
+    x, f = empirical_cdf(np.random.default_rng(0).exponential(size=1000))
+    assert (np.diff(f) >= 0).all() and f[-1] == 1.0

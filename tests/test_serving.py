@@ -1,0 +1,150 @@
+"""Serving platform: online behaviour vs simulator prediction; engine."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.data.workload import (
+    Request,
+    batch_arrivals,
+    deterministic_arrivals,
+    mmpp_arrivals,
+    poisson_arrivals,
+)
+from repro.serving.autoscale import plan_expiration_threshold
+from repro.serving.engine import Replica
+from repro.serving.platform import ServerlessPlatform
+
+
+class TestPlatformVsSimulator:
+    def test_prediction_matches_observation(self):
+        """The paper's validation loop, closed in-process: the simulator's
+        prediction for (λ, warm, cold, T_exp) must match the platform's
+        observed metrics on a Poisson workload."""
+        rate, warm, cold, t_exp, horizon = 0.8, 1.5, 2.5, 30.0, 4000.0
+        rng = np.random.default_rng(0)
+        platform = ServerlessPlatform(
+            cold_time_fn=lambda r: float(rng.exponential(cold)),
+            warm_time_fn=lambda r: float(rng.exponential(warm)),
+            expiration_threshold=t_exp,
+        )
+        obs = platform.run(poisson_arrivals(rate, horizon, seed=1), horizon)
+
+        sim = ServerlessSimulator(
+            SimulationConfig(
+                arrival_process=ExpSimProcess(rate=rate),
+                warm_service_process=ExpSimProcess(rate=1 / warm),
+                cold_service_process=ExpSimProcess(rate=1 / cold),
+                expiration_threshold=t_exp,
+                sim_time=horizon * 4,
+                skip_time=50.0,
+            )
+        )
+        pred = sim.run(jax.random.key(0), replicas=4)
+        np.testing.assert_allclose(
+            obs.avg_running_replicas, pred.avg_running_count, rtol=0.12
+        )
+        np.testing.assert_allclose(
+            obs.avg_total_replicas, pred.avg_server_count, rtol=0.15
+        )
+        assert abs(obs.cold_start_prob - pred.cold_start_prob) < 0.05
+        np.testing.assert_allclose(obs.wasted_ratio, pred.avg_wasted_ratio, rtol=0.15)
+
+    def test_rejection_at_capacity(self):
+        platform = ServerlessPlatform(
+            cold_time_fn=lambda r: 5.0,
+            warm_time_fn=lambda r: 5.0,
+            expiration_threshold=1e-9,
+            max_concurrency=1,
+        )
+        obs = platform.run(deterministic_arrivals(1.0, 50.0), 50.0)
+        assert obs.rejection_prob > 0.5
+
+    def test_replica_reaping_releases_objects(self):
+        created = []
+
+        def factory():
+            obj = object()
+            created.append(obj)
+            return obj
+
+        platform = ServerlessPlatform(
+            cold_time_fn=lambda r: 0.5,
+            warm_time_fn=lambda r: 0.5,
+            expiration_threshold=2.0,
+            replica_factory=factory,
+        )
+        reqs = [Request(arrival_time=t, request_id=i) for i, t in enumerate([1.0, 100.0])]
+        platform.run(iter(reqs), 200.0)
+        assert len(created) == 2  # second arrival was a cold start
+        assert len(platform.replicas) <= 1
+
+    def test_workload_generators(self):
+        reqs = list(poisson_arrivals(2.0, 1000.0, seed=3))
+        assert abs(len(reqs) / 1000.0 - 2.0) < 0.2
+        reqs_b = list(batch_arrivals(2.0, 4, 1000.0, seed=3))
+        times = [r.arrival_time for r in reqs_b]
+        assert times.count(times[0]) == 4  # grouped
+        reqs_m = list(mmpp_arrivals(0.5, 5.0, 0.01, 500.0, seed=3))
+        assert len(reqs_m) > 0
+
+
+class TestEngineReplica:
+    def test_generate_deterministic(self):
+        cfg = get_smoke_config("llama3.2-1b")
+        rep = Replica(cfg, max_len=64)
+        warm_s = rep.warmup(batch_size=2, prompt_len=16)
+        assert warm_s > 0
+        toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 16))
+        r1 = rep.generate(toks, new_tokens=8)
+        r2 = rep.generate(toks, new_tokens=8)
+        np.testing.assert_array_equal(r1.tokens, r2.tokens)
+        assert r1.tokens.shape == (2, 8)
+
+    def test_real_replica_behind_platform(self):
+        """End-to-end: platform cold/warm times measured from a real replica
+        executing prefill+decode on CPU."""
+        cfg = get_smoke_config("llama3.2-1b")
+        state = {}
+
+        def cold_time(req):
+            rep = Replica(cfg, max_len=64)
+            t = rep.warmup(batch_size=1, prompt_len=8)
+            state["rep"] = rep
+            return rep.init_seconds + t
+
+        def warm_time(req):
+            toks = np.zeros((1, 8), np.int32)
+            r = state["rep"].generate(toks, new_tokens=2)
+            return r.prefill_s + r.decode_s
+
+        platform = ServerlessPlatform(
+            cold_time_fn=cold_time, warm_time_fn=warm_time,
+            expiration_threshold=1e6,
+        )
+        # wide spacing: measured cold time (compile) can be tens of seconds
+        # on this host, and warm generates a few seconds
+        times = [1.0, 500.0, 1000.0, 1500.0]
+        reqs = [Request(arrival_time=t, request_id=i) for i, t in enumerate(times)]
+        obs = platform.run(iter(reqs), 2000.0)
+        assert obs.records[0].cold and not obs.records[1].rejected
+        assert obs.cold_start_prob == 0.25
+
+
+class TestAutoscalePlanner:
+    def test_planner_meets_slo(self):
+        plan = plan_expiration_threshold(
+            arrival_rate=0.5, warm_time=1.0, cold_time=2.0,
+            cold_slo=0.05, sim_time=5000.0,
+        )
+        assert plan.predicted_cold_prob <= 0.05 + 0.02
+        assert plan.expiration_threshold in (30.0, 60.0, 120.0, 300.0, 600.0, 1200.0)
+
+    def test_tighter_slo_needs_longer_threshold(self):
+        loose = plan_expiration_threshold(0.2, 1.0, 2.0, cold_slo=0.5, sim_time=3000.0)
+        tight = plan_expiration_threshold(0.2, 1.0, 2.0, cold_slo=0.02, sim_time=3000.0)
+        assert tight.expiration_threshold >= loose.expiration_threshold

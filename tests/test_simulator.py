@@ -1,0 +1,210 @@
+"""Core simulator: seed-exact oracle equivalence, paper Table 1, invariants."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeterministicSimProcess,
+    ExpSimProcess,
+    GaussianSimProcess,
+    ServerlessSimulator,
+    SimulationConfig,
+)
+from repro.core.pyref import simulate_pyref
+
+
+def make_cfg(**kw):
+    base = dict(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0,
+        sim_time=500.0,
+        skip_time=10.0,
+        slots=32,
+        track_histogram=True,
+        hist_bins=33,
+    )
+    base.update(kw)
+    return SimulationConfig(**base)
+
+
+def run_both(cfg, seed=0, replicas=2):
+    sim = ServerlessSimulator(cfg)
+    samples = sim.draw_samples(jax.random.key(seed), replicas)
+    summary = sim.run(jax.random.key(seed), samples=samples)
+    dts, warms, colds = [np.asarray(x) for x in samples]
+    refs = [
+        simulate_pyref(
+            dts[r], warms[r], colds[r],
+            cfg.expiration_threshold, cfg.max_concurrency,
+            cfg.sim_time, cfg.skip_time,
+            hist_bins=cfg.hist_bins if cfg.track_histogram else 0,
+        )
+        for r in range(replicas)
+    ]
+    return summary, refs
+
+
+class TestSeedExactOracle:
+    def test_counts_and_integrals_match(self):
+        summary, refs = run_both(make_cfg())
+        for r, ref in enumerate(refs):
+            assert int(summary.n_cold[r]) == ref.n_cold
+            assert int(summary.n_warm[r]) == ref.n_warm
+            assert int(summary.n_reject[r]) == ref.n_reject
+            np.testing.assert_allclose(summary.time_running[r], ref.time_running, rtol=1e-9)
+            np.testing.assert_allclose(summary.time_idle[r], ref.time_idle, rtol=1e-9)
+            np.testing.assert_allclose(summary.lifespan_sum[r], ref.lifespan_sum, rtol=1e-9)
+            assert int(summary.lifespan_count[r]) == ref.lifespan_count
+
+    def test_histogram_matches(self):
+        summary, refs = run_both(make_cfg())
+        for r, ref in enumerate(refs):
+            np.testing.assert_allclose(summary.histogram[r], ref.histogram, atol=1e-6)
+
+    def test_rejections_under_tight_concurrency(self):
+        cfg = make_cfg(max_concurrency=2, slots=4, expiration_threshold=5.0)
+        summary, refs = run_both(cfg, seed=3)
+        assert summary.n_reject.sum() > 0, "test should exercise rejection"
+        for r, ref in enumerate(refs):
+            assert int(summary.n_reject[r]) == ref.n_reject
+
+    def test_deterministic_processes(self):
+        cfg = make_cfg(
+            arrival_process=DeterministicSimProcess(interval=2.0),
+            warm_service_process=DeterministicSimProcess(interval=1.0),
+            cold_service_process=DeterministicSimProcess(interval=1.5),
+            expiration_threshold=3.0,
+        )
+        summary, refs = run_both(cfg)
+        # d=2 > s=1, d < s+T_exp ⇒ single instance reused forever: 1 cold
+        for r, ref in enumerate(refs):
+            assert int(summary.n_cold[r]) == ref.n_cold
+        assert summary.cold_start_prob < 0.02
+
+    def test_gaussian_service(self):
+        cfg = make_cfg(
+            warm_service_process=GaussianSimProcess(mu=2.0, sigma=0.3),
+            cold_service_process=GaussianSimProcess(mu=3.0, sigma=0.3),
+        )
+        summary, refs = run_both(cfg)
+        for r, ref in enumerate(refs):
+            assert int(summary.n_warm[r]) == ref.n_warm
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        rate=st.floats(0.05, 2.0),
+        warm=st.floats(0.2, 4.0),
+        t_exp=st.floats(0.5, 50.0),
+        max_c=st.integers(1, 8),
+        seed=st.integers(0, 100),
+    )
+    def test_property_oracle_equivalence(self, rate, warm, t_exp, max_c, seed):
+        """The flagship property: for ANY parameters the vectorised scan and
+        the event-driven oracle agree decision-for-decision."""
+        cfg = make_cfg(
+            arrival_process=ExpSimProcess(rate=rate),
+            warm_service_process=ExpSimProcess(rate=1.0 / warm),
+            cold_service_process=ExpSimProcess(rate=1.0 / (warm * 1.3)),
+            expiration_threshold=t_exp,
+            max_concurrency=max_c,
+            slots=max(max_c, 4),
+            sim_time=200.0,
+            skip_time=0.0,
+            track_histogram=False,
+        )
+        summary, refs = run_both(cfg, seed=seed, replicas=1)
+        ref = refs[0]
+        assert int(summary.n_cold[0]) == ref.n_cold
+        assert int(summary.n_warm[0]) == ref.n_warm
+        assert int(summary.n_reject[0]) == ref.n_reject
+        np.testing.assert_allclose(summary.time_running[0], ref.time_running, rtol=1e-8)
+        np.testing.assert_allclose(summary.time_idle[0], ref.time_idle, rtol=1e-8)
+
+
+class TestPaperTable1:
+    @pytest.mark.slow
+    def test_table1_reproduction(self):
+        """Paper Table 1 at reduced horizon (1e5 s, 4 replicas)."""
+        sim = ServerlessSimulator.from_rates(
+            arrival_rate=0.9,
+            warm_service_time=1.991,
+            cold_service_time=2.244,
+            expiration_threshold=600.0,
+            sim_time=1e5,
+            skip_time=100.0,
+            slots=64,
+        )
+        s = sim.run(jax.random.key(0), replicas=4)
+        assert abs(s.avg_running_count - 1.7902) < 0.05
+        assert abs(s.avg_server_count - 7.6795) < 0.5
+        assert abs(s.avg_idle_count - 5.8893) < 0.5
+        assert 0.0005 < s.cold_start_prob < 0.004  # paper: 0.0014
+        assert s.rejection_prob == 0.0
+
+    def test_invariants(self):
+        cfg = make_cfg()
+        summary, _ = run_both(cfg)
+        assert (summary.time_running >= 0).all()
+        assert (summary.time_idle >= 0).all()
+        horizon = cfg.sim_time - cfg.skip_time
+        assert (summary.time_running + summary.time_idle <= cfg.slots * horizon).all()
+        # wasted ratio bounded by T_exp/(E[S]+T_exp)
+        from repro.core.analytical import utilization_bound
+
+        bound = utilization_bound(0.8, 2.0, cfg.expiration_threshold)
+        assert summary.avg_wasted_ratio <= bound + 0.05
+
+    def test_overflow_raises(self):
+        cfg = make_cfg(slots=1, max_concurrency=100)
+        with pytest.raises(RuntimeError, match="overflow"):
+            run_both(cfg)
+
+    def test_insufficient_steps_raises(self):
+        cfg = make_cfg()
+        sim = ServerlessSimulator(cfg)
+        with pytest.raises(RuntimeError, match="before sim_time"):
+            sim.run(jax.random.key(0), replicas=1, steps=10)
+
+
+class TestRoutingPolicy:
+    def test_oldest_routing_seed_exact_vs_oracle(self):
+        cfg = make_cfg(routing="oldest")
+        summary, _ = run_both(cfg)  # run_both uses pyref default 'newest'
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(0), 1)
+        s = sim.run(jax.random.key(0), samples=samples)
+        dts, warms, colds = [np.asarray(x)[0] for x in samples]
+        ref = simulate_pyref(
+            dts, warms, colds, cfg.expiration_threshold, cfg.max_concurrency,
+            cfg.sim_time, cfg.skip_time, routing="oldest",
+        )
+        assert int(s.n_cold[0]) == ref.n_cold
+        assert int(s.n_warm[0]) == ref.n_warm
+        np.testing.assert_allclose(s.time_idle[0], ref.time_idle, rtol=1e-8)
+
+    def test_newest_first_concentrates_lifespans(self):
+        """The paper's routing rationale (McGrath & Brenner): newest-first
+        starves old instances so extras expire fast while a core survives —
+        much longer mean lifespan of *expired* instances than LRU-style
+        oldest-first."""
+        out = {}
+        for routing in ("newest", "oldest"):
+            cfg = make_cfg(
+                routing=routing,
+                sim_time=4000.0,
+                expiration_threshold=60.0,
+            )
+            out[routing] = ServerlessSimulator(cfg).run(
+                jax.random.key(5), replicas=4
+            )
+        assert out["newest"].avg_lifespan > 1.5 * out["oldest"].avg_lifespan
+        # cold-start probability is routing-insensitive at steady load
+        assert abs(
+            out["newest"].cold_start_prob - out["oldest"].cold_start_prob
+        ) < 0.02

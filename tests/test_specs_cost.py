@@ -1,0 +1,116 @@
+"""input_specs coverage for every (arch × shape) cell + cost/what-if units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, get_smoke_config, list_archs
+from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.core.cost import BillingModel, estimate_cost
+from repro.launch import input_specs as ispec
+from repro.models.model import build_model
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape_name", list(SHAPES))
+def test_input_specs_well_formed(arch, shape_name):
+    """Every cell's input specs: right batch/seq bookkeeping, int token ids,
+    no accidental allocation (pure ShapeDtypeStructs)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" and shape.seq_len > 100_000 and not cfg.supports_long_context:
+        pytest.skip("documented long_500k skip")
+    model = build_model(cfg)
+    specs = ispec.input_specs(model, shape)
+    leaves = jax.tree.leaves(specs)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    if shape.kind == "train":
+        toks = specs["batch"]["tokens"]
+        assert toks.dtype == jnp.int32
+        assert toks.shape[0] == shape.global_batch
+        total_seq = toks.shape[1] + cfg.n_prefix_embeds + cfg.n_cond_embeds
+        assert total_seq == shape.seq_len
+        assert specs["batch"]["labels"].shape == toks.shape
+    elif shape.kind == "prefill":
+        assert "labels" not in specs["batch"]
+    else:
+        assert specs["tokens_t"].shape[:2] == (shape.global_batch, 1)
+        assert specs["cache_len"].shape == (shape.global_batch,)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "mamba2-2.7b", "deepseek-v3-671b"])
+def test_cache_shapes_match_decode_consumption(arch):
+    """cache_shapes trees must be exactly what decode_step consumes
+    (checked by eval_shape — no allocation)."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    B, T = 2, 16
+    caches = model.cache_shapes(B, T)
+    toks = jax.ShapeDtypeStruct(
+        (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1), jnp.int32
+    )
+    params = model.param_shapes()
+    out = jax.eval_shape(
+        model.decode_step, params, toks, caches, jax.ShapeDtypeStruct((B,), jnp.int32)
+    )
+    logits, new_caches, new_len = out
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+    for a, b in zip(jax.tree.leaves(new_caches), jax.tree.leaves(caches)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+
+
+class TestCostModel:
+    def _summary(self):
+        cfg = SimulationConfig(
+            arrival_process=ExpSimProcess(rate=1.0),
+            warm_service_process=ExpSimProcess(rate=0.5),
+            cold_service_process=ExpSimProcess(rate=0.4),
+            expiration_threshold=30.0,
+            sim_time=2000.0,
+            skip_time=50.0,
+        )
+        return ServerlessSimulator(cfg).run(jax.random.key(0), replicas=2)
+
+    def test_components_positive_and_ordered(self):
+        s = self._summary()
+        c = estimate_cost(s)
+        assert c.developer_request_cost > 0
+        assert c.developer_runtime_cost > 0
+        # provider pays for idle too ⇒ infra cost dominates dev runtime
+        # at 80 %+ wasted capacity under AWS-ish prices
+        assert c.provider_infra_cost > 0
+        assert 0 < c.provider_margin_ratio < 10
+
+    def test_memory_scaling(self):
+        s = self._summary()
+        small = estimate_cost(s, BillingModel(memory_gb=0.128))
+        big = estimate_cost(s, BillingModel(memory_gb=1.024))
+        np.testing.assert_allclose(
+            big.developer_runtime_cost / small.developer_runtime_cost, 8.0,
+            rtol=1e-6,
+        )
+
+    def test_longer_threshold_costs_provider_more(self):
+        import dataclasses
+
+        def run(t_exp):
+            cfg = SimulationConfig(
+                arrival_process=ExpSimProcess(rate=1.0),
+                warm_service_process=ExpSimProcess(rate=0.5),
+                cold_service_process=ExpSimProcess(rate=0.4),
+                expiration_threshold=t_exp,
+                sim_time=2000.0,
+                skip_time=50.0,
+            )
+            return estimate_cost(
+                ServerlessSimulator(cfg).run(jax.random.key(1), replicas=2)
+            )
+
+        assert run(120.0).provider_infra_cost > run(10.0).provider_infra_cost
+        # developer runtime cost is threshold-insensitive (runs are runs)
+        np.testing.assert_allclose(
+            run(120.0).developer_runtime_cost,
+            run(10.0).developer_runtime_cost,
+            rtol=0.05,
+        )

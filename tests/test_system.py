@@ -1,0 +1,66 @@
+"""End-to-end behaviour of the whole system (the paper's workflow).
+
+The paper's promise: predict a serverless platform's QoS/cost *before*
+deploying.  This test runs the full loop — measure a workload, predict
+with the simulator, deploy on the platform executor, compare — plus the
+what-if → reconfigure cycle.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.core.cost import BillingModel, estimate_cost
+from repro.core.whatif import sweep
+from repro.data.workload import poisson_arrivals
+from repro.serving.platform import ServerlessPlatform
+
+
+def test_full_predict_deploy_compare_cycle():
+    rate, warm, cold, t_exp = 1.0, 1.2, 2.0, 25.0
+    horizon = 3000.0
+
+    # 1. predict
+    cfg = SimulationConfig(
+        arrival_process=ExpSimProcess(rate=rate),
+        warm_service_process=ExpSimProcess(rate=1 / warm),
+        cold_service_process=ExpSimProcess(rate=1 / cold),
+        expiration_threshold=t_exp,
+        sim_time=horizon * 3,
+        skip_time=50.0,
+    )
+    pred = ServerlessSimulator(cfg).run(jax.random.key(0), replicas=4)
+    cost_pred = estimate_cost(pred)
+
+    # 2. deploy
+    rng = np.random.default_rng(1)
+    platform = ServerlessPlatform(
+        cold_time_fn=lambda r: float(rng.exponential(cold)),
+        warm_time_fn=lambda r: float(rng.exponential(warm)),
+        expiration_threshold=t_exp,
+    )
+    obs = platform.run(poisson_arrivals(rate, horizon, seed=2), horizon)
+
+    # 3. compare (the paper's Figs 6-8 in miniature)
+    np.testing.assert_allclose(
+        obs.avg_running_replicas, pred.avg_running_count, rtol=0.12
+    )
+    np.testing.assert_allclose(obs.avg_total_replicas, pred.avg_server_count, rtol=0.15)
+    assert abs(obs.cold_start_prob - pred.cold_start_prob) < 0.05
+
+    # 4. cost model consistency: dev runtime cost scales with running time
+    assert cost_pred.developer_runtime_cost > 0
+    assert cost_pred.provider_infra_cost > cost_pred.developer_runtime_cost * 0.01
+
+    # 5. what-if: pick a cheaper threshold meeting a 10% cold SLO
+    res = sweep(
+        cfg,
+        arrival_rates=[rate],
+        expiration_thresholds=[5.0, 25.0, 100.0],
+        key=jax.random.key(3),
+        replicas=2,
+    )
+    assert (np.diff(res.cold_start_prob[:, 0]) <= 0.02).all()  # monotone ↓
+    assert (np.diff(res.provider_cost[:, 0]) >= -1e-9).all()  # monotone ↑
