@@ -13,6 +13,8 @@ the MAPE numbers are sim-vs-independent-implementation.
 
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
@@ -28,9 +30,10 @@ from repro.core import (  # noqa: E402
 )
 from repro.core.metrics import histogram_to_distribution, mape  # noqa: E402
 from repro.core.pyref import simulate_pyref  # noqa: E402
-from repro.core.whatif import sweep  # noqa: E402
+from repro.core.whatif import sweep, sweep_legacy  # noqa: E402
 
 ROWS = []
+QUICK = False
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -291,6 +294,91 @@ def bench_sim_throughput():
     )
 
 
+def bench_fig5_sweep():
+    """The single-compile batched what-if engine vs the per-cell loop.
+
+    Baseline = ``sweep_legacy(fresh_jit=True)``: the pre-batching engine,
+    where rate/threshold were static jit args and EVERY grid cell paid a
+    full XLA compile.  ``us_per_call`` is the batched engine's wall-time
+    per simulated arrival over the whole grid.
+    """
+    if QUICK:
+        rates = list(np.linspace(0.5, 1.5, 3))
+        thresholds = list(np.linspace(30.0, 300.0, 3))
+        sim_time, steps, replicas = 1000.0, 1800, 1
+    else:
+        rates = list(np.linspace(0.2, 2.0, 10))
+        thresholds = list(np.linspace(60.0, 1200.0, 10))
+        sim_time, steps, replicas = 2000.0, 4600, 2
+    cfg = paper_cfg(sim_time=sim_time, skip_time=50.0)
+    key = jax.random.key(1)
+    grid_cells = len(rates) * len(thresholds)
+
+    # warm the batched engine's single compile, then time execution
+    sweep(cfg, rates, thresholds, key, replicas=replicas, steps=steps)
+    t0 = time.perf_counter()
+    res = sweep(cfg, rates, thresholds, key, replicas=replicas, steps=steps)
+    dt_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sweep_legacy(
+        cfg, rates, thresholds, key, replicas=replicas, steps=steps, fresh_jit=True
+    )
+    dt_legacy = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    sweep_legacy(cfg, rates, thresholds, key, replicas=replicas, steps=steps)
+    dt_loop = time.perf_counter() - t0
+
+    arrivals = grid_cells * replicas * steps
+    emit(
+        "bench_fig5_sweep",
+        dt_batched / arrivals * 1e6,
+        f"cells={grid_cells} batched={dt_batched:.2f}s "
+        f"legacy_percell_compile={dt_legacy:.2f}s cached_loop={dt_loop:.2f}s "
+        f"speedup_vs_legacy={dt_legacy/dt_batched:.1f}x "
+        f"speedup_vs_loop={dt_loop/dt_batched:.1f}x "
+        f"cold%[mid]={100*res.cold_start_prob[len(thresholds)//2, len(rates)//2]:.2f}",
+    )
+
+
+def bench_pallas_block():
+    """f32 block-kernel sweep backends vs the f64 scan engine.
+
+    ``us_per_call`` is the block-ref backend's wall-time per simulated
+    arrival; derived records cross-backend metric agreement (the f32
+    precision-domain check).
+    """
+    if QUICK:
+        sim_time, steps, replicas = 1000.0, 1200, 1
+    else:
+        sim_time, steps, replicas = 4000.0, 4400, 2
+    cfg = paper_cfg(sim_time=sim_time, skip_time=100.0)
+    rates, thresholds = [0.5, 0.9], [300.0, 600.0]
+    key = jax.random.key(42)
+    kw = dict(replicas=replicas, steps=steps)
+
+    scan = sweep(cfg, rates, thresholds, key, **kw)
+    sweep(cfg, rates, thresholds, key, backend="ref", **kw)  # warm compile
+    t0 = time.perf_counter()
+    ref = sweep(cfg, rates, thresholds, key, backend="ref", **kw)
+    dt_ref = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pal = sweep(cfg, rates, thresholds, key, backend="pallas", **kw)
+    dt_pal = time.perf_counter() - t0
+
+    rel = np.abs(ref.avg_server_count / scan.avg_server_count - 1).max()
+    bit = np.abs(pal.avg_server_count - ref.avg_server_count).max()
+    arrivals = len(rates) * len(thresholds) * replicas * steps
+    emit(
+        "bench_pallas_block",
+        dt_ref / arrivals * 1e6,
+        f"ref={dt_ref:.2f}s pallas={dt_pal:.2f}s "
+        f"max_rel_vs_f64scan={rel:.2e}(<=1e-3) pallas_vs_ref_bitdiff={bit:.1e} "
+        f"backend={'tpu' if jax.default_backend()=='tpu' else 'interpret'}",
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -327,19 +415,54 @@ def bench_kernel_event_step():
     )
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global QUICK
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--quick",
+        action="store_true",
+        help="reduced grids/horizons: CI smoke mode",
+    )
+    p.add_argument(
+        "--json",
+        metavar="PATH",
+        default=None,
+        help="also write rows as JSON (e.g. BENCH_sweep.json) for cross-PR tracking",
+    )
+    args = p.parse_args(argv)
+    QUICK = args.quick
+
     print("name,us_per_call,derived")
-    bench_table1()
-    bench_fig3_instance_distribution()
-    bench_fig4_ci_convergence()
-    bench_fig5_whatif_thresholds()
-    bench_fig1_concurrency_value()
-    bench_routing_policy()
-    bench_fig6_cold_start_probability()
-    bench_fig7_instance_count()
-    bench_fig8_wasted_capacity()
-    bench_sim_throughput()
-    bench_kernel_event_step()
+    if QUICK:
+        bench_table1()
+        bench_fig5_sweep()
+        bench_pallas_block()
+    else:
+        bench_table1()
+        bench_fig3_instance_distribution()
+        bench_fig4_ci_convergence()
+        bench_fig5_whatif_thresholds()
+        bench_fig5_sweep()
+        bench_pallas_block()
+        bench_fig1_concurrency_value()
+        bench_routing_policy()
+        bench_fig6_cold_start_probability()
+        bench_fig7_instance_count()
+        bench_fig8_wasted_capacity()
+        bench_sim_throughput()
+        bench_kernel_event_step()
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                [
+                    {"name": n, "us_per_call": u, "derived": d}
+                    for n, u, d in ROWS
+                ],
+                f,
+                indent=2,
+            )
+        print(f"wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

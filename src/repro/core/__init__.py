@@ -32,6 +32,8 @@ from repro.core.simulator import (  # noqa: E402
     ServerlessSimulator,
     SimulationConfig,
     SimulationSummary,
+    StaticConfig,
+    WorkloadParams,
 )
 from repro.core.temporal import (  # noqa: E402
     InstanceSnapshot,
@@ -52,6 +54,8 @@ __all__ = [
     "ServerlessSimulator",
     "SimulationConfig",
     "SimulationSummary",
+    "StaticConfig",
+    "WorkloadParams",
     "ServerlessTemporalSimulator",
     "InstanceSnapshot",
     "ParServerlessSimulator",

@@ -35,6 +35,8 @@ import numpy as np
 from repro.core.simulator import (
     SimulationConfig,
     SimulationSummary,
+    StaticConfig,
+    WorkloadParams,
     interval_integrals,
     histogram_update,
     _NEG_INF,
@@ -61,10 +63,10 @@ class ParSimulationSummary(SimulationSummary):
         )
 
 
-def _par_scan_fn(cfg: SimulationConfig, concurrency: int):
-    t_exp = cfg.expiration_threshold
-    t_end = cfg.sim_time
-    skip = cfg.skip_time
+def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
+    t_exp = params.expiration_threshold
+    t_end = params.sim_time
+    skip = params.skip_time
     max_c = cfg.max_concurrency
 
     def step(state, xs):
@@ -150,8 +152,8 @@ def _par_scan_fn(cfg: SimulationConfig, concurrency: int):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _simulate_par_batch(cfg: SimulationConfig, concurrency: int, dts, warms, colds):
-    step = _par_scan_fn(cfg, concurrency)
+def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadParams, dts, warms, colds):
+    step = _par_scan_fn(cfg, params, concurrency)
     m = cfg.slots
 
     def one(dt_row, warm_row, cold_row):
@@ -182,10 +184,10 @@ def _simulate_par_batch(cfg: SimulationConfig, concurrency: int, dts, warms, col
         (alive, creation, finish, t_prev, acc) = state
         # tail flush
         busy_until = finish.max(axis=1)
-        lo = jnp.clip(t_prev, cfg.skip_time, cfg.sim_time)
-        hi = jnp.asarray(cfg.sim_time, dtype=jnp.float64)
+        lo = jnp.clip(t_prev, params.skip_time, params.sim_time)
+        hi = jnp.asarray(params.sim_time, dtype=jnp.float64)
         run_t, idle_t = interval_integrals(
-            alive, busy_until, cfg.expiration_threshold, lo, hi
+            alive, busy_until, params.expiration_threshold, lo, hi
         )
         in_flight_t = jnp.where(
             alive[:, None], jnp.clip(jnp.minimum(finish, hi) - lo, 0.0, None), 0.0
@@ -195,10 +197,10 @@ def _simulate_par_batch(cfg: SimulationConfig, concurrency: int, dts, warms, col
         acc["time_in_flight"] = acc["time_in_flight"] + in_flight_t
         if cfg.track_histogram:
             acc["hist"] = histogram_update(
-                acc["hist"], alive, busy_until, cfg.expiration_threshold, lo, hi
+                acc["hist"], alive, busy_until, params.expiration_threshold, lo, hi
             )
-        expire_time = busy_until + cfg.expiration_threshold
-        tail_exp = alive & (expire_time <= hi) & (expire_time > cfg.skip_time)
+        expire_time = busy_until + params.expiration_threshold
+        tail_exp = alive & (expire_time <= hi) & (expire_time > params.skip_time)
         acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
             tail_exp, expire_time - creation, 0.0
         ).sum()
@@ -234,7 +236,14 @@ class ParServerlessSimulator:
                 cfg.cold_service_process.sample(k3, (replicas, n)),
             )
         dts, warms, colds = samples
-        acc, t_last = _simulate_par_batch(cfg, self.concurrency_value, dts, warms, colds)
+        acc, t_last = _simulate_par_batch(
+            cfg.static_config(),
+            self.concurrency_value,
+            cfg.workload_params(),
+            dts,
+            warms,
+            colds,
+        )
         acc = jax.tree.map(np.asarray, acc)
         t_last = np.asarray(t_last)
         if (t_last < cfg.sim_time).any():

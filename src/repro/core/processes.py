@@ -43,6 +43,17 @@ class SimProcess:
     def mean(self) -> float:
         raise NotImplementedError
 
+    def with_rate(self, rate: float) -> "SimProcess":
+        """Return a copy rescaled to ``rate`` events per unit time.
+
+        What-if sweeps (``core.whatif``) re-rate the base config's arrival
+        process per grid column through this hook, preserving the process
+        family instead of silently substituting an exponential.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support rate rescaling"
+        )
+
     # Optional analytical handles (paper: user-provided PDF/CDF are compared
     # against simulation histograms by the metrics tools).
     def pdf(self, x: Array) -> Array:  # pragma: no cover - optional
@@ -64,6 +75,9 @@ class ExpSimProcess(SimProcess):
     def mean(self):
         return 1.0 / self.rate
 
+    def with_rate(self, rate):
+        return dataclasses.replace(self, rate=float(rate))
+
     def pdf(self, x):
         return self.rate * jnp.exp(-self.rate * x)
 
@@ -83,6 +97,9 @@ class DeterministicSimProcess(SimProcess):
 
     def mean(self):
         return self.interval
+
+    def with_rate(self, rate):
+        return dataclasses.replace(self, interval=1.0 / float(rate))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +134,13 @@ class WeibullSimProcess(SimProcess):
 
         return self.scale * gamma(1.0 + 1.0 / self.shape_k)
 
+    def with_rate(self, rate):
+        from math import gamma
+
+        return dataclasses.replace(
+            self, scale=1.0 / (float(rate) * gamma(1.0 + 1.0 / self.shape_k))
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class GammaSimProcess(SimProcess):
@@ -128,6 +152,9 @@ class GammaSimProcess(SimProcess):
 
     def mean(self):
         return self.shape_k * self.scale
+
+    def with_rate(self, rate):
+        return dataclasses.replace(self, scale=1.0 / (float(rate) * self.shape_k))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +218,11 @@ class BatchArrivalProcess(SimProcess):
 
     def mean(self):
         return self.base.mean() / self.batch_size
+
+    def with_rate(self, rate):
+        return dataclasses.replace(
+            self, base=self.base.with_rate(float(rate) / self.batch_size)
+        )
 
 
 @dataclasses.dataclass(frozen=True)

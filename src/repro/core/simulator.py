@@ -22,6 +22,14 @@ quantities — are accumulated analytically.  The sample path is *identical*
 to the event-driven original given the same random draws (cross-validated
 seed-exactly against ``core/pyref.py``).
 
+Compile-time vs run-time split (DESIGN.md §3): only the *structure* of the
+computation — pool size, routing policy, unroll factor, histogram shape —
+is a static jit argument (``StaticConfig``).  Workload parameters (arrival
+rate via the pre-drawn samples, expiration threshold, horizon, warm-up) are
+traced run-time values carried in the ``WorkloadParams`` pytree, so a whole
+(rate × threshold) what-if grid shares ONE compiled executable
+(``_simulate_sweep``) instead of recompiling per cell.
+
 State layout per replica (struct-of-arrays over ``slots``):
   ``alive``      bool[M]   instance exists
   ``creation``   f64[M]    creation timestamp (routing priority)
@@ -32,6 +40,7 @@ State layout per replica (struct-of-arrays over ``slots``):
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Optional
@@ -46,10 +55,65 @@ Array = jax.Array
 
 _NEG_INF = -1e30
 
+# Python-side trace counters: incremented when a jitted entry point is
+# (re-)traced, untouched on compile-cache hits.  Tests assert a whole
+# what-if sweep costs exactly one trace.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticConfig:
+    """Compile-time structure of the simulation (hashable jit static arg).
+
+    Everything here changes the *shape or code* of the compiled program.
+    Workload parameters (rates, threshold, horizon) are deliberately NOT
+    part of this class — they are traced values in ``WorkloadParams``.
+    """
+
+    slots: int
+    max_concurrency: int
+    routing: str
+    scan_unroll: int
+    track_histogram: bool
+    hist_bins: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    """Dynamic (traced) workload parameters — a jit-transparent pytree.
+
+    Leaves are f64 scalars for a single run, or ``[C]`` vectors for a
+    batched what-if sweep (one entry per grid row).  Changing these values
+    never triggers recompilation.
+    """
+
+    expiration_threshold: Array
+    sim_time: Array
+    skip_time: Array
+
+    @classmethod
+    def of(
+        cls, expiration_threshold, sim_time, skip_time
+    ) -> "WorkloadParams":
+        as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
+        return cls(as64(expiration_threshold), as64(sim_time), as64(skip_time))
+
+
+jax.tree_util.register_dataclass(
+    WorkloadParams,
+    data_fields=("expiration_threshold", "sim_time", "skip_time"),
+    meta_fields=(),
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class SimulationConfig:
-    """Static simulation parameters (hashable: used as a jit static arg)."""
+    """User-facing simulation parameters.
+
+    Not passed to jit directly: ``static_config()`` extracts the hashable
+    compile-time structure and ``workload_params()`` the traced run-time
+    values (see the module docstring's compile/run-time split).
+    """
 
     arrival_process: SimProcess
     warm_service_process: SimProcess
@@ -77,6 +141,23 @@ class SimulationConfig:
         m = self.arrival_process.mean()
         n = self.sim_time / m
         return int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
+
+    def static_config(self) -> StaticConfig:
+        """The compile-relevant slice of this config."""
+        return StaticConfig(
+            slots=self.slots,
+            max_concurrency=self.max_concurrency,
+            routing=self.routing,
+            scan_unroll=self.scan_unroll,
+            track_histogram=self.track_histogram,
+            hist_bins=self.hist_bins,
+        )
+
+    def workload_params(self) -> WorkloadParams:
+        """The traced (run-time) slice of this config."""
+        return WorkloadParams.of(
+            self.expiration_threshold, self.sim_time, self.skip_time
+        )
 
 
 @dataclasses.dataclass
@@ -202,6 +283,13 @@ def histogram_update(hist, alive, busy_until, exp_threshold, lo, hi):
     durations = jnp.clip(nxt - bounds, 0.0, None)
     durations = jnp.where(window > 0.0, durations, 0.0)
     counts = n0 - jnp.arange(bounds.shape[0])
+    # The padded-``hi`` tail yields segments with counts < 0 (more expiries
+    # sorted than live instances).  Those segments are zero-length by
+    # construction, but clipping their index into bin 0 would silently
+    # credit time-at-count-0 if a caller ever passes an inconsistent pool
+    # (e.g. stale ``alive`` flags) — mask them out instead of clipping.
+    valid = (counts >= 0) & (durations > 0.0)
+    durations = jnp.where(valid, durations, 0.0)
     idx = jnp.clip(counts, 0, hist.shape[0] - 1)
     return hist.at[idx].add(durations)
 
@@ -211,10 +299,10 @@ def histogram_update(hist, alive, busy_until, exp_threshold, lo, hi):
 # ---------------------------------------------------------------------------
 
 
-def _make_scan_fn(cfg: SimulationConfig):
-    t_exp = cfg.expiration_threshold
-    t_end = cfg.sim_time
-    skip = cfg.skip_time
+def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
+    t_exp = params.expiration_threshold
+    t_end = params.sim_time
+    skip = params.skip_time
     max_c = cfg.max_concurrency
 
     def step(state, xs):
@@ -290,7 +378,7 @@ def _make_scan_fn(cfg: SimulationConfig):
     return step
 
 
-def _empty_acc(cfg: SimulationConfig):
+def _empty_acc(cfg: StaticConfig):
     z = jnp.zeros((), dtype=jnp.float64)
     zi = jnp.zeros((), dtype=jnp.int64)
     return dict(
@@ -308,7 +396,7 @@ def _empty_acc(cfg: SimulationConfig):
     )
 
 
-def _empty_pool(cfg: SimulationConfig):
+def _empty_pool(cfg: StaticConfig):
     m = cfg.slots
     return (
         jnp.zeros((m,), dtype=bool),
@@ -317,19 +405,19 @@ def _empty_pool(cfg: SimulationConfig):
     )
 
 
-def _flush(cfg: SimulationConfig, state):
+def _flush(cfg: StaticConfig, params: WorkloadParams, state):
     """Integrate the tail (t_last, sim_time] after the final arrival."""
     alive, creation, busy_until, t_prev, acc = state
-    t_exp = cfg.expiration_threshold
-    lo = jnp.clip(t_prev, cfg.skip_time, cfg.sim_time)
-    hi = jnp.asarray(cfg.sim_time, dtype=jnp.float64)
+    t_exp = params.expiration_threshold
+    lo = jnp.clip(t_prev, params.skip_time, params.sim_time)
+    hi = jnp.asarray(params.sim_time, dtype=jnp.float64)
     run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
     acc["time_running"] = acc["time_running"] + run_t
     acc["time_idle"] = acc["time_idle"] + idle_t
     if cfg.track_histogram:
         acc["hist"] = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
     expire_time = busy_until + t_exp
-    tail_exp = alive & (expire_time <= hi) & (expire_time > cfg.skip_time)
+    tail_exp = alive & (expire_time <= hi) & (expire_time > params.skip_time)
     acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
         tail_exp, expire_time - creation, 0.0
     ).sum()
@@ -337,22 +425,48 @@ def _flush(cfg: SimulationConfig, state):
     return acc, t_prev
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
-def _simulate_batch(cfg: SimulationConfig, dts, warms, colds, init_pool=None):
-    """vmap over replicas of the arrival-driven scan. Inputs: f32[R, N]."""
+def _scan_one(cfg: StaticConfig, params: WorkloadParams, dt_row, warm_row, cold_row, pool0=None):
+    """One replica: scan over its arrival stream, then flush the tail."""
+    step = _make_scan_fn(cfg, params)
+    pool = _empty_pool(cfg) if pool0 is None else pool0
+    state0 = (*pool, jnp.zeros((), jnp.float64), _empty_acc(cfg))
+    state, _ = jax.lax.scan(
+        step, state0, (dt_row, warm_row, cold_row), unroll=cfg.scan_unroll
+    )
+    return _flush(cfg, params, state)
 
-    step = _make_scan_fn(cfg)
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _simulate_batch(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds, init_pool=None):
+    """vmap over replicas of the arrival-driven scan. Inputs: f32[R, N].
+
+    ``params`` leaves are scalars shared by every replica.
+    """
+    TRACE_COUNTS["simulate_batch"] += 1
 
     def one(dt_row, warm_row, cold_row):
-        pool = _empty_pool(cfg) if init_pool is None else init_pool
-        state0 = (*pool, jnp.zeros((), jnp.float64), _empty_acc(cfg))
-        state, _ = jax.lax.scan(
-            step, state0, (dt_row, warm_row, cold_row), unroll=cfg.scan_unroll
-        )
-        acc, t_last = _flush(cfg, state)
-        return acc, t_last
+        return _scan_one(cfg, params, dt_row, warm_row, cold_row, pool0=init_pool)
 
     return jax.vmap(one)(dts, warms, colds)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
+def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds):
+    """The single-compile what-if engine: one jitted, donated call.
+
+    ``params`` leaves and the sample arrays all carry a leading flattened
+    grid axis ``C = E·A·R`` (threshold × rate × replica); the per-replica
+    scan is vmapped over it, so an entire sweep is ONE device execution and
+    one trace regardless of grid size.  Sample buffers are donated — the
+    grid's [C, N] f32 draws are the dominant allocation and are dead after
+    the call.
+    """
+    TRACE_COUNTS["simulate_sweep"] += 1
+
+    def one(p, dt_row, warm_row, cold_row):
+        return _scan_one(cfg, p, dt_row, warm_row, cold_row)
+
+    return jax.vmap(one)(params, dts, warms, colds)
 
 
 class ServerlessSimulator:
@@ -407,7 +521,9 @@ class ServerlessSimulator:
         if samples is None:
             samples = self.draw_samples(key, replicas, steps)
         dts, warms, colds = samples
-        acc, t_last = _simulate_batch(cfg, dts, warms, colds)
+        acc, t_last = _simulate_batch(
+            cfg.static_config(), cfg.workload_params(), dts, warms, colds
+        )
         acc = jax.tree.map(np.asarray, acc)
         t_last = np.asarray(t_last)
         if (t_last < cfg.sim_time).any():

@@ -23,6 +23,8 @@ import numpy as np
 from repro.core.simulator import (
     SimulationConfig,
     SimulationSummary,
+    StaticConfig,
+    WorkloadParams,
     _empty_acc,
     _make_scan_fn,
     _flush,
@@ -73,17 +75,17 @@ class TemporalSummary:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _simulate_temporal(cfg: SimulationConfig, grid, pool0, dts, warms, colds):
-    base_step = _make_scan_fn(cfg)
+def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, dts, warms, colds):
+    base_step = _make_scan_fn(cfg, params)
 
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc, curves) = state
         dt, warm_s, cold_s = xs
         t = t_prev + dt.astype(jnp.float64)
         # Snapshot counts at grid points inside (t_prev, min(t, horizon)].
-        hi = jnp.minimum(t, cfg.sim_time)
+        hi = jnp.minimum(t, params.sim_time)
         in_win = (grid > t_prev) & (grid <= hi)  # [G]
-        expire = busy_until + cfg.expiration_threshold
+        expire = busy_until + params.expiration_threshold
         g = grid[:, None]  # [G, 1] vs slot arrays [M]
         live_g = alive[None, :] & (expire[None, :] > g)
         run_g = (live_g & (busy_until[None, :] > g)).sum(-1)
@@ -110,9 +112,9 @@ def _simulate_temporal(cfg: SimulationConfig, grid, pool0, dts, warms, colds):
         state, _ = jax.lax.scan(step, state0, (dt_row, warm_row, cold_row))
         (alive, creation, busy_until, t_prev, acc, curves) = state
         # Grid points after the last arrival.
-        expire = busy_until + cfg.expiration_threshold
+        expire = busy_until + params.expiration_threshold
         g = grid[:, None]
-        tail = (grid > t_prev) & (grid <= cfg.sim_time) & ~curves["seen"]
+        tail = (grid > t_prev) & (grid <= params.sim_time) & ~curves["seen"]
         live_g = alive[None, :] & (expire[None, :] > g)
         run_g = (live_g & (busy_until[None, :] > g)).sum(-1)
         idle_g = (live_g & (busy_until[None, :] <= g)).sum(-1)
@@ -122,7 +124,7 @@ def _simulate_temporal(cfg: SimulationConfig, grid, pool0, dts, warms, colds):
             no_idle=curves["no_idle"] | (tail & (idle_g == 0)),
             seen=curves["seen"] | tail,
         )
-        acc, t_last = _flush(cfg, (alive, creation, busy_until, t_prev, acc))
+        acc, t_last = _flush(cfg, params, (alive, creation, busy_until, t_prev, acc))
         return acc, t_last, curves
 
     return jax.vmap(one)(dts, warms, colds)
@@ -156,7 +158,9 @@ class ServerlessTemporalSimulator:
         colds = cfg.cold_service_process.sample(k3, (replicas, n))
         pool0 = _snapshots_to_pool(self.initial_instances, cfg.slots)
         grid_j = jnp.asarray(grid, dtype=jnp.float64)
-        acc, t_last, curves = _simulate_temporal(cfg, grid_j, pool0, dts, warms, colds)
+        acc, t_last, curves = _simulate_temporal(
+            cfg.static_config(), cfg.workload_params(), grid_j, pool0, dts, warms, colds
+        )
         acc = jax.tree.map(np.asarray, acc)
         curves = jax.tree.map(np.asarray, curves)
         steady = SimulationSummary(

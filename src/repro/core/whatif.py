@@ -2,21 +2,49 @@
 
 The provider-facing workflow: grid over (arrival rate × expiration
 threshold) → predicted QoS (cold-start probability) and cost terms for each
-cell, so the platform can pick a workload-aware operating point.  All cells
-share one jit-compiled simulator; cells are independent Monte-Carlo runs.
+cell, so the platform can pick a workload-aware operating point.
+
+Engine (DESIGN.md §4): workload parameters are *traced* run-time values, so
+the whole grid — every (threshold, rate) cell × every Monte-Carlo replica —
+is flattened onto one leading axis and executed as ONE jitted, donated call
+(``simulator._simulate_sweep``).  A 10×10 grid costs one XLA compile
+instead of one hundred and runs fully batched on the device.
+
+Backends:
+
+* ``"scan"`` (default) — the f64 ``lax.scan`` engine; exact sample-path
+  semantics (seed-exact vs ``core/pyref.py``), histograms and lifespans.
+* ``"pallas"`` — the VMEM-resident f32 block kernel
+  (``kernels/faas_event_step.faas_sweep_pallas``); the throughput path for
+  many-cell/many-replica sweeps on TPU.  Off-TPU it runs in interpret mode.
+* ``"ref"`` — the pure-jnp f32 mirror (``kernels/ref.faas_sweep_ref``);
+  bit-comparable to the Pallas kernel, the interpreter fallback.
+
+``sweep_legacy`` keeps the pre-batching per-cell loop as the benchmark
+baseline and as an oracle for the cell-by-cell equivalence tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import warnings
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import BillingModel, estimate_cost
-from repro.core.processes import ExpSimProcess
-from repro.core.simulator import ServerlessSimulator, SimulationConfig
+from repro.core.processes import ExpSimProcess, SimProcess
+from repro.core.simulator import (
+    ServerlessSimulator,
+    SimulationConfig,
+    SimulationSummary,
+    WorkloadParams,
+    _simulate_batch,
+    _simulate_sweep,
+)
 
 
 @dataclasses.dataclass
@@ -38,37 +66,64 @@ class WhatIfResult:
         return float(self.expiration_thresholds[np.argmax(ok)])
 
 
-def sweep(
-    base_config: SimulationConfig,
-    arrival_rates: Sequence[float],
-    expiration_thresholds: Sequence[float],
-    key,
-    replicas: int = 4,
-    billing: BillingModel = BillingModel(),
-) -> WhatIfResult:
-    a = np.asarray(list(arrival_rates), dtype=np.float64)
-    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
+def _rated(process: SimProcess, rate: float) -> SimProcess:
+    """Re-rate the base arrival process; fall back to exponential when the
+    family has no rate handle (the legacy behaviour)."""
+    try:
+        return process.with_rate(float(rate))
+    except NotImplementedError:
+        return ExpSimProcess(rate=float(rate))
+
+
+def _grid_cells(base_config, e, a):
+    for exp_t in e:
+        for rate in a:
+            yield dataclasses.replace(
+                base_config,
+                arrival_process=_rated(base_config.arrival_process, rate),
+                expiration_threshold=float(exp_t),
+            )
+
+
+def _uniform_steps(base_config, a, steps):
+    """One step budget covering the fastest arrival rate on the grid."""
+    if steps is not None:
+        return int(steps)
+    return max(
+        dataclasses.replace(
+            base_config, arrival_process=_rated(base_config.arrival_process, r)
+        ).steps_needed()
+        for r in a
+    )
+
+
+def _draw_grid_samples(base_config, e, a, key, replicas, steps):
+    """Per-cell draws, stacked to [E·A·R, N].
+
+    Key-splitting order matches ``sweep_legacy`` exactly, so with the same
+    ``key``/``steps`` the batched engine consumes the very same sample
+    arrays the per-cell loop would.
+    """
+    ds, ws, cs = [], [], []
+    for cfg in _grid_cells(base_config, e, a):
+        key, sub = jax.random.split(key)
+        d, w, c = ServerlessSimulator(cfg).draw_samples(sub, replicas, steps)
+        ds.append(d)
+        ws.append(w)
+        cs.append(c)
+    return jnp.concatenate(ds), jnp.concatenate(ws), jnp.concatenate(cs)
+
+
+def _grids_from_cell_summaries(summaries, e, a, billing):
     shape = (len(e), len(a))
     out = {
         k: np.zeros(shape)
-        for k in (
-            "cold",
-            "servers",
-            "running",
-            "wasted",
-            "dev_cost",
-            "prov_cost",
-        )
+        for k in ("cold", "servers", "running", "wasted", "dev_cost", "prov_cost")
     }
-    for i, exp_t in enumerate(e):
-        for j, rate in enumerate(a):
-            cfg = dataclasses.replace(
-                base_config,
-                arrival_process=ExpSimProcess(rate=float(rate)),
-                expiration_threshold=float(exp_t),
-            )
-            key, sub = jax.random.split(key)
-            summary = ServerlessSimulator(cfg).run(sub, replicas=replicas)
+    it = iter(summaries)
+    for i in range(len(e)):
+        for j in range(len(a)):
+            summary = next(it)
             cost = estimate_cost(summary, billing)
             out["cold"][i, j] = summary.cold_start_prob
             out["servers"][i, j] = summary.avg_server_count
@@ -76,6 +131,10 @@ def sweep(
             out["wasted"][i, j] = summary.avg_wasted_ratio
             out["dev_cost"][i, j] = cost.developer_total
             out["prov_cost"][i, j] = cost.provider_infra_cost
+    return out
+
+
+def _result(e, a, out):
     return WhatIfResult(
         arrival_rates=a,
         expiration_thresholds=e,
@@ -86,3 +145,241 @@ def sweep(
         developer_cost=out["dev_cost"],
         provider_cost=out["prov_cost"],
     )
+
+
+def _sweep_scan(base_config, e, a, key, replicas, billing, steps):
+    """The single-compile f64 path: one ``_simulate_sweep`` call."""
+    E, A = len(e), len(a)
+    n = _uniform_steps(base_config, a, steps)
+    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
+    params = WorkloadParams.of(
+        np.repeat(e, A * replicas),
+        np.full(E * A * replicas, base_config.sim_time),
+        np.full(E * A * replicas, base_config.skip_time),
+    )
+    with warnings.catch_warnings():
+        # buffer donation is a no-op on CPU; the warning is expected there
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        acc, t_last = _simulate_sweep(
+            base_config.static_config(), params, dts, warms, colds
+        )
+    acc = jax.tree.map(np.asarray, acc)
+    t_last = np.asarray(t_last)
+    if (t_last < base_config.sim_time).any():
+        raise RuntimeError(
+            "pre-drawn arrivals ended before sim_time "
+            f"(min final t {t_last.min():.1f} < {base_config.sim_time}); "
+            "pass a larger `steps`"
+        )
+    if acc["overflow"].sum() > 0:
+        raise RuntimeError(
+            "instance-pool overflow during sweep; raise SimulationConfig.slots"
+        )
+    cell = jax.tree.map(
+        lambda x: x.reshape((E * A, replicas) + x.shape[1:]), acc
+    )
+    measured = base_config.sim_time - base_config.skip_time
+    summaries = [
+        SimulationSummary(
+            n_cold=cell["n_cold"][c],
+            n_warm=cell["n_warm"][c],
+            n_reject=cell["n_reject"][c],
+            time_running=cell["time_running"][c],
+            time_idle=cell["time_idle"][c],
+            sum_cold_resp=cell["sum_cold_resp"][c],
+            sum_warm_resp=cell["sum_warm_resp"][c],
+            lifespan_sum=cell["lifespan_sum"][c],
+            lifespan_count=cell["lifespan_count"][c],
+            measured_time=measured,
+            histogram=cell["hist"][c] if base_config.track_histogram else None,
+            overflow=cell["overflow"][c],
+        )
+        for c in range(E * A)
+    ]
+    return _grids_from_cell_summaries(summaries, e, a, billing)
+
+
+_BLOCK_R = 8
+
+
+@functools.lru_cache(maxsize=1)
+def _ref_jit():
+    # kernels.ref pulls the model stack; import lazily so the default scan
+    # backend keeps core imports light.
+    from repro.kernels.ref import faas_sweep_ref
+
+    return jax.jit(
+        faas_sweep_ref, static_argnames=("t_end", "skip", "max_concurrency")
+    )
+
+
+def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend, block_k=512):
+    """The f32 block-kernel path (Pallas on TPU, jnp ref elsewhere)."""
+    # kernel imports stay local so the default scan backend keeps core
+    # imports light; NEG is the kernel's dead-slot sentinel
+    from repro.kernels.faas_event_step import NEG as _F32_NEG
+    from repro.kernels.faas_event_step import faas_sweep_pallas
+
+    if base_config.routing != "newest":
+        raise ValueError(
+            "block backends implement newest-idle routing only; use "
+            f"backend='scan' for routing={base_config.routing!r}"
+        )
+    E, A = len(e), len(a)
+    C = E * A * replicas
+    n = _uniform_steps(base_config, a, steps)
+    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
+    dts, warms, colds = (
+        jnp.asarray(dts, jnp.float32),
+        jnp.asarray(warms, jnp.float32),
+        jnp.asarray(colds, jnp.float32),
+    )
+    t_exp = jnp.asarray(np.repeat(e, A * replicas), jnp.float32)
+    # Coverage guard on the REAL draws (before any padding): every row's
+    # arrivals must reach the horizon, else the grid would be silently
+    # truncated.  f64 sum of the f32 gaps — the padded kernel clock cannot
+    # be used for this check.
+    covered = np.asarray(dts, np.float64).sum(axis=1)
+    if (covered < base_config.sim_time).any():
+        raise RuntimeError(
+            "pre-drawn arrivals ended before sim_time "
+            f"(min final t {covered.min():.1f} < {base_config.sim_time}); "
+            "pass a larger `steps`"
+        )
+    M = base_config.slots
+    alive0 = jnp.zeros((C, M), jnp.float32)
+    frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
+    t0 = jnp.zeros((C,), jnp.float32)
+    kw = dict(
+        t_end=float(base_config.sim_time),
+        skip=float(base_config.skip_time),
+        max_concurrency=base_config.max_concurrency,
+    )
+    if backend == "pallas":
+        # pad rows to the replica-block, arrivals to the chunk size
+        block_k = min(block_k, max(n, 1))
+        pad_c = (-C) % _BLOCK_R
+        pad_k = (-n) % block_k
+
+        def pad(x, col_fill):
+            # padded arrivals carry a 1e30 gap: the first one jumps the
+            # clock far past t_end, so they are inert (inactive, windows
+            # clipped at t_end) no matter where the real arrivals stopped;
+            # extra rows are copies of row 0, sliced off after the launch
+            if pad_k:
+                x = jnp.concatenate(
+                    [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+                )
+            if pad_c:
+                x = jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+                )
+            return x
+
+        dts_p = pad(dts, 1e30)
+        warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
+        t_exp_p = jnp.concatenate([t_exp, jnp.ones((pad_c,), jnp.float32)]) if pad_c else t_exp
+        state_pad = lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+        ) if pad_c else x
+        out = faas_sweep_pallas(
+            state_pad(alive0),
+            state_pad(frozen),
+            state_pad(frozen),
+            jnp.zeros((C + pad_c,), jnp.float32),
+            t_exp_p,
+            dts_p,
+            warms_p,
+            colds_p,
+            block_r=_BLOCK_R,
+            block_k=block_k,
+            interpret=jax.default_backend() != "tpu",
+            **kw,
+        )
+        alive_n, creation_n, busy_n, t_n, acc = (x[:C] for x in out)
+    else:
+        out = _ref_jit()(alive0, frozen, frozen, t0, t_exp, dts, warms, colds, **kw)
+        alive_n, creation_n, busy_n, t_n, acc = out
+
+    acc = np.asarray(acc, np.float64)
+    if acc[:, 7].sum() > 0:
+        raise RuntimeError(
+            "instance-pool overflow during sweep; raise SimulationConfig.slots"
+        )
+    measured = base_config.sim_time - base_config.skip_time
+    zeros = lambda: np.zeros((replicas,))
+    summaries = []
+    cell = acc.reshape(E * A, replicas, 8)
+    for c in range(E * A):
+        summaries.append(
+            SimulationSummary(
+                n_cold=cell[c, :, 0],
+                n_warm=cell[c, :, 1],
+                n_reject=cell[c, :, 2],
+                time_running=cell[c, :, 3],
+                time_idle=cell[c, :, 4],
+                sum_cold_resp=cell[c, :, 5],
+                sum_warm_resp=cell[c, :, 6],
+                lifespan_sum=zeros(),
+                lifespan_count=zeros(),
+                measured_time=measured,
+                overflow=cell[c, :, 7],
+            )
+        )
+    return _grids_from_cell_summaries(summaries, e, a, billing)
+
+
+def sweep(
+    base_config: SimulationConfig,
+    arrival_rates: Sequence[float],
+    expiration_thresholds: Sequence[float],
+    key,
+    replicas: int = 4,
+    billing: BillingModel = BillingModel(),
+    backend: str = "scan",
+    steps: int | None = None,
+) -> WhatIfResult:
+    """Batched what-if sweep: one compile, one device call for the grid."""
+    a = np.asarray(list(arrival_rates), dtype=np.float64)
+    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
+    if backend == "scan":
+        out = _sweep_scan(base_config, e, a, key, replicas, billing, steps)
+    elif backend in ("pallas", "ref"):
+        out = _sweep_block(base_config, e, a, key, replicas, billing, steps, backend)
+    else:
+        raise ValueError(f"unknown sweep backend {backend!r}")
+    return _result(e, a, out)
+
+
+def sweep_legacy(
+    base_config: SimulationConfig,
+    arrival_rates: Sequence[float],
+    expiration_thresholds: Sequence[float],
+    key,
+    replicas: int = 4,
+    billing: BillingModel = BillingModel(),
+    steps: int | None = None,
+    fresh_jit: bool = False,
+) -> WhatIfResult:
+    """Per-cell Python loop (the pre-batching engine).
+
+    ``fresh_jit=True`` clears the jit cache before every cell, reproducing
+    the original cost model where rate/threshold were compile-time static
+    and every grid cell paid a full XLA compile — the benchmark baseline.
+    With ``fresh_jit=False`` cells share one compiled executable but still
+    serialize host→device round-trips per cell.
+    """
+    a = np.asarray(list(arrival_rates), dtype=np.float64)
+    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
+    n = int(steps) if steps is not None else None  # None → per-cell auto-size
+    summaries = []
+    for cfg in _grid_cells(base_config, e, a):
+        key, sub = jax.random.split(key)
+        if fresh_jit:
+            _simulate_batch.clear_cache()
+        summaries.append(
+            ServerlessSimulator(cfg).run(sub, replicas=replicas, steps=n)
+        )
+    return _result(e, a, _grids_from_cell_summaries(summaries, e, a, billing))

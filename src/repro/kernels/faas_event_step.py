@@ -1,23 +1,33 @@
-"""Pallas TPU kernel for the SimFaaS hot loop: a block of arrivals applied
-to a block of Monte-Carlo replicas with the instance pool resident in VMEM.
+"""Pallas TPU kernel for the SimFaaS hot loop: blocks of arrivals applied
+to blocks of Monte-Carlo replicas with the instance pool resident in VMEM.
 
 This is the paper's event-processing loop adapted to the TPU memory
 hierarchy: instead of a per-event HBM round-trip of the pool state (the
 ``lax.scan`` formulation's behaviour on TPU), each kernel instance keeps its
-``[R_blk, M]`` pool slab in VMEM and sequentially applies ``K`` arrivals —
-HBM traffic collapses to (samples in + final state/accumulators out), i.e.
-``O(R·K)`` instead of ``O(R·K·M)``.
+``[R_blk, M]`` pool slab in VMEM and sequentially applies ``K_blk`` arrivals
+per grid step — HBM traffic collapses to (samples in + final state and
+accumulators out), i.e. ``O(R·K)`` instead of ``O(R·K·M)``.
+
+Grid layout (DESIGN.md §5): ``(R // block_r, K // block_k)`` with the
+arrival-chunk axis innermost.  The state/accumulator output blocks are
+indexed by the replica axis only, so they stay pinned in VMEM while the
+``k`` axis advances — the standard TPU revisited-output accumulation
+pattern — and are initialised from the input state at ``k == 0`` via
+``pl.when``.
 
 Precision domain: the kernel state is f32 (TPU has no f64 VPU), so it is
-the *throughput* engine for many-replica CI estimation over horizons where
-f32 clocks are exact enough (t ≤ ~1e5 s keeps µs-scale billing error).  The
-f64 ``lax.scan`` simulator in ``repro.core`` remains the exactness path;
-``ref.py`` mirrors this kernel in pure f32 jnp so the two are bit-comparable.
+the *throughput* engine for many-replica/many-cell what-if sweeps over
+horizons where f32 clocks are exact enough.  The f64 ``lax.scan`` simulator
+in ``repro.core`` remains the exactness path; ``kernels/ref.py`` mirrors
+this kernel in pure f32 jnp (same arithmetic order, same tie-breaks) so the
+two are bit-comparable and serve as the interpreter fallback off-TPU.
 
-Semantics per arrival (identical to ``core.simulator``): expire idle
-instances past the threshold → route to the newest idle instance (warm) →
-else create (cold) → else reject; exact closed-form integration of
-running/idle instance-time between arrivals.
+Semantics per arrival (identical to ``core.simulator`` including the
+measurement window): integrate running/idle instance-time over the window
+clipped to ``[skip, t_end]`` → expire idle instances past the (per-row)
+threshold → route to the newest idle instance (warm) → else create (cold)
+→ else reject; arrivals past ``t_end`` are inert and request counters only
+engage after ``skip`` (warm-up exclusion).
 """
 
 from __future__ import annotations
@@ -30,32 +40,46 @@ from jax.experimental import pallas as pl
 
 NEG = -1e30
 
+# acc columns: cold, warm, reject, t_run, t_idle, resp_cold, resp_warm, overflow
+ACC_COLS = 8
+
 
 def _faas_kernel(
     # inputs (VMEM blocks)
-    alive_ref,  # f32 [Rb, M]  (0/1)
-    creation_ref,  # f32 [Rb, M]
-    busy_ref,  # f32 [Rb, M]
+    alive_in,  # f32 [Rb, M]  (0/1)
+    creation_in,  # f32 [Rb, M]
+    busy_in,  # f32 [Rb, M]
     t0_ref,  # f32 [Rb, 1]
-    dt_ref,  # f32 [Rb, K]
-    warm_ref,  # f32 [Rb, K]
-    cold_ref,  # f32 [Rb, K]
-    # outputs
+    texp_ref,  # f32 [Rb, 1]  per-row expiration threshold
+    dt_ref,  # f32 [Rb, Kb]
+    warm_ref,  # f32 [Rb, Kb]
+    cold_ref,  # f32 [Rb, Kb]
+    # outputs (revisited across the k grid axis — live in VMEM)
     alive_out,
     creation_out,
     busy_out,
     t_out,  # f32 [Rb, 1]
-    acc_out,  # f32 [Rb, 8]: cold, warm, reject, t_run, t_idle, resp_c, resp_w, overflow
+    acc_out,  # f32 [Rb, ACC_COLS]
     *,
-    t_exp: float,
+    t_end: float,
+    skip: float,
     max_concurrency: int,
     n_steps: int,
 ):
-    alive = alive_ref[...]
-    creation = creation_ref[...]
-    busy = busy_ref[...]
-    t = t0_ref[...][:, 0]
-    m_slots = alive.shape[1]
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        alive_out[...] = alive_in[...]
+        creation_out[...] = creation_in[...]
+        busy_out[...] = busy_in[...]
+        t_out[...] = t0_ref[...]
+        acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
+
+    alive = alive_out[...]
+    creation = creation_out[...]
+    busy = busy_out[...]
+    t = t_out[...][:, 0]
+    acc0 = acc_out[...]
+    t_exp = texp_ref[...][:, 0]  # [Rb]
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
 
     def step(i, carry):
@@ -65,11 +89,13 @@ def _faas_kernel(
         cold_s = cold_ref[:, i]
         t_new = t + dt
 
-        # exact integrals over (t, t_new]
-        expire = busy + t_exp
-        run_t = jnp.clip(jnp.minimum(busy, t_new[:, None]) - t[:, None], 0.0, None)
+        # exact integrals over the measurement window (lo, hi]
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
         idle_t = jnp.clip(
-            jnp.minimum(expire, t_new[:, None]) - jnp.maximum(busy, t[:, None]),
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
             0.0,
             None,
         )
@@ -93,11 +119,13 @@ def _faas_kernel(
         first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
         n_alive = alive.sum(axis=1)
 
+        active = t_new <= t_end
+        counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
-        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free)
-        is_warm = any_idle
-        is_cold = can_cold
-        is_reject = (~any_idle) & (~can_cold)
+        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
+        is_warm = any_idle & active
+        is_cold = can_cold & active
+        is_reject = (~any_idle) & (~can_cold) & active
 
         chosen = jnp.where(is_warm, first_best, first_free)  # f32 slot id
         service = jnp.where(is_warm, warm_s, cold_s)
@@ -107,22 +135,22 @@ def _faas_kernel(
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
 
+        cc = counted
         acc = acc + jnp.stack(
             [
-                is_cold.astype(jnp.float32),
-                is_warm.astype(jnp.float32),
-                is_reject.astype(jnp.float32),
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
                 run_sum,
                 idle_sum,
-                jnp.where(is_cold, cold_s, 0.0),
-                jnp.where(is_warm, warm_s, 0.0),
+                jnp.where(is_cold & cc, cold_s, 0.0),
+                jnp.where(is_warm & cc, warm_s, 0.0),
                 overflow.astype(jnp.float32),
             ],
             axis=1,
         )
         return alive, creation, busy, t_new, acc
 
-    acc0 = jnp.zeros((alive.shape[0], 8), jnp.float32)
     alive, creation, busy, t, acc = jax.lax.fori_loop(
         0, n_steps, step, (alive, creation, busy, t, acc0)
     )
@@ -134,48 +162,120 @@ def _faas_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("t_exp", "max_concurrency", "block_r", "interpret")
+    jax.jit,
+    static_argnames=(
+        "t_end",
+        "skip",
+        "max_concurrency",
+        "block_r",
+        "block_k",
+        "interpret",
+    ),
 )
-def faas_block_step_pallas(
+def faas_sweep_pallas(
     alive,  # f32 [R, M] 0/1
     creation,  # f32 [R, M]
     busy,  # f32 [R, M]
     t0,  # f32 [R]
+    t_exp,  # f32 [R]  per-row expiration threshold (sweep axis)
     dts,  # f32 [R, K]
     warms,  # f32 [R, K]
     colds,  # f32 [R, K]
     *,
-    t_exp: float,
+    t_end: float,
+    skip: float,
     max_concurrency: int,
     block_r: int = 8,
+    block_k: int = 512,
     interpret: bool = False,
 ):
+    """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
+
+    Returns ``(alive, creation, busy, t, acc[R, ACC_COLS])``.  Rows are
+    independent (replica × grid-cell); ``t_exp`` varies per row so an entire
+    (rate × threshold) sweep is one kernel launch.
+    """
     R, M = alive.shape
     K = dts.shape[1]
     assert R % block_r == 0, (R, block_r)
-    grid = (R // block_r,)
+    assert K % block_k == 0, (K, block_k)
+    grid = (R // block_r, K // block_k)
 
-    state_spec = pl.BlockSpec((block_r, M), lambda r: (r, 0))
-    samp_spec = pl.BlockSpec((block_r, K), lambda r: (r, 0))
-    t_spec = pl.BlockSpec((block_r, 1), lambda r: (r, 0))
-    acc_spec = pl.BlockSpec((block_r, 8), lambda r: (r, 0))
+    state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
+    samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
+    t_spec = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, ACC_COLS), lambda r, k: (r, 0))
 
     kernel = functools.partial(
-        _faas_kernel, t_exp=t_exp, max_concurrency=max_concurrency, n_steps=K
+        _faas_kernel,
+        t_end=t_end,
+        skip=skip,
+        max_concurrency=max_concurrency,
+        n_steps=block_k,
     )
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[state_spec, state_spec, state_spec, t_spec, samp_spec, samp_spec, samp_spec],
+        in_specs=[
+            state_spec,
+            state_spec,
+            state_spec,
+            t_spec,
+            t_spec,
+            samp_spec,
+            samp_spec,
+            samp_spec,
+        ],
         out_specs=[state_spec, state_spec, state_spec, t_spec, acc_spec],
         out_shape=[
             jax.ShapeDtypeStruct((R, M), jnp.float32),
             jax.ShapeDtypeStruct((R, M), jnp.float32),
             jax.ShapeDtypeStruct((R, M), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, 8), jnp.float32),
+            jax.ShapeDtypeStruct((R, ACC_COLS), jnp.float32),
         ],
         interpret=interpret,
-    )(alive, creation, busy, t0[:, None], dts, warms, colds)
+    )(alive, creation, busy, t0[:, None], t_exp[:, None], dts, warms, colds)
     alive_n, creation_n, busy_n, t_n, acc = out
     return alive_n, creation_n, busy_n, t_n[:, 0], acc
+
+
+def faas_block_step_pallas(
+    alive,
+    creation,
+    busy,
+    t0,
+    dts,
+    warms,
+    colds,
+    *,
+    t_exp: float,
+    max_concurrency: int,
+    block_r: int = 8,
+    interpret: bool = False,
+):
+    """Legacy single-chunk entry point (scalar threshold, no window masking).
+
+    Kept for the kernel test-suite and micro-benchmarks; the sweep engine
+    uses :func:`faas_sweep_pallas`.  ``t_end=+inf`` / ``skip=0`` reduce the
+    windowed kernel to the original unmasked arithmetic.
+    """
+    R = alive.shape[0]
+    K = dts.shape[1]
+    t_exp_rows = jnp.full((R,), t_exp, dtype=jnp.float32)
+    return faas_sweep_pallas(
+        alive,
+        creation,
+        busy,
+        t0,
+        t_exp_rows,
+        dts,
+        warms,
+        colds,
+        t_end=float("inf"),
+        skip=0.0,
+        max_concurrency=max_concurrency,
+        block_r=block_r,
+        block_k=K,
+        interpret=interpret,
+    )

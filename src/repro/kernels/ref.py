@@ -40,13 +40,26 @@ def ssd_scan_ref(xd, dA, Bh, Ch, chunk: int = 128):
     return jnp.stack(ys, axis=1), state
 
 
-def faas_block_step_ref(
-    alive, creation, busy, t0, dts, warms, colds, *, t_exp, max_concurrency
+def faas_sweep_ref(
+    alive,
+    creation,
+    busy,
+    t0,
+    t_exp,  # f32 [R] per-row expiration threshold
+    dts,
+    warms,
+    colds,
+    *,
+    t_end=float("inf"),
+    skip=0.0,
+    max_concurrency,
 ):
-    """f32 jnp mirror of the Pallas FaaS event-step kernel (same arithmetic
-    order, same tie-breaks) — bit-comparable on CPU."""
+    """f32 jnp mirror of ``faas_sweep_pallas`` (same arithmetic order, same
+    tie-breaks) — bit-comparable on CPU, and the interpreter fallback for
+    the what-if sweep's throughput backend off-TPU."""
     R, M = alive.shape
     K = dts.shape[1]
+    t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
     slot_iota = jnp.broadcast_to(
         jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
     )
@@ -54,10 +67,12 @@ def faas_block_step_ref(
     def step(i, carry):
         alive, creation, busy, t, acc = carry
         t_new = t + dts[:, i]
-        expire = busy + t_exp
-        run_t = jnp.clip(jnp.minimum(busy, t_new[:, None]) - t[:, None], 0.0, None)
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
         idle_t = jnp.clip(
-            jnp.minimum(expire, t_new[:, None]) - jnp.maximum(busy, t[:, None]),
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
             0.0,
             None,
         )
@@ -74,11 +89,13 @@ def faas_block_step_ref(
         any_free = free.any(axis=1)
         first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
         n_alive = alive.sum(axis=1)
+        active = t_new <= t_end
+        counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
-        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free)
-        is_warm = any_idle
-        is_cold = can_cold
-        is_reject = (~any_idle) & (~can_cold)
+        overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
+        is_warm = any_idle & active
+        is_cold = can_cold & active
+        is_reject = (~any_idle) & (~can_cold) & active
         chosen = jnp.where(is_warm, first_best, first_free)
         service = jnp.where(is_warm, warms[:, i], colds[:, i])
         assign = is_warm | is_cold
@@ -86,15 +103,16 @@ def faas_block_step_ref(
         busy = jnp.where(sel, (t_new + service)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        cc = counted
         acc = acc + jnp.stack(
             [
-                is_cold.astype(jnp.float32),
-                is_warm.astype(jnp.float32),
-                is_reject.astype(jnp.float32),
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
                 run_sum,
                 idle_sum,
-                jnp.where(is_cold, colds[:, i], 0.0),
-                jnp.where(is_warm, warms[:, i], 0.0),
+                jnp.where(is_cold & cc, colds[:, i], 0.0),
+                jnp.where(is_warm & cc, warms[:, i], 0.0),
                 overflow.astype(jnp.float32),
             ],
             axis=1,
@@ -103,3 +121,24 @@ def faas_block_step_ref(
 
     acc0 = jnp.zeros((R, 8), jnp.float32)
     return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
+
+
+def faas_block_step_ref(
+    alive, creation, busy, t0, dts, warms, colds, *, t_exp, max_concurrency
+):
+    """Legacy scalar-threshold entry point (no window masking) — mirrors
+    ``faas_block_step_pallas``."""
+    R = alive.shape[0]
+    return faas_sweep_ref(
+        alive,
+        creation,
+        busy,
+        t0,
+        jnp.full((R,), t_exp, jnp.float32),
+        dts,
+        warms,
+        colds,
+        t_end=float("inf"),
+        skip=0.0,
+        max_concurrency=max_concurrency,
+    )

@@ -5,7 +5,7 @@ import dataclasses
 
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st  # optional-dep shim
 
 from repro.core import (
     DeterministicSimProcess,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st  # optional-dep shim
 
 from repro.kernels import ref as kref
 from repro.kernels.decode_attention import decode_attention_pallas

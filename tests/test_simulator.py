@@ -5,7 +5,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, strategies as st  # optional-dep shim
 
 from repro.core import (
     DeterministicSimProcess,
@@ -170,6 +170,65 @@ class TestPaperTable1:
         sim = ServerlessSimulator(cfg)
         with pytest.raises(RuntimeError, match="before sim_time"):
             sim.run(jax.random.key(0), replicas=1, steps=10)
+
+
+class TestHistogramUpdate:
+    """Regression: zero-length padded-``hi`` tail segments (counts < 0)
+    must be masked, never clipped into bin 0."""
+
+    def _update(self, alive, busy, t_exp, lo, hi, bins=8):
+        import jax.numpy as jnp
+
+        from repro.core.simulator import histogram_update
+
+        hist = jnp.zeros((bins,), dtype=jnp.float64)
+        return np.asarray(
+            histogram_update(
+                hist,
+                jnp.asarray(alive),
+                jnp.asarray(busy, jnp.float64),
+                t_exp,
+                lo,
+                hi,
+            )
+        )
+
+    def test_mass_conserved_and_bins_exact(self):
+        # 3 live slots expiring at 3, 5 (and one past the window), 5 dead pads
+        alive = np.array([True, True, True] + [False] * 5)
+        busy = np.array([1.0, 2.0, 9.0] + [0.0] * 5)
+        h = self._update(alive, busy, 3.0, 0.0, 10.0)
+        # counts: 3 on (0,4], 2 on (4,5], 1 on (5,10]  (expiries at 4, 5, 12)
+        np.testing.assert_allclose(h[3], 4.0)
+        np.testing.assert_allclose(h[2], 1.0)
+        np.testing.assert_allclose(h[1], 5.0)
+        np.testing.assert_allclose(h[0], 0.0)  # never zero instances here
+        np.testing.assert_allclose(h.sum(), 10.0)  # mass == window length
+
+    def test_stale_alive_slot_does_not_inflate_bin0(self):
+        """A slot whose expiry already passed before the window (stale
+        ``alive`` flag, e.g. the padded tail of a sweep row) contributes
+        nothing — in particular no phantom time-at-count-0."""
+        alive = np.array([True, True] + [False] * 6)
+        busy = np.array([-50.0, 1.0] + [0.0] * 6)  # slot 0 expired long ago
+        h = self._update(alive, busy, 2.0, 0.0, 6.0)
+        # only slot 1 is live: count 1 on (0,3], count 0 on (3,6]
+        np.testing.assert_allclose(h[1], 3.0)
+        np.testing.assert_allclose(h[0], 3.0)
+        np.testing.assert_allclose(h.sum(), 6.0)
+
+    def test_empty_window_adds_nothing(self):
+        alive = np.array([True] * 4)
+        busy = np.array([1.0, 2.0, 3.0, 4.0])
+        h = self._update(alive, busy, 5.0, 7.0, 7.0)
+        np.testing.assert_allclose(h, 0.0)
+
+    def test_all_dead_pool_counts_zero_bin(self):
+        alive = np.zeros(4, dtype=bool)
+        busy = np.zeros(4)
+        h = self._update(alive, busy, 5.0, 2.0, 9.0)
+        np.testing.assert_allclose(h[0], 7.0)
+        np.testing.assert_allclose(h.sum(), 7.0)
 
 
 class TestRoutingPolicy:

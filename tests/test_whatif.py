@@ -1,0 +1,234 @@
+"""What-if sweep engine: batched single-compile grid vs the legacy
+per-cell loop (cell-by-cell equivalence), trace counting, and the f32
+block-kernel backends (Pallas + jnp ref) vs the f64 scan path."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ExpSimProcess, SimulationConfig
+from repro.core import simulator as sim_mod
+from repro.core.whatif import sweep, sweep_legacy
+
+
+def base_cfg(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0,
+        sim_time=500.0,
+        skip_time=10.0,
+        slots=32,
+    )
+    d.update(kw)
+    return SimulationConfig(**d)
+
+
+RATES = [0.5, 1.0]
+THRESHOLDS = [10.0, 30.0, 60.0]
+STEPS = 900  # covers the fastest rate on the 500 s horizon
+
+
+class TestBatchedEquivalence:
+    def test_matches_legacy_cell_by_cell(self):
+        """Same key + same step budget → the batched engine consumes the
+        exact sample arrays the per-cell loop draws, so every grid cell
+        must agree metric-for-metric."""
+        cfg = base_cfg()
+        key = jax.random.key(11)
+        batched = sweep(cfg, RATES, THRESHOLDS, key, replicas=2, steps=STEPS)
+        legacy = sweep_legacy(cfg, RATES, THRESHOLDS, key, replicas=2, steps=STEPS)
+        np.testing.assert_allclose(
+            batched.cold_start_prob, legacy.cold_start_prob, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            batched.avg_server_count, legacy.avg_server_count, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            batched.avg_running_count, legacy.avg_running_count, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            batched.wasted_ratio, legacy.wasted_ratio, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            batched.provider_cost, legacy.provider_cost, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            batched.developer_cost, legacy.developer_cost, rtol=1e-9
+        )
+
+    def test_sweep_is_monotone(self):
+        cfg = base_cfg(sim_time=2000.0)
+        res = sweep(cfg, RATES, THRESHOLDS, jax.random.key(0), replicas=4)
+        # larger threshold / rate → fewer cold starts (up to MC noise)
+        assert (np.diff(res.cold_start_prob, axis=0) <= 0.03).all()
+        assert (np.diff(res.cold_start_prob, axis=1) <= 0.03).all()
+        # provider cost grows with the threshold
+        assert (np.diff(res.provider_cost, axis=0) >= -1e-9).all()
+
+
+class TestSingleCompile:
+    def test_10x10_grid_traces_once(self):
+        """The acceptance bar: a 10×10 sweep triggers exactly ONE trace of
+        the sweep engine — workload parameters are runtime values, not
+        compile-time constants."""
+        # distinctive static config → guaranteed-cold jit cache entry
+        cfg = base_cfg(sim_time=120.0, skip_time=5.0, slots=17, max_concurrency=17)
+        rates = list(np.linspace(0.3, 2.0, 10))
+        thresholds = list(np.linspace(5.0, 80.0, 10))
+        before = sim_mod.TRACE_COUNTS["simulate_sweep"]
+        res = sweep(cfg, rates, thresholds, jax.random.key(3), replicas=1, steps=300)
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+        assert res.cold_start_prob.shape == (10, 10)
+        # a second sweep over DIFFERENT rates/thresholds, same structure:
+        # pure cache hit, still zero new traces
+        sweep(
+            cfg,
+            [r * 0.9 for r in rates],
+            [t * 1.1 for t in thresholds],
+            jax.random.key(4),
+            replicas=1,
+            steps=300,
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+
+    def test_run_does_not_retrace_on_workload_change(self):
+        """Threshold/horizon changes reuse the compiled single-run engine."""
+        from repro.core import ServerlessSimulator
+
+        cfg = base_cfg(slots=19)  # distinctive static shape
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(0), 2)
+        sim.run(jax.random.key(0), samples=samples)
+        before = sim_mod.TRACE_COUNTS["simulate_batch"]
+        for t_exp in (5.0, 15.0, 33.0):
+            cfg2 = dataclasses.replace(cfg, expiration_threshold=t_exp)
+            ServerlessSimulator(cfg2).run(jax.random.key(0), samples=samples)
+        assert sim_mod.TRACE_COUNTS["simulate_batch"] == before
+
+
+class TestBlockBackends:
+    def _grids(self, backend, key=7):
+        cfg = base_cfg(sim_time=1500.0, skip_time=20.0)
+        return sweep(
+            cfg,
+            RATES,
+            [10.0, 60.0],
+            jax.random.key(key),
+            replicas=2,
+            steps=2600,
+            backend=backend,
+        )
+
+    def test_ref_matches_scan(self):
+        """f32 block kernel vs f64 scan: identical decisions on this
+        workload → exact count metrics, integrals within f32 tolerance."""
+        scan = self._grids("scan")
+        ref = self._grids("ref")
+        np.testing.assert_allclose(ref.cold_start_prob, scan.cold_start_prob, rtol=1e-3)
+        np.testing.assert_allclose(
+            ref.avg_server_count, scan.avg_server_count, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            ref.avg_running_count, scan.avg_running_count, rtol=1e-3
+        )
+        np.testing.assert_allclose(ref.wasted_ratio, scan.wasted_ratio, rtol=1e-3)
+
+    def test_pallas_interpret_bitwise_matches_ref(self):
+        """The Pallas kernel and its jnp mirror share arithmetic order and
+        tie-breaks — interpret mode must agree bit-for-bit."""
+        ref = self._grids("ref")
+        pal = self._grids("pallas")
+        np.testing.assert_array_equal(pal.cold_start_prob, ref.cold_start_prob)
+        np.testing.assert_array_equal(pal.avg_server_count, ref.avg_server_count)
+
+    def test_table1_workload_agreement(self):
+        """Acceptance: the block backend stays within 1e-3 relative of the
+        f64 scan on the paper's Table 1 rates (shortened horizon)."""
+        cfg = SimulationConfig(
+            arrival_process=ExpSimProcess(rate=0.9),
+            warm_service_process=ExpSimProcess(rate=1 / 1.991),
+            cold_service_process=ExpSimProcess(rate=1 / 2.244),
+            expiration_threshold=600.0,
+            sim_time=4000.0,
+            skip_time=100.0,
+            slots=64,
+        )
+        key = jax.random.key(42)
+        scan = sweep(cfg, [0.9], [600.0], key, replicas=2, steps=4400)
+        ref = sweep(cfg, [0.9], [600.0], key, replicas=2, steps=4400, backend="ref")
+        np.testing.assert_allclose(
+            ref.avg_server_count, scan.avg_server_count, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            ref.avg_running_count, scan.avg_running_count, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            ref.cold_start_prob, scan.cold_start_prob, rtol=1e-3, atol=1e-6
+        )
+
+    def test_pallas_padding_rows_and_chunks(self):
+        """Grid rows not divisible by the replica block and step counts not
+        divisible by the arrival chunk are padded; results must still be
+        bit-identical to the unpadded ref mirror."""
+        cfg = base_cfg(sim_time=600.0)
+        key = jax.random.key(5)
+        kw = dict(replicas=1, steps=1100)  # C=3 rows, K%512 != 0
+        ref = sweep(cfg, [1.0], THRESHOLDS, key, backend="ref", **kw)
+        pal = sweep(cfg, [1.0], THRESHOLDS, key, backend="pallas", **kw)
+        np.testing.assert_array_equal(pal.cold_start_prob, ref.cold_start_prob)
+        np.testing.assert_array_equal(pal.avg_server_count, ref.avg_server_count)
+
+    def test_block_backends_raise_on_short_steps(self):
+        """Regression: with insufficient pre-drawn arrivals the padded
+        Pallas path must raise like ref/scan, not silently return a grid
+        truncated at the last real arrival (padding is inert, the coverage
+        guard runs on the real draws)."""
+        cfg = base_cfg(sim_time=1000.0)
+        for backend in ("ref", "pallas"):
+            with pytest.raises(RuntimeError, match="before sim_time"):
+                sweep(
+                    cfg,
+                    [1.0],
+                    [20.0],
+                    jax.random.key(0),
+                    replicas=1,
+                    steps=900,  # mean coverage 900 s < 1000 s horizon
+                    backend=backend,
+                )
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(ValueError, match="backend"):
+            self._grids("nope")
+
+    def test_block_backends_reject_oldest_routing(self):
+        """The block kernel hard-codes newest-idle routing; other policies
+        must be refused loudly, not silently simulated wrong."""
+        cfg = base_cfg(routing="oldest")
+        with pytest.raises(ValueError, match="newest"):
+            sweep(cfg, [1.0], [20.0], jax.random.key(0), replicas=1,
+                  steps=900, backend="ref")
+
+
+class TestRateRescaling:
+    def test_non_exponential_arrival_family_preserved(self):
+        """Sweeping rates keeps the base config's arrival family (gamma
+        stays gamma) instead of silently substituting an exponential."""
+        from repro.core import GammaSimProcess
+        from repro.core.whatif import _rated
+
+        g = GammaSimProcess(shape_k=2.0, scale=1.0)
+        g2 = _rated(g, 4.0)
+        assert isinstance(g2, GammaSimProcess)
+        np.testing.assert_allclose(g2.mean(), 0.25)
+
+    def test_unscalable_family_falls_back_to_exponential(self):
+        from repro.core import GaussianSimProcess
+        from repro.core.whatif import _rated
+
+        p = _rated(GaussianSimProcess(mu=2.0, sigma=0.1), 2.0)
+        assert isinstance(p, ExpSimProcess)
+        assert p.rate == 2.0
