@@ -1,8 +1,9 @@
 """Quickstart: reproduce the paper's Table 1 workload and predict QoS/cost.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--replicas N] [--sim-time T]
 """
 
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -13,7 +14,12 @@ from repro.core import ServerlessSimulator
 from repro.core.cost import estimate_cost
 
 
-def main():
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--replicas", type=int, default=4)
+    p.add_argument("--sim-time", type=float, default=1e5)
+    args = p.parse_args(argv)
+
     # The paper's reference workload: Poisson arrivals at 0.9 req/s, warm
     # service 1.991 s, cold service 2.244 s, AWS-style 10-min expiration.
     sim = ServerlessSimulator.from_rates(
@@ -21,11 +27,11 @@ def main():
         warm_service_time=1.991,
         cold_service_time=2.244,
         expiration_threshold=600.0,
-        sim_time=1e5,
+        sim_time=args.sim_time,
         skip_time=100.0,
         slots=64,
     )
-    summary = sim.run(jax.random.key(0), replicas=4)
+    summary = sim.run(jax.random.key(0), replicas=args.replicas)
 
     print("== steady-state prediction (paper Table 1) ==")
     for k, v in summary.to_dict().items():

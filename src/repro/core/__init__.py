@@ -18,21 +18,28 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 from repro.core.processes import (  # noqa: E402
+    ArrivalTimeProcess,
     ExpSimProcess,
     GaussianSimProcess,
     DeterministicSimProcess,
     WeibullSimProcess,
     GammaSimProcess,
     LogNormalSimProcess,
+    NHPPArrivalProcess,
     ParetoSimProcess,
+    PiecewiseConstantRate,
+    RateProfile,
+    SinusoidalRate,
     BatchArrivalProcess,
     SimProcess,
+    TraceArrivalProcess,
 )
 from repro.core.simulator import (  # noqa: E402
     ServerlessSimulator,
     SimulationConfig,
     SimulationSummary,
     StaticConfig,
+    WindowedMetrics,
     WorkloadParams,
 )
 from repro.core.temporal import (  # noqa: E402
@@ -43,18 +50,25 @@ from repro.core.par_simulator import ParServerlessSimulator  # noqa: E402
 
 __all__ = [
     "SimProcess",
+    "ArrivalTimeProcess",
     "ExpSimProcess",
     "GaussianSimProcess",
     "DeterministicSimProcess",
     "WeibullSimProcess",
     "GammaSimProcess",
     "LogNormalSimProcess",
+    "NHPPArrivalProcess",
     "ParetoSimProcess",
+    "PiecewiseConstantRate",
+    "RateProfile",
+    "SinusoidalRate",
+    "TraceArrivalProcess",
     "BatchArrivalProcess",
     "ServerlessSimulator",
     "SimulationConfig",
     "SimulationSummary",
     "StaticConfig",
+    "WindowedMetrics",
     "WorkloadParams",
     "ServerlessTemporalSimulator",
     "InstanceSnapshot",

@@ -40,6 +40,7 @@ from repro.core.simulator import (
     interval_integrals,
     histogram_update,
     _NEG_INF,
+    draw_workload_samples,
 )
 
 Array = jax.Array
@@ -72,7 +73,10 @@ def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
     def step(state, xs):
         (alive, creation, finish, t_prev, acc) = state
         dt, warm_s, cold_s = xs
-        t = t_prev + dt.astype(jnp.float64)
+        if cfg.prestamped:
+            t = dt.astype(jnp.float64)  # absolute-timestamp stream
+        else:
+            t = t_prev + dt.astype(jnp.float64)
         busy_until = finish.max(axis=1)
 
         lo = jnp.clip(t_prev, skip, t_end)
@@ -229,12 +233,7 @@ class ParServerlessSimulator:
         cfg = self.config
         if samples is None:
             n = steps or cfg.steps_needed()
-            k1, k2, k3 = jax.random.split(key, 3)
-            samples = (
-                cfg.arrival_process.sample(k1, (replicas, n)),
-                cfg.warm_service_process.sample(k2, (replicas, n)),
-                cfg.cold_service_process.sample(k3, (replicas, n)),
-            )
+            samples = draw_workload_samples(cfg, key, replicas, n)
         dts, warms, colds = samples
         acc, t_last = _simulate_par_batch(
             cfg.static_config(),

@@ -117,6 +117,12 @@ class GaussianSimProcess(SimProcess):
         # report the nominal mean as the paper's Gaussian example does.
         return self.mu
 
+    def with_rate(self, rate):
+        # Mean-preserving rescale: shift the mean to 1/rate and scale sigma
+        # by the same factor, keeping the coefficient of variation.
+        f = (1.0 / float(rate)) / self.mu
+        return dataclasses.replace(self, mu=self.mu * f, sigma=self.sigma * f)
+
 
 @dataclasses.dataclass(frozen=True)
 class WeibullSimProcess(SimProcess):
@@ -168,6 +174,12 @@ class LogNormalSimProcess(SimProcess):
     def mean(self):
         return float(np.exp(self.mu + 0.5 * self.sigma**2))
 
+    def with_rate(self, rate):
+        # exp(mu + sigma^2/2) = 1/rate, keeping sigma (shape) fixed.
+        return dataclasses.replace(
+            self, mu=float(-np.log(rate) - 0.5 * self.sigma**2)
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class ParetoSimProcess(SimProcess):
@@ -184,6 +196,17 @@ class ParetoSimProcess(SimProcess):
         if self.alpha <= 1.0:
             return float("inf")
         return self.alpha * self.x_m / (self.alpha - 1.0)
+
+    def with_rate(self, rate):
+        # alpha (tail index) is the shape; move the scale x_m so the mean
+        # alpha*x_m/(alpha-1) equals 1/rate.  Undefined for alpha <= 1.
+        if self.alpha <= 1.0:
+            raise ValueError(
+                "Pareto with alpha <= 1 has infinite mean; cannot re-rate"
+            )
+        return dataclasses.replace(
+            self, x_m=(self.alpha - 1.0) / (self.alpha * float(rate))
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,14 +278,174 @@ class CustomSimProcess(SimProcess):
         return self.cdf_fn(x)
 
 
+# ---------------------------------------------------------------------------
+# Non-stationary arrivals: rate profiles, NHPP thinning, timestamp streams
+# ---------------------------------------------------------------------------
+
+# Inert-arrival sentinel for absolute-timestamp streams: any timestamp past
+# the horizon is ignored by the engines (``t > t_end`` arrivals are inert),
+# so thinning rejections and padding map here.  Finite so f32 backends can
+# carry it without producing inf/nan arithmetic.
+PAD_TIME = 1e30
+
+
+class ArrivalTimeProcess:
+    """Mixin for arrival processes that generate *absolute timestamps*.
+
+    The engines detect this interface and switch the scan to the prestamped
+    path: the step consumes the arrival clock directly instead of
+    accumulating inter-arrival gaps.  This is what makes exact trace replay
+    and non-stationary (NHPP) arrivals expressible — neither has i.i.d.
+    gaps.
+
+    ``arrival_times(key, shape) -> (times, coverage)``:
+
+    * ``times``  — f64 ``shape`` array, non-decreasing along the last axis;
+      entries that carry no arrival are ``PAD_TIME`` (inert past-horizon).
+    * ``coverage`` — f64 ``shape[:-1]`` array: the time up to which the
+      stream is exact.  The sampling layer raises if any row's coverage is
+      below ``sim_time`` (the prestamped analogue of the "arrivals ended
+      before sim_time" guard — with padded streams the last timestamp is
+      ``PAD_TIME`` and cannot be used for the check).
+    """
+
+    def arrival_times(self, key: Array, shape: tuple[int, ...]):
+        raise NotImplementedError
+
+
 @dataclasses.dataclass(frozen=True)
-class TraceArrivalProcess(SimProcess):
+class RateProfile:
+    """Time-varying arrival-rate profile r(t) for non-stationary workloads.
+
+    Subclasses implement vectorised ``rate(t)`` plus a constant upper bound
+    ``max_rate()`` (the thinning envelope lambda_max).
+    """
+
+    def rate(self, t: Array) -> Array:
+        raise NotImplementedError
+
+    def max_rate(self) -> float:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PiecewiseConstantRate(RateProfile):
+    """r(t) = rates[k] on [edges[k-1], edges[k]) with edges[-1] = +inf.
+
+    ``edges`` are the K interior boundaries (ascending, > 0); ``rates`` has
+    K+1 entries, the first applying from t=0.  This is the shape of
+    real-trace rate fits (e.g. hourly Lambda invocation counts).
+    """
+
+    edges: tuple
+    rates: tuple
+
+    def __post_init__(self):
+        e = np.asarray(self.edges, dtype=np.float64)
+        r = np.asarray(self.rates, dtype=np.float64)
+        if len(r) != len(e) + 1:
+            raise ValueError("need len(rates) == len(edges) + 1")
+        if len(e) and ((np.diff(e) <= 0).any() or e[0] <= 0):
+            raise ValueError("edges must be positive and strictly increasing")
+        if (r <= 0).any():
+            raise ValueError("rates must be positive")
+
+    def rate(self, t):
+        edges = jnp.asarray(self.edges, dtype=jnp.float64)
+        rates = jnp.asarray(self.rates, dtype=jnp.float64)
+        idx = jnp.searchsorted(edges, jnp.asarray(t, jnp.float64), side="right")
+        return rates[idx]
+
+    def max_rate(self):
+        return float(max(self.rates))
+
+
+@dataclasses.dataclass(frozen=True)
+class SinusoidalRate(RateProfile):
+    """Diurnal profile r(t) = base * (1 + amplitude * sin(2*pi*t/period + phase)).
+
+    ``amplitude`` in [0, 1) keeps the rate strictly positive.
+    """
+
+    base: float
+    amplitude: float
+    period: float
+    phase: float = 0.0
+
+    def __post_init__(self):
+        if not (0.0 <= self.amplitude < 1.0):
+            raise ValueError("amplitude must be in [0, 1)")
+        if self.base <= 0 or self.period <= 0:
+            raise ValueError("base rate and period must be positive")
+
+    def rate(self, t):
+        t = jnp.asarray(t, jnp.float64)
+        return self.base * (
+            1.0
+            + self.amplitude * jnp.sin(2.0 * np.pi * t / self.period + self.phase)
+        )
+
+    def max_rate(self):
+        return self.base * (1.0 + self.amplitude)
+
+
+@dataclasses.dataclass(frozen=True)
+class NHPPArrivalProcess(SimProcess, ArrivalTimeProcess):
+    """Non-homogeneous Poisson arrivals with intensity ``profile.rate(t)``.
+
+    Sampled by **vectorised thinning** (Lewis & Shedler): draw the whole
+    candidate stream from a homogeneous Poisson at the envelope rate
+    lambda_max = ``profile.max_rate()``, accept each candidate at time t
+    with probability r(t)/lambda_max, then compact accepted times to the
+    front with an ascending sort (rejected candidates map to ``PAD_TIME``
+    and are inert).  One ``sort`` replaces the sequential accept/reject
+    loop, so a whole [replicas, N] stream is a single fused device program.
+
+    ``mean()`` reports the *candidate* mean gap 1/lambda_max so the
+    engines' step-budget heuristic (``steps_needed``) sizes the candidate
+    buffer, which is what coverage of the horizon requires.
+    """
+
+    profile: RateProfile
+
+    def mean(self):
+        return 1.0 / self.profile.max_rate()
+
+    def _raw_sample(self, key, shape):
+        raise NotImplementedError(
+            "NHPP arrivals have no stationary gap distribution; engines "
+            "consume them through arrival_times() (prestamped path)"
+        )
+
+    def arrival_times(self, key, shape):
+        lam = self.profile.max_rate()
+        k_gap, k_acc = jax.random.split(key)
+        gaps = jax.random.exponential(k_gap, shape) / lam
+        cand = jnp.cumsum(gaps.astype(jnp.float64), axis=-1)
+        u = jax.random.uniform(k_acc, shape)
+        accept = u * lam <= self.profile.rate(cand)
+        times = jnp.sort(jnp.where(accept, cand, PAD_TIME), axis=-1)
+        coverage = cand[..., -1]
+        return times, coverage
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceArrivalProcess(SimProcess, ArrivalTimeProcess):
     """Replay recorded arrival timestamps (the paper's workflow: measure a
     workload on the real platform, feed the trace to the simulator).
 
-    Samples are the trace's inter-arrival gaps; if more samples are
-    requested than the trace holds, the trace loops (with the wrap gap
-    equal to the mean gap, keeping the rate stationary).
+    Two replay paths:
+
+    * ``arrival_times`` (preferred; engines detect :class:`ArrivalTimeProcess`
+      and switch to the prestamped scan) — the recorded timestamps are fed
+      to the simulator *exactly*, in f64, shared across every Monte-Carlo
+      replica; only the service-time draws vary per replica.
+    * ``sample`` (legacy gap path) — samples are the trace's inter-arrival
+      gaps in f32; small cumulative rounding error vs the true timestamps.
+
+    In both paths, if more samples are requested than the trace holds, the
+    trace loops (with the wrap gap equal to the mean gap, keeping the rate
+    stationary).
     """
 
     timestamps: tuple  # strictly increasing arrival times
@@ -279,13 +462,37 @@ class TraceArrivalProcess(SimProcess):
         gaps = np.diff(ts)
         return np.concatenate([[ts[0] if ts[0] > 0 else gaps.mean()], gaps])
 
+    def _cycle(self) -> np.ndarray:
+        """One replay cycle: the trace gaps followed by the mean-gap wrap."""
+        gaps = self._gaps()
+        return np.concatenate([gaps, [max(gaps.mean(), 1e-9)]])
+
     def _raw_sample(self, key, shape):
         del key  # deterministic replay
         n = int(np.prod(shape)) if shape else 1
-        gaps = self._gaps()
-        reps = int(np.ceil(n / len(gaps)))
-        tiled = np.tile(np.concatenate([gaps, [max(gaps.mean(), 1e-9)]])[: len(gaps)], reps)
+        cycle = self._cycle()
+        reps = int(np.ceil(n / len(cycle)))
+        tiled = np.tile(cycle, reps)
         return jnp.asarray(tiled[:n].reshape(shape), dtype=jnp.float32)
+
+    def arrival_times(self, key, shape):
+        """Exact absolute-timestamp replay: f64 trace timestamps, identical
+        across replicas (the leading axes broadcast the same stream)."""
+        del key  # deterministic replay
+        *lead, n = shape
+        cycle = self._cycle()
+        reps = int(np.ceil(n / len(cycle)))
+        times = np.cumsum(np.tile(cycle, reps))[:n]
+        # The first cycle reproduces the recorded timestamps exactly (the
+        # first gap is the recorded time-to-first-arrival).
+        ts = np.asarray(self.timestamps, dtype=np.float64)
+        if ts[0] > 0:
+            times[: len(ts)] = ts[: min(len(ts), n)]
+        out = jnp.broadcast_to(
+            jnp.asarray(times, dtype=jnp.float64), tuple(lead) + (n,)
+        )
+        coverage = jnp.full(tuple(lead), np.inf, dtype=jnp.float64)
+        return out, coverage
 
     def mean(self):
         return float(self._gaps().mean())
@@ -310,3 +517,12 @@ class EmpiricalSimProcess(SimProcess):
 
     def mean(self):
         return float(np.mean(self.durations))
+
+    def with_rate(self, rate):
+        # Rescale every measured duration by the same factor so the
+        # bootstrap mean lands on 1/rate (shape of the empirical
+        # distribution preserved).
+        f = (1.0 / float(rate)) / self.mean()
+        return dataclasses.replace(
+            self, durations=tuple(float(d) * f for d in self.durations)
+        )

@@ -42,6 +42,12 @@ class PyRefResults:
     lifespan_sum: float = 0.0
     lifespan_count: int = 0
     histogram: Optional[np.ndarray] = None
+    # windowed metrics (set when window_bounds is passed): [W] arrays
+    w_cold: Optional[np.ndarray] = None
+    w_warm: Optional[np.ndarray] = None
+    w_arrivals: Optional[np.ndarray] = None
+    w_run_t: Optional[np.ndarray] = None
+    w_idle_t: Optional[np.ndarray] = None
 
     @property
     def cold_start_prob(self) -> float:
@@ -63,16 +69,38 @@ def simulate_pyref(
     skip_time: float = 0.0,
     hist_bins: int = 0,
     routing: str = "newest",
+    prestamped: bool = False,
+    window_bounds=None,
 ) -> PyRefResults:
     """Event-driven simulation consuming pre-drawn samples.
 
     ``dts/warms/colds`` are 1-D f32 arrays (one entry per arrival; the warm
     and cold samples are both drawn per arrival, and whichever matches the
     start type is consumed — the same convention as the JAX simulator).
+
+    ``prestamped=True`` switches ``dts`` to absolute f64 arrival timestamps
+    (the non-stationary / exact-trace-replay convention); entries at
+    ``processes.PAD_TIME`` are inert.  ``window_bounds`` (ascending, W+1
+    values) enables per-window metrics matching the scan engine's windowed
+    accumulators: arrival counts by half-open window membership of the
+    arrival instant, exact instance-time integrals per window clipped to
+    ``[0, sim_time]`` (windows ignore ``skip_time``).
     """
     t_exp = float(expiration_threshold)
     res = PyRefResults()
     hist = np.zeros(hist_bins, dtype=np.float64) if hist_bins else None
+    bounds = (
+        np.asarray(window_bounds, dtype=np.float64)
+        if window_bounds is not None
+        else None
+    )
+    if bounds is not None:
+        n_w = len(bounds) - 1
+        res.w_cold = np.zeros(n_w, dtype=np.int64)
+        res.w_warm = np.zeros(n_w, dtype=np.int64)
+        res.w_arrivals = np.zeros(n_w, dtype=np.int64)
+        res.w_run_t = np.zeros(n_w, dtype=np.float64)
+        res.w_idle_t = np.zeros(n_w, dtype=np.float64)
     pool: List[_Instance] = []
     t_prev = 0.0
 
@@ -99,15 +127,36 @@ def simulate_pyref(
                 prev, count = e, count - 1
             hist[min(max(count, 0), hist_bins - 1)] += hi - prev
 
+    def integrate_windows(lo: float, hi: float):
+        """Per-window integrals over (lo, hi] ∩ window, clipped to sim_time."""
+        if bounds is None:
+            return
+        hi = min(hi, sim_time)
+        for w in range(len(bounds) - 1):
+            wlo, whi = max(bounds[w], lo), min(bounds[w + 1], hi)
+            if whi <= wlo:
+                continue
+            for inst in pool:
+                run = min(inst.busy_until, whi) - wlo
+                if run > 0:
+                    res.w_run_t[w] += run
+                idle = min(inst.expire_time(t_exp), whi) - max(
+                    inst.busy_until, wlo
+                )
+                if idle > 0:
+                    res.w_idle_t[w] += idle
+
+    arr_dtype = np.float64 if prestamped else np.float32
     for dt, warm_s, cold_s in zip(
-        np.asarray(dts, np.float32),
+        np.asarray(dts, arr_dtype),
         np.asarray(warms, np.float32),
         np.asarray(colds, np.float32),
     ):
-        t = t_prev + float(dt)
+        t = float(dt) if prestamped else t_prev + float(dt)
         lo = min(max(t_prev, skip_time), sim_time)
         hi = min(max(t, skip_time), sim_time)
         integrate(lo, hi)
+        integrate_windows(t_prev, t)
 
         # expire-first tie rule, matching the vectorised simulator
         survivors = []
@@ -125,6 +174,14 @@ def simulate_pyref(
             t_prev = t
             continue
 
+        w = -1
+        if bounds is not None:
+            w = int(np.searchsorted(bounds, t, side="right")) - 1
+            if 0 <= w < len(bounds) - 1:
+                res.w_arrivals[w] += 1
+            else:
+                w = -1
+
         idle = [i for i in pool if i.is_idle(t)]
         counted = t > skip_time
         if idle:
@@ -134,11 +191,15 @@ def simulate_pyref(
             if counted:
                 res.n_warm += 1
                 res.sum_warm_resp += float(warm_s)
+            if w >= 0:
+                res.w_warm[w] += 1
         elif len(pool) < max_concurrency:
             pool.append(_Instance(creation=t, busy_until=t + float(cold_s)))
             if counted:
                 res.n_cold += 1
                 res.sum_cold_resp += float(cold_s)
+            if w >= 0:
+                res.w_cold[w] += 1
         else:
             if counted:
                 res.n_reject += 1
@@ -146,6 +207,7 @@ def simulate_pyref(
 
     # tail flush (t_last, sim_time]
     integrate(max(t_prev, skip_time), sim_time)
+    integrate_windows(t_prev, sim_time)
     for inst in pool:
         e = inst.expire_time(t_exp)
         if skip_time < e <= sim_time:

@@ -49,7 +49,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.processes import ExpSimProcess, SimProcess
+from repro.core.processes import (
+    ArrivalTimeProcess,
+    ExpSimProcess,
+    SimProcess,
+)
 
 Array = jax.Array
 
@@ -76,6 +80,12 @@ class StaticConfig:
     scan_unroll: int
     track_histogram: bool
     hist_bins: int
+    # prestamped: the scan consumes absolute arrival timestamps (f64) in
+    # place of inter-arrival gaps — the non-stationary/trace-replay path.
+    prestamped: bool = False
+    # number of metric windows (0 = windowed metrics off); the window
+    # *boundaries* are traced values in WorkloadParams.window_bounds.
+    n_windows: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,18 +100,36 @@ class WorkloadParams:
     expiration_threshold: Array
     sim_time: Array
     skip_time: Array
+    # Metric-window boundaries: f64 ``[W+1]`` for a single run (shared by
+    # replicas) or ``[C, W+1]`` for a sweep; ``[0]`` / ``[C, 0]`` when
+    # windowed metrics are off (StaticConfig.n_windows == 0).
+    window_bounds: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
+    )
 
     @classmethod
     def of(
-        cls, expiration_threshold, sim_time, skip_time
+        cls, expiration_threshold, sim_time, skip_time, window_bounds=None
     ) -> "WorkloadParams":
         as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
-        return cls(as64(expiration_threshold), as64(sim_time), as64(skip_time))
+        wb = (
+            as64(window_bounds)
+            if window_bounds is not None
+            else jnp.zeros((0,), dtype=jnp.float64)
+        )
+        return cls(
+            as64(expiration_threshold), as64(sim_time), as64(skip_time), wb
+        )
 
 
 jax.tree_util.register_dataclass(
     WorkloadParams,
-    data_fields=("expiration_threshold", "sim_time", "skip_time"),
+    data_fields=(
+        "expiration_threshold",
+        "sim_time",
+        "skip_time",
+        "window_bounds",
+    ),
     meta_fields=(),
 )
 
@@ -129,12 +157,29 @@ class SimulationConfig:
     scan_unroll: int = 1  # lax.scan unroll factor (perf knob, semantics-free)
     track_histogram: bool = False
     hist_bins: int = 65  # instance-count histogram bins [0, hist_bins)
+    # Windowed-metrics grid: W+1 ascending boundaries; per-window cold-start
+    # probability / arrival counts / mean instance counts are reported in
+    # SimulationSummary.windows.  None = off.  The natural companion of
+    # non-stationary arrivals, where one scalar summary hides the curve.
+    window_bounds: Optional[tuple] = None
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
         if self.skip_time >= self.sim_time:
             raise ValueError("skip_time must be < sim_time")
+        if self.window_bounds is not None:
+            wb = np.asarray(self.window_bounds, dtype=np.float64)
+            if wb.ndim != 1 or len(wb) < 2 or (np.diff(wb) <= 0).any():
+                raise ValueError(
+                    "window_bounds must be >= 2 strictly increasing values"
+                )
+            object.__setattr__(self, "window_bounds", tuple(float(b) for b in wb))
+
+    @property
+    def prestamped(self) -> bool:
+        """True when the arrival process yields absolute timestamps."""
+        return isinstance(self.arrival_process, ArrivalTimeProcess)
 
     def steps_needed(self) -> int:
         """Upper bound on arrivals within ``sim_time`` (mean + 6 sigma)."""
@@ -151,13 +196,68 @@ class SimulationConfig:
             scan_unroll=self.scan_unroll,
             track_histogram=self.track_histogram,
             hist_bins=self.hist_bins,
+            prestamped=self.prestamped,
+            n_windows=len(self.window_bounds) - 1 if self.window_bounds else 0,
         )
 
     def workload_params(self) -> WorkloadParams:
         """The traced (run-time) slice of this config."""
         return WorkloadParams.of(
-            self.expiration_threshold, self.sim_time, self.skip_time
+            self.expiration_threshold,
+            self.sim_time,
+            self.skip_time,
+            self.window_bounds,
         )
+
+
+@dataclasses.dataclass
+class WindowedMetrics:
+    """Per-window metrics over a user time grid (non-stationary runs).
+
+    Request counts are taken per arrival-window (half-open ``[b_w, b_w+1)``
+    membership of the arrival instant); instance-time integrals are exact
+    over each window intersected with ``[0, sim_time]``.  Windows ignore
+    ``skip_time`` — the grid itself says what the user wants to see.
+    """
+
+    bounds: np.ndarray  # [W+1] window boundaries
+    n_cold: np.ndarray  # [R, W]
+    n_warm: np.ndarray  # [R, W]
+    n_arrivals: np.ndarray  # [R, W] (includes rejected arrivals)
+    time_running: np.ndarray  # [R, W] exact integral per window
+    time_idle: np.ndarray  # [R, W]
+
+    @property
+    def widths(self) -> np.ndarray:
+        return np.diff(self.bounds)
+
+    @property
+    def cold_start_prob(self) -> np.ndarray:
+        """[W] pooled-over-replicas per-window cold-start probability."""
+        served = (self.n_cold + self.n_warm).sum(axis=0)
+        return self.n_cold.sum(axis=0) / np.maximum(served, 1)
+
+    @property
+    def arrival_rate(self) -> np.ndarray:
+        """[W] mean observed arrivals per second per window."""
+        return self.n_arrivals.mean(axis=0) / self.widths
+
+    @property
+    def avg_instance_count(self) -> np.ndarray:
+        """[W] replica-mean of total (running+idle) instance count."""
+        return (self.time_running + self.time_idle).mean(axis=0) / self.widths
+
+    @property
+    def avg_running_count(self) -> np.ndarray:
+        return self.time_running.mean(axis=0) / self.widths
+
+    def to_dict(self) -> dict:
+        return {
+            "bounds": self.bounds.tolist(),
+            "cold_start_prob": self.cold_start_prob.tolist(),
+            "arrival_rate": self.arrival_rate.tolist(),
+            "avg_instance_count": self.avg_instance_count.tolist(),
+        }
 
 
 @dataclasses.dataclass
@@ -176,6 +276,7 @@ class SimulationSummary:
     measured_time: float
     histogram: Optional[np.ndarray] = None  # [R, hist_bins] time at count=k
     overflow: Optional[np.ndarray] = None
+    windows: Optional[WindowedMetrics] = None  # set when window_bounds given
 
     # ---- paper metrics -------------------------------------------------
     @property
@@ -295,8 +396,50 @@ def histogram_update(hist, alive, busy_until, exp_threshold, lo, hi):
 
 
 # ---------------------------------------------------------------------------
+# Sample drawing (shared by ServerlessSimulator / temporal / par engines)
+# ---------------------------------------------------------------------------
+
+
+def draw_workload_samples(cfg: SimulationConfig, key: Array, replicas: int, n: int):
+    """Draw the (arrivals, warm, cold) sample buffers for ``n`` steps.
+
+    Stationary arrival processes yield f32 ``[R, n]`` inter-arrival gaps;
+    :class:`ArrivalTimeProcess` arrivals (NHPP, exact trace replay) yield
+    f64 ``[R, n]`` absolute timestamps for the prestamped scan, with a
+    host-side coverage guard — a padded timestamp stream ends in
+    ``PAD_TIME`` so the engines' final-clock check cannot detect
+    under-coverage, the generating process has to report it.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    ap = cfg.arrival_process
+    if isinstance(ap, ArrivalTimeProcess):
+        arr, coverage = ap.arrival_times(k1, (replicas, n))
+        cov = np.asarray(coverage)
+        if (cov < cfg.sim_time).any():
+            raise RuntimeError(
+                "arrival-stream coverage ended before sim_time "
+                f"(min coverage {cov.min():.1f} < {cfg.sim_time}); "
+                "pass a larger `steps`"
+            )
+    else:
+        arr = ap.sample(k1, (replicas, n))
+    warms = cfg.warm_service_process.sample(k2, (replicas, n))
+    colds = cfg.cold_service_process.sample(k3, (replicas, n))
+    return arr, warms, colds
+
+
+# ---------------------------------------------------------------------------
 # Single-replica scan
 # ---------------------------------------------------------------------------
+
+
+def _window_integrals(bounds, alive, busy_until, t_exp, lo_eff, hi_eff):
+    """Exact per-window ∫running / ∫idle over (lo_eff, hi_eff] ∩ window."""
+    wlo = jnp.maximum(bounds[:-1], lo_eff)
+    whi = jnp.minimum(bounds[1:], hi_eff)
+    return jax.vmap(
+        lambda l, h: interval_integrals(alive, busy_until, t_exp, l, h)
+    )(wlo, whi)
 
 
 def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
@@ -308,13 +451,26 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc) = state
         dt, warm_s, cold_s = xs
-        t = t_prev + dt.astype(jnp.float64)
+        if cfg.prestamped:
+            # xs carries the absolute arrival timestamp (f64), not a gap.
+            t = dt.astype(jnp.float64)
+        else:
+            t = t_prev + dt.astype(jnp.float64)
 
         # ---- exact integrals over the measurement window of this interval
         lo = jnp.clip(t_prev, skip, t_end)
         hi = jnp.clip(t, skip, t_end)
         run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
 
+        if cfg.n_windows:
+            run_w, idle_w = _window_integrals(
+                params.window_bounds,
+                alive,
+                busy_until,
+                t_exp,
+                jnp.minimum(t_prev, t_end),
+                jnp.minimum(t, t_end),
+            )
         if cfg.track_histogram:
             hist = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
         else:
@@ -372,7 +528,25 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
             lifespan_count=lifespan_count,
             overflow=acc["overflow"] + overflow,
             hist=hist,
+            w_cold=acc["w_cold"],
+            w_warm=acc["w_warm"],
+            w_arrivals=acc["w_arrivals"],
+            w_run_t=acc["w_run_t"],
+            w_idle_t=acc["w_idle_t"],
         )
+        if cfg.n_windows:
+            # half-open window membership [b_w, b_{w+1}) of the arrival
+            # instant; windows deliberately ignore skip_time (the grid is
+            # the user's own measurement request).
+            w_idx = (
+                jnp.searchsorted(params.window_bounds, t, side="right") - 1
+            )
+            onehot = (jnp.arange(cfg.n_windows) == w_idx) & active
+            acc["w_cold"] = acc["w_cold"] + (onehot & is_cold)
+            acc["w_warm"] = acc["w_warm"] + (onehot & is_warm)
+            acc["w_arrivals"] = acc["w_arrivals"] + onehot
+            acc["w_run_t"] = acc["w_run_t"] + run_w
+            acc["w_idle_t"] = acc["w_idle_t"] + idle_w
         return (alive, creation, busy_until, t, acc), None
 
     return step
@@ -393,6 +567,11 @@ def _empty_acc(cfg: StaticConfig):
         lifespan_count=zi,
         overflow=zi,
         hist=jnp.zeros((cfg.hist_bins,), dtype=jnp.float64),
+        w_cold=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
+        w_warm=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
+        w_arrivals=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
+        w_run_t=jnp.zeros((cfg.n_windows,), dtype=jnp.float64),
+        w_idle_t=jnp.zeros((cfg.n_windows,), dtype=jnp.float64),
     )
 
 
@@ -414,6 +593,17 @@ def _flush(cfg: StaticConfig, params: WorkloadParams, state):
     run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
     acc["time_running"] = acc["time_running"] + run_t
     acc["time_idle"] = acc["time_idle"] + idle_t
+    if cfg.n_windows:
+        run_w, idle_w = _window_integrals(
+            params.window_bounds,
+            alive,
+            busy_until,
+            t_exp,
+            jnp.minimum(t_prev, hi),
+            hi,
+        )
+        acc["w_run_t"] = acc["w_run_t"] + run_w
+        acc["w_idle_t"] = acc["w_idle_t"] + idle_w
     if cfg.track_histogram:
         acc["hist"] = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
     expire_time = busy_until + t_exp
@@ -504,11 +694,7 @@ class ServerlessSimulator:
     def draw_samples(self, key: Array, replicas: int, steps: Optional[int] = None):
         cfg = self.config
         n = steps or cfg.steps_needed()
-        k1, k2, k3 = jax.random.split(key, 3)
-        dts = cfg.arrival_process.sample(k1, (replicas, n))
-        warms = cfg.warm_service_process.sample(k2, (replicas, n))
-        colds = cfg.cold_service_process.sample(k3, (replicas, n))
-        return dts, warms, colds
+        return draw_workload_samples(cfg, key, replicas, n)
 
     def run(
         self,
@@ -538,6 +724,16 @@ class ServerlessSimulator:
                 f"needed a slot beyond slots={cfg.slots} while below "
                 "max_concurrency); raise SimulationConfig.slots"
             )
+        windows = None
+        if cfg.window_bounds:
+            windows = WindowedMetrics(
+                bounds=np.asarray(cfg.window_bounds),
+                n_cold=acc["w_cold"],
+                n_warm=acc["w_warm"],
+                n_arrivals=acc["w_arrivals"],
+                time_running=acc["w_run_t"],
+                time_idle=acc["w_idle_t"],
+            )
         return SimulationSummary(
             n_cold=acc["n_cold"],
             n_warm=acc["n_warm"],
@@ -551,4 +747,5 @@ class ServerlessSimulator:
             measured_time=cfg.sim_time - cfg.skip_time,
             histogram=acc["hist"] if cfg.track_histogram else None,
             overflow=acc["overflow"],
+            windows=windows,
         )

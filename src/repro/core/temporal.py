@@ -29,6 +29,7 @@ from repro.core.simulator import (
     _make_scan_fn,
     _flush,
     _NEG_INF,
+    draw_workload_samples,
 )
 
 Array = jax.Array
@@ -81,7 +82,10 @@ def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, d
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc, curves) = state
         dt, warm_s, cold_s = xs
-        t = t_prev + dt.astype(jnp.float64)
+        if cfg.prestamped:
+            t = dt.astype(jnp.float64)  # absolute-timestamp stream
+        else:
+            t = t_prev + dt.astype(jnp.float64)
         # Snapshot counts at grid points inside (t_prev, min(t, horizon)].
         hi = jnp.minimum(t, params.sim_time)
         in_win = (grid > t_prev) & (grid <= hi)  # [G]
@@ -152,10 +156,7 @@ class ServerlessTemporalSimulator:
     ) -> TemporalSummary:
         cfg = self.config
         n = steps or cfg.steps_needed()
-        k1, k2, k3 = jax.random.split(key, 3)
-        dts = cfg.arrival_process.sample(k1, (replicas, n))
-        warms = cfg.warm_service_process.sample(k2, (replicas, n))
-        colds = cfg.cold_service_process.sample(k3, (replicas, n))
+        dts, warms, colds = draw_workload_samples(cfg, key, replicas, n)
         pool0 = _snapshots_to_pool(self.initial_instances, cfg.slots)
         grid_j = jnp.asarray(grid, dtype=jnp.float64)
         acc, t_last, curves = _simulate_temporal(

@@ -29,18 +29,25 @@ from __future__ import annotations
 import dataclasses
 import functools
 import warnings
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import BillingModel, estimate_cost
-from repro.core.processes import ExpSimProcess, SimProcess
+from repro.core.processes import (
+    ArrivalTimeProcess,
+    ExpSimProcess,
+    NHPPArrivalProcess,
+    RateProfile,
+    SimProcess,
+)
 from repro.core.simulator import (
     ServerlessSimulator,
     SimulationConfig,
     SimulationSummary,
+    WindowedMetrics,
     WorkloadParams,
     _simulate_batch,
     _simulate_sweep,
@@ -97,21 +104,28 @@ def _uniform_steps(base_config, a, steps):
     )
 
 
-def _draw_grid_samples(base_config, e, a, key, replicas, steps):
-    """Per-cell draws, stacked to [E·A·R, N].
+def _draw_stacked_samples(cfgs, key, replicas, steps):
+    """Per-cell draws stacked to [len(cfgs)·R, N] — one key split per cell.
 
-    Key-splitting order matches ``sweep_legacy`` exactly, so with the same
-    ``key``/``steps`` the batched engine consumes the very same sample
-    arrays the per-cell loop would.
+    For the rate grid the split order matches ``sweep_legacy`` exactly, so
+    with the same ``key``/``steps`` the batched engine consumes the very
+    same sample arrays the per-cell loop would; profile sweeps reuse the
+    same convention so oracle tests can reproduce the buffers.
     """
     ds, ws, cs = [], [], []
-    for cfg in _grid_cells(base_config, e, a):
+    for cfg in cfgs:
         key, sub = jax.random.split(key)
         d, w, c = ServerlessSimulator(cfg).draw_samples(sub, replicas, steps)
         ds.append(d)
         ws.append(w)
         cs.append(c)
     return jnp.concatenate(ds), jnp.concatenate(ws), jnp.concatenate(cs)
+
+
+def _draw_grid_samples(base_config, e, a, key, replicas, steps):
+    return _draw_stacked_samples(
+        list(_grid_cells(base_config, e, a)), key, replicas, steps
+    )
 
 
 def _grids_from_cell_summaries(summaries, e, a, billing):
@@ -149,6 +163,11 @@ def _result(e, a, out):
 
 def _sweep_scan(base_config, e, a, key, replicas, billing, steps):
     """The single-compile f64 path: one ``_simulate_sweep`` call."""
+    # WhatIfResult reports scalar grids only; a window grid on the base
+    # config would make every scan step pay ~W extra integral work for
+    # accumulators nobody reads — strip it (sweep_profiles is the windowed
+    # engine).
+    base_config = dataclasses.replace(base_config, window_bounds=None)
     E, A = len(e), len(a)
     n = _uniform_steps(base_config, a, steps)
     dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
@@ -156,6 +175,7 @@ def _sweep_scan(base_config, e, a, key, replicas, billing, steps):
         np.repeat(e, A * replicas),
         np.full(E * A * replicas, base_config.sim_time),
         np.full(E * A * replicas, base_config.skip_time),
+        np.zeros((E * A * replicas, 0)),
     )
     with warnings.catch_warnings():
         # buffer donation is a no-op on CPU; the warning is expected there
@@ -211,12 +231,29 @@ def _ref_jit():
     from repro.kernels.ref import faas_sweep_ref
 
     return jax.jit(
-        faas_sweep_ref, static_argnames=("t_end", "skip", "max_concurrency")
+        faas_sweep_ref,
+        static_argnames=(
+            "t_end",
+            "skip",
+            "max_concurrency",
+            "prestamped",
+            "n_windows",
+            "w_start",
+            "w_dt",
+        ),
     )
 
 
-def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend, block_k=512):
-    """The f32 block-kernel path (Pallas on TPU, jnp ref elsewhere)."""
+def _block_launch(base_config, t_exp, dts, warms, colds, backend, kw, block_k=512):
+    """Shared f32 block-engine launch: pad to the kernel grid and run the
+    Pallas kernel (interpret mode off-TPU), or the jnp ref mirror.
+
+    ``dts`` rows are gaps, or absolute times when ``kw['prestamped']`` —
+    both use the same 1e30 column fill: as a gap it jumps the clock past
+    ``t_end``, as a timestamp it IS past ``t_end``, so padding is inert
+    either way.  Returns the f64 accumulator ``[C, cols]`` after the
+    overflow guard.
+    """
     # kernel imports stay local so the default scan backend keeps core
     # imports light; NEG is the kernel's dead-slot sentinel
     from repro.kernels.faas_event_step import NEG as _F32_NEG
@@ -227,36 +264,17 @@ def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend, bloc
             "block backends implement newest-idle routing only; use "
             f"backend='scan' for routing={base_config.routing!r}"
         )
-    E, A = len(e), len(a)
-    C = E * A * replicas
-    n = _uniform_steps(base_config, a, steps)
-    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
+    C, n = dts.shape
     dts, warms, colds = (
         jnp.asarray(dts, jnp.float32),
         jnp.asarray(warms, jnp.float32),
         jnp.asarray(colds, jnp.float32),
     )
-    t_exp = jnp.asarray(np.repeat(e, A * replicas), jnp.float32)
-    # Coverage guard on the REAL draws (before any padding): every row's
-    # arrivals must reach the horizon, else the grid would be silently
-    # truncated.  f64 sum of the f32 gaps — the padded kernel clock cannot
-    # be used for this check.
-    covered = np.asarray(dts, np.float64).sum(axis=1)
-    if (covered < base_config.sim_time).any():
-        raise RuntimeError(
-            "pre-drawn arrivals ended before sim_time "
-            f"(min final t {covered.min():.1f} < {base_config.sim_time}); "
-            "pass a larger `steps`"
-        )
+    t_exp = jnp.asarray(t_exp, jnp.float32)
     M = base_config.slots
     alive0 = jnp.zeros((C, M), jnp.float32)
     frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
     t0 = jnp.zeros((C,), jnp.float32)
-    kw = dict(
-        t_end=float(base_config.sim_time),
-        skip=float(base_config.skip_time),
-        max_concurrency=base_config.max_concurrency,
-    )
     if backend == "pallas":
         # pad rows to the replica-block, arrivals to the chunk size
         block_k = min(block_k, max(n, 1))
@@ -264,9 +282,6 @@ def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend, bloc
         pad_k = (-n) % block_k
 
         def pad(x, col_fill):
-            # padded arrivals carry a 1e30 gap: the first one jumps the
-            # clock far past t_end, so they are inert (inactive, windows
-            # clipped at t_end) no matter where the real arrivals stopped;
             # extra rows are copies of row 0, sliced off after the launch
             if pad_k:
                 x = jnp.concatenate(
@@ -298,16 +313,40 @@ def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend, bloc
             interpret=jax.default_backend() != "tpu",
             **kw,
         )
-        alive_n, creation_n, busy_n, t_n, acc = (x[:C] for x in out)
+        acc = np.asarray(out[4], np.float64)[:C]
     else:
         out = _ref_jit()(alive0, frozen, frozen, t0, t_exp, dts, warms, colds, **kw)
-        alive_n, creation_n, busy_n, t_n, acc = out
-
-    acc = np.asarray(acc, np.float64)
+        acc = np.asarray(out[4], np.float64)
     if acc[:, 7].sum() > 0:
         raise RuntimeError(
             "instance-pool overflow during sweep; raise SimulationConfig.slots"
         )
+    return acc
+
+
+def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend):
+    """The f32 block-kernel rate-grid path."""
+    E, A = len(e), len(a)
+    n = _uniform_steps(base_config, a, steps)
+    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
+    t_exp = np.repeat(e, A * replicas)
+    # Coverage guard on the REAL draws (before any padding): every row's
+    # arrivals must reach the horizon, else the grid would be silently
+    # truncated.  f64 sum of the f32 gaps — the padded kernel clock cannot
+    # be used for this check.
+    covered = np.asarray(dts, np.float64).sum(axis=1)
+    if (covered < base_config.sim_time).any():
+        raise RuntimeError(
+            "pre-drawn arrivals ended before sim_time "
+            f"(min final t {covered.min():.1f} < {base_config.sim_time}); "
+            "pass a larger `steps`"
+        )
+    kw = dict(
+        t_end=float(base_config.sim_time),
+        skip=float(base_config.skip_time),
+        max_concurrency=base_config.max_concurrency,
+    )
+    acc = _block_launch(base_config, t_exp, dts, warms, colds, backend, kw)
     measured = base_config.sim_time - base_config.skip_time
     zeros = lambda: np.zeros((replicas,))
     summaries = []
@@ -342,6 +381,12 @@ def sweep(
     steps: int | None = None,
 ) -> WhatIfResult:
     """Batched what-if sweep: one compile, one device call for the grid."""
+    if isinstance(base_config.arrival_process, ArrivalTimeProcess):
+        raise ValueError(
+            "rate sweeps need a stationary (re-ratable) arrival process; "
+            "for non-stationary/trace arrivals sweep over rate *profiles* "
+            "with whatif.sweep_profiles"
+        )
     a = np.asarray(list(arrival_rates), dtype=np.float64)
     e = np.asarray(list(expiration_thresholds), dtype=np.float64)
     if backend == "scan":
@@ -351,6 +396,172 @@ def sweep(
     else:
         raise ValueError(f"unknown sweep backend {backend!r}")
     return _result(e, a, out)
+
+
+# ---------------------------------------------------------------------------
+# Rate-profile sweeps (non-stationary what-if analysis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ProfileSweepResult:
+    """Windowed results of a sweep over non-stationary rate profiles."""
+
+    profiles: tuple  # [P] the swept RateProfiles
+    window_bounds: np.ndarray  # [W+1]
+    cold_start_prob: np.ndarray  # [P] aggregate, pooled over replicas
+    windowed_cold_prob: np.ndarray  # [P, W] per-window cold-start prob
+    windowed_arrivals: np.ndarray  # [P, W] replica-mean arrival counts
+    # [P, W] replica-mean total (running+idle) instance count; None for the
+    # block backends (no per-window integral accumulators in f32 acc)
+    windowed_instance_count: Optional[np.ndarray]
+    windows: Optional[list] = None  # [P] WindowedMetrics (scan backend)
+
+
+def _profile_configs(base_config, profiles):
+    cfgs = []
+    for p in profiles:
+        if not isinstance(p, RateProfile):
+            raise TypeError(f"expected RateProfile, got {type(p).__name__}")
+        cfgs.append(
+            dataclasses.replace(
+                base_config, arrival_process=NHPPArrivalProcess(profile=p)
+            )
+        )
+    return cfgs
+
+
+def sweep_profiles(
+    base_config: SimulationConfig,
+    profiles: Sequence,
+    key,
+    replicas: int = 4,
+    backend: str = "scan",
+    steps: int | None = None,
+) -> ProfileSweepResult:
+    """Batched sweep over non-stationary arrival-rate profiles.
+
+    Every profile × replica row carries its own NHPP-thinned
+    absolute-timestamp stream; the whole grid is ONE device call (the
+    prestamped analogue of :func:`sweep`).  ``base_config.window_bounds``
+    is required — non-stationary runs are summarised per window, not by a
+    single scalar.  Backends: ``"scan"`` (f64, exact, full windowed
+    metrics), ``"pallas"``/``"ref"`` (f32 block engine; windowed
+    cold/served/arrival counts, uniform window grids only — no per-window
+    instance integrals).
+    """
+    wb = base_config.window_bounds
+    if not wb:
+        raise ValueError(
+            "sweep_profiles requires base_config.window_bounds (the "
+            "windowed-metrics grid non-stationary results are reported on)"
+        )
+    bounds = np.asarray(wb, dtype=np.float64)
+    W = len(bounds) - 1
+    P = len(profiles)
+    cfgs = _profile_configs(base_config, profiles)
+    n = int(steps) if steps is not None else max(c.steps_needed() for c in cfgs)
+    C = P * replicas
+    dts, warms, colds = _draw_stacked_samples(cfgs, key, replicas, n)
+
+    if backend == "scan":
+        params = WorkloadParams.of(
+            np.full(C, base_config.expiration_threshold),
+            np.full(C, base_config.sim_time),
+            np.full(C, base_config.skip_time),
+            np.tile(bounds, (C, 1)),
+        )
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            acc, _ = _simulate_sweep(
+                cfgs[0].static_config(), params, dts, warms, colds
+            )
+        acc = jax.tree.map(np.asarray, acc)
+        if acc["overflow"].sum() > 0:
+            raise RuntimeError(
+                "instance-pool overflow during profile sweep; raise "
+                "SimulationConfig.slots"
+            )
+        cell = jax.tree.map(lambda x: x.reshape((P, replicas) + x.shape[1:]), acc)
+        widths = np.diff(bounds)
+        windows = [
+            WindowedMetrics(
+                bounds=bounds,
+                n_cold=cell["w_cold"][p],
+                n_warm=cell["w_warm"][p],
+                n_arrivals=cell["w_arrivals"][p],
+                time_running=cell["w_run_t"][p],
+                time_idle=cell["w_idle_t"][p],
+            )
+            for p in range(P)
+        ]
+        served = (cell["n_cold"] + cell["n_warm"]).sum(axis=1)
+        return ProfileSweepResult(
+            profiles=tuple(profiles),
+            window_bounds=bounds,
+            cold_start_prob=cell["n_cold"].sum(axis=1) / np.maximum(served, 1),
+            windowed_cold_prob=np.stack([w.cold_start_prob for w in windows]),
+            windowed_arrivals=np.stack(
+                [w.n_arrivals.mean(axis=0) for w in windows]
+            ),
+            windowed_instance_count=np.stack(
+                [
+                    (w.time_running + w.time_idle).mean(axis=0) / widths
+                    for w in windows
+                ]
+            ),
+            windows=windows,
+        )
+    if backend not in ("pallas", "ref"):
+        raise ValueError(f"unknown sweep backend {backend!r}")
+    return _sweep_profiles_block(
+        base_config, profiles, bounds, dts, warms, colds, replicas, backend
+    )
+
+
+def _sweep_profiles_block(
+    base_config, profiles, bounds, dts, warms, colds, replicas, backend
+):
+    """f32 block-engine profile sweep (Pallas on TPU, jnp ref elsewhere)."""
+    from repro.kernels.faas_event_step import ACC_COLS
+
+    widths = np.diff(bounds)
+    if not np.allclose(widths, widths[0], rtol=1e-9, atol=1e-12):
+        raise ValueError(
+            "block backends support uniform window grids only; use "
+            "backend='scan' for irregular window_bounds"
+        )
+    W = len(bounds) - 1
+    P = len(profiles)
+    C = P * replicas
+    t_exp = np.full((C,), base_config.expiration_threshold)
+    kw = dict(
+        t_end=float(base_config.sim_time),
+        skip=float(base_config.skip_time),
+        max_concurrency=base_config.max_concurrency,
+        prestamped=True,
+        n_windows=W,
+        w_start=float(bounds[0]),
+        w_dt=float(widths[0]),
+    )
+    acc = _block_launch(base_config, t_exp, dts, warms, colds, backend, kw)
+    cell = acc.reshape(P, replicas, ACC_COLS + 3 * W)
+    cold = cell[:, :, 0].sum(axis=1)
+    served = (cell[:, :, 0] + cell[:, :, 1]).sum(axis=1)
+    w_cold = cell[:, :, ACC_COLS : ACC_COLS + W].sum(axis=1)
+    w_served = cell[:, :, ACC_COLS + W : ACC_COLS + 2 * W].sum(axis=1)
+    w_arrivals = cell[:, :, ACC_COLS + 2 * W : ACC_COLS + 3 * W].sum(axis=1)
+    return ProfileSweepResult(
+        profiles=tuple(profiles),
+        window_bounds=bounds,
+        cold_start_prob=cold / np.maximum(served, 1),
+        windowed_cold_prob=w_cold / np.maximum(w_served, 1),
+        windowed_arrivals=w_arrivals / replicas,
+        windowed_instance_count=None,
+        windows=None,
+    )
 
 
 def sweep_legacy(

@@ -65,6 +65,10 @@ def _faas_kernel(
     skip: float,
     max_concurrency: int,
     n_steps: int,
+    prestamped: bool,
+    n_windows: int,
+    w_start: float,
+    w_dt: float,
 ):
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -87,7 +91,9 @@ def _faas_kernel(
         dt = dt_ref[:, i]
         warm_s = warm_ref[:, i]
         cold_s = cold_ref[:, i]
-        t_new = t + dt
+        # prestamped: the sample slot carries the absolute arrival time
+        # (non-stationary/trace streams); PAD_TIME entries are inert.
+        t_new = dt if prestamped else t + dt
 
         # exact integrals over the measurement window (lo, hi]
         lo = jnp.clip(t, skip, t_end)
@@ -136,7 +142,7 @@ def _faas_kernel(
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
 
         cc = counted
-        acc = acc + jnp.stack(
+        delta = jnp.stack(
             [
                 (is_cold & cc).astype(jnp.float32),
                 (is_warm & cc).astype(jnp.float32),
@@ -149,6 +155,24 @@ def _faas_kernel(
             ],
             axis=1,
         )
+        if n_windows:
+            # uniform metric windows [w_start + w*w_dt, w_start + (w+1)*w_dt):
+            # per-window cold / served / arrival counts (windows ignore skip —
+            # the grid is the caller's own measurement request)
+            w_idx = jnp.floor((t_new - w_start) / w_dt)
+            onehot = (
+                jax.lax.broadcasted_iota(
+                    jnp.float32, (t_new.shape[0], n_windows), 1
+                )
+                == w_idx[:, None]
+            ) & active[:, None]
+            w_cold = (onehot & is_cold[:, None]).astype(jnp.float32)
+            w_served = (onehot & (is_cold | is_warm)[:, None]).astype(
+                jnp.float32
+            )
+            w_arr = onehot.astype(jnp.float32)  # includes rejects
+            delta = jnp.concatenate([delta, w_cold, w_served, w_arr], axis=1)
+        acc = acc + delta
         return alive, creation, busy, t_new, acc
 
     alive, creation, busy, t, acc = jax.lax.fori_loop(
@@ -170,6 +194,10 @@ def _faas_kernel(
         "block_r",
         "block_k",
         "interpret",
+        "prestamped",
+        "n_windows",
+        "w_start",
+        "w_dt",
     ),
 )
 def faas_sweep_pallas(
@@ -178,7 +206,7 @@ def faas_sweep_pallas(
     busy,  # f32 [R, M]
     t0,  # f32 [R]
     t_exp,  # f32 [R]  per-row expiration threshold (sweep axis)
-    dts,  # f32 [R, K]
+    dts,  # f32 [R, K]  inter-arrival gaps, or absolute times if prestamped
     warms,  # f32 [R, K]
     colds,  # f32 [R, K]
     *,
@@ -188,23 +216,34 @@ def faas_sweep_pallas(
     block_r: int = 8,
     block_k: int = 512,
     interpret: bool = False,
+    prestamped: bool = False,
+    n_windows: int = 0,
+    w_start: float = 0.0,
+    w_dt: float = 0.0,
 ):
     """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
 
-    Returns ``(alive, creation, busy, t, acc[R, ACC_COLS])``.  Rows are
-    independent (replica × grid-cell); ``t_exp`` varies per row so an entire
-    (rate × threshold) sweep is one kernel launch.
+    Returns ``(alive, creation, busy, t, acc[R, ACC_COLS + 3*n_windows])``.
+    Rows are independent (replica × grid-cell); ``t_exp`` varies per row so
+    an entire (rate × threshold) sweep is one kernel launch — and with
+    ``prestamped=True`` the rows carry absolute-timestamp streams, so a
+    sweep over *rate profiles* (each row thinned from its own profile) is
+    also one launch.  ``n_windows > 0`` appends per-window cold / served /
+    arrival counters over the uniform grid ``w_start + [0..n_windows]*w_dt``
+    (columns ``[ACC_COLS, ACC_COLS+W)`` cold, ``[ACC_COLS+W, ACC_COLS+2W)``
+    served, ``[ACC_COLS+2W, ACC_COLS+3W)`` arrivals incl. rejects).
     """
     R, M = alive.shape
     K = dts.shape[1]
     assert R % block_r == 0, (R, block_r)
     assert K % block_k == 0, (K, block_k)
     grid = (R // block_r, K // block_k)
+    acc_cols = ACC_COLS + 3 * n_windows
 
     state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
     samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
     t_spec = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
-    acc_spec = pl.BlockSpec((block_r, ACC_COLS), lambda r, k: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, acc_cols), lambda r, k: (r, 0))
 
     kernel = functools.partial(
         _faas_kernel,
@@ -212,6 +251,10 @@ def faas_sweep_pallas(
         skip=skip,
         max_concurrency=max_concurrency,
         n_steps=block_k,
+        prestamped=prestamped,
+        n_windows=n_windows,
+        w_start=w_start,
+        w_dt=w_dt,
     )
     out = pl.pallas_call(
         kernel,
@@ -232,7 +275,7 @@ def faas_sweep_pallas(
             jax.ShapeDtypeStruct((R, M), jnp.float32),
             jax.ShapeDtypeStruct((R, M), jnp.float32),
             jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, ACC_COLS), jnp.float32),
+            jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
         ],
         interpret=interpret,
     )(alive, creation, busy, t0[:, None], t_exp[:, None], dts, warms, colds)

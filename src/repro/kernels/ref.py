@@ -53,10 +53,16 @@ def faas_sweep_ref(
     t_end=float("inf"),
     skip=0.0,
     max_concurrency,
+    prestamped: bool = False,
+    n_windows: int = 0,
+    w_start: float = 0.0,
+    w_dt: float = 0.0,
 ):
     """f32 jnp mirror of ``faas_sweep_pallas`` (same arithmetic order, same
     tie-breaks) — bit-comparable on CPU, and the interpreter fallback for
-    the what-if sweep's throughput backend off-TPU."""
+    the what-if sweep's throughput backend off-TPU.  ``prestamped`` /
+    ``n_windows`` mirror the kernel's absolute-timestamp and uniform
+    metric-window extensions (acc gains ``3*n_windows`` columns)."""
     R, M = alive.shape
     K = dts.shape[1]
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
@@ -66,7 +72,7 @@ def faas_sweep_ref(
 
     def step(i, carry):
         alive, creation, busy, t, acc = carry
-        t_new = t + dts[:, i]
+        t_new = dts[:, i] if prestamped else t + dts[:, i]
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
@@ -104,7 +110,7 @@ def faas_sweep_ref(
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
         cc = counted
-        acc = acc + jnp.stack(
+        delta = jnp.stack(
             [
                 (is_cold & cc).astype(jnp.float32),
                 (is_warm & cc).astype(jnp.float32),
@@ -117,9 +123,22 @@ def faas_sweep_ref(
             ],
             axis=1,
         )
+        if n_windows:
+            w_idx = jnp.floor((t_new - w_start) / w_dt)
+            onehot = (
+                jax.lax.broadcasted_iota(jnp.float32, (R, n_windows), 1)
+                == w_idx[:, None]
+            ) & active[:, None]
+            w_cold = (onehot & is_cold[:, None]).astype(jnp.float32)
+            w_served = (onehot & (is_cold | is_warm)[:, None]).astype(
+                jnp.float32
+            )
+            w_arr = onehot.astype(jnp.float32)  # includes rejects
+            delta = jnp.concatenate([delta, w_cold, w_served, w_arr], axis=1)
+        acc = acc + delta
         return alive, creation, busy, t_new, acc
 
-    acc0 = jnp.zeros((R, 8), jnp.float32)
+    acc0 = jnp.zeros((R, 8 + 3 * n_windows), jnp.float32)
     return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
 
 

@@ -140,6 +140,26 @@ def build_embedding(b, vocab: int, d_model: int):
     return {"table": b.param((vocab, d_model), ("vocab", "embed_fsdp"), init="embed")}
 
 
+@jax.custom_vjp
+def _opt_barrier(x: jax.Array) -> jax.Array:
+    # optimization_barrier has no differentiation rule; wrap it in a
+    # custom_vjp identity so grad flows, barriering both directions (the
+    # cotangent convert must not be reordered past the backward all-gather
+    # either).
+    return jax.lax.optimization_barrier(x)
+
+
+def _opt_barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _opt_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
     from repro.models.attention import grad_dtype_guard
 
@@ -147,7 +167,7 @@ def embed(params, tokens: jax.Array, compute_dtype) -> jax.Array:
     # The gather of a vocab-sharded table all-gathers the table; without
     # the barrier XLA reorders the bf16 convert *after* that all-gather and
     # moves 2× the bytes.  (Found via HLO collective audit — §Perf.)
-    table = jax.lax.optimization_barrier(table)
+    table = _opt_barrier(table)
     return table[tokens]
 
 

@@ -39,6 +39,24 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 
+def _shard_map(body, mesh, in_specs, out_specs):
+    """Version-compat shard_map: ``jax.shard_map(check_vma=...)`` on new
+    jax, ``jax.experimental.shard_map.shard_map(check_rep=...)`` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
 def _axes_tuple(rule) -> tuple:
     if rule is None:
         return ()
@@ -218,12 +236,11 @@ def moe_ffn_sharded(params, x: jax.Array, cfg: ModelConfig, rules: dict, mesh):
             out = jax.lax.psum(out, ep)
         return out.reshape(Bl, Sl, D), aux
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         body,
         mesh=mesh,
         in_specs=(x_spec, router_spec, w_spec),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )
     out, aux = mapped(
         x,

@@ -109,6 +109,27 @@ def test_multiple_decode_steps_consistent():
     )
 
 
+def test_embed_barrier_is_differentiable():
+    """Regression: the optimization_barrier guarding the embedding
+    all-gather had no differentiation rule — grad through embed() raised
+    NotImplementedError (seed failures in test_distributed/test_training).
+    The custom_vjp identity must pass gradients through unchanged."""
+    from repro.models.layers import embed
+
+    table = jax.random.normal(jax.random.key(0), (32, 8), jnp.float32)
+    tokens = jnp.asarray([[1, 5, 7], [0, 2, 31]], jnp.int32)
+
+    def loss(p):
+        return embed(p, tokens, jnp.float32).sum()
+
+    g = jax.grad(loss)({"table": table})["table"]
+    # the cotangent of a gather-sum is a one-hot count per vocab row
+    counts = np.zeros((32,))
+    for t in np.asarray(tokens).ravel():
+        counts[t] += 1.0
+    np.testing.assert_allclose(np.asarray(g), counts[:, None] * np.ones((1, 8)))
+
+
 class TestBlocks:
     def test_flash_vs_naive_grid(self):
         key = jax.random.key(0)

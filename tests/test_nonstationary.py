@@ -1,0 +1,430 @@
+"""Non-stationary workload engine: rate profiles, NHPP thinning, exact
+trace replay, windowed metrics, and the profile sweep across backends."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExpSimProcess,
+    NHPPArrivalProcess,
+    PiecewiseConstantRate,
+    ServerlessSimulator,
+    ServerlessTemporalSimulator,
+    SimulationConfig,
+    SinusoidalRate,
+    TraceArrivalProcess,
+)
+from repro.core import simulator as sim_mod
+from repro.core.processes import PAD_TIME
+from repro.core.pyref import simulate_pyref
+from repro.core.whatif import sweep_profiles
+
+
+def base_cfg(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0,
+        sim_time=500.0,
+        skip_time=0.0,
+        slots=32,
+    )
+    d.update(kw)
+    return SimulationConfig(**d)
+
+
+class TestRateProfiles:
+    def test_piecewise_constant_lookup(self):
+        p = PiecewiseConstantRate(edges=(10.0, 20.0), rates=(1.0, 5.0, 2.0))
+        np.testing.assert_allclose(
+            np.asarray(p.rate(np.array([0.0, 9.9, 10.0, 15.0, 20.0, 99.0]))),
+            [1.0, 1.0, 5.0, 5.0, 2.0, 2.0],
+        )
+        assert p.max_rate() == 5.0
+
+    def test_piecewise_validation(self):
+        with pytest.raises(ValueError, match="len\\(rates\\)"):
+            PiecewiseConstantRate(edges=(1.0,), rates=(1.0,))
+        with pytest.raises(ValueError, match="increasing"):
+            PiecewiseConstantRate(edges=(2.0, 1.0), rates=(1.0, 2.0, 3.0))
+        with pytest.raises(ValueError, match="positive"):
+            PiecewiseConstantRate(edges=(1.0,), rates=(1.0, -2.0))
+
+    def test_sinusoidal_envelope(self):
+        p = SinusoidalRate(base=2.0, amplitude=0.5, period=100.0)
+        t = np.linspace(0.0, 300.0, 1000)
+        r = np.asarray(p.rate(t))
+        assert (r > 0).all() and r.max() <= p.max_rate() + 1e-9
+        np.testing.assert_allclose(r.mean(), 2.0, rtol=0.02)
+        with pytest.raises(ValueError, match="amplitude"):
+            SinusoidalRate(base=1.0, amplitude=1.0, period=10.0)
+
+
+class TestNHPP:
+    def test_thinning_matches_intensity_per_window(self):
+        """Arrival counts per piecewise segment ≈ rate * width (NHPP law)."""
+        prof = PiecewiseConstantRate(edges=(400.0, 800.0), rates=(0.5, 3.0, 1.0))
+        proc = NHPPArrivalProcess(profile=prof)
+        n = int(1200.0 * prof.max_rate() * 1.5)
+        times, cov = proc.arrival_times(jax.random.key(0), (64, n))
+        t = np.asarray(times)
+        assert np.asarray(cov).min() >= 1200.0
+        assert (np.diff(t, axis=-1) >= 0).all()
+        for lo, hi, rate in ((0, 400, 0.5), (400, 800, 3.0), (800, 1200, 1.0)):
+            counts = ((t >= lo) & (t < hi)).sum(axis=-1)
+            np.testing.assert_allclose(
+                counts.mean(), rate * (hi - lo), rtol=0.05
+            )
+
+    def test_rejected_candidates_are_inert_padding(self):
+        proc = NHPPArrivalProcess(
+            profile=SinusoidalRate(base=1.0, amplitude=0.8, period=50.0)
+        )
+        times, _ = proc.arrival_times(jax.random.key(1), (4, 300))
+        t = np.asarray(times)
+        assert (t[:, -1] == PAD_TIME).all()  # thinning rejected something
+        real = t[t < PAD_TIME]
+        assert len(real) > 0 and np.isfinite(real).all()
+
+    def test_gap_sampling_is_refused(self):
+        proc = NHPPArrivalProcess(profile=SinusoidalRate(1.0, 0.5, 10.0))
+        with pytest.raises(NotImplementedError, match="arrival_times"):
+            proc.sample(jax.random.key(0), (8,))
+
+    def test_scan_matches_oracle_decision_for_decision(self):
+        """The flagship NHPP property: same thinned timestamp buffers →
+        the vectorised prestamped scan and the event-driven oracle agree
+        on every cold/warm/reject decision and windowed metric."""
+        bounds = tuple(np.linspace(0.0, 500.0, 11))
+        cfg = base_cfg(
+            arrival_process=NHPPArrivalProcess(
+                profile=SinusoidalRate(base=1.2, amplitude=0.7, period=200.0)
+            ),
+            window_bounds=bounds,
+            skip_time=10.0,
+        )
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(2), 3)
+        s = sim.run(jax.random.key(2), samples=samples)
+        dts, warms, colds = [np.asarray(x) for x in samples]
+        for r in range(3):
+            ref = simulate_pyref(
+                dts[r], warms[r], colds[r],
+                cfg.expiration_threshold, cfg.max_concurrency,
+                cfg.sim_time, cfg.skip_time,
+                prestamped=True, window_bounds=bounds,
+            )
+            assert int(s.n_cold[r]) == ref.n_cold
+            assert int(s.n_warm[r]) == ref.n_warm
+            assert int(s.n_reject[r]) == ref.n_reject
+            np.testing.assert_array_equal(s.windows.n_cold[r], ref.w_cold)
+            np.testing.assert_array_equal(s.windows.n_warm[r], ref.w_warm)
+            np.testing.assert_array_equal(
+                s.windows.n_arrivals[r], ref.w_arrivals
+            )
+            np.testing.assert_allclose(
+                s.windows.time_running[r], ref.w_run_t, rtol=1e-9, atol=1e-9
+            )
+            np.testing.assert_allclose(
+                s.windows.time_idle[r], ref.w_idle_t, rtol=1e-9, atol=1e-9
+            )
+            np.testing.assert_allclose(
+                s.time_running[r], ref.time_running, rtol=1e-9
+            )
+
+    def test_coverage_guard_raises_on_short_candidate_stream(self):
+        cfg = base_cfg(
+            arrival_process=NHPPArrivalProcess(
+                profile=SinusoidalRate(base=1.0, amplitude=0.5, period=100.0)
+            ),
+            sim_time=1000.0,
+        )
+        with pytest.raises(RuntimeError, match="coverage"):
+            ServerlessSimulator(cfg).run(jax.random.key(0), replicas=1, steps=100)
+
+    def test_temporal_engine_accepts_nhpp(self):
+        cfg = base_cfg(
+            arrival_process=NHPPArrivalProcess(
+                profile=SinusoidalRate(base=1.0, amplitude=0.9, period=250.0)
+            ),
+            sim_time=500.0,
+        )
+        grid = np.linspace(10.0, 490.0, 13)
+        out = ServerlessTemporalSimulator(cfg).run(
+            jax.random.key(0), grid, replicas=16
+        )
+        assert out.total_at.shape == (13,)
+        # diurnal load: the instance-count curve must actually move
+        assert out.total_at.max() > out.total_at.min() + 0.5
+
+
+class TestWindowedMetrics:
+    def test_stationary_windows_match_oracle(self):
+        """Windowed metrics are independent of the prestamped path: a
+        stationary gap process with a window grid matches the oracle."""
+        bounds = tuple(np.linspace(0.0, 500.0, 6))
+        cfg = base_cfg(window_bounds=bounds, skip_time=10.0)
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(3), 2)
+        s = sim.run(jax.random.key(3), samples=samples)
+        dts, warms, colds = [np.asarray(x) for x in samples]
+        for r in range(2):
+            ref = simulate_pyref(
+                dts[r], warms[r], colds[r],
+                cfg.expiration_threshold, cfg.max_concurrency,
+                cfg.sim_time, cfg.skip_time, window_bounds=bounds,
+            )
+            np.testing.assert_array_equal(s.windows.n_cold[r], ref.w_cold)
+            np.testing.assert_array_equal(
+                s.windows.n_arrivals[r], ref.w_arrivals
+            )
+            np.testing.assert_allclose(
+                s.windows.time_running[r], ref.w_run_t, rtol=1e-9, atol=1e-9
+            )
+
+    def test_window_time_mass_conserved(self):
+        """Sum of per-window integrals == aggregate integrals when the
+        grid covers [skip=0, sim_time]."""
+        bounds = tuple(np.linspace(0.0, 500.0, 26))
+        cfg = base_cfg(window_bounds=bounds)
+        s = ServerlessSimulator(cfg).run(jax.random.key(4), replicas=2)
+        np.testing.assert_allclose(
+            s.windows.time_running.sum(axis=1), s.time_running, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            s.windows.time_idle.sum(axis=1), s.time_idle, rtol=1e-9
+        )
+
+    def test_invalid_bounds_raise(self):
+        with pytest.raises(ValueError, match="window_bounds"):
+            base_cfg(window_bounds=(5.0, 4.0))
+        with pytest.raises(ValueError, match="window_bounds"):
+            base_cfg(window_bounds=(5.0,))
+
+    def test_no_retrace_on_bound_value_change(self):
+        """Window boundary *values* are traced; only the window count is
+        static."""
+        cfg = base_cfg(window_bounds=tuple(np.linspace(0.0, 500.0, 9)),
+                       slots=23)  # distinctive static shape
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(0), 1)
+        sim.run(jax.random.key(0), samples=samples)
+        before = sim_mod.TRACE_COUNTS["simulate_batch"]
+        cfg2 = dataclasses.replace(
+            cfg, window_bounds=tuple(np.linspace(0.0, 480.0, 9))
+        )
+        ServerlessSimulator(cfg2).run(jax.random.key(0), samples=samples)
+        assert sim_mod.TRACE_COUNTS["simulate_batch"] == before
+
+
+class TestExactTraceReplay:
+    def test_arrival_times_equal_trace_timestamps(self):
+        """The prestamped path feeds the recorded timestamps to the engine
+        exactly (no f32 gap rounding, no tiling drift), shared across
+        replicas."""
+        rng = np.random.default_rng(0)
+        ts = np.cumsum(rng.exponential(1.3, size=200))
+        proc = TraceArrivalProcess(timestamps=tuple(ts))
+        times, cov = proc.arrival_times(jax.random.key(0), (3, 200))
+        t = np.asarray(times)
+        np.testing.assert_array_equal(t[0], t[1])
+        np.testing.assert_array_equal(t[0], ts)  # exact, not approximate
+        assert np.isinf(np.asarray(cov)).all()
+
+    def test_engine_consumes_trace_timestamps_exactly(self):
+        """Windowed arrival counts from the simulator equal the histogram
+        of the raw trace — the engine saw the true timestamps."""
+        rng = np.random.default_rng(1)
+        ts = np.cumsum(rng.exponential(1.0, size=300))
+        # stop mid-trace strictly between two arrivals so the window-grid
+        # edge never coincides with a timestamp
+        horizon = float(ts[250] + ts[251]) / 2.0
+        bounds = tuple(np.linspace(0.0, horizon, 13))
+        cfg = base_cfg(
+            arrival_process=TraceArrivalProcess(timestamps=tuple(ts)),
+            sim_time=horizon,
+            window_bounds=bounds,
+        )
+        s = ServerlessSimulator(cfg).run(
+            jax.random.key(0), replicas=2, steps=310
+        )
+        expected, _ = np.histogram(ts[ts <= horizon], bins=np.asarray(bounds))
+        for r in range(2):
+            np.testing.assert_array_equal(s.windows.n_arrivals[r], expected)
+
+    def test_prestamped_replay_matches_oracle(self):
+        rng = np.random.default_rng(2)
+        ts = np.cumsum(rng.exponential(0.9, size=400))
+        cfg = base_cfg(
+            arrival_process=TraceArrivalProcess(timestamps=tuple(ts)),
+            sim_time=float(ts[-1]) + 1.0,
+        )
+        sim = ServerlessSimulator(cfg)
+        samples = sim.draw_samples(jax.random.key(5), 2, steps=420)
+        s = sim.run(jax.random.key(5), samples=samples)
+        dts, warms, colds = [np.asarray(x) for x in samples]
+        for r in range(2):
+            ref = simulate_pyref(
+                dts[r], warms[r], colds[r],
+                cfg.expiration_threshold, cfg.max_concurrency,
+                cfg.sim_time, cfg.skip_time, prestamped=True,
+            )
+            assert int(s.n_cold[r]) == ref.n_cold
+            assert int(s.n_warm[r]) == ref.n_warm
+
+
+PROFILES = [
+    PiecewiseConstantRate(edges=(300.0, 600.0), rates=(0.4, 1.6, 0.8)),
+    PiecewiseConstantRate(edges=(450.0,), rates=(1.2, 0.5)),
+    SinusoidalRate(base=0.9, amplitude=0.6, period=300.0),
+]
+
+
+class TestProfileSweep:
+    def _cfg(self, **kw):
+        d = dict(
+            sim_time=900.0,
+            window_bounds=tuple(np.linspace(0.0, 900.0, 10)),
+            expiration_threshold=30.0,
+        )
+        d.update(kw)
+        return base_cfg(**d)
+
+    def test_ten_profile_sweep_traces_once(self):
+        """Acceptance: a 10-cell diurnal sweep = ONE trace of the sweep
+        engine (pinned via TRACE_COUNTS)."""
+        cfg = self._cfg(slots=29)  # distinctive static shape → cold cache
+        profiles = [
+            SinusoidalRate(base=0.8, amplitude=a, period=p)
+            for a in (0.1, 0.3, 0.5, 0.7, 0.9)
+            for p in (225.0, 450.0)
+        ]
+        before = sim_mod.TRACE_COUNTS["simulate_sweep"]
+        res = sweep_profiles(
+            cfg, profiles, jax.random.key(7), replicas=1, steps=1700
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+        assert res.windowed_cold_prob.shape == (10, 9)
+        # different profile values, same structure/step budget: cache hit
+        sweep_profiles(
+            cfg,
+            [SinusoidalRate(base=0.7, amplitude=a, period=300.0)
+             for a in np.linspace(0.05, 0.85, 10)],
+            jax.random.key(8),
+            replicas=1,
+            steps=1700,
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+
+    def test_scan_sweep_matches_oracle_decisions(self):
+        """Acceptance: the batched profile sweep matches the extended
+        pyref oracle decision-for-decision (same key-split convention)."""
+        cfg = self._cfg()
+        replicas = 2
+        res = sweep_profiles(
+            cfg, PROFILES, jax.random.key(11), replicas=replicas
+        )
+        key = jax.random.key(11)
+        n = max(
+            dataclasses.replace(
+                cfg, arrival_process=NHPPArrivalProcess(profile=p)
+            ).steps_needed()
+            for p in PROFILES
+        )
+        for p, prof in enumerate(PROFILES):
+            key, sub = jax.random.split(key)
+            cfg_p = dataclasses.replace(
+                cfg, arrival_process=NHPPArrivalProcess(profile=prof)
+            )
+            dts, warms, colds = [
+                np.asarray(x)
+                for x in ServerlessSimulator(cfg_p).draw_samples(
+                    sub, replicas, n
+                )
+            ]
+            w_cold = np.zeros(9, dtype=np.int64)
+            w_warm = np.zeros(9, dtype=np.int64)
+            for r in range(replicas):
+                ref = simulate_pyref(
+                    dts[r], warms[r], colds[r],
+                    cfg.expiration_threshold, cfg.max_concurrency,
+                    cfg.sim_time, cfg.skip_time,
+                    prestamped=True, window_bounds=cfg.window_bounds,
+                )
+                w_cold += ref.w_cold
+                w_warm += ref.w_warm
+            np.testing.assert_allclose(
+                res.windowed_cold_prob[p],
+                w_cold / np.maximum(w_cold + w_warm, 1),
+                rtol=1e-12,
+            )
+
+    def test_block_backends_within_tolerance_of_scan(self):
+        """Acceptance: pallas/ref agree with the f64 scan within 1e-3 on
+        windowed cold-start probability over a piecewise-rate sweep."""
+        cfg = self._cfg()
+        key = jax.random.key(13)
+        scan = sweep_profiles(cfg, PROFILES, key, replicas=2)
+        ref = sweep_profiles(cfg, PROFILES, key, replicas=2, backend="ref")
+        pal = sweep_profiles(cfg, PROFILES, key, replicas=2, backend="pallas")
+        np.testing.assert_allclose(
+            ref.windowed_cold_prob, scan.windowed_cold_prob, atol=1e-3
+        )
+        np.testing.assert_array_equal(
+            pal.windowed_cold_prob, ref.windowed_cold_prob
+        )
+        np.testing.assert_allclose(
+            ref.cold_start_prob, scan.cold_start_prob, atol=1e-3
+        )
+
+    def test_block_windowed_arrivals_include_rejects(self):
+        """Regression: block backends report true per-window arrival counts
+        (their own acc column), not served counts — they must match the
+        scan backend even when a saturated max_concurrency rejects."""
+        cfg = base_cfg(
+            sim_time=600.0,
+            window_bounds=tuple(np.linspace(0.0, 600.0, 7)),
+            expiration_threshold=10.0,
+            slots=8,
+            max_concurrency=3,
+            arrival_process=ExpSimProcess(rate=1.0),
+        )
+        profs = [SinusoidalRate(base=1.5, amplitude=0.6, period=300.0)]
+        key = jax.random.key(0)
+        scan = sweep_profiles(cfg, profs, key, replicas=2)
+        ref = sweep_profiles(cfg, profs, key, replicas=2, backend="ref")
+        assert (
+            scan.windows[0].n_arrivals.sum()
+            > (scan.windows[0].n_cold + scan.windows[0].n_warm).sum()
+        ), "test should exercise rejection"
+        np.testing.assert_allclose(
+            ref.windowed_arrivals, scan.windowed_arrivals, rtol=1e-12
+        )
+
+    def test_requires_window_bounds(self):
+        with pytest.raises(ValueError, match="window_bounds"):
+            sweep_profiles(
+                base_cfg(), PROFILES, jax.random.key(0), replicas=1
+            )
+
+    def test_block_rejects_irregular_windows(self):
+        cfg = self._cfg(window_bounds=(0.0, 100.0, 900.0))
+        with pytest.raises(ValueError, match="uniform"):
+            sweep_profiles(
+                cfg, PROFILES, jax.random.key(0), replicas=1, backend="ref"
+            )
+
+    def test_rate_sweep_refuses_timestamp_processes(self):
+        from repro.core.whatif import sweep
+
+        cfg = base_cfg(
+            arrival_process=NHPPArrivalProcess(
+                profile=SinusoidalRate(1.0, 0.5, 100.0)
+            )
+        )
+        with pytest.raises(ValueError, match="sweep_profiles"):
+            sweep(cfg, [1.0], [20.0], jax.random.key(0))

@@ -65,3 +65,20 @@ def test_trace_process_is_deterministic():
     b = np.asarray(tp.sample(jax.random.key(99), (6,)))
     np.testing.assert_array_equal(a, b)  # replay ignores the PRNG key
     np.testing.assert_allclose(a[:3], [0.5, 0.5, 3.0])
+
+
+def test_trace_loop_inserts_mean_gap_wrap():
+    """Regression: the looped replay used to slice the wrap gap off the
+    cycle, silently dropping the documented mean-gap wrap and shifting
+    every post-loop arrival.  The cycle is [gaps..., mean(gaps)]."""
+    tp = TraceArrivalProcess(timestamps=(0.5, 1.0, 4.0))
+    gaps = [0.5, 0.5, 3.0]
+    wrap = float(np.mean(gaps))
+    expected = (gaps + [wrap]) * 3
+    a = np.asarray(tp.sample(jax.random.key(0), (10,)))
+    np.testing.assert_allclose(a, np.asarray(expected[:10], np.float32))
+    # absolute-timestamp replay carries the same wrap contract
+    times, _ = tp.arrival_times(jax.random.key(0), (1, 10))
+    np.testing.assert_allclose(
+        np.asarray(times)[0], np.cumsum(expected[:10]), rtol=1e-12
+    )

@@ -8,6 +8,12 @@ import jax
 import numpy as np
 import pytest
 
+
+def jnp_ones(shape):
+    import jax.numpy as jnp
+
+    return jnp.ones(shape)
+
 from repro.core import ExpSimProcess, SimulationConfig
 from repro.core import simulator as sim_mod
 from repro.core.whatif import sweep, sweep_legacy
@@ -225,10 +231,50 @@ class TestRateRescaling:
         assert isinstance(g2, GammaSimProcess)
         np.testing.assert_allclose(g2.mean(), 0.25)
 
+    def test_every_shipping_family_rescales_mean_preserving(self):
+        """Regression: Gaussian/LogNormal/Pareto/Empirical used to raise
+        NotImplementedError from with_rate, crashing rate sweeps.  Every
+        family must now rescale to mean 1/rate without changing type."""
+        from repro.core import (
+            GaussianSimProcess,
+            LogNormalSimProcess,
+            ParetoSimProcess,
+        )
+        from repro.core.processes import EmpiricalSimProcess
+
+        procs = [
+            GaussianSimProcess(mu=2.0, sigma=0.1),
+            LogNormalSimProcess(mu=0.3, sigma=0.4),
+            ParetoSimProcess(alpha=3.0, x_m=1.0),
+            EmpiricalSimProcess(durations=(0.5, 1.5, 2.5, 3.5)),
+        ]
+        for p in procs:
+            q = p.with_rate(2.5)
+            assert type(q) is type(p)
+            np.testing.assert_allclose(q.mean(), 1 / 2.5, rtol=1e-9)
+        # ratio-of-moments shape preservation for the location-scale ones
+        g = procs[0].with_rate(2.5)
+        np.testing.assert_allclose(g.sigma / g.mu, 0.1 / 2.0, rtol=1e-9)
+
     def test_unscalable_family_falls_back_to_exponential(self):
-        from repro.core import GaussianSimProcess
+        from repro.core.processes import CustomSimProcess
         from repro.core.whatif import _rated
 
-        p = _rated(GaussianSimProcess(mu=2.0, sigma=0.1), 2.0)
+        p = _rated(
+            CustomSimProcess(fn=lambda k, s: jnp_ones(s), mean_value=1.0), 2.0
+        )
         assert isinstance(p, ExpSimProcess)
         assert p.rate == 2.0
+
+    def test_gaussian_sweep_no_longer_crashes(self):
+        """whatif.sweep over arrival rate with a Gaussian arrival family
+        used to crash via with_rate NotImplementedError."""
+        from repro.core import GaussianSimProcess
+
+        cfg = base_cfg(
+            arrival_process=GaussianSimProcess(mu=1.25, sigma=0.1),
+            sim_time=200.0,
+        )
+        res = sweep(cfg, [0.5, 1.0], [20.0], jax.random.key(0),
+                    replicas=1, steps=400)
+        assert res.cold_start_prob.shape == (1, 2)
