@@ -25,13 +25,15 @@ import numpy as np  # noqa: E402
 
 from repro.core import (  # noqa: E402
     ExpSimProcess,
+    Scenario,
     ServerlessSimulator,
-    SimulationConfig,
 )
 from repro.core import NHPPArrivalProcess, SinusoidalRate  # noqa: E402
+from repro.core import scenario as scn_api  # noqa: E402
+from repro.core import simulator as sim_mod  # noqa: E402
 from repro.core.metrics import histogram_to_distribution, mape  # noqa: E402
 from repro.core.pyref import simulate_pyref  # noqa: E402
-from repro.core.whatif import sweep, sweep_legacy, sweep_profiles  # noqa: E402
+from repro.core.whatif import sweep_legacy  # noqa: E402
 
 ROWS = []
 QUICK = False
@@ -53,7 +55,7 @@ def paper_cfg(sim_time=2e5, **kw):
         slots=64,
     )
     d.update(kw)
-    return SimulationConfig(**d)
+    return Scenario(**d)
 
 
 def bench_table1():
@@ -117,7 +119,12 @@ def bench_fig5_whatif_thresholds():
     rates = [0.2, 0.5, 1.0, 2.0]
     thresholds = [60.0, 300.0, 600.0, 1200.0]
     t0 = time.perf_counter()
-    res = sweep(cfg, rates, thresholds, jax.random.key(1), replicas=2)
+    res = scn_api.sweep(
+        cfg,
+        over={"expiration_threshold": thresholds, "arrival_rate": rates},
+        key=jax.random.key(1),
+        replicas=2,
+    )
     dt = time.perf_counter() - t0
     mono_t = bool((np.diff(res.cold_start_prob, axis=0) <= 0.02).all())
     mono_r = bool((np.diff(res.cold_start_prob, axis=1) <= 0.02).all())
@@ -314,11 +321,12 @@ def bench_fig5_sweep():
     cfg = paper_cfg(sim_time=sim_time, skip_time=50.0)
     key = jax.random.key(1)
     grid_cells = len(rates) * len(thresholds)
+    over = {"expiration_threshold": thresholds, "arrival_rate": rates}
 
     # warm the batched engine's single compile, then time execution
-    sweep(cfg, rates, thresholds, key, replicas=replicas, steps=steps)
+    scn_api.sweep(cfg, over=over, key=key, replicas=replicas, steps=steps)
     t0 = time.perf_counter()
-    res = sweep(cfg, rates, thresholds, key, replicas=replicas, steps=steps)
+    res = scn_api.sweep(cfg, over=over, key=key, replicas=replicas, steps=steps)
     dt_batched = time.perf_counter() - t0
 
     t0 = time.perf_counter()
@@ -356,16 +364,16 @@ def bench_pallas_block():
         sim_time, steps, replicas = 4000.0, 4400, 2
     cfg = paper_cfg(sim_time=sim_time, skip_time=100.0)
     rates, thresholds = [0.5, 0.9], [300.0, 600.0]
-    key = jax.random.key(42)
-    kw = dict(replicas=replicas, steps=steps)
+    over = {"expiration_threshold": thresholds, "arrival_rate": rates}
+    kw = dict(key=jax.random.key(42), replicas=replicas, steps=steps)
 
-    scan = sweep(cfg, rates, thresholds, key, **kw)
-    sweep(cfg, rates, thresholds, key, backend="ref", **kw)  # warm compile
+    scan = scn_api.sweep(cfg, over=over, **kw)
+    scn_api.sweep(cfg, over=over, backend="ref", **kw)  # warm compile
     t0 = time.perf_counter()
-    ref = sweep(cfg, rates, thresholds, key, backend="ref", **kw)
+    ref = scn_api.sweep(cfg, over=over, backend="ref", **kw)
     dt_ref = time.perf_counter() - t0
     t0 = time.perf_counter()
-    pal = sweep(cfg, rates, thresholds, key, backend="pallas", **kw)
+    pal = scn_api.sweep(cfg, over=over, backend="pallas", **kw)
     dt_pal = time.perf_counter() - t0
 
     rel = np.abs(ref.avg_server_count / scan.avg_server_count - 1).max()
@@ -405,14 +413,14 @@ def bench_nhpp_sweep():
         skip_time=0.0,
     )
     steps = int(sim_time * 0.9 * 1.9 + 300)  # envelope-rate candidate budget
-    key = jax.random.key(3)
-    kw = dict(replicas=replicas, steps=steps)
-    sweep_profiles(cfg, profiles, key, **kw)  # warm the single compile
+    over = {"profile": profiles}
+    kw = dict(key=jax.random.key(3), replicas=replicas, steps=steps)
+    scn_api.sweep(cfg, over=over, **kw)  # warm the single compile
     t0 = time.perf_counter()
-    res = sweep_profiles(cfg, profiles, key, **kw)
+    res = scn_api.sweep(cfg, over=over, **kw)
     dt_scan = time.perf_counter() - t0
     t0 = time.perf_counter()
-    ref = sweep_profiles(cfg, profiles, key, backend="ref", **kw)
+    ref = scn_api.sweep(cfg, over=over, backend="ref", **kw)
     dt_ref = time.perf_counter() - t0
     agree = np.abs(ref.windowed_cold_prob - res.windowed_cold_prob).max()
     arrivals = int(res.windowed_arrivals.sum() * replicas)
@@ -424,6 +432,65 @@ def bench_nhpp_sweep():
         f"[{100*res.windowed_cold_prob.min():.2f},"
         f"{100*res.windowed_cold_prob.max():.2f}] "
         f"ref_vs_scan_maxdiff={agree:.1e}(<=1e-3)",
+    )
+
+
+def bench_scenario_grid():
+    """The unified Scenario API's 3-axis product grid (threshold × rate ×
+    horizon): compile count + wall-clock for ONE sweep() call vs the
+    legacy per-cell loop over the same cells.
+
+    ``us_per_call`` is the grid engine's wall-time per simulated arrival;
+    derived pins the trace count (the acceptance bar: 1 compile for the
+    whole product grid) and the speedup vs per-cell execution.
+    """
+    if QUICK:
+        thresholds = [60.0, 300.0]
+        rates = [0.5, 1.5]
+        horizons = [500.0, 1000.0]
+        steps, replicas = 1800, 1
+    else:
+        thresholds = list(np.linspace(60.0, 1200.0, 4))
+        rates = list(np.linspace(0.2, 2.0, 5))
+        horizons = [500.0, 1000.0, 2000.0]
+        steps, replicas = 4600, 2
+    cfg = paper_cfg(sim_time=max(horizons), skip_time=50.0)
+    over = {
+        "expiration_threshold": thresholds,
+        "arrival_rate": rates,
+        "sim_time": horizons,
+    }
+    key = jax.random.key(1)
+    kw = dict(key=key, replicas=replicas, steps=steps)
+
+    scn_api.sweep(cfg, over=over, **kw)  # warm the single compile
+    before = sim_mod.TRACE_COUNTS["simulate_sweep"]
+    t0 = time.perf_counter()
+    res = scn_api.sweep(cfg, over=over, **kw)
+    dt_grid = time.perf_counter() - t0
+    traces = sim_mod.TRACE_COUNTS["simulate_sweep"] - before
+
+    # per-cell baseline: one legacy sweep per horizon slice (shared jit)
+    t0 = time.perf_counter()
+    for h in horizons:
+        sweep_legacy(
+            Scenario.of(cfg, sim_time=h),
+            rates,
+            thresholds,
+            key,
+            replicas=replicas,
+            steps=steps,
+        )
+    dt_cells = time.perf_counter() - t0
+
+    cells = len(thresholds) * len(rates) * len(horizons)
+    arrivals = cells * replicas * steps
+    emit(
+        "bench_scenario_grid",
+        dt_grid / arrivals * 1e6,
+        f"cells={cells} traces={traces}(expect 0 warm) grid={dt_grid:.2f}s "
+        f"percell_loop={dt_cells:.2f}s speedup={dt_cells/dt_grid:.1f}x "
+        f"cold%[0,0,0]={100*res.cold_start_prob[0, 0, 0]:.2f}",
     )
 
 
@@ -484,6 +551,7 @@ def main(argv=None) -> None:
     if QUICK:
         bench_table1()
         bench_fig5_sweep()
+        bench_scenario_grid()
         bench_pallas_block()
         bench_nhpp_sweep()
     else:
@@ -492,6 +560,7 @@ def main(argv=None) -> None:
         bench_fig4_ci_convergence()
         bench_fig5_whatif_thresholds()
         bench_fig5_sweep()
+        bench_scenario_grid()
         bench_pallas_block()
         bench_nhpp_sweep()
         bench_fig1_concurrency_value()

@@ -19,12 +19,12 @@ from repro.core import (
     GaussianSimProcess,
     ParetoSimProcess,
     ServerlessSimulator,
-    SimulationConfig,
+    Scenario,
 )
 
 
 def run(arrival, warm, cold, label):
-    cfg = SimulationConfig(
+    cfg = Scenario(
         arrival_process=arrival,
         warm_service_process=warm,
         cold_service_process=cold,

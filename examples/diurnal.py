@@ -1,12 +1,14 @@
-"""Diurnal (non-stationary) workload: NHPP arrivals with a day-cycle rate
-profile, windowed metrics, and a single-compile sweep over profile shapes.
+"""Diurnal (non-stationary) workload through the Scenario API: NHPP
+arrivals with a day-cycle rate profile, windowed metrics, a single-compile
+(profile × threshold) product grid, and the trace → profile → what-if loop
+via ``PiecewiseConstantRate.fit``.
 
 The paper's headline use-case is replaying real platform workloads; real
 workloads are diurnal.  A stationary simulator answers "what is THE
 cold-start probability" — this example shows the question that actually
-matters for a time-varying load: *when* do cold starts happen, and how does
-the platform's expiration threshold interact with the load's peaks and
-troughs.
+matters for a time-varying load: *when* do cold starts happen, and how
+does the platform's expiration threshold interact with the load's peaks
+and troughs.
 
     PYTHONPATH=src python examples/diurnal.py [--replicas N] [--sim-time T]
 """
@@ -22,11 +24,11 @@ import numpy as np
 from repro.core import (
     ExpSimProcess,
     NHPPArrivalProcess,
-    ServerlessSimulator,
-    SimulationConfig,
+    PiecewiseConstantRate,
+    Scenario,
     SinusoidalRate,
+    scenario,
 )
-from repro.core.whatif import sweep_profiles
 
 
 def main(argv=None):
@@ -43,19 +45,18 @@ def main(argv=None):
 
     day = args.sim_time / 2.0  # two cycles over the horizon
     profile = SinusoidalRate(base=0.9, amplitude=0.7, period=day)
-    bounds = tuple(np.linspace(0.0, args.sim_time, args.windows + 1))
-    cfg = SimulationConfig(
-        arrival_process=NHPPArrivalProcess(profile=profile),
+    scn = Scenario(
+        rate_profile=profile,
         warm_service_process=ExpSimProcess(rate=1 / 1.991),
         cold_service_process=ExpSimProcess(rate=1 / 2.244),
         expiration_threshold=120.0,
         sim_time=args.sim_time,
         skip_time=0.0,
         slots=64,
-        window_bounds=bounds,
+        window_bounds=tuple(np.linspace(0.0, args.sim_time, args.windows + 1)),
     )
-    s = ServerlessSimulator(cfg).run(jax.random.key(0), replicas=args.replicas)
-    w = s.windows
+    res = scenario.run(scn, jax.random.key(0), replicas=args.replicas)
+    w = res.windows
 
     print(f"== diurnal NHPP run: base 0.9 rps, amplitude 0.7, period {day:.0f}s ==")
     print(f"{'window':>14s} {'arrivals/s':>11s} {'instances':>10s} {'cold %':>8s}")
@@ -65,25 +66,53 @@ def main(argv=None):
             f"{w.arrival_rate[i]:11.3f} {w.avg_instance_count[i]:10.2f} "
             f"{100 * w.cold_start_prob[i]:8.2f}"
         )
-    print(f"  aggregate cold-start prob: {s.cold_start_prob:.4f}")
+    print(f"  aggregate cold-start prob: {res.cold_start_prob:.4f}")
 
-    # What-if over profile shapes: one compile, one device call for the grid.
+    # What-if over (profile × threshold): one compile, one device call for
+    # the whole product grid — the ROADMAP's profile×threshold item.
     amplitudes = (0.2, 0.5, 0.8)
-    profiles = [
-        SinusoidalRate(base=0.9, amplitude=a, period=day) for a in amplitudes
-    ]
-    res = sweep_profiles(
-        cfg, profiles, jax.random.key(1), replicas=max(args.replicas // 2, 1)
+    thresholds = (60.0, 120.0, 300.0)
+    grid = scenario.sweep(
+        scn,
+        over={
+            "profile": [
+                SinusoidalRate(base=0.9, amplitude=a, period=day)
+                for a in amplitudes
+            ],
+            "expiration_threshold": list(thresholds),
+        },
+        key=jax.random.key(1),
+        replicas=max(args.replicas // 2, 1),
     )
-    print("== amplitude sweep (single-compile batched engine) ==")
-    for a, agg, curve in zip(
-        amplitudes, res.cold_start_prob, res.windowed_cold_prob
-    ):
-        peak = 100 * curve.max()
-        print(
-            f"  amplitude {a:.1f}: aggregate cold% {100 * agg:6.2f}, "
-            f"worst window {peak:6.2f}"
-        )
+    print("== (amplitude × threshold) grid: worst-window cold% ==")
+    print("  amp \\ thr " + "".join(f"{t:>8.0f}s" for t in thresholds))
+    for i, a in enumerate(amplitudes):
+        worst = 100 * grid.windowed_cold_prob[i].max(axis=-1)
+        print("  " + f"{a:7.1f}  " + "".join(f"{v:>9.2f}" for v in worst))
+
+    # Close the loop: record a trace from the true profile, fit an
+    # hourly-binned PiecewiseConstantRate from the timestamps alone, and
+    # re-simulate on the *fitted* profile.
+    times, _ = NHPPArrivalProcess(profile=profile).arrival_times(
+        jax.random.key(2), (1, int(args.sim_time * 1.9) + 200)
+    )
+    trace = np.asarray(times)[0]
+    trace = trace[trace < args.sim_time]
+    fitted = PiecewiseConstantRate.fit(trace, bin_width=args.sim_time / 24.0)
+    refit = scenario.run(
+        Scenario.of(scn, arrival_process=None, rate_profile=fitted),
+        jax.random.key(3),
+        replicas=args.replicas,
+    )
+    print("== trace → profile → what-if loop ==")
+    print(
+        f"  recorded {len(trace)} arrivals; fitted {len(fitted.rates)} bins, "
+        f"rate range [{min(fitted.rates):.3f}, {max(fitted.rates):.3f}] rps"
+    )
+    print(
+        f"  cold-start prob: true profile {res.cold_start_prob:.4f}, "
+        f"fitted profile {refit.cold_start_prob:.4f}"
+    )
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
-"""Quickstart: reproduce the paper's Table 1 workload and predict QoS/cost.
+"""Quickstart: reproduce the paper's Table 1 workload and predict QoS/cost
+through the unified Scenario API — describe workload + platform once, call
+``run`` for metrics, ``sweep`` for a what-if grid.
 
     PYTHONPATH=src python examples/quickstart.py [--replicas N] [--sim-time T]
 """
@@ -10,8 +12,7 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.core import ServerlessSimulator
-from repro.core.cost import estimate_cost
+from repro.core import ExpSimProcess, Scenario, scenario
 
 
 def main(argv=None):
@@ -22,29 +23,44 @@ def main(argv=None):
 
     # The paper's reference workload: Poisson arrivals at 0.9 req/s, warm
     # service 1.991 s, cold service 2.244 s, AWS-style 10-min expiration.
-    sim = ServerlessSimulator.from_rates(
-        arrival_rate=0.9,
-        warm_service_time=1.991,
-        cold_service_time=2.244,
+    scn = Scenario(
+        arrival_process=ExpSimProcess(rate=0.9),
+        warm_service_process=ExpSimProcess(rate=1 / 1.991),
+        cold_service_process=ExpSimProcess(rate=1 / 2.244),
         expiration_threshold=600.0,
         sim_time=args.sim_time,
         skip_time=100.0,
         slots=64,
     )
-    summary = sim.run(jax.random.key(0), replicas=args.replicas)
+    res = scenario.run(scn, jax.random.key(0), replicas=args.replicas)
 
     print("== steady-state prediction (paper Table 1) ==")
-    for k, v in summary.to_dict().items():
+    for k, v in res.summary.to_dict().items():
         print(f"  {k:22s} {v:.6g}")
-    lo, hi = summary.cold_start_prob_ci()
+    lo, hi = res.summary.cold_start_prob_ci()
     print(f"  cold-start 95% CI      [{lo:.5f}, {hi:.5f}]")
 
-    cost = estimate_cost(summary)
     print("== cost over the horizon (per Monte-Carlo replica) ==")
-    print(f"  developer requests   ${cost.developer_request_cost:.4f}")
-    print(f"  developer runtime    ${cost.developer_runtime_cost:.4f}")
-    print(f"  provider infra       ${cost.provider_infra_cost:.4f}")
-    print(f"  provider margin      {cost.provider_margin_ratio:.3f}x")
+    print(f"  developer requests   ${res.cost.developer_request_cost:.4f}")
+    print(f"  developer runtime    ${res.cost.developer_runtime_cost:.4f}")
+    print(f"  provider infra       ${res.cost.provider_infra_cost:.4f}")
+    print(f"  provider margin      {res.cost.provider_margin_ratio:.3f}x")
+
+    # One declarative what-if grid: threshold × rate, single compile.
+    grid = scenario.sweep(
+        scn,
+        over={
+            "expiration_threshold": [60.0, 600.0],
+            "arrival_rate": [0.5, 0.9, 1.8],
+        },
+        key=jax.random.key(1),
+        replicas=max(args.replicas // 2, 1),
+    )
+    print("== what-if grid: cold-start probability [%] ==")
+    print("  threshold \\ rate " + "".join(f"{r:>8.2f}" for r in grid.axes["arrival_rate"]))
+    for i, t in enumerate(grid.axes["expiration_threshold"]):
+        row = "".join(f"{100 * grid.cold_start_prob[i, j]:>8.3f}" for j in range(3))
+        print(f"  {t:>8.0f}s        {row}")
 
 
 if __name__ == "__main__":

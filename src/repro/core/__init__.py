@@ -7,6 +7,14 @@ event-driven loop becomes an arrival-driven ``lax.scan`` over a fixed-size
 instance pool with closed-form integration between arrivals, and thousands
 of Monte-Carlo replicas run under ``vmap``.
 
+The front door is the unified Scenario API (DESIGN.md §8):
+
+>>> from repro.core import Scenario, ExpSimProcess, scenario
+>>> scn = Scenario(arrival_process=ExpSimProcess(rate=0.9), ...)
+>>> res = scenario.run(scn, jax.random.key(0), replicas=8)
+>>> grid = scenario.sweep(scn, over={"expiration_threshold": [...],
+...                                  "arrival_rate": [...]}, key=key)
+
 Importing this package enables 64-bit mode in JAX: simulated clocks reach
 1e6+ seconds and sub-second billing resolution requires f64 accumulators.
 Model/serving code elsewhere in ``repro`` is dtype-explicit (bf16/f32) and
@@ -25,6 +33,7 @@ from repro.core.processes import (  # noqa: E402
     WeibullSimProcess,
     GammaSimProcess,
     LogNormalSimProcess,
+    MMPPArrivalProcess,
     NHPPArrivalProcess,
     ParetoSimProcess,
     PiecewiseConstantRate,
@@ -34,13 +43,21 @@ from repro.core.processes import (  # noqa: E402
     SimProcess,
     TraceArrivalProcess,
 )
+from repro.core.scenario import (  # noqa: E402
+    GridResult,
+    Result,
+    Scenario,
+    SimulationConfig,
+    StaticConfig,
+    WorkloadParams,
+    run,
+    sweep,
+)
+from repro.core import scenario  # noqa: E402
 from repro.core.simulator import (  # noqa: E402
     ServerlessSimulator,
-    SimulationConfig,
     SimulationSummary,
-    StaticConfig,
     WindowedMetrics,
-    WorkloadParams,
 )
 from repro.core.temporal import (  # noqa: E402
     InstanceSnapshot,
@@ -57,6 +74,7 @@ __all__ = [
     "WeibullSimProcess",
     "GammaSimProcess",
     "LogNormalSimProcess",
+    "MMPPArrivalProcess",
     "NHPPArrivalProcess",
     "ParetoSimProcess",
     "PiecewiseConstantRate",
@@ -64,6 +82,12 @@ __all__ = [
     "SinusoidalRate",
     "TraceArrivalProcess",
     "BatchArrivalProcess",
+    "Scenario",
+    "Result",
+    "GridResult",
+    "run",
+    "sweep",
+    "scenario",
     "ServerlessSimulator",
     "SimulationConfig",
     "SimulationSummary",

@@ -11,8 +11,10 @@ paper's what-if analysis targets.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
-from repro.core.simulator import SimulationSummary
+if TYPE_CHECKING:  # annotation-only: cost sits below scenario/simulator
+    from repro.core.simulator import SimulationSummary
 
 # AWS Lambda list prices (us-east-1, 2020-era, matching the paper's setup).
 AWS_PER_REQUEST = 0.20 / 1e6  # $ per request

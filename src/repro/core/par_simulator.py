@@ -32,11 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scenario import Scenario, StaticConfig, WorkloadParams
 from repro.core.simulator import (
-    SimulationConfig,
     SimulationSummary,
-    StaticConfig,
-    WorkloadParams,
     interval_integrals,
     histogram_update,
     _NEG_INF,
@@ -217,7 +215,7 @@ def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadPar
 class ParServerlessSimulator:
     """Concurrency-value platform simulator (Knative / Cloud Run style)."""
 
-    def __init__(self, config: SimulationConfig, concurrency_value: int = 1):
+    def __init__(self, config: Scenario, concurrency_value: int = 1):
         if concurrency_value < 1:
             raise ValueError("concurrency_value must be >= 1")
         self.config = config
@@ -248,7 +246,7 @@ class ParServerlessSimulator:
         if (t_last < cfg.sim_time).any():
             raise RuntimeError("arrivals ended before sim_time; pass larger steps")
         if acc["overflow"].sum() > 0:
-            raise RuntimeError("instance-pool overflow; raise SimulationConfig.slots")
+            raise RuntimeError("instance-pool overflow; raise Scenario.slots")
         return ParSimulationSummary(
             n_cold=acc["n_cold"],
             n_warm=acc["n_warm"],

@@ -46,9 +46,10 @@ class SimProcess:
     def with_rate(self, rate: float) -> "SimProcess":
         """Return a copy rescaled to ``rate`` events per unit time.
 
-        What-if sweeps (``core.whatif``) re-rate the base config's arrival
-        process per grid column through this hook, preserving the process
-        family instead of silently substituting an exponential.
+        What-if sweeps (``scenario.sweep`` over ``arrival_rate``) re-rate
+        the scenario's arrival process per grid column through this hook,
+        preserving the process family instead of silently substituting an
+        exponential.
         """
         raise NotImplementedError(
             f"{type(self).__name__} does not support rate rescaling"
@@ -359,6 +360,41 @@ class PiecewiseConstantRate(RateProfile):
     def max_rate(self):
         return float(max(self.rates))
 
+    @classmethod
+    def fit(
+        cls,
+        timestamps,
+        bin_width: float,
+        rate_floor: float = 1e-9,
+    ) -> "PiecewiseConstantRate":
+        """Estimate a profile from recorded arrival timestamps.
+
+        The paper's workflow in reverse gear: measure a workload on the
+        real platform, bin the arrival instants (e.g. hourly Lambda
+        invocation counts → ``bin_width=3600``), and turn per-bin counts
+        into per-bin rates — the profile a what-if sweep (or an NHPP
+        re-simulation) then consumes, closing the trace → profile →
+        what-if loop.  Empty bins clamp to ``rate_floor`` (rates must stay
+        positive for the thinning envelope); the final bin's rate extends
+        past the last edge, so re-simulating beyond the recorded horizon
+        holds the last observed level.
+        """
+        ts = np.asarray(timestamps, dtype=np.float64)
+        if ts.ndim != 1 or len(ts) < 1:
+            raise ValueError("need a 1-D array of >= 1 arrival timestamps")
+        if (ts < 0).any() or (np.diff(ts) < 0).any():
+            raise ValueError("timestamps must be non-negative and sorted")
+        if bin_width <= 0:
+            raise ValueError("bin_width must be positive")
+        # half-open bin membership [k·w, (k+1)·w), like the metric windows
+        n_bins = int(np.floor(ts.max() / bin_width)) + 1
+        counts, _ = np.histogram(
+            ts, bins=n_bins, range=(0.0, n_bins * bin_width)
+        )
+        rates = np.maximum(counts / bin_width, rate_floor)
+        edges = np.arange(1, n_bins) * bin_width
+        return cls(edges=tuple(edges), rates=tuple(rates))
+
 
 @dataclasses.dataclass(frozen=True)
 class SinusoidalRate(RateProfile):
@@ -426,6 +462,76 @@ class NHPPArrivalProcess(SimProcess, ArrivalTimeProcess):
         accept = u * lam <= self.profile.rate(cand)
         times = jnp.sort(jnp.where(accept, cand, PAD_TIME), axis=-1)
         coverage = cand[..., -1]
+        return times, coverage
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPPArrivalProcess(SimProcess, ArrivalTimeProcess):
+    """Two-phase Markov-modulated Poisson process (bursty arrivals).
+
+    The simulator-side counterpart of ``data/workload.py::mmpp_arrivals``:
+    the arrival intensity alternates between ``rate_low`` and
+    ``rate_high``, switching phase at exponential(``switch_rate``) epochs,
+    starting in the low phase — the canonical doubly-stochastic workload
+    closed-form Markovian models cannot express.
+
+    Sampling is NHPP thinning against a *random* per-row rate function:
+    each row draws its own switch schedule (cumsum of exponential gaps),
+    candidates come from a homogeneous Poisson at the envelope
+    ``rate_high``, and candidate t is accepted with probability
+    r(t)/rate_high where the phase at t is the parity of switches before
+    it.  Everything is one fused device program per ``[replicas, N]``
+    buffer — no sequential loop.
+
+    ``mean()`` reports the candidate gap ``1/rate_high`` so
+    ``steps_needed()`` sizes the candidate buffer; the switch schedule is
+    sized to the same N, so coverage is ``min(candidate, switch)``
+    coverage and the draw-time guard catches under-sized buffers (raise
+    ``steps`` if ``switch_rate`` is unusually high relative to
+    ``rate_high``).
+    """
+
+    rate_low: float
+    rate_high: float
+    switch_rate: float
+
+    def __post_init__(self):
+        if self.rate_low <= 0 or self.rate_high <= 0 or self.switch_rate <= 0:
+            raise ValueError("MMPP rates must be positive")
+        if self.rate_high < self.rate_low:
+            raise ValueError("need rate_high >= rate_low (thinning envelope)")
+
+    def mean(self):
+        return 1.0 / self.rate_high
+
+    def _raw_sample(self, key, shape):
+        raise NotImplementedError(
+            "MMPP arrivals have no stationary gap distribution; engines "
+            "consume them through arrival_times() (prestamped path)"
+        )
+
+    def phase_high(self, switch_times: Array, t: Array) -> Array:
+        """Phase at time(s) ``t`` given one row's ascending switch epochs:
+        True in the high phase (odd number of switches before t)."""
+        n_sw = jnp.searchsorted(switch_times, t, side="right")
+        return (n_sw % 2) == 1
+
+    def arrival_times(self, key, shape):
+        lam = self.rate_high
+        k_gap, k_acc, k_sw = jax.random.split(key, 3)
+        gaps = jax.random.exponential(k_gap, shape) / lam
+        cand = jnp.cumsum(gaps.astype(jnp.float64), axis=-1)
+        sw_gaps = jax.random.exponential(k_sw, shape) / self.switch_rate
+        sw = jnp.cumsum(sw_gaps.astype(jnp.float64), axis=-1)
+        # per-row phase lookup: rows carry independent switch schedules
+        flat_c = cand.reshape(-1, shape[-1])
+        flat_s = sw.reshape(-1, shape[-1])
+        high = jax.vmap(self.phase_high)(flat_s, flat_c).reshape(shape)
+        rate_at = jnp.where(high, self.rate_high, self.rate_low)
+        u = jax.random.uniform(k_acc, shape)
+        accept = u * lam <= rate_at
+        times = jnp.sort(jnp.where(accept, cand, PAD_TIME), axis=-1)
+        coverage = jnp.minimum(cand[..., -1], sw[..., -1])
         return times, coverage
 
 

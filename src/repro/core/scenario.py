@@ -1,0 +1,1068 @@
+"""The unified Scenario/Experiment API (DESIGN.md §8).
+
+The paper positions SimFaaS as the tool you reach for *instead of* a real
+platform: "describe workload + platform, get metrics" should be one call.
+This module is that front door:
+
+* :class:`Scenario` — one declarative, frozen description of a simulation:
+  the arrival process *or* a rate profile, the service/cold-start
+  processes, platform limits, horizon/warm-up, metric windows and billing.
+* :func:`run` — execute one scenario on any engine (``scan`` steady-state,
+  ``temporal`` transient, ``par`` concurrency-value) and any backend
+  (``scan`` f64, ``pallas``/``ref`` f32 block engine), returning a
+  :class:`Result` bundling the summary and its cost estimate.
+* :func:`sweep` — an arbitrary product grid over scenario fields
+  (``over={"expiration_threshold": [...], "arrival_rate": [...],
+  "sim_time": [...], "profile": [...]}``) returning a :class:`GridResult`
+  with named axes.
+
+``sweep`` auto-partitions swept fields (see ``_STATIC_FIELDS`` /
+``_DRAW_FIELDS`` / ``_PARAM_FIELDS``):
+
+* **static** fields (``slots``, ``max_concurrency``, ``routing``, …)
+  change the compiled program — each combination recompiles, looping in
+  Python on the outermost grid axis;
+* **draw** fields (``arrival_rate``, ``profile``, ``expiration_threshold``,
+  the processes themselves) change the per-cell workload draws — one key
+  split per cell, in the same chained order as the legacy per-cell loop,
+  so grids are cell-by-cell reproducible against ``whatif.sweep_legacy``;
+* **param** fields (``sim_time``, ``skip_time``) are pure traced values:
+  cells along these axes *share* the draw-field cells' sample buffers
+  (common random numbers across horizons) and only move
+  :class:`WorkloadParams` columns.
+
+Everything that is not static is flattened onto the single vmapped grid
+axis of ``simulator._simulate_sweep`` — a (threshold × rate × horizon)
+product grid is ONE compile and ONE device call, pinned by
+``TRACE_COUNTS``.
+
+The compile-time/run-time machinery lives here too: :class:`StaticConfig`
+(hashable jit structure) and :class:`WorkloadParams` (traced pytree) are
+the two halves every engine consumes; :class:`SimulationConfig` survives
+as a deprecated alias of :class:`Scenario` for pre-Scenario code.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import itertools
+import warnings
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import BillingModel, CostEstimate, estimate_cost
+from repro.core.processes import (
+    ArrivalTimeProcess,
+    ExpSimProcess,
+    NHPPArrivalProcess,
+    RateProfile,
+    SimProcess,
+)
+
+Array = jax.Array
+
+# Python-side trace counters: incremented when a jitted entry point is
+# (re-)traced, untouched on compile-cache hits.  Tests assert a whole
+# what-if sweep costs exactly one trace.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticConfig:
+    """Compile-time structure of the simulation (hashable jit static arg).
+
+    Everything here changes the *shape or code* of the compiled program.
+    Workload parameters (rates, threshold, horizon) are deliberately NOT
+    part of this class — they are traced values in ``WorkloadParams``.
+    """
+
+    slots: int
+    max_concurrency: int
+    routing: str
+    scan_unroll: int
+    track_histogram: bool
+    hist_bins: int
+    # prestamped: the scan consumes absolute arrival timestamps (f64) in
+    # place of inter-arrival gaps — the non-stationary/trace-replay path.
+    prestamped: bool = False
+    # number of metric windows (0 = windowed metrics off); the window
+    # *boundaries* are traced values in WorkloadParams.window_bounds.
+    n_windows: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadParams:
+    """Dynamic (traced) workload parameters — a jit-transparent pytree.
+
+    Leaves are f64 scalars for a single run, or ``[C]`` vectors for a
+    batched what-if sweep (one entry per grid row).  Changing these values
+    never triggers recompilation.
+    """
+
+    expiration_threshold: Array
+    sim_time: Array
+    skip_time: Array
+    # Metric-window boundaries: f64 ``[W+1]`` for a single run (shared by
+    # replicas) or ``[C, W+1]`` for a sweep; ``[0]`` / ``[C, 0]`` when
+    # windowed metrics are off (StaticConfig.n_windows == 0).
+    window_bounds: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
+    )
+
+    @classmethod
+    def of(
+        cls, expiration_threshold, sim_time, skip_time, window_bounds=None
+    ) -> "WorkloadParams":
+        as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
+        wb = (
+            as64(window_bounds)
+            if window_bounds is not None
+            else jnp.zeros((0,), dtype=jnp.float64)
+        )
+        return cls(
+            as64(expiration_threshold), as64(sim_time), as64(skip_time), wb
+        )
+
+
+jax.tree_util.register_dataclass(
+    WorkloadParams,
+    data_fields=(
+        "expiration_threshold",
+        "sim_time",
+        "skip_time",
+        "window_bounds",
+    ),
+    meta_fields=(),
+)
+
+
+def _rated(process: SimProcess, rate: float) -> SimProcess:
+    """Re-rate an arrival process; fall back to exponential when the
+    family has no rate handle (the legacy what-if behaviour)."""
+    try:
+        return process.with_rate(float(rate))
+    except NotImplementedError:
+        return ExpSimProcess(rate=float(rate))
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One declarative description of a serverless simulation experiment.
+
+    Workload: either ``arrival_process`` (any :class:`SimProcess`,
+    including timestamp processes such as NHPP/MMPP/trace replay) or
+    ``rate_profile`` (a :class:`RateProfile`, lowered to
+    ``NHPPArrivalProcess``); ``arrival_rate`` optionally re-rates a
+    stationary arrival family (preserving its shape via ``with_rate``).
+
+    Platform: ``expiration_threshold``, ``max_concurrency``, ``slots``,
+    ``routing``, ``concurrency_value`` (requests per instance — the par
+    engine's Knative-style knob).  Horizon: ``sim_time`` / ``skip_time``.
+    Metrics: ``window_bounds``, ``track_histogram``.  Billing: a
+    :class:`BillingModel` consumed by :func:`run`/:func:`sweep` cost
+    grids.
+
+    Not passed to jit directly: ``static_config()`` extracts the hashable
+    compile-time structure and ``workload_params()`` the traced run-time
+    values (module docstring).
+    """
+
+    arrival_process: Optional[SimProcess] = None
+    warm_service_process: Optional[SimProcess] = None
+    cold_service_process: Optional[SimProcess] = None
+    expiration_threshold: float = 600.0
+    max_concurrency: int = 1000
+    sim_time: float = 1e5
+    skip_time: float = 100.0  # warm-up transient excluded from metrics
+    slots: int = 64  # instance-pool array size (>= peak live instances)
+    # warm routing policy: "newest" (paper / McGrath & Brenner priority
+    # scheduling) or "oldest" (LRU-like) — §Routing study
+    routing: str = "newest"
+    scan_unroll: int = 1  # lax.scan unroll factor (perf knob, semantics-free)
+    track_histogram: bool = False
+    hist_bins: int = 65  # instance-count histogram bins [0, hist_bins)
+    # Windowed-metrics grid: W+1 ascending boundaries; per-window cold-start
+    # probability / arrival counts / mean instance counts are reported in
+    # SimulationSummary.windows.  None = off.
+    window_bounds: Optional[tuple] = None
+    # Declarative workload conveniences (resolved into arrival_process):
+    rate_profile: Optional[RateProfile] = None
+    arrival_rate: Optional[float] = None
+    # Per-instance request concurrency (engine="par"); 1 = scale-per-request.
+    concurrency_value: int = 1
+    billing: BillingModel = BillingModel()
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.skip_time >= self.sim_time:
+            raise ValueError("skip_time must be < sim_time")
+        if self.concurrency_value < 1:
+            raise ValueError("concurrency_value must be >= 1")
+        if self.window_bounds is not None:
+            wb = np.asarray(self.window_bounds, dtype=np.float64)
+            if wb.ndim != 1 or len(wb) < 2 or (np.diff(wb) <= 0).any():
+                raise ValueError(
+                    "window_bounds must be >= 2 strictly increasing values"
+                )
+            object.__setattr__(self, "window_bounds", tuple(float(b) for b in wb))
+        if self.warm_service_process is None or self.cold_service_process is None:
+            raise ValueError(
+                "Scenario needs warm_service_process and cold_service_process"
+            )
+        ap = self.arrival_process
+        if ap is None:
+            if self.rate_profile is None:
+                raise ValueError(
+                    "Scenario needs an arrival_process or a rate_profile"
+                )
+            ap = NHPPArrivalProcess(profile=self.rate_profile)
+        elif self.rate_profile is not None and not (
+            isinstance(ap, NHPPArrivalProcess)
+            and ap.profile == self.rate_profile
+        ):
+            # (an already-resolved profile round-trips through replace/of)
+            raise ValueError(
+                "give either arrival_process or rate_profile, not both"
+            )
+        if self.arrival_rate is not None:
+            if isinstance(ap, ArrivalTimeProcess):
+                raise ValueError(
+                    "arrival_rate cannot re-rate a timestamp process "
+                    "(NHPP/MMPP/trace); sweep over rate profiles instead"
+                )
+            ap = _rated(ap, self.arrival_rate)
+            # Fold the rate into the process and clear the field: a stale
+            # arrival_rate would silently re-rate any later
+            # replace(arrival_process=...) override (e.g. a per-cell grid
+            # re-rating) back to the old value.
+            object.__setattr__(self, "arrival_rate", None)
+        object.__setattr__(self, "arrival_process", ap)
+
+    @classmethod
+    def of(cls, config, **changes) -> "Scenario":
+        """A plain Scenario copied from any Scenario-shaped config (e.g. a
+        deprecated ``SimulationConfig``), with field overrides applied."""
+        kw = {f.name: getattr(config, f.name) for f in dataclasses.fields(cls)}
+        kw.update(changes)
+        return Scenario(**kw)
+
+    @property
+    def prestamped(self) -> bool:
+        """True when the arrival process yields absolute timestamps."""
+        return isinstance(self.arrival_process, ArrivalTimeProcess)
+
+    def steps_needed(self) -> int:
+        """Upper bound on arrivals within ``sim_time`` (mean + 6 sigma)."""
+        m = self.arrival_process.mean()
+        n = self.sim_time / m
+        return int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
+
+    def static_config(self) -> StaticConfig:
+        """The compile-relevant slice of this config."""
+        return StaticConfig(
+            slots=self.slots,
+            max_concurrency=self.max_concurrency,
+            routing=self.routing,
+            scan_unroll=self.scan_unroll,
+            track_histogram=self.track_histogram,
+            hist_bins=self.hist_bins,
+            prestamped=self.prestamped,
+            n_windows=len(self.window_bounds) - 1 if self.window_bounds else 0,
+        )
+
+    def workload_params(self) -> WorkloadParams:
+        """The traced (run-time) slice of this config."""
+        return WorkloadParams.of(
+            self.expiration_threshold,
+            self.sim_time,
+            self.skip_time,
+            self.window_bounds,
+        )
+
+
+class SimulationConfig(Scenario):
+    """Deprecated alias of :class:`Scenario` (the pre-Scenario config).
+
+    Kept so existing code and pickles keep working; construction emits a
+    ``DeprecationWarning``.  Use :class:`Scenario` with
+    :func:`repro.core.scenario.run` / :func:`sweep` instead.
+    """
+
+    def __post_init__(self):
+        warnings.warn(
+            "SimulationConfig is deprecated; use repro.core.Scenario with "
+            "scenario.run()/scenario.sweep()",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        super().__post_init__()
+
+
+# ---------------------------------------------------------------------------
+# run(): one scenario, one call, any engine × backend
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Result:
+    """One scenario's outcome: the summary plus its cost estimate."""
+
+    scenario: Scenario
+    summary: Any  # SimulationSummary (or ParSimulationSummary)
+    cost: CostEstimate
+    temporal: Optional[Any] = None  # TemporalSummary when engine="temporal"
+
+    # convenience passthroughs (the paper's headline metrics)
+    @property
+    def cold_start_prob(self) -> float:
+        return self.summary.cold_start_prob
+
+    @property
+    def rejection_prob(self) -> float:
+        return self.summary.rejection_prob
+
+    @property
+    def avg_server_count(self) -> float:
+        return self.summary.avg_server_count
+
+    @property
+    def avg_running_count(self) -> float:
+        return self.summary.avg_running_count
+
+    @property
+    def avg_response_time(self) -> float:
+        return self.summary.avg_response_time
+
+    @property
+    def avg_wasted_ratio(self) -> float:
+        return self.summary.avg_wasted_ratio
+
+    @property
+    def windows(self):
+        return self.summary.windows
+
+    def to_dict(self) -> dict:
+        return {
+            **self.summary.to_dict(),
+            "developer_cost": self.cost.developer_total,
+            "provider_cost": self.cost.provider_infra_cost,
+        }
+
+
+def run(
+    scenario: Scenario,
+    key,
+    *,
+    replicas: int = 8,
+    engine: str = "scan",
+    backend: str = "scan",
+    steps: Optional[int] = None,
+    grid=None,
+    initial_instances: Sequence = (),
+) -> Result:
+    """Run one scenario: ``engine`` picks the simulator semantics,
+    ``backend`` the execution substrate.
+
+    * ``engine="scan"`` — steady-state scale-per-request
+      (:class:`ServerlessSimulator`); backends ``"scan"`` (f64 exact),
+      ``"pallas"``/``"ref"`` (f32 block engine).
+    * ``engine="temporal"`` — transient analysis with a custom initial
+      pool (``initial_instances``) and point-in-time curves on ``grid``
+      (default: 33 points over the horizon).  Scan backend only.
+    * ``engine="par"`` — concurrency-value platforms
+      (``scenario.concurrency_value`` requests per instance).  Scan
+      backend only.
+    """
+    scn = Scenario.of(scenario)
+    temporal = None
+    if engine == "scan":
+        if backend == "scan":
+            from repro.core.simulator import ServerlessSimulator
+
+            summary = ServerlessSimulator(scn).run(
+                key, replicas=replicas, steps=steps
+            )
+        elif backend in ("pallas", "ref"):
+            summary = _run_block_single(scn, key, replicas, steps, backend)
+        else:
+            raise ValueError(f"unknown run backend {backend!r}")
+    elif engine == "temporal":
+        if backend != "scan":
+            raise ValueError("the temporal engine supports backend='scan' only")
+        from repro.core.temporal import ServerlessTemporalSimulator
+
+        g = np.asarray(
+            grid
+            if grid is not None
+            else np.linspace(0.0, scn.sim_time, 33),
+            dtype=np.float64,
+        )
+        temporal = ServerlessTemporalSimulator(
+            scn, initial_instances=initial_instances
+        ).run(key, g, replicas=replicas, steps=steps)
+        summary = temporal.steady
+    elif engine == "par":
+        if backend != "scan":
+            raise ValueError("the par engine supports backend='scan' only")
+        from repro.core.par_simulator import ParServerlessSimulator
+
+        summary = ParServerlessSimulator(scn, scn.concurrency_value).run(
+            key, replicas=replicas, steps=steps
+        )
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    return Result(
+        scenario=scn,
+        summary=summary,
+        cost=estimate_cost(summary, scn.billing),
+        temporal=temporal,
+    )
+
+
+def _run_block_single(scn, key, replicas, steps, backend):
+    """Single-scenario f32 block-engine run (C = replicas rows)."""
+    from repro.core.simulator import SimulationSummary, draw_workload_samples
+
+    if scn.window_bounds:
+        raise ValueError(
+            "windowed single runs need backend='scan' (block windowed "
+            "grids are available through sweep())"
+        )
+    if scn.track_histogram:
+        raise ValueError("histograms need the f64 scan backend")
+    n = steps or scn.steps_needed()
+    dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
+    if not scn.prestamped:
+        covered = np.asarray(dts, np.float64).sum(axis=1)
+        if (covered < scn.sim_time).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {covered.min():.1f} < {scn.sim_time}); "
+                "pass a larger `steps`"
+            )
+    rows = lambda v: np.full((replicas,), v)
+    kw = dict(
+        max_concurrency=scn.max_concurrency,
+        prestamped=scn.prestamped,
+        n_windows=0,
+        w_start=0.0,
+        w_dt=0.0,
+    )
+    acc = _block_launch(
+        scn,
+        rows(scn.expiration_threshold),
+        rows(scn.sim_time),
+        rows(scn.skip_time),
+        dts,
+        warms,
+        colds,
+        backend,
+        kw,
+    )
+    zeros = np.zeros((replicas,))
+    return SimulationSummary(
+        n_cold=acc[:, 0],
+        n_warm=acc[:, 1],
+        n_reject=acc[:, 2],
+        time_running=acc[:, 3],
+        time_idle=acc[:, 4],
+        sum_cold_resp=acc[:, 5],
+        sum_warm_resp=acc[:, 6],
+        lifespan_sum=zeros,
+        lifespan_count=zeros,
+        measured_time=scn.sim_time - scn.skip_time,
+        overflow=acc[:, 7],
+    )
+
+
+# ---------------------------------------------------------------------------
+# sweep(): arbitrary product grids with static/draw/param partitioning
+# ---------------------------------------------------------------------------
+
+# Fields that change the compiled program: each combination is a separate
+# compile (outermost Python loop).
+_STATIC_FIELDS = (
+    "slots",
+    "max_concurrency",
+    "routing",
+    "scan_unroll",
+    "track_histogram",
+    "hist_bins",
+    "window_bounds",
+)
+# Fields that change the per-cell sample draws (one chained key split per
+# cell, legacy-loop order).  expiration_threshold does not change draw
+# *values* but stays in the chain for cell-by-cell reproducibility against
+# the legacy per-cell loop.
+_DRAW_FIELDS = (
+    "expiration_threshold",
+    "arrival_rate",
+    "profile",
+    "arrival_process",
+    "warm_service_process",
+    "cold_service_process",
+)
+# Pure traced values: cells along these axes share the draw cells' sample
+# buffers (common random numbers across horizons/warm-ups).
+_PARAM_FIELDS = ("sim_time", "skip_time")
+
+
+@dataclasses.dataclass
+class GridResult:
+    """Named-axis product-grid results (one entry per ``over`` axis).
+
+    Every metric array has shape ``dims = tuple(len(v) for v in
+    axes.values())`` in the ``over`` insertion order; ``summaries`` is an
+    object array of per-cell :class:`SimulationSummary` (replica axes
+    pooled inside each cell).  Windowed arrays carry a trailing ``W`` axis
+    and are ``None`` when the scenario has no ``window_bounds`` (or when
+    ``window_bounds`` itself is swept).
+    """
+
+    axes: dict  # name -> tuple of swept values, insertion order = dims
+    replicas: int
+    backend: str
+    summaries: np.ndarray  # object[*dims]
+    cold_start_prob: np.ndarray  # [*dims]
+    rejection_prob: np.ndarray
+    avg_server_count: np.ndarray
+    avg_running_count: np.ndarray
+    avg_idle_count: np.ndarray
+    wasted_ratio: np.ndarray
+    avg_response_time: np.ndarray
+    developer_cost: np.ndarray
+    provider_cost: np.ndarray
+    window_bounds: Optional[np.ndarray] = None  # [W+1]
+    windowed_cold_prob: Optional[np.ndarray] = None  # [*dims, W]
+    windowed_arrivals: Optional[np.ndarray] = None  # [*dims, W] replica-mean
+    windowed_instance_count: Optional[np.ndarray] = None  # scan backend only
+
+    @property
+    def shape(self) -> tuple:
+        return tuple(len(v) for v in self.axes.values())
+
+    def axis(self, name: str) -> tuple:
+        return self.axes[name]
+
+    def cell(self, **coords):
+        """The per-cell summary at axis *values* (e.g. ``sim_time=500.0``)."""
+        idx = []
+        for name, vals in self.axes.items():
+            if name not in coords:
+                raise KeyError(f"missing coordinate {name!r}")
+            idx.append(list(vals).index(coords[name]))
+        return self.summaries[tuple(idx)]
+
+
+def _apply_axis(scn: Scenario, name: str, value) -> Scenario:
+    """One scenario-field override, with the workload conveniences."""
+    if name == "profile":
+        if not isinstance(value, RateProfile):
+            raise TypeError(f"expected RateProfile, got {type(value).__name__}")
+        return Scenario.of(
+            scn,
+            arrival_process=NHPPArrivalProcess(profile=value),
+            rate_profile=None,
+            arrival_rate=None,
+        )
+    if name == "arrival_process":
+        if not isinstance(value, SimProcess):
+            raise TypeError(f"expected SimProcess, got {type(value).__name__}")
+        return Scenario.of(
+            scn, arrival_process=value, rate_profile=None, arrival_rate=None
+        )
+    if name == "arrival_rate":
+        return Scenario.of(scn, arrival_rate=float(value))
+    return Scenario.of(scn, **{name: value})
+
+
+def sweep(
+    scenario: Scenario,
+    over: Mapping[str, Sequence],
+    key,
+    *,
+    replicas: int = 4,
+    backend: str = "scan",
+    steps: Optional[int] = None,
+) -> GridResult:
+    """Product-grid what-if sweep over arbitrary scenario fields.
+
+    ``over`` maps field names to value lists; the result grid has one
+    named axis per entry, in insertion order.  All non-static axes are
+    flattened onto the single vmapped grid axis and executed as ONE
+    compiled device call per static-field combination (module docstring
+    has the partitioning rules).  Backends as in :func:`run`.
+    """
+    if backend not in ("scan", "pallas", "ref"):
+        raise ValueError(f"unknown sweep backend {backend!r}")
+    names = list(over.keys())
+    if not names:
+        raise ValueError("over must name at least one axis to sweep")
+    vals = {}
+    for n in names:
+        if n not in _STATIC_FIELDS + _DRAW_FIELDS + _PARAM_FIELDS:
+            raise ValueError(
+                f"unknown sweep axis {n!r}; sweepable fields: "
+                f"{_STATIC_FIELDS + _DRAW_FIELDS + _PARAM_FIELDS}"
+            )
+        vals[n] = tuple(over[n])
+        if not vals[n]:
+            raise ValueError(f"sweep axis {n!r} is empty")
+    static_names = [n for n in names if n in _STATIC_FIELDS]
+    draw_names = [n for n in names if n in _DRAW_FIELDS]
+    param_names = [n for n in names if n in _PARAM_FIELDS]
+    dims = {n: len(vals[n]) for n in names}
+    base = Scenario.of(scenario)
+
+    # ---- draw cells: product over draw axes, one chained key split each
+    draw_combos = list(
+        itertools.product(*[vals[n] for n in draw_names])
+    ) or [()]
+    draw_cfgs = []
+    for combo in draw_combos:
+        c = base
+        for n, v in zip(draw_names, combo):
+            c = _apply_axis(c, n, v)
+        draw_cfgs.append(c)
+    stamped = {c.prestamped for c in draw_cfgs}
+    if len(stamped) > 1:
+        raise ValueError(
+            "cannot mix stationary and timestamp arrival processes in one "
+            "grid; split the sweep"
+        )
+    prestamped = stamped.pop()
+
+    sim_vals = vals.get("sim_time", (base.sim_time,))
+    skip_vals = vals.get("skip_time", (base.skip_time,))
+    if max(skip_vals) >= min(sim_vals):
+        raise ValueError("every skip_time must be < every sim_time on the grid")
+    max_sim = float(max(sim_vals))
+
+    from repro.core.simulator import draw_workload_samples
+
+    n_steps = (
+        int(steps)
+        if steps is not None
+        else max(
+            Scenario.of(c, sim_time=max_sim).steps_needed() for c in draw_cfgs
+        )
+    )
+    R = int(replicas)
+    D = len(draw_cfgs)
+    ds, ws, cs = [], [], []
+    for c in draw_cfgs:
+        key, sub = jax.random.split(key)
+        d_, w_, c_ = draw_workload_samples(
+            Scenario.of(c, sim_time=max_sim), sub, R, n_steps
+        )
+        ds.append(d_)
+        ws.append(w_)
+        cs.append(c_)
+    dts = jnp.concatenate(ds)  # [D*R, N]
+    warms = jnp.concatenate(ws)
+    colds = jnp.concatenate(cs)
+
+    # ---- param cells share draws: tile rows to C = D*Wn*R
+    param_combos = list(
+        itertools.product(*[vals[n] for n in param_names])
+    ) or [()]
+    Wn = len(param_combos)
+    C = D * Wn * R
+
+    def _param_col(name, default):
+        if name in param_names:
+            i = param_names.index(name)
+            col = np.asarray([pc[i] for pc in param_combos], np.float64)
+        else:
+            col = np.full((Wn,), default, np.float64)
+        return np.tile(np.repeat(col, R), D)  # [C]
+
+    thr_rows = np.repeat(
+        np.asarray([c.expiration_threshold for c in draw_cfgs], np.float64),
+        Wn * R,
+    )
+    sim_rows = _param_col("sim_time", base.sim_time)
+    skip_rows = _param_col("skip_time", base.skip_time)
+
+    def _expand(x):
+        if Wn == 1:
+            return x
+        return jnp.repeat(
+            x.reshape(D, 1, R, n_steps), Wn, axis=1
+        ).reshape(C, n_steps)
+
+    samples = tuple(_expand(x) for x in (dts, warms, colds))
+
+    # ---- static combos: one compile each (outermost Python loop)
+    static_combos = list(
+        itertools.product(*[vals[n] for n in static_names])
+    ) or [()]
+    S = len(static_combos)
+    all_summaries: list = []
+    windowed: list = []
+    shared_bounds: Optional[np.ndarray] = None
+    for combo in static_combos:
+        scn_s = base
+        for n, v in zip(static_names, combo):
+            scn_s = _apply_axis(scn_s, n, v)
+        scfg = dataclasses.replace(scn_s.static_config(), prestamped=prestamped)
+        smp = (
+            tuple(jnp.array(x, copy=True) for x in samples)
+            if S > 1
+            else samples
+        )
+        if backend == "scan":
+            cells, win = _scan_cells(
+                scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped
+            )
+        else:
+            cells, win = _block_cells(
+                scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
+                backend,
+            )
+        all_summaries.extend(cells)
+        windowed.append(win)
+        if "window_bounds" not in static_names and scn_s.window_bounds:
+            shared_bounds = np.asarray(scn_s.window_bounds)
+
+    # ---- assemble the named-axis grid (internal order: static, draw, param)
+    internal_names = static_names + draw_names + param_names
+    internal_dims = tuple(dims[n] for n in internal_names) or (1,)
+    perm = [internal_names.index(n) for n in names]
+
+    def _grid(values, trailing=0):
+        arr = np.asarray(values).reshape(
+            internal_dims + ((values.shape[-1],) if trailing else ())
+        )
+        return np.transpose(arr, perm + ([len(internal_dims)] if trailing else []))
+
+    billing = base.billing
+    costs = [estimate_cost(s, billing) for s in all_summaries]
+    metric = lambda f: _grid(np.asarray([f(s) for s in all_summaries]))
+    summaries_grid = np.empty((len(all_summaries),), dtype=object)
+    summaries_grid[:] = all_summaries
+    summaries_grid = _grid(summaries_grid)
+
+    w_cold = w_arr = w_inst = None
+    # Windowed grids need one shared window grid: a swept window_bounds
+    # axis yields per-combo W's that cannot stack (summaries keep the
+    # per-cell windows either way).
+    if (
+        "window_bounds" not in static_names
+        and windowed
+        and all(w is not None for w in windowed)
+    ):
+        stack = {
+            k: np.concatenate([w[k] for w in windowed])
+            for k in ("cold", "arrivals")
+        }
+        w_cold = _grid(stack["cold"], trailing=1)
+        w_arr = _grid(stack["arrivals"], trailing=1)
+        if all(w.get("instances") is not None for w in windowed):
+            w_inst = _grid(
+                np.concatenate([w["instances"] for w in windowed]), trailing=1
+            )
+
+    return GridResult(
+        axes={n: vals[n] for n in names},
+        replicas=R,
+        backend=backend,
+        summaries=summaries_grid,
+        cold_start_prob=metric(lambda s: s.cold_start_prob),
+        rejection_prob=metric(lambda s: s.rejection_prob),
+        avg_server_count=metric(lambda s: s.avg_server_count),
+        avg_running_count=metric(lambda s: s.avg_running_count),
+        avg_idle_count=metric(lambda s: s.avg_idle_count),
+        wasted_ratio=metric(lambda s: s.avg_wasted_ratio),
+        avg_response_time=metric(lambda s: s.avg_response_time),
+        developer_cost=_grid(np.asarray([c.developer_total for c in costs])),
+        provider_cost=_grid(np.asarray([c.provider_infra_cost for c in costs])),
+        window_bounds=shared_bounds,
+        windowed_cold_prob=w_cold,
+        windowed_arrivals=w_arr,
+        windowed_instance_count=w_inst,
+    )
+
+
+def _scan_cells(scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped):
+    """One f64 ``_simulate_sweep`` launch → per-cell summaries."""
+    from repro.core.simulator import (
+        SimulationSummary,
+        WindowedMetrics,
+        _simulate_sweep,
+    )
+
+    C = len(thr_rows)
+    wb = scn_s.window_bounds
+    W = len(wb) - 1 if wb else 0
+    wb_rows = (
+        np.tile(np.asarray(wb, np.float64), (C, 1))
+        if wb
+        else np.zeros((C, 0))
+    )
+    params = WorkloadParams.of(thr_rows, sim_rows, skip_rows, wb_rows)
+    with warnings.catch_warnings():
+        # buffer donation is a no-op on CPU; the warning is expected there
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable"
+        )
+        acc, t_last = _simulate_sweep(scfg, params, *samples)
+    acc = jax.tree.map(np.asarray, acc)
+    t_last = np.asarray(t_last)
+    if not prestamped and (t_last < sim_rows).any():
+        raise RuntimeError(
+            "pre-drawn arrivals ended before sim_time "
+            f"(min final t {t_last.min():.1f}); pass a larger `steps`"
+        )
+    if acc["overflow"].sum() > 0:
+        raise RuntimeError(
+            "instance-pool overflow during sweep; raise Scenario.slots"
+        )
+    n_cells = C // R
+    cell = jax.tree.map(lambda x: x.reshape((n_cells, R) + x.shape[1:]), acc)
+    bounds = np.asarray(wb, np.float64) if wb else None
+    widths = np.diff(bounds) if wb else None
+    summaries = []
+    w_cold = np.zeros((n_cells, W)) if W else None
+    w_arr = np.zeros((n_cells, W)) if W else None
+    w_inst = np.zeros((n_cells, W)) if W else None
+    for c in range(n_cells):
+        row = c * R
+        windows = None
+        if W:
+            windows = WindowedMetrics(
+                bounds=bounds,
+                n_cold=cell["w_cold"][c],
+                n_warm=cell["w_warm"][c],
+                n_arrivals=cell["w_arrivals"][c],
+                time_running=cell["w_run_t"][c],
+                time_idle=cell["w_idle_t"][c],
+            )
+            w_cold[c] = windows.cold_start_prob
+            w_arr[c] = windows.n_arrivals.mean(axis=0)
+            w_inst[c] = (
+                windows.time_running + windows.time_idle
+            ).mean(axis=0) / widths
+        summaries.append(
+            SimulationSummary(
+                n_cold=cell["n_cold"][c],
+                n_warm=cell["n_warm"][c],
+                n_reject=cell["n_reject"][c],
+                time_running=cell["time_running"][c],
+                time_idle=cell["time_idle"][c],
+                sum_cold_resp=cell["sum_cold_resp"][c],
+                sum_warm_resp=cell["sum_warm_resp"][c],
+                lifespan_sum=cell["lifespan_sum"][c],
+                lifespan_count=cell["lifespan_count"][c],
+                measured_time=float(sim_rows[row] - skip_rows[row]),
+                histogram=cell["hist"][c] if scfg.track_histogram else None,
+                overflow=cell["overflow"][c],
+                windows=windows,
+            )
+        )
+    win = (
+        dict(cold=w_cold, arrivals=w_arr, instances=w_inst) if W else None
+    )
+    return summaries, win
+
+
+_BLOCK_R = 8
+
+
+@functools.lru_cache(maxsize=1)
+def _ref_jit():
+    # kernels.ref pulls the model stack; import lazily so the default scan
+    # backend keeps core imports light.
+    from repro.kernels.ref import faas_sweep_ref
+
+    def counted(*args, **kw):
+        TRACE_COUNTS["sweep_block_ref"] += 1
+        return faas_sweep_ref(*args, **kw)
+
+    return jax.jit(
+        counted,
+        static_argnames=(
+            "max_concurrency",
+            "prestamped",
+            "n_windows",
+            "w_start",
+            "w_dt",
+        ),
+    )
+
+
+def _block_launch(
+    scn, t_exp, t_end, skip, dts, warms, colds, backend, kw, block_k=512
+):
+    """Shared f32 block-engine launch: pad to the kernel grid and run the
+    Pallas kernel (interpret mode off-TPU), or the jnp ref mirror.
+
+    ``t_exp``/``t_end``/``skip`` are per-row ``[C]`` vectors (all three are
+    traced sweep axes).  ``dts`` rows are gaps, or absolute times when
+    ``kw['prestamped']`` — both use the same 1e30 column fill: as a gap it
+    jumps the clock past the row's ``t_end``, as a timestamp it IS past
+    ``t_end``, so padding is inert either way.  Returns the f64
+    accumulator ``[C, cols]`` after the overflow guard.
+    """
+    # kernel imports stay local so the default scan backend keeps core
+    # imports light; NEG is the kernel's dead-slot sentinel
+    from repro.kernels.faas_event_step import NEG as _F32_NEG
+    from repro.kernels.faas_event_step import faas_sweep_pallas
+
+    if scn.routing != "newest":
+        raise ValueError(
+            "block backends implement newest-idle routing only; use "
+            f"backend='scan' for routing={scn.routing!r}"
+        )
+    C, n = dts.shape
+    dts, warms, colds = (
+        jnp.asarray(dts, jnp.float32),
+        jnp.asarray(warms, jnp.float32),
+        jnp.asarray(colds, jnp.float32),
+    )
+    as_rows = lambda x: jnp.broadcast_to(
+        jnp.asarray(x, jnp.float32), (C,)
+    )
+    t_exp, t_end, skip = as_rows(t_exp), as_rows(t_end), as_rows(skip)
+    M = scn.slots
+    alive0 = jnp.zeros((C, M), jnp.float32)
+    frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
+    t0 = jnp.zeros((C,), jnp.float32)
+    if backend == "pallas":
+        # pad rows to the replica-block, arrivals to the chunk size
+        block_k = min(block_k, max(n, 1))
+        pad_c = (-C) % _BLOCK_R
+        pad_k = (-n) % block_k
+
+        def pad(x, col_fill):
+            # extra rows are copies of row 0, sliced off after the launch
+            if pad_k:
+                x = jnp.concatenate(
+                    [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+                )
+            if pad_c:
+                x = jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+                )
+            return x
+
+        dts_p = pad(dts, 1e30)
+        warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
+        row_pad = lambda x: jnp.concatenate(
+            [x, jnp.ones((pad_c,), jnp.float32)]
+        ) if pad_c else x
+        state_pad = lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+        ) if pad_c else x
+        out = faas_sweep_pallas(
+            state_pad(alive0),
+            state_pad(frozen),
+            state_pad(frozen),
+            jnp.zeros((C + pad_c,), jnp.float32),
+            row_pad(t_exp),
+            dts_p,
+            warms_p,
+            colds_p,
+            t_end=row_pad(t_end),
+            skip=row_pad(skip),
+            block_r=_BLOCK_R,
+            block_k=block_k,
+            interpret=jax.default_backend() != "tpu",
+            **kw,
+        )
+        acc = np.asarray(out[4], np.float64)[:C]
+    else:
+        out = _ref_jit()(
+            alive0, frozen, frozen, t0, t_exp, dts, warms, colds,
+            t_end=t_end, skip=skip, **kw,
+        )
+        acc = np.asarray(out[4], np.float64)
+    if acc[:, 7].sum() > 0:
+        raise RuntimeError(
+            "instance-pool overflow during sweep; raise Scenario.slots"
+        )
+    return acc
+
+
+def _block_cells(
+    scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, backend
+):
+    """One f32 block-engine launch → per-cell summaries."""
+    from repro.core.simulator import SimulationSummary
+    from repro.kernels.faas_event_step import ACC_COLS
+
+    if scn_s.track_histogram:
+        raise ValueError("histograms need the f64 scan backend")
+    dts, warms, colds = samples
+    if not prestamped:
+        # Coverage guard on the REAL draws (before any padding): every
+        # row's arrivals must reach its horizon, else the grid would be
+        # silently truncated.  f64 sum of the f32 gaps — the padded kernel
+        # clock cannot be used for this check.
+        covered = np.asarray(dts, np.float64).sum(axis=1)
+        if (covered < sim_rows).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {covered.min():.1f}); pass a larger `steps`"
+            )
+    wb = scn_s.window_bounds
+    W = len(wb) - 1 if wb else 0
+    if W:
+        bounds = np.asarray(wb, np.float64)
+        widths = np.diff(bounds)
+        if not np.allclose(widths, widths[0], rtol=1e-9, atol=1e-12):
+            raise ValueError(
+                "block backends support uniform window grids only; use "
+                "backend='scan' for irregular window_bounds"
+            )
+        w_start, w_dt = float(bounds[0]), float(widths[0])
+    else:
+        w_start = w_dt = 0.0
+    kw = dict(
+        max_concurrency=scn_s.max_concurrency,
+        prestamped=prestamped,
+        n_windows=W,
+        w_start=w_start,
+        w_dt=w_dt,
+    )
+    acc = _block_launch(
+        scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, backend, kw
+    )
+    n_cells = len(thr_rows) // R
+    cell = acc.reshape(n_cells, R, ACC_COLS + 3 * W)
+    zeros = lambda: np.zeros((R,))
+    summaries = []
+    for c in range(n_cells):
+        row = c * R
+        summaries.append(
+            SimulationSummary(
+                n_cold=cell[c, :, 0],
+                n_warm=cell[c, :, 1],
+                n_reject=cell[c, :, 2],
+                time_running=cell[c, :, 3],
+                time_idle=cell[c, :, 4],
+                sum_cold_resp=cell[c, :, 5],
+                sum_warm_resp=cell[c, :, 6],
+                lifespan_sum=zeros(),
+                lifespan_count=zeros(),
+                measured_time=float(sim_rows[row] - skip_rows[row]),
+                overflow=cell[c, :, 7],
+            )
+        )
+    win = None
+    if W:
+        w_cold = cell[:, :, ACC_COLS : ACC_COLS + W].sum(axis=1)
+        w_served = cell[:, :, ACC_COLS + W : ACC_COLS + 2 * W].sum(axis=1)
+        w_arr = cell[:, :, ACC_COLS + 2 * W : ACC_COLS + 3 * W].sum(axis=1)
+        win = dict(
+            cold=w_cold / np.maximum(w_served, 1),
+            arrivals=w_arr / R,
+            instances=None,
+        )
+    return summaries, win

@@ -40,7 +40,6 @@ State layout per replica (struct-of-arrays over ``slots``):
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import functools
 from typing import Optional
@@ -55,159 +54,19 @@ from repro.core.processes import (
     SimProcess,
 )
 
+# The config machinery lives in repro.core.scenario (the unified Scenario
+# API); re-exported here for the engines and for pre-Scenario import paths.
+from repro.core.scenario import (  # noqa: F401
+    Scenario,
+    SimulationConfig,
+    StaticConfig,
+    TRACE_COUNTS,
+    WorkloadParams,
+)
+
 Array = jax.Array
 
 _NEG_INF = -1e30
-
-# Python-side trace counters: incremented when a jitted entry point is
-# (re-)traced, untouched on compile-cache hits.  Tests assert a whole
-# what-if sweep costs exactly one trace.
-TRACE_COUNTS: collections.Counter = collections.Counter()
-
-
-@dataclasses.dataclass(frozen=True)
-class StaticConfig:
-    """Compile-time structure of the simulation (hashable jit static arg).
-
-    Everything here changes the *shape or code* of the compiled program.
-    Workload parameters (rates, threshold, horizon) are deliberately NOT
-    part of this class — they are traced values in ``WorkloadParams``.
-    """
-
-    slots: int
-    max_concurrency: int
-    routing: str
-    scan_unroll: int
-    track_histogram: bool
-    hist_bins: int
-    # prestamped: the scan consumes absolute arrival timestamps (f64) in
-    # place of inter-arrival gaps — the non-stationary/trace-replay path.
-    prestamped: bool = False
-    # number of metric windows (0 = windowed metrics off); the window
-    # *boundaries* are traced values in WorkloadParams.window_bounds.
-    n_windows: int = 0
-
-
-@dataclasses.dataclass(frozen=True)
-class WorkloadParams:
-    """Dynamic (traced) workload parameters — a jit-transparent pytree.
-
-    Leaves are f64 scalars for a single run, or ``[C]`` vectors for a
-    batched what-if sweep (one entry per grid row).  Changing these values
-    never triggers recompilation.
-    """
-
-    expiration_threshold: Array
-    sim_time: Array
-    skip_time: Array
-    # Metric-window boundaries: f64 ``[W+1]`` for a single run (shared by
-    # replicas) or ``[C, W+1]`` for a sweep; ``[0]`` / ``[C, 0]`` when
-    # windowed metrics are off (StaticConfig.n_windows == 0).
-    window_bounds: Array = dataclasses.field(
-        default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
-    )
-
-    @classmethod
-    def of(
-        cls, expiration_threshold, sim_time, skip_time, window_bounds=None
-    ) -> "WorkloadParams":
-        as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
-        wb = (
-            as64(window_bounds)
-            if window_bounds is not None
-            else jnp.zeros((0,), dtype=jnp.float64)
-        )
-        return cls(
-            as64(expiration_threshold), as64(sim_time), as64(skip_time), wb
-        )
-
-
-jax.tree_util.register_dataclass(
-    WorkloadParams,
-    data_fields=(
-        "expiration_threshold",
-        "sim_time",
-        "skip_time",
-        "window_bounds",
-    ),
-    meta_fields=(),
-)
-
-
-@dataclasses.dataclass(frozen=True)
-class SimulationConfig:
-    """User-facing simulation parameters.
-
-    Not passed to jit directly: ``static_config()`` extracts the hashable
-    compile-time structure and ``workload_params()`` the traced run-time
-    values (see the module docstring's compile/run-time split).
-    """
-
-    arrival_process: SimProcess
-    warm_service_process: SimProcess
-    cold_service_process: SimProcess
-    expiration_threshold: float = 600.0
-    max_concurrency: int = 1000
-    sim_time: float = 1e5
-    skip_time: float = 100.0  # warm-up transient excluded from metrics
-    slots: int = 64  # instance-pool array size (>= peak live instances)
-    # warm routing policy: "newest" (paper / McGrath & Brenner priority
-    # scheduling) or "oldest" (LRU-like) — §Routing study
-    routing: str = "newest"
-    scan_unroll: int = 1  # lax.scan unroll factor (perf knob, semantics-free)
-    track_histogram: bool = False
-    hist_bins: int = 65  # instance-count histogram bins [0, hist_bins)
-    # Windowed-metrics grid: W+1 ascending boundaries; per-window cold-start
-    # probability / arrival counts / mean instance counts are reported in
-    # SimulationSummary.windows.  None = off.  The natural companion of
-    # non-stationary arrivals, where one scalar summary hides the curve.
-    window_bounds: Optional[tuple] = None
-
-    def __post_init__(self):
-        if self.slots < 1:
-            raise ValueError("slots must be >= 1")
-        if self.skip_time >= self.sim_time:
-            raise ValueError("skip_time must be < sim_time")
-        if self.window_bounds is not None:
-            wb = np.asarray(self.window_bounds, dtype=np.float64)
-            if wb.ndim != 1 or len(wb) < 2 or (np.diff(wb) <= 0).any():
-                raise ValueError(
-                    "window_bounds must be >= 2 strictly increasing values"
-                )
-            object.__setattr__(self, "window_bounds", tuple(float(b) for b in wb))
-
-    @property
-    def prestamped(self) -> bool:
-        """True when the arrival process yields absolute timestamps."""
-        return isinstance(self.arrival_process, ArrivalTimeProcess)
-
-    def steps_needed(self) -> int:
-        """Upper bound on arrivals within ``sim_time`` (mean + 6 sigma)."""
-        m = self.arrival_process.mean()
-        n = self.sim_time / m
-        return int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
-
-    def static_config(self) -> StaticConfig:
-        """The compile-relevant slice of this config."""
-        return StaticConfig(
-            slots=self.slots,
-            max_concurrency=self.max_concurrency,
-            routing=self.routing,
-            scan_unroll=self.scan_unroll,
-            track_histogram=self.track_histogram,
-            hist_bins=self.hist_bins,
-            prestamped=self.prestamped,
-            n_windows=len(self.window_bounds) - 1 if self.window_bounds else 0,
-        )
-
-    def workload_params(self) -> WorkloadParams:
-        """The traced (run-time) slice of this config."""
-        return WorkloadParams.of(
-            self.expiration_threshold,
-            self.sim_time,
-            self.skip_time,
-            self.window_bounds,
-        )
 
 
 @dataclasses.dataclass
@@ -400,7 +259,7 @@ def histogram_update(hist, alive, busy_until, exp_threshold, lo, hi):
 # ---------------------------------------------------------------------------
 
 
-def draw_workload_samples(cfg: SimulationConfig, key: Array, replicas: int, n: int):
+def draw_workload_samples(cfg: Scenario, key: Array, replicas: int, n: int):
     """Draw the (arrivals, warm, cold) sample buffers for ``n`` steps.
 
     Stationary arrival processes yield f32 ``[R, n]`` inter-arrival gaps;
@@ -662,12 +521,15 @@ def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds
 class ServerlessSimulator:
     """Steady-state scale-per-request simulator (paper §3, §4.1).
 
-    >>> sim = ServerlessSimulator(SimulationConfig(...))
+    >>> sim = ServerlessSimulator(Scenario(...))
     >>> summary = sim.run(jax.random.key(0), replicas=8)
     >>> summary.cold_start_prob
+
+    (Prefer the declarative front door ``repro.core.scenario.run`` — it
+    wraps this engine and adds backend/engine selection plus costing.)
     """
 
-    def __init__(self, config: SimulationConfig):
+    def __init__(self, config: Scenario):
         self.config = config
 
     @classmethod
@@ -681,7 +543,7 @@ class ServerlessSimulator:
         **kw,
     ) -> "ServerlessSimulator":
         """Paper-style constructor (exponential processes, Table 1)."""
-        cfg = SimulationConfig(
+        cfg = Scenario(
             arrival_process=ExpSimProcess(rate=arrival_rate),
             warm_service_process=ExpSimProcess(rate=1.0 / warm_service_time),
             cold_service_process=ExpSimProcess(rate=1.0 / cold_service_time),
@@ -722,7 +584,7 @@ class ServerlessSimulator:
             raise RuntimeError(
                 f"instance-pool overflow ({int(acc['overflow'].sum())} arrivals "
                 f"needed a slot beyond slots={cfg.slots} while below "
-                "max_concurrency); raise SimulationConfig.slots"
+                "max_concurrency); raise Scenario.slots"
             )
         windows = None
         if cfg.window_bounds:

@@ -20,11 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.scenario import Scenario, StaticConfig, WorkloadParams
 from repro.core.simulator import (
-    SimulationConfig,
     SimulationSummary,
-    StaticConfig,
-    WorkloadParams,
     _empty_acc,
     _make_scan_fn,
     _flush,
@@ -139,7 +137,7 @@ class ServerlessTemporalSimulator:
 
     def __init__(
         self,
-        config: SimulationConfig,
+        config: Scenario,
         initial_instances: Sequence[InstanceSnapshot] = (),
     ):
         if config.skip_time != 0.0:

@@ -1,57 +1,37 @@
-"""What-if analysis (paper §4.3 / Fig. 5): sweep platform configurations.
+"""What-if analysis (paper §4.3 / Fig. 5) — DEPRECATED entry points.
 
-The provider-facing workflow: grid over (arrival rate × expiration
-threshold) → predicted QoS (cold-start probability) and cost terms for each
-cell, so the platform can pick a workload-aware operating point.
+This module predates the unified Scenario API.  Its sweep entry points
+survive as thin deprecation shims over :mod:`repro.core.scenario`:
 
-Engine (DESIGN.md §4): workload parameters are *traced* run-time values, so
-the whole grid — every (threshold, rate) cell × every Monte-Carlo replica —
-is flattened onto one leading axis and executed as ONE jitted, donated call
-(``simulator._simulate_sweep``).  A 10×10 grid costs one XLA compile
-instead of one hundred and runs fully batched on the device.
+* ``sweep(base_config, rates, thresholds, ...)`` →
+  ``scenario.sweep(scn, over={"expiration_threshold": ..., "arrival_rate":
+  ...})`` reshaped into the legacy :class:`WhatIfResult`;
+* ``sweep_profiles(base_config, profiles, ...)`` →
+  ``scenario.sweep(scn, over={"profile": ...})`` reshaped into
+  :class:`ProfileSweepResult`.
 
-Backends:
-
-* ``"scan"`` (default) — the f64 ``lax.scan`` engine; exact sample-path
-  semantics (seed-exact vs ``core/pyref.py``), histograms and lifespans.
-* ``"pallas"`` — the VMEM-resident f32 block kernel
-  (``kernels/faas_event_step.faas_sweep_pallas``); the throughput path for
-  many-cell/many-replica sweeps on TPU.  Off-TPU it runs in interpret mode.
-* ``"ref"`` — the pure-jnp f32 mirror (``kernels/ref.faas_sweep_ref``);
-  bit-comparable to the Pallas kernel, the interpreter fallback.
-
-``sweep_legacy`` keeps the pre-batching per-cell loop as the benchmark
-baseline and as an oracle for the cell-by-cell equivalence tests.
+Both delegate to the same single-compile batched engine and are
+cell-by-cell identical to their pre-Scenario implementations (same key
+chaining, same uniform step budget, same row layout — pinned by the test
+suite).  ``sweep_legacy`` keeps the pre-batching per-cell loop as the
+benchmark baseline and as an oracle for the equivalence tests; it is not
+deprecated.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 import warnings
 from typing import Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cost import BillingModel, estimate_cost
-from repro.core.processes import (
-    ArrivalTimeProcess,
-    ExpSimProcess,
-    NHPPArrivalProcess,
-    RateProfile,
-    SimProcess,
-)
-from repro.core.simulator import (
-    ServerlessSimulator,
-    SimulationConfig,
-    SimulationSummary,
-    WindowedMetrics,
-    WorkloadParams,
-    _simulate_batch,
-    _simulate_sweep,
-)
+from repro.core.cost import BillingModel
+from repro.core.processes import ArrivalTimeProcess, RateProfile
+from repro.core.scenario import Scenario, _rated  # noqa: F401 (re-export)
+from repro.core.scenario import sweep as _scenario_sweep
+from repro.core.simulator import ServerlessSimulator, _simulate_batch
 
 
 @dataclasses.dataclass
@@ -73,82 +53,8 @@ class WhatIfResult:
         return float(self.expiration_thresholds[np.argmax(ok)])
 
 
-def _rated(process: SimProcess, rate: float) -> SimProcess:
-    """Re-rate the base arrival process; fall back to exponential when the
-    family has no rate handle (the legacy behaviour)."""
-    try:
-        return process.with_rate(float(rate))
-    except NotImplementedError:
-        return ExpSimProcess(rate=float(rate))
-
-
-def _grid_cells(base_config, e, a):
-    for exp_t in e:
-        for rate in a:
-            yield dataclasses.replace(
-                base_config,
-                arrival_process=_rated(base_config.arrival_process, rate),
-                expiration_threshold=float(exp_t),
-            )
-
-
-def _uniform_steps(base_config, a, steps):
-    """One step budget covering the fastest arrival rate on the grid."""
-    if steps is not None:
-        return int(steps)
-    return max(
-        dataclasses.replace(
-            base_config, arrival_process=_rated(base_config.arrival_process, r)
-        ).steps_needed()
-        for r in a
-    )
-
-
-def _draw_stacked_samples(cfgs, key, replicas, steps):
-    """Per-cell draws stacked to [len(cfgs)·R, N] — one key split per cell.
-
-    For the rate grid the split order matches ``sweep_legacy`` exactly, so
-    with the same ``key``/``steps`` the batched engine consumes the very
-    same sample arrays the per-cell loop would; profile sweeps reuse the
-    same convention so oracle tests can reproduce the buffers.
-    """
-    ds, ws, cs = [], [], []
-    for cfg in cfgs:
-        key, sub = jax.random.split(key)
-        d, w, c = ServerlessSimulator(cfg).draw_samples(sub, replicas, steps)
-        ds.append(d)
-        ws.append(w)
-        cs.append(c)
-    return jnp.concatenate(ds), jnp.concatenate(ws), jnp.concatenate(cs)
-
-
-def _draw_grid_samples(base_config, e, a, key, replicas, steps):
-    return _draw_stacked_samples(
-        list(_grid_cells(base_config, e, a)), key, replicas, steps
-    )
-
-
-def _grids_from_cell_summaries(summaries, e, a, billing):
-    shape = (len(e), len(a))
-    out = {
-        k: np.zeros(shape)
-        for k in ("cold", "servers", "running", "wasted", "dev_cost", "prov_cost")
-    }
-    it = iter(summaries)
-    for i in range(len(e)):
-        for j in range(len(a)):
-            summary = next(it)
-            cost = estimate_cost(summary, billing)
-            out["cold"][i, j] = summary.cold_start_prob
-            out["servers"][i, j] = summary.avg_server_count
-            out["running"][i, j] = summary.avg_running_count
-            out["wasted"][i, j] = summary.avg_wasted_ratio
-            out["dev_cost"][i, j] = cost.developer_total
-            out["prov_cost"][i, j] = cost.provider_infra_cost
-    return out
-
-
-def _result(e, a, out):
+def _result(e, a, out) -> WhatIfResult:
+    """Shared WhatIfResult assembly (batched shim + legacy loop)."""
     return WhatIfResult(
         arrival_rates=a,
         expiration_thresholds=e,
@@ -159,248 +65,6 @@ def _result(e, a, out):
         developer_cost=out["dev_cost"],
         provider_cost=out["prov_cost"],
     )
-
-
-def _sweep_scan(base_config, e, a, key, replicas, billing, steps):
-    """The single-compile f64 path: one ``_simulate_sweep`` call."""
-    # WhatIfResult reports scalar grids only; a window grid on the base
-    # config would make every scan step pay ~W extra integral work for
-    # accumulators nobody reads — strip it (sweep_profiles is the windowed
-    # engine).
-    base_config = dataclasses.replace(base_config, window_bounds=None)
-    E, A = len(e), len(a)
-    n = _uniform_steps(base_config, a, steps)
-    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
-    params = WorkloadParams.of(
-        np.repeat(e, A * replicas),
-        np.full(E * A * replicas, base_config.sim_time),
-        np.full(E * A * replicas, base_config.skip_time),
-        np.zeros((E * A * replicas, 0)),
-    )
-    with warnings.catch_warnings():
-        # buffer donation is a no-op on CPU; the warning is expected there
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable"
-        )
-        acc, t_last = _simulate_sweep(
-            base_config.static_config(), params, dts, warms, colds
-        )
-    acc = jax.tree.map(np.asarray, acc)
-    t_last = np.asarray(t_last)
-    if (t_last < base_config.sim_time).any():
-        raise RuntimeError(
-            "pre-drawn arrivals ended before sim_time "
-            f"(min final t {t_last.min():.1f} < {base_config.sim_time}); "
-            "pass a larger `steps`"
-        )
-    if acc["overflow"].sum() > 0:
-        raise RuntimeError(
-            "instance-pool overflow during sweep; raise SimulationConfig.slots"
-        )
-    cell = jax.tree.map(
-        lambda x: x.reshape((E * A, replicas) + x.shape[1:]), acc
-    )
-    measured = base_config.sim_time - base_config.skip_time
-    summaries = [
-        SimulationSummary(
-            n_cold=cell["n_cold"][c],
-            n_warm=cell["n_warm"][c],
-            n_reject=cell["n_reject"][c],
-            time_running=cell["time_running"][c],
-            time_idle=cell["time_idle"][c],
-            sum_cold_resp=cell["sum_cold_resp"][c],
-            sum_warm_resp=cell["sum_warm_resp"][c],
-            lifespan_sum=cell["lifespan_sum"][c],
-            lifespan_count=cell["lifespan_count"][c],
-            measured_time=measured,
-            histogram=cell["hist"][c] if base_config.track_histogram else None,
-            overflow=cell["overflow"][c],
-        )
-        for c in range(E * A)
-    ]
-    return _grids_from_cell_summaries(summaries, e, a, billing)
-
-
-_BLOCK_R = 8
-
-
-@functools.lru_cache(maxsize=1)
-def _ref_jit():
-    # kernels.ref pulls the model stack; import lazily so the default scan
-    # backend keeps core imports light.
-    from repro.kernels.ref import faas_sweep_ref
-
-    return jax.jit(
-        faas_sweep_ref,
-        static_argnames=(
-            "t_end",
-            "skip",
-            "max_concurrency",
-            "prestamped",
-            "n_windows",
-            "w_start",
-            "w_dt",
-        ),
-    )
-
-
-def _block_launch(base_config, t_exp, dts, warms, colds, backend, kw, block_k=512):
-    """Shared f32 block-engine launch: pad to the kernel grid and run the
-    Pallas kernel (interpret mode off-TPU), or the jnp ref mirror.
-
-    ``dts`` rows are gaps, or absolute times when ``kw['prestamped']`` —
-    both use the same 1e30 column fill: as a gap it jumps the clock past
-    ``t_end``, as a timestamp it IS past ``t_end``, so padding is inert
-    either way.  Returns the f64 accumulator ``[C, cols]`` after the
-    overflow guard.
-    """
-    # kernel imports stay local so the default scan backend keeps core
-    # imports light; NEG is the kernel's dead-slot sentinel
-    from repro.kernels.faas_event_step import NEG as _F32_NEG
-    from repro.kernels.faas_event_step import faas_sweep_pallas
-
-    if base_config.routing != "newest":
-        raise ValueError(
-            "block backends implement newest-idle routing only; use "
-            f"backend='scan' for routing={base_config.routing!r}"
-        )
-    C, n = dts.shape
-    dts, warms, colds = (
-        jnp.asarray(dts, jnp.float32),
-        jnp.asarray(warms, jnp.float32),
-        jnp.asarray(colds, jnp.float32),
-    )
-    t_exp = jnp.asarray(t_exp, jnp.float32)
-    M = base_config.slots
-    alive0 = jnp.zeros((C, M), jnp.float32)
-    frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
-    t0 = jnp.zeros((C,), jnp.float32)
-    if backend == "pallas":
-        # pad rows to the replica-block, arrivals to the chunk size
-        block_k = min(block_k, max(n, 1))
-        pad_c = (-C) % _BLOCK_R
-        pad_k = (-n) % block_k
-
-        def pad(x, col_fill):
-            # extra rows are copies of row 0, sliced off after the launch
-            if pad_k:
-                x = jnp.concatenate(
-                    [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
-                )
-            if pad_c:
-                x = jnp.concatenate(
-                    [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-                )
-            return x
-
-        dts_p = pad(dts, 1e30)
-        warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
-        t_exp_p = jnp.concatenate([t_exp, jnp.ones((pad_c,), jnp.float32)]) if pad_c else t_exp
-        state_pad = lambda x: jnp.concatenate(
-            [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-        ) if pad_c else x
-        out = faas_sweep_pallas(
-            state_pad(alive0),
-            state_pad(frozen),
-            state_pad(frozen),
-            jnp.zeros((C + pad_c,), jnp.float32),
-            t_exp_p,
-            dts_p,
-            warms_p,
-            colds_p,
-            block_r=_BLOCK_R,
-            block_k=block_k,
-            interpret=jax.default_backend() != "tpu",
-            **kw,
-        )
-        acc = np.asarray(out[4], np.float64)[:C]
-    else:
-        out = _ref_jit()(alive0, frozen, frozen, t0, t_exp, dts, warms, colds, **kw)
-        acc = np.asarray(out[4], np.float64)
-    if acc[:, 7].sum() > 0:
-        raise RuntimeError(
-            "instance-pool overflow during sweep; raise SimulationConfig.slots"
-        )
-    return acc
-
-
-def _sweep_block(base_config, e, a, key, replicas, billing, steps, backend):
-    """The f32 block-kernel rate-grid path."""
-    E, A = len(e), len(a)
-    n = _uniform_steps(base_config, a, steps)
-    dts, warms, colds = _draw_grid_samples(base_config, e, a, key, replicas, n)
-    t_exp = np.repeat(e, A * replicas)
-    # Coverage guard on the REAL draws (before any padding): every row's
-    # arrivals must reach the horizon, else the grid would be silently
-    # truncated.  f64 sum of the f32 gaps — the padded kernel clock cannot
-    # be used for this check.
-    covered = np.asarray(dts, np.float64).sum(axis=1)
-    if (covered < base_config.sim_time).any():
-        raise RuntimeError(
-            "pre-drawn arrivals ended before sim_time "
-            f"(min final t {covered.min():.1f} < {base_config.sim_time}); "
-            "pass a larger `steps`"
-        )
-    kw = dict(
-        t_end=float(base_config.sim_time),
-        skip=float(base_config.skip_time),
-        max_concurrency=base_config.max_concurrency,
-    )
-    acc = _block_launch(base_config, t_exp, dts, warms, colds, backend, kw)
-    measured = base_config.sim_time - base_config.skip_time
-    zeros = lambda: np.zeros((replicas,))
-    summaries = []
-    cell = acc.reshape(E * A, replicas, 8)
-    for c in range(E * A):
-        summaries.append(
-            SimulationSummary(
-                n_cold=cell[c, :, 0],
-                n_warm=cell[c, :, 1],
-                n_reject=cell[c, :, 2],
-                time_running=cell[c, :, 3],
-                time_idle=cell[c, :, 4],
-                sum_cold_resp=cell[c, :, 5],
-                sum_warm_resp=cell[c, :, 6],
-                lifespan_sum=zeros(),
-                lifespan_count=zeros(),
-                measured_time=measured,
-                overflow=cell[c, :, 7],
-            )
-        )
-    return _grids_from_cell_summaries(summaries, e, a, billing)
-
-
-def sweep(
-    base_config: SimulationConfig,
-    arrival_rates: Sequence[float],
-    expiration_thresholds: Sequence[float],
-    key,
-    replicas: int = 4,
-    billing: BillingModel = BillingModel(),
-    backend: str = "scan",
-    steps: int | None = None,
-) -> WhatIfResult:
-    """Batched what-if sweep: one compile, one device call for the grid."""
-    if isinstance(base_config.arrival_process, ArrivalTimeProcess):
-        raise ValueError(
-            "rate sweeps need a stationary (re-ratable) arrival process; "
-            "for non-stationary/trace arrivals sweep over rate *profiles* "
-            "with whatif.sweep_profiles"
-        )
-    a = np.asarray(list(arrival_rates), dtype=np.float64)
-    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
-    if backend == "scan":
-        out = _sweep_scan(base_config, e, a, key, replicas, billing, steps)
-    elif backend in ("pallas", "ref"):
-        out = _sweep_block(base_config, e, a, key, replicas, billing, steps, backend)
-    else:
-        raise ValueError(f"unknown sweep backend {backend!r}")
-    return _result(e, a, out)
-
-
-# ---------------------------------------------------------------------------
-# Rate-profile sweeps (non-stationary what-if analysis)
-# ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass
@@ -418,154 +82,140 @@ class ProfileSweepResult:
     windows: Optional[list] = None  # [P] WindowedMetrics (scan backend)
 
 
-def _profile_configs(base_config, profiles):
-    cfgs = []
-    for p in profiles:
-        if not isinstance(p, RateProfile):
-            raise TypeError(f"expected RateProfile, got {type(p).__name__}")
-        cfgs.append(
-            dataclasses.replace(
-                base_config, arrival_process=NHPPArrivalProcess(profile=p)
-            )
+def sweep(
+    base_config,
+    arrival_rates: Sequence[float],
+    expiration_thresholds: Sequence[float],
+    key,
+    replicas: int = 4,
+    billing: BillingModel = BillingModel(),
+    backend: str = "scan",
+    steps: int | None = None,
+) -> WhatIfResult:
+    """Deprecated: use ``repro.core.scenario.sweep`` with
+    ``over={"expiration_threshold": [...], "arrival_rate": [...]}``."""
+    warnings.warn(
+        "whatif.sweep is deprecated; use repro.core.scenario.sweep(scn, "
+        'over={"expiration_threshold": [...], "arrival_rate": [...]})',
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if isinstance(base_config.arrival_process, ArrivalTimeProcess):
+        raise ValueError(
+            "rate sweeps need a stationary (re-ratable) arrival process; "
+            "for non-stationary/trace arrivals sweep over rate *profiles* "
+            "with whatif.sweep_profiles"
         )
-    return cfgs
+    a = np.asarray(list(arrival_rates), dtype=np.float64)
+    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
+    # WhatIfResult reports scalar grids only; a window grid on the base
+    # config would make every scan step pay ~W extra integral work for
+    # accumulators nobody reads — strip it (profile sweeps are the
+    # windowed path).
+    scn = Scenario.of(base_config, window_bounds=None, billing=billing)
+    res = _scenario_sweep(
+        scn,
+        over={
+            "expiration_threshold": [float(x) for x in e],
+            "arrival_rate": [float(x) for x in a],
+        },
+        key=key,
+        replicas=replicas,
+        backend=backend,
+        steps=steps,
+    )
+    return _result(
+        e,
+        a,
+        dict(
+            cold=res.cold_start_prob,
+            servers=res.avg_server_count,
+            running=res.avg_running_count,
+            wasted=res.wasted_ratio,
+            dev_cost=res.developer_cost,
+            prov_cost=res.provider_cost,
+        ),
+    )
 
 
 def sweep_profiles(
-    base_config: SimulationConfig,
+    base_config,
     profiles: Sequence,
     key,
     replicas: int = 4,
     backend: str = "scan",
     steps: int | None = None,
 ) -> ProfileSweepResult:
-    """Batched sweep over non-stationary arrival-rate profiles.
-
-    Every profile × replica row carries its own NHPP-thinned
-    absolute-timestamp stream; the whole grid is ONE device call (the
-    prestamped analogue of :func:`sweep`).  ``base_config.window_bounds``
-    is required — non-stationary runs are summarised per window, not by a
-    single scalar.  Backends: ``"scan"`` (f64, exact, full windowed
-    metrics), ``"pallas"``/``"ref"`` (f32 block engine; windowed
-    cold/served/arrival counts, uniform window grids only — no per-window
-    instance integrals).
-    """
+    """Deprecated: use ``repro.core.scenario.sweep`` with
+    ``over={"profile": [...]}`` on a windowed scenario."""
+    warnings.warn(
+        "whatif.sweep_profiles is deprecated; use "
+        'repro.core.scenario.sweep(scn, over={"profile": [...]})',
+        DeprecationWarning,
+        stacklevel=2,
+    )
     wb = base_config.window_bounds
     if not wb:
         raise ValueError(
             "sweep_profiles requires base_config.window_bounds (the "
             "windowed-metrics grid non-stationary results are reported on)"
         )
-    bounds = np.asarray(wb, dtype=np.float64)
-    W = len(bounds) - 1
-    P = len(profiles)
-    cfgs = _profile_configs(base_config, profiles)
-    n = int(steps) if steps is not None else max(c.steps_needed() for c in cfgs)
-    C = P * replicas
-    dts, warms, colds = _draw_stacked_samples(cfgs, key, replicas, n)
-
-    if backend == "scan":
-        params = WorkloadParams.of(
-            np.full(C, base_config.expiration_threshold),
-            np.full(C, base_config.sim_time),
-            np.full(C, base_config.skip_time),
-            np.tile(bounds, (C, 1)),
-        )
-        with warnings.catch_warnings():
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            acc, _ = _simulate_sweep(
-                cfgs[0].static_config(), params, dts, warms, colds
-            )
-        acc = jax.tree.map(np.asarray, acc)
-        if acc["overflow"].sum() > 0:
-            raise RuntimeError(
-                "instance-pool overflow during profile sweep; raise "
-                "SimulationConfig.slots"
-            )
-        cell = jax.tree.map(lambda x: x.reshape((P, replicas) + x.shape[1:]), acc)
-        widths = np.diff(bounds)
-        windows = [
-            WindowedMetrics(
-                bounds=bounds,
-                n_cold=cell["w_cold"][p],
-                n_warm=cell["w_warm"][p],
-                n_arrivals=cell["w_arrivals"][p],
-                time_running=cell["w_run_t"][p],
-                time_idle=cell["w_idle_t"][p],
-            )
-            for p in range(P)
-        ]
-        served = (cell["n_cold"] + cell["n_warm"]).sum(axis=1)
-        return ProfileSweepResult(
-            profiles=tuple(profiles),
-            window_bounds=bounds,
-            cold_start_prob=cell["n_cold"].sum(axis=1) / np.maximum(served, 1),
-            windowed_cold_prob=np.stack([w.cold_start_prob for w in windows]),
-            windowed_arrivals=np.stack(
-                [w.n_arrivals.mean(axis=0) for w in windows]
-            ),
-            windowed_instance_count=np.stack(
-                [
-                    (w.time_running + w.time_idle).mean(axis=0) / widths
-                    for w in windows
-                ]
-            ),
-            windows=windows,
-        )
-    if backend not in ("pallas", "ref"):
-        raise ValueError(f"unknown sweep backend {backend!r}")
-    return _sweep_profiles_block(
-        base_config, profiles, bounds, dts, warms, colds, replicas, backend
+    for p in profiles:
+        if not isinstance(p, RateProfile):
+            raise TypeError(f"expected RateProfile, got {type(p).__name__}")
+    res = _scenario_sweep(
+        Scenario.of(base_config),
+        over={"profile": list(profiles)},
+        key=key,
+        replicas=replicas,
+        backend=backend,
+        steps=steps,
     )
-
-
-def _sweep_profiles_block(
-    base_config, profiles, bounds, dts, warms, colds, replicas, backend
-):
-    """f32 block-engine profile sweep (Pallas on TPU, jnp ref elsewhere)."""
-    from repro.kernels.faas_event_step import ACC_COLS
-
-    widths = np.diff(bounds)
-    if not np.allclose(widths, widths[0], rtol=1e-9, atol=1e-12):
-        raise ValueError(
-            "block backends support uniform window grids only; use "
-            "backend='scan' for irregular window_bounds"
-        )
-    W = len(bounds) - 1
-    P = len(profiles)
-    C = P * replicas
-    t_exp = np.full((C,), base_config.expiration_threshold)
-    kw = dict(
-        t_end=float(base_config.sim_time),
-        skip=float(base_config.skip_time),
-        max_concurrency=base_config.max_concurrency,
-        prestamped=True,
-        n_windows=W,
-        w_start=float(bounds[0]),
-        w_dt=float(widths[0]),
+    windows = (
+        [s.windows for s in res.summaries] if backend == "scan" else None
     )
-    acc = _block_launch(base_config, t_exp, dts, warms, colds, backend, kw)
-    cell = acc.reshape(P, replicas, ACC_COLS + 3 * W)
-    cold = cell[:, :, 0].sum(axis=1)
-    served = (cell[:, :, 0] + cell[:, :, 1]).sum(axis=1)
-    w_cold = cell[:, :, ACC_COLS : ACC_COLS + W].sum(axis=1)
-    w_served = cell[:, :, ACC_COLS + W : ACC_COLS + 2 * W].sum(axis=1)
-    w_arrivals = cell[:, :, ACC_COLS + 2 * W : ACC_COLS + 3 * W].sum(axis=1)
     return ProfileSweepResult(
         profiles=tuple(profiles),
-        window_bounds=bounds,
-        cold_start_prob=cold / np.maximum(served, 1),
-        windowed_cold_prob=w_cold / np.maximum(w_served, 1),
-        windowed_arrivals=w_arrivals / replicas,
-        windowed_instance_count=None,
-        windows=None,
+        window_bounds=np.asarray(wb, dtype=np.float64),
+        cold_start_prob=res.cold_start_prob,
+        windowed_cold_prob=res.windowed_cold_prob,
+        windowed_arrivals=res.windowed_arrivals,
+        windowed_instance_count=res.windowed_instance_count,
+        windows=windows,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy per-cell loop: benchmark baseline + equivalence oracle
+# ---------------------------------------------------------------------------
+
+
+def _grid_cells(base_config, e, a):
+    base = Scenario.of(base_config)
+    for exp_t in e:
+        for rate in a:
+            yield Scenario.of(
+                base,
+                arrival_process=_rated(base.arrival_process, rate),
+                expiration_threshold=float(exp_t),
+            )
+
+
+def _uniform_steps(base_config, a, steps):
+    """One step budget covering the fastest arrival rate on the grid."""
+    if steps is not None:
+        return int(steps)
+    base = Scenario.of(base_config)
+    return max(
+        Scenario.of(
+            base, arrival_process=_rated(base.arrival_process, r)
+        ).steps_needed()
+        for r in a
     )
 
 
 def sweep_legacy(
-    base_config: SimulationConfig,
+    base_config,
     arrival_rates: Sequence[float],
     expiration_thresholds: Sequence[float],
     key,
@@ -582,15 +232,29 @@ def sweep_legacy(
     With ``fresh_jit=False`` cells share one compiled executable but still
     serialize host→device round-trips per cell.
     """
+    from repro.core.cost import estimate_cost
+
     a = np.asarray(list(arrival_rates), dtype=np.float64)
     e = np.asarray(list(expiration_thresholds), dtype=np.float64)
     n = int(steps) if steps is not None else None  # None → per-cell auto-size
-    summaries = []
-    for cfg in _grid_cells(base_config, e, a):
-        key, sub = jax.random.split(key)
-        if fresh_jit:
-            _simulate_batch.clear_cache()
-        summaries.append(
-            ServerlessSimulator(cfg).run(sub, replicas=replicas, steps=n)
-        )
-    return _result(e, a, _grids_from_cell_summaries(summaries, e, a, billing))
+    shape = (len(e), len(a))
+    out = {
+        k: np.zeros(shape)
+        for k in ("cold", "servers", "running", "wasted", "dev_cost", "prov_cost")
+    }
+    cells = iter(_grid_cells(base_config, e, a))
+    for i in range(len(e)):
+        for j in range(len(a)):
+            cfg = next(cells)
+            key, sub = jax.random.split(key)
+            if fresh_jit:
+                _simulate_batch.clear_cache()
+            summary = ServerlessSimulator(cfg).run(sub, replicas=replicas, steps=n)
+            cost = estimate_cost(summary, billing)
+            out["cold"][i, j] = summary.cold_start_prob
+            out["servers"][i, j] = summary.avg_server_count
+            out["running"][i, j] = summary.avg_running_count
+            out["wasted"][i, j] = summary.avg_wasted_ratio
+            out["dev_cost"][i, j] = cost.developer_total
+            out["prov_cost"][i, j] = cost.provider_infra_cost
+    return _result(e, a, out)

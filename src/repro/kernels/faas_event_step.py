@@ -27,11 +27,14 @@ measurement window): integrate running/idle instance-time over the window
 clipped to ``[skip, t_end]`` → expire idle instances past the (per-row)
 threshold → route to the newest idle instance (warm) → else create (cold)
 → else reject; arrivals past ``t_end`` are inert and request counters only
-engage after ``skip`` (warm-up exclusion).
+engage after ``skip`` (warm-up exclusion).  ``t_exp``, ``t_end`` and
+``skip`` are all per-row traced inputs, so threshold/rate/horizon product
+grids share one compile.
 """
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -39,6 +42,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -1e30
+
+# Trace counter (kernel-local to avoid importing repro.core at call time):
+# incremented when faas_sweep_pallas is (re-)traced.  Tests pin that a
+# horizon sweep with per-row t_end/skip costs one trace, not one per cell.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 # acc columns: cold, warm, reject, t_run, t_idle, resp_cold, resp_warm, overflow
 ACC_COLS = 8
@@ -51,6 +59,8 @@ def _faas_kernel(
     busy_in,  # f32 [Rb, M]
     t0_ref,  # f32 [Rb, 1]
     texp_ref,  # f32 [Rb, 1]  per-row expiration threshold
+    tend_ref,  # f32 [Rb, 1]  per-row horizon (sim_time)
+    skip_ref,  # f32 [Rb, 1]  per-row warm-up exclusion
     dt_ref,  # f32 [Rb, Kb]
     warm_ref,  # f32 [Rb, Kb]
     cold_ref,  # f32 [Rb, Kb]
@@ -61,8 +71,6 @@ def _faas_kernel(
     t_out,  # f32 [Rb, 1]
     acc_out,  # f32 [Rb, ACC_COLS]
     *,
-    t_end: float,
-    skip: float,
     max_concurrency: int,
     n_steps: int,
     prestamped: bool,
@@ -84,6 +92,8 @@ def _faas_kernel(
     t = t_out[...][:, 0]
     acc0 = acc_out[...]
     t_exp = texp_ref[...][:, 0]  # [Rb]
+    t_end = tend_ref[...][:, 0]  # [Rb]
+    skip = skip_ref[...][:, 0]  # [Rb]
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
 
     def step(i, carry):
@@ -188,8 +198,6 @@ def _faas_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "t_end",
-        "skip",
         "max_concurrency",
         "block_r",
         "block_k",
@@ -210,8 +218,8 @@ def faas_sweep_pallas(
     warms,  # f32 [R, K]
     colds,  # f32 [R, K]
     *,
-    t_end: float,
-    skip: float,
+    t_end=float("inf"),  # f32 [R] or scalar — per-row horizon (sweep axis)
+    skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
     max_concurrency: int,
     block_r: int = 8,
     block_k: int = 512,
@@ -224,19 +232,24 @@ def faas_sweep_pallas(
     """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
 
     Returns ``(alive, creation, busy, t, acc[R, ACC_COLS + 3*n_windows])``.
-    Rows are independent (replica × grid-cell); ``t_exp`` varies per row so
-    an entire (rate × threshold) sweep is one kernel launch — and with
-    ``prestamped=True`` the rows carry absolute-timestamp streams, so a
-    sweep over *rate profiles* (each row thinned from its own profile) is
-    also one launch.  ``n_windows > 0`` appends per-window cold / served /
-    arrival counters over the uniform grid ``w_start + [0..n_windows]*w_dt``
-    (columns ``[ACC_COLS, ACC_COLS+W)`` cold, ``[ACC_COLS+W, ACC_COLS+2W)``
-    served, ``[ACC_COLS+2W, ACC_COLS+3W)`` arrivals incl. rejects).
+    Rows are independent (replica × grid-cell); ``t_exp``, ``t_end`` and
+    ``skip`` vary per row (traced inputs, NOT compile-time constants), so an
+    entire (threshold × rate × horizon) product grid is one kernel launch
+    and one compile — and with ``prestamped=True`` the rows carry
+    absolute-timestamp streams, so a sweep over *rate profiles* (each row
+    thinned from its own profile) is also one launch.  ``n_windows > 0``
+    appends per-window cold / served / arrival counters over the uniform
+    grid ``w_start + [0..n_windows]*w_dt`` (columns
+    ``[ACC_COLS, ACC_COLS+W)`` cold, ``[ACC_COLS+W, ACC_COLS+2W)`` served,
+    ``[ACC_COLS+2W, ACC_COLS+3W)`` arrivals incl. rejects).
     """
+    TRACE_COUNTS["faas_sweep_pallas"] += 1
     R, M = alive.shape
     K = dts.shape[1]
     assert R % block_r == 0, (R, block_r)
     assert K % block_k == 0, (K, block_k)
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
+    skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
     grid = (R // block_r, K // block_k)
     acc_cols = ACC_COLS + 3 * n_windows
 
@@ -247,8 +260,6 @@ def faas_sweep_pallas(
 
     kernel = functools.partial(
         _faas_kernel,
-        t_end=t_end,
-        skip=skip,
         max_concurrency=max_concurrency,
         n_steps=block_k,
         prestamped=prestamped,
@@ -265,6 +276,8 @@ def faas_sweep_pallas(
             state_spec,
             t_spec,
             t_spec,
+            t_spec,
+            t_spec,
             samp_spec,
             samp_spec,
             samp_spec,
@@ -278,7 +291,18 @@ def faas_sweep_pallas(
             jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
         ],
         interpret=interpret,
-    )(alive, creation, busy, t0[:, None], t_exp[:, None], dts, warms, colds)
+    )(
+        alive,
+        creation,
+        busy,
+        t0[:, None],
+        t_exp[:, None],
+        t_end[:, None],
+        skip[:, None],
+        dts,
+        warms,
+        colds,
+    )
     alive_n, creation_n, busy_n, t_n, acc = out
     return alive_n, creation_n, busy_n, t_n[:, 0], acc
 
@@ -315,8 +339,6 @@ def faas_block_step_pallas(
         dts,
         warms,
         colds,
-        t_end=float("inf"),
-        skip=0.0,
         max_concurrency=max_concurrency,
         block_r=block_r,
         block_k=K,

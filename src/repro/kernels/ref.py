@@ -50,8 +50,8 @@ def faas_sweep_ref(
     warms,
     colds,
     *,
-    t_end=float("inf"),
-    skip=0.0,
+    t_end=float("inf"),  # f32 [R] or scalar — per-row horizon
+    skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
     max_concurrency,
     prestamped: bool = False,
     n_windows: int = 0,
@@ -62,10 +62,14 @@ def faas_sweep_ref(
     tie-breaks) — bit-comparable on CPU, and the interpreter fallback for
     the what-if sweep's throughput backend off-TPU.  ``prestamped`` /
     ``n_windows`` mirror the kernel's absolute-timestamp and uniform
-    metric-window extensions (acc gains ``3*n_windows`` columns)."""
+    metric-window extensions (acc gains ``3*n_windows`` columns);
+    ``t_end``/``skip`` are per-row traced values like ``t_exp``, so
+    horizon sweeps share one compile."""
     R, M = alive.shape
     K = dts.shape[1]
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
+    skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
     slot_iota = jnp.broadcast_to(
         jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
     )
@@ -157,7 +161,5 @@ def faas_block_step_ref(
         dts,
         warms,
         colds,
-        t_end=float("inf"),
-        skip=0.0,
         max_concurrency=max_concurrency,
     )

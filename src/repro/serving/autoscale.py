@@ -11,10 +11,11 @@ from __future__ import annotations
 import dataclasses
 
 import jax
+import numpy as np
 
 from repro.core.processes import ExpSimProcess
-from repro.core.simulator import ServerlessSimulator, SimulationConfig
-from repro.core.whatif import sweep
+from repro.core.scenario import Scenario
+from repro.core.scenario import sweep as scenario_sweep
 
 
 @dataclasses.dataclass
@@ -35,25 +36,25 @@ def plan_expiration_threshold(
     seed: int = 0,
     replicas: int = 4,
 ) -> PlanResult:
-    base = SimulationConfig(
+    base = Scenario(
         arrival_process=ExpSimProcess(rate=arrival_rate),
         warm_service_process=ExpSimProcess(rate=1.0 / warm_time),
         cold_service_process=ExpSimProcess(rate=1.0 / cold_time),
         sim_time=sim_time,
         skip_time=min(100.0, sim_time / 100),
     )
-    result = sweep(
+    thresholds = [float(t) for t in candidate_thresholds]
+    result = scenario_sweep(
         base,
-        arrival_rates=[arrival_rate],
-        expiration_thresholds=candidate_thresholds,
+        over={"expiration_threshold": thresholds},
         key=jax.random.key(seed),
         replicas=replicas,
     )
-    best = result.best_threshold(0, cold_slo)
-    i = list(result.expiration_thresholds).index(best)
+    ok = result.cold_start_prob <= cold_slo
+    i = int(np.argmax(ok)) if ok.any() else len(thresholds) - 1
     return PlanResult(
-        expiration_threshold=best,
-        predicted_cold_prob=float(result.cold_start_prob[i, 0]),
-        predicted_avg_replicas=float(result.avg_server_count[i, 0]),
-        predicted_wasted_ratio=float(result.wasted_ratio[i, 0]),
+        expiration_threshold=thresholds[i],
+        predicted_cold_prob=float(result.cold_start_prob[i]),
+        predicted_avg_replicas=float(result.avg_server_count[i]),
+        predicted_wasted_ratio=float(result.wasted_ratio[i]),
     )

@@ -1,0 +1,686 @@
+"""Unified Scenario API: declarative Scenario, run(), product-grid sweep()
+with static/draw/param partitioning, deprecation shims, MMPP arrivals and
+trace → profile fitting."""
+
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExpSimProcess,
+    MMPPArrivalProcess,
+    NHPPArrivalProcess,
+    PiecewiseConstantRate,
+    Scenario,
+    ServerlessSimulator,
+    SimulationConfig,
+    SinusoidalRate,
+)
+from repro.core import scenario as scn_mod
+from repro.core import simulator as sim_mod
+from repro.core.pyref import simulate_pyref
+from repro.core.simulator import draw_workload_samples
+
+
+def base_scn(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0,
+        sim_time=500.0,
+        skip_time=10.0,
+        slots=32,
+    )
+    d.update(kw)
+    return Scenario(**d)
+
+
+RATES = [0.5, 1.0]
+THRESHOLDS = [10.0, 30.0, 60.0]
+STEPS = 900  # covers the fastest rate on the 500 s horizon
+
+
+class TestScenarioDeclaration:
+    def test_requires_some_arrival_description(self):
+        with pytest.raises(ValueError, match="arrival_process or a rate_profile"):
+            Scenario(
+                warm_service_process=ExpSimProcess(rate=1.0),
+                cold_service_process=ExpSimProcess(rate=1.0),
+            )
+
+    def test_requires_service_processes(self):
+        with pytest.raises(ValueError, match="service_process"):
+            Scenario(arrival_process=ExpSimProcess(rate=1.0))
+
+    def test_rate_profile_lowers_to_nhpp(self):
+        p = SinusoidalRate(base=1.0, amplitude=0.5, period=100.0)
+        s = base_scn(arrival_process=None, rate_profile=p)
+        assert isinstance(s.arrival_process, NHPPArrivalProcess)
+        assert s.arrival_process.profile == p
+        assert s.prestamped
+        # replace() round-trips through the resolved pair without raising
+        s2 = dataclasses.replace(s, expiration_threshold=40.0)
+        assert s2.arrival_process == s.arrival_process
+
+    def test_conflicting_profile_and_process_rejected(self):
+        with pytest.raises(ValueError, match="not both"):
+            base_scn(rate_profile=SinusoidalRate(1.0, 0.5, 100.0))
+
+    def test_arrival_rate_rerates_preserving_family(self):
+        s = base_scn(arrival_rate=2.0)
+        assert isinstance(s.arrival_process, ExpSimProcess)
+        np.testing.assert_allclose(s.arrival_process.rate, 2.0)
+        # idempotent under replace (re-rating an already-rated process)
+        s2 = dataclasses.replace(s, sim_time=600.0)
+        np.testing.assert_allclose(s2.arrival_process.rate, 2.0)
+
+    def test_arrival_rate_folds_into_process_once(self):
+        """Regression: a resolved arrival_rate must not linger and re-rate
+        later arrival_process overrides (per-cell grid re-rating)."""
+        s = base_scn(arrival_rate=0.9)
+        assert s.arrival_rate is None  # folded into arrival_process
+        s2 = Scenario.of(s, arrival_process=ExpSimProcess(rate=2.0))
+        np.testing.assert_allclose(s2.arrival_process.rate, 2.0)
+
+    def test_sweep_legacy_respects_rates_with_rated_base(self):
+        """Regression: sweep_legacy on a base built via arrival_rate= must
+        sweep the requested rates, not silently pin the base rate."""
+        from repro.core.whatif import _grid_cells
+
+        s = base_scn(arrival_rate=0.9)
+        cells = list(_grid_cells(s, [20.0], [0.5, 2.0]))
+        np.testing.assert_allclose(
+            [c.arrival_process.rate for c in cells], [0.5, 2.0]
+        )
+
+    def test_arrival_rate_refused_for_timestamp_processes(self):
+        with pytest.raises(ValueError, match="profiles instead"):
+            base_scn(
+                arrival_process=NHPPArrivalProcess(
+                    profile=SinusoidalRate(1.0, 0.5, 100.0)
+                ),
+                arrival_rate=2.0,
+            )
+
+    def test_concurrency_value_validated(self):
+        with pytest.raises(ValueError, match="concurrency_value"):
+            base_scn(concurrency_value=0)
+
+    def test_of_returns_plain_scenario(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            cfg = SimulationConfig(
+                arrival_process=ExpSimProcess(rate=0.8),
+                warm_service_process=ExpSimProcess(rate=0.5),
+                cold_service_process=ExpSimProcess(rate=0.4),
+                sim_time=500.0,
+            )
+        s = Scenario.of(cfg, slots=48)
+        assert type(s) is Scenario
+        assert s.slots == 48
+        assert s.arrival_process == cfg.arrival_process
+
+
+class TestRun:
+    def test_matches_engine_directly(self):
+        s = base_scn()
+        res = scn_mod.run(s, jax.random.key(0), replicas=2)
+        direct = ServerlessSimulator(s).run(jax.random.key(0), replicas=2)
+        np.testing.assert_array_equal(res.summary.n_cold, direct.n_cold)
+        np.testing.assert_allclose(
+            res.cold_start_prob, direct.cold_start_prob
+        )
+        d = res.to_dict()
+        assert "developer_cost" in d and "provider_cost" in d
+
+    def test_block_backends_agree_with_scan(self):
+        s = base_scn(sim_time=1000.0, skip_time=20.0)
+        kw = dict(replicas=2, steps=1800)
+        scan = scn_mod.run(s, jax.random.key(3), **kw)
+        ref = scn_mod.run(s, jax.random.key(3), backend="ref", **kw)
+        pal = scn_mod.run(s, jax.random.key(3), backend="pallas", **kw)
+        np.testing.assert_allclose(
+            ref.avg_server_count, scan.avg_server_count, rtol=1e-3
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pal.summary.n_cold), np.asarray(ref.summary.n_cold)
+        )
+
+    def test_temporal_engine(self):
+        s = base_scn(skip_time=0.0, sim_time=300.0)
+        grid = np.linspace(0.0, 300.0, 7)
+        res = scn_mod.run(
+            s, jax.random.key(1), replicas=4, engine="temporal", grid=grid
+        )
+        assert res.temporal is not None
+        assert res.temporal.running_at.shape == (7,)
+        assert res.summary is res.temporal.steady
+
+    def test_par_engine_uses_concurrency_value(self):
+        s = base_scn(concurrency_value=4, arrival_process=ExpSimProcess(rate=2.0))
+        res = scn_mod.run(s, jax.random.key(2), replicas=2, engine="par")
+        assert res.summary.avg_in_flight >= 0.0
+        assert res.summary.avg_instance_occupancy <= 4.0 + 1e-9
+
+    def test_unknown_engine_and_backend_raise(self):
+        s = base_scn()
+        with pytest.raises(ValueError, match="engine"):
+            scn_mod.run(s, jax.random.key(0), engine="nope")
+        with pytest.raises(ValueError, match="backend"):
+            scn_mod.run(s, jax.random.key(0), backend="nope")
+        with pytest.raises(ValueError, match="scan"):
+            scn_mod.run(s, jax.random.key(0), engine="par", backend="ref")
+
+
+class TestSweepEquivalence:
+    def test_matches_legacy_cell_by_cell(self):
+        """Same key + same step budget → the generic grid engine consumes
+        the exact sample arrays the per-cell loop draws; every cell must
+        agree metric-for-metric."""
+        from repro.core.whatif import sweep_legacy
+
+        s = base_scn()
+        key = jax.random.key(11)
+        g = scn_mod.sweep(
+            s,
+            over={"expiration_threshold": THRESHOLDS, "arrival_rate": RATES},
+            key=key,
+            replicas=2,
+            steps=STEPS,
+        )
+        leg = sweep_legacy(s, RATES, THRESHOLDS, key, replicas=2, steps=STEPS)
+        np.testing.assert_allclose(
+            g.cold_start_prob, leg.cold_start_prob, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            g.avg_server_count, leg.avg_server_count, rtol=1e-9
+        )
+        np.testing.assert_allclose(g.wasted_ratio, leg.wasted_ratio, rtol=1e-9)
+        np.testing.assert_allclose(
+            g.developer_cost, leg.developer_cost, rtol=1e-9
+        )
+        np.testing.assert_allclose(
+            g.provider_cost, leg.provider_cost, rtol=1e-9
+        )
+
+    def test_three_axis_grid_single_compile_matches_legacy(self):
+        """The acceptance bar: a (threshold × rate × horizon) product grid
+        is ONE compiled call; each horizon slice matches the legacy
+        per-cell loop cell-by-cell (draws are shared across the horizon
+        axis — common random numbers)."""
+        from repro.core.whatif import sweep_legacy
+
+        s = base_scn(slots=34)  # distinctive static shape → cold jit entry
+        H = [300.0, 500.0]
+        before = sim_mod.TRACE_COUNTS["simulate_sweep"]
+        g = scn_mod.sweep(
+            s,
+            over={
+                "expiration_threshold": THRESHOLDS,
+                "arrival_rate": RATES,
+                "sim_time": H,
+            },
+            key=jax.random.key(5),
+            replicas=2,
+            steps=STEPS,
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+        assert g.shape == (3, 2, 2)
+        for hi, h in enumerate(H):
+            leg = sweep_legacy(
+                Scenario.of(s, sim_time=h),
+                RATES,
+                THRESHOLDS,
+                jax.random.key(5),
+                replicas=2,
+                steps=STEPS,
+            )
+            np.testing.assert_allclose(
+                g.cold_start_prob[:, :, hi], leg.cold_start_prob, rtol=1e-9
+            )
+            np.testing.assert_allclose(
+                g.avg_server_count[:, :, hi], leg.avg_server_count, rtol=1e-9
+            )
+        # different grid values, same structure: pure cache hit
+        scn_mod.sweep(
+            s,
+            over={
+                "expiration_threshold": [t * 1.1 for t in THRESHOLDS],
+                "arrival_rate": [r * 0.9 for r in RATES],
+                "sim_time": [250.0, 450.0],
+            },
+            key=jax.random.key(6),
+            replicas=2,
+            steps=STEPS,
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 1
+
+    def test_axis_order_is_respected(self):
+        """The grid's named axes follow `over` insertion order; reversing
+        the (draw, param) order transposes the same numbers."""
+        s = base_scn()
+        a = scn_mod.sweep(
+            s,
+            over={"expiration_threshold": THRESHOLDS, "sim_time": [300.0, 500.0]},
+            key=jax.random.key(9),
+            replicas=1,
+            steps=STEPS,
+        )
+        b = scn_mod.sweep(
+            s,
+            over={"sim_time": [300.0, 500.0], "expiration_threshold": THRESHOLDS},
+            key=jax.random.key(9),
+            replicas=1,
+            steps=STEPS,
+        )
+        assert a.shape == (3, 2) and b.shape == (2, 3)
+        np.testing.assert_array_equal(a.cold_start_prob, b.cold_start_prob.T)
+        cell = a.cell(expiration_threshold=30.0, sim_time=500.0)
+        assert cell is a.summaries[1, 1]
+
+    def test_block_backends_on_three_axis_grid(self):
+        """Per-row sim_time/skip_time in the block kernels: a horizon axis
+        runs in the same launch; ref within 1e-3 of scan, pallas bitwise
+        equal to ref."""
+        s = base_scn(sim_time=1000.0, skip_time=20.0)
+        over = {
+            "expiration_threshold": [10.0, 60.0],
+            "arrival_rate": RATES,
+            "sim_time": [600.0, 1000.0],
+        }
+        kw = dict(key=jax.random.key(7), replicas=2, steps=1800)
+        scan = scn_mod.sweep(s, over=over, **kw)
+        ref = scn_mod.sweep(s, over=over, backend="ref", **kw)
+        pal = scn_mod.sweep(s, over=over, backend="pallas", **kw)
+        np.testing.assert_allclose(
+            ref.cold_start_prob, scan.cold_start_prob, rtol=1e-3, atol=1e-6
+        )
+        np.testing.assert_allclose(
+            ref.avg_server_count, scan.avg_server_count, rtol=1e-3
+        )
+        np.testing.assert_array_equal(pal.cold_start_prob, ref.cold_start_prob)
+        np.testing.assert_array_equal(
+            pal.avg_server_count, ref.avg_server_count
+        )
+
+    def test_block_horizon_sweep_does_not_recompile(self):
+        """The per-row t_end/skip satellite: moving the horizon axis values
+        re-uses the compiled block engine (no per-horizon recompile)."""
+        from repro.kernels import faas_event_step as fes
+
+        s = base_scn(sim_time=1000.0, skip_time=20.0)
+        kw = dict(replicas=1, steps=1800)
+        over1 = {"expiration_threshold": [10.0, 60.0], "sim_time": [600.0, 1000.0]}
+        over2 = {"expiration_threshold": [20.0, 50.0], "sim_time": [500.0, 900.0]}
+        scn_mod.sweep(s, over=over1, key=jax.random.key(0), backend="ref", **kw)
+        before = sim_mod.TRACE_COUNTS["sweep_block_ref"]
+        scn_mod.sweep(s, over=over2, key=jax.random.key(1), backend="ref", **kw)
+        assert sim_mod.TRACE_COUNTS["sweep_block_ref"] == before
+        scn_mod.sweep(s, over=over1, key=jax.random.key(0), backend="pallas", **kw)
+        before = fes.TRACE_COUNTS["faas_sweep_pallas"]
+        scn_mod.sweep(s, over=over2, key=jax.random.key(1), backend="pallas", **kw)
+        assert fes.TRACE_COUNTS["faas_sweep_pallas"] == before
+
+    def test_profile_grid_through_over(self):
+        """sweep_profiles-style grids are expressible through over= and
+        agree with the deprecated entry point exactly."""
+        from repro.core.whatif import sweep_profiles
+
+        s = base_scn(
+            arrival_process=ExpSimProcess(rate=0.8),
+            sim_time=900.0,
+            skip_time=0.0,
+            window_bounds=tuple(np.linspace(0.0, 900.0, 10)),
+            expiration_threshold=30.0,
+        )
+        profiles = [
+            SinusoidalRate(base=0.8, amplitude=a, period=450.0)
+            for a in (0.2, 0.5, 0.8)
+        ]
+        g = scn_mod.sweep(
+            s, over={"profile": profiles}, key=jax.random.key(11), replicas=2
+        )
+        with pytest.warns(DeprecationWarning):
+            old = sweep_profiles(s, profiles, jax.random.key(11), replicas=2)
+        np.testing.assert_array_equal(g.cold_start_prob, old.cold_start_prob)
+        np.testing.assert_array_equal(
+            g.windowed_cold_prob, old.windowed_cold_prob
+        )
+        np.testing.assert_array_equal(
+            g.windowed_arrivals, old.windowed_arrivals
+        )
+        np.testing.assert_array_equal(
+            g.windowed_instance_count, old.windowed_instance_count
+        )
+        # profile × threshold product grids (the ROADMAP item)
+        g2 = scn_mod.sweep(
+            s,
+            over={"profile": profiles, "expiration_threshold": [10.0, 30.0]},
+            key=jax.random.key(12),
+            replicas=1,
+        )
+        assert g2.shape == (3, 2)
+        assert g2.windowed_cold_prob.shape == (3, 2, 9)
+
+
+class TestSweepPartitioning:
+    def test_static_axis_recompiles_traced_does_not(self):
+        """slots is a static (structure) field: each value is its own
+        compile; the traced threshold axis rides along in one call per
+        slots value.  Draws are shared across static combos, so two ample
+        pool sizes give identical sample paths."""
+        s = base_scn()
+        before = sim_mod.TRACE_COUNTS["simulate_sweep"]
+        g = scn_mod.sweep(
+            s,
+            over={"slots": [26, 28], "expiration_threshold": THRESHOLDS},
+            key=jax.random.key(4),
+            replicas=1,
+            steps=STEPS,
+        )
+        assert sim_mod.TRACE_COUNTS["simulate_sweep"] == before + 2
+        assert g.shape == (2, 3)
+        np.testing.assert_array_equal(
+            g.cold_start_prob[0], g.cold_start_prob[1]
+        )
+        np.testing.assert_array_equal(
+            g.avg_server_count[0], g.avg_server_count[1]
+        )
+
+    def test_swept_window_bounds_disables_windowed_grids(self):
+        """A window_bounds static axis yields per-combo window counts that
+        cannot stack: windowed grids are None (per the GridResult
+        contract), per-cell windows stay available on the summaries."""
+        s = base_scn(skip_time=0.0)
+        g = scn_mod.sweep(
+            s,
+            over={
+                "window_bounds": [
+                    (0.0, 250.0, 500.0),
+                    (0.0, 125.0, 250.0, 375.0, 500.0),
+                ]
+            },
+            key=jax.random.key(0),
+            replicas=1,
+            steps=STEPS,
+        )
+        assert g.windowed_cold_prob is None and g.window_bounds is None
+        assert g.summaries[0].windows.n_cold.shape[-1] == 2
+        assert g.summaries[1].windows.n_cold.shape[-1] == 4
+
+    def test_unknown_and_empty_axes_raise(self):
+        s = base_scn()
+        with pytest.raises(ValueError, match="unknown sweep axis"):
+            scn_mod.sweep(s, over={"billing": [1]}, key=jax.random.key(0))
+        with pytest.raises(ValueError, match="empty"):
+            scn_mod.sweep(
+                s, over={"expiration_threshold": []}, key=jax.random.key(0)
+            )
+        with pytest.raises(ValueError, match="at least one"):
+            scn_mod.sweep(s, over={}, key=jax.random.key(0))
+
+    def test_mixed_stamping_rejected(self):
+        s = base_scn()
+        nhpp = NHPPArrivalProcess(profile=SinusoidalRate(1.0, 0.5, 100.0))
+        with pytest.raises(ValueError, match="mix"):
+            scn_mod.sweep(
+                s,
+                over={"arrival_process": [ExpSimProcess(rate=1.0), nhpp]},
+                key=jax.random.key(0),
+            )
+
+
+class TestDeprecationShims:
+    def _cfg_kw(self):
+        return dict(
+            arrival_process=ExpSimProcess(rate=0.8),
+            warm_service_process=ExpSimProcess(rate=0.5),
+            cold_service_process=ExpSimProcess(rate=0.4),
+            sim_time=500.0,
+            skip_time=10.0,
+        )
+
+    def test_simulation_config_warns(self):
+        with pytest.warns(DeprecationWarning, match="Scenario"):
+            cfg = SimulationConfig(**self._cfg_kw())
+        assert isinstance(cfg, Scenario)
+
+    def test_whatif_sweep_warns_and_matches(self):
+        from repro.core import whatif
+
+        s = base_scn()
+        with pytest.warns(DeprecationWarning, match="scenario.sweep"):
+            old = whatif.sweep(
+                s, RATES, THRESHOLDS, jax.random.key(11), replicas=2, steps=STEPS
+            )
+        g = scn_mod.sweep(
+            s,
+            over={"expiration_threshold": THRESHOLDS, "arrival_rate": RATES},
+            key=jax.random.key(11),
+            replicas=2,
+            steps=STEPS,
+        )
+        np.testing.assert_array_equal(old.cold_start_prob, g.cold_start_prob)
+        np.testing.assert_array_equal(old.provider_cost, g.provider_cost)
+
+    def test_whatif_sweep_profiles_warns(self):
+        from repro.core import whatif
+
+        s = base_scn(
+            sim_time=600.0,
+            skip_time=0.0,
+            window_bounds=(0.0, 300.0, 600.0),
+        )
+        with pytest.warns(DeprecationWarning, match="profile"):
+            whatif.sweep_profiles(
+                s,
+                [SinusoidalRate(base=0.8, amplitude=0.4, period=300.0)],
+                jax.random.key(0),
+                replicas=1,
+            )
+
+
+class TestMMPP:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="positive"):
+            MMPPArrivalProcess(rate_low=-1.0, rate_high=2.0, switch_rate=0.1)
+        with pytest.raises(ValueError, match="envelope"):
+            MMPPArrivalProcess(rate_low=3.0, rate_high=2.0, switch_rate=0.1)
+
+    def test_phase_parity(self):
+        import jax.numpy as jnp
+
+        p = MMPPArrivalProcess(rate_low=0.5, rate_high=2.0, switch_rate=0.1)
+        sw = jnp.asarray([1.0, 3.0, 7.0])
+        t = jnp.asarray([0.5, 2.0, 5.0, 8.0])
+        np.testing.assert_array_equal(
+            np.asarray(p.phase_high(sw, t)), [False, True, False, True]
+        )
+
+    def test_timestamps_sorted_and_padded(self):
+        from repro.core.processes import PAD_TIME
+
+        p = MMPPArrivalProcess(rate_low=0.2, rate_high=2.0, switch_rate=0.05)
+        times, cov = p.arrival_times(jax.random.key(0), (4, 600))
+        t = np.asarray(times)
+        assert (np.diff(t, axis=-1) >= 0).all()
+        assert (t[:, -1] == PAD_TIME).all()  # low-phase rejections pad
+        assert (np.asarray(cov) > 0).all()
+
+    def test_engine_matches_oracle_decision_for_decision(self):
+        """The MMPP stream drives the prestamped scan exactly like any
+        other ArrivalTimeProcess: decisions must match the event-driven
+        pure-Python oracle on the same sample arrays."""
+        s = base_scn(
+            arrival_process=MMPPArrivalProcess(
+                rate_low=0.3, rate_high=1.6, switch_rate=0.05
+            ),
+            sim_time=400.0,
+            skip_time=0.0,
+            expiration_threshold=15.0,
+        )
+        replicas, n = 2, s.steps_needed()
+        samples = draw_workload_samples(s, jax.random.key(3), replicas, n)
+        summary = ServerlessSimulator(s).run(
+            jax.random.key(3), replicas=replicas, samples=samples
+        )
+        dts, warms, colds = [np.asarray(x) for x in samples]
+        for r in range(replicas):
+            ref = simulate_pyref(
+                dts[r], warms[r], colds[r],
+                s.expiration_threshold, s.max_concurrency,
+                s.sim_time, s.skip_time, prestamped=True,
+            )
+            assert int(summary.n_cold[r]) == ref.n_cold
+            assert int(summary.n_warm[r]) == ref.n_warm
+            assert int(summary.n_reject[r]) == ref.n_reject
+
+    def test_long_run_rate_matches_python_generator(self):
+        """Statistical validation against data/workload.py::mmpp_arrivals:
+        symmetric exponential switching spends half the time in each
+        phase, so both implementations must observe ≈ (λ_lo+λ_hi)/2."""
+        from repro.data.workload import mmpp_arrivals
+
+        rl, rh, sw, horizon = 0.4, 2.0, 0.05, 2000.0
+        p = MMPPArrivalProcess(rate_low=rl, rate_high=rh, switch_rate=sw)
+        times, cov = p.arrival_times(jax.random.key(7), (8, 5000))
+        assert (np.asarray(cov) >= horizon).all()
+        t = np.asarray(times)
+        sim_rate = (t < horizon).sum() / (8 * horizon)
+        py_counts = [
+            sum(1 for _ in mmpp_arrivals(rl, rh, sw, horizon, seed=s))
+            for s in range(8)
+        ]
+        py_rate = np.mean(py_counts) / horizon
+        expected = (rl + rh) / 2
+        assert abs(sim_rate - expected) / expected < 0.08
+        assert abs(py_rate - expected) / expected < 0.08
+        assert abs(sim_rate - py_rate) / expected < 0.12
+
+    def test_burstier_than_poisson(self):
+        """The point of MMPP: per-bin counts overdisperse (Fano factor
+        well above the Poisson value of 1)."""
+        p = MMPPArrivalProcess(rate_low=0.2, rate_high=3.0, switch_rate=0.02)
+        times, _ = p.arrival_times(jax.random.key(1), (8, 8000))
+        t = np.asarray(times)
+        horizon, bin_w = 2000.0, 50.0
+        edges = np.arange(0.0, horizon + bin_w, bin_w)
+        counts = np.stack([np.histogram(row[row < horizon], edges)[0] for row in t])
+        fano = counts.var() / counts.mean()
+        assert fano > 1.5
+
+    def test_usable_in_scenario_and_sweep(self):
+        s = base_scn(
+            arrival_process=MMPPArrivalProcess(
+                rate_low=0.3, rate_high=1.5, switch_rate=0.05
+            ),
+            sim_time=300.0,
+            skip_time=0.0,
+        )
+        assert s.prestamped
+        g = scn_mod.sweep(
+            s,
+            over={"expiration_threshold": [10.0, 40.0]},
+            key=jax.random.key(2),
+            replicas=2,
+        )
+        assert g.shape == (2,)
+        assert (g.cold_start_prob >= 0).all()
+
+
+class TestProfileFit:
+    def test_exact_recovery_on_binned_counts(self):
+        ts = [0.5, 1.5, 1.7, 2.1, 2.2, 2.9]
+        p = PiecewiseConstantRate.fit(ts, bin_width=1.0)
+        assert p.edges == (1.0, 2.0)
+        np.testing.assert_allclose(p.rates, (1.0, 2.0, 3.0))
+        np.testing.assert_allclose(
+            np.asarray(p.rate(np.array([0.2, 1.5, 2.5, 99.0]))),
+            [1.0, 2.0, 3.0, 3.0],
+        )
+
+    def test_empty_bins_floor_and_boundary_membership(self):
+        p = PiecewiseConstantRate.fit([0.1, 0.2, 3.0], bin_width=1.0)
+        # arrival exactly at 3.0 lands in bin [3, 4): 4 bins total
+        assert len(p.rates) == 4
+        np.testing.assert_allclose(p.rates[0], 2.0)
+        assert p.rates[1] < 1e-6 and p.rates[2] < 1e-6  # floored, positive
+        np.testing.assert_allclose(p.rates[3], 1.0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="sorted"):
+            PiecewiseConstantRate.fit([2.0, 1.0], bin_width=1.0)
+        with pytest.raises(ValueError, match="bin_width"):
+            PiecewiseConstantRate.fit([1.0], bin_width=0.0)
+
+    def test_closes_trace_profile_whatif_loop(self):
+        """Generate a diurnal NHPP trace, fit an hourly-style profile from
+        the recorded timestamps, re-simulate on the fitted profile: the
+        fitted rates must track the true curve (peak bin ≫ trough bin) and
+        the refit scenario must run end-to-end."""
+        true = SinusoidalRate(base=1.0, amplitude=0.8, period=400.0)
+        times, _ = NHPPArrivalProcess(profile=true).arrival_times(
+            jax.random.key(0), (1, 2000)
+        )
+        t = np.asarray(times)[0]
+        t = t[t < 800.0]
+        fit = PiecewiseConstantRate.fit(t, bin_width=50.0)
+        rates = np.asarray(fit.rates)
+        # peaks near t=100/500, troughs near t=300/700
+        assert rates[2] > 2.5 * rates[6]
+        refit = base_scn(
+            arrival_process=None,
+            rate_profile=fit,
+            sim_time=800.0,
+            skip_time=0.0,
+        )
+        res = scn_mod.run(refit, jax.random.key(1), replicas=2)
+        assert res.summary.n_requests.sum() > 0
+
+
+class TestPerRowHorizonKernels:
+    def test_vector_t_end_matches_scalar_slices(self):
+        """faas_sweep_ref with per-row t_end/skip must equal per-row scalar
+        launches row-for-row (the kernel-level statement of the per-row
+        horizon satellite)."""
+        import jax.numpy as jnp
+
+        from repro.kernels.ref import faas_sweep_ref
+
+        R, M, K = 4, 16, 256
+        ks = jax.random.split(jax.random.key(0), 3)
+        dts = (jax.random.exponential(ks[0], (R, K)) / 0.9).astype(jnp.float32)
+        warms = (jax.random.exponential(ks[1], (R, K)) * 2).astype(jnp.float32)
+        colds = (jax.random.exponential(ks[2], (R, K)) * 2.2).astype(jnp.float32)
+        state = lambda r: (
+            jnp.zeros((r, M), jnp.float32),
+            jnp.full((r, M), -1e30, jnp.float32),
+            jnp.full((r, M), -1e30, jnp.float32),
+            jnp.zeros((r,), jnp.float32),
+        )
+        t_exp = jnp.asarray([10.0, 20.0, 10.0, 20.0], jnp.float32)
+        t_end = jnp.asarray([80.0, 80.0, 160.0, 160.0], jnp.float32)
+        skip = jnp.asarray([0.0, 5.0, 0.0, 5.0], jnp.float32)
+        out = faas_sweep_ref(
+            *state(R), t_exp, dts, warms, colds,
+            t_end=t_end, skip=skip, max_concurrency=100,
+        )
+        acc = np.asarray(out[4])
+        for r in range(R):
+            single = faas_sweep_ref(
+                *state(1),
+                t_exp[r : r + 1],
+                dts[r : r + 1],
+                warms[r : r + 1],
+                colds[r : r + 1],
+                t_end=t_end[r : r + 1],
+                skip=skip[r : r + 1],
+                max_concurrency=100,
+            )
+            np.testing.assert_array_equal(acc[r], np.asarray(single[4])[0])
+        # distinct horizons genuinely change the integrals
+        assert acc[0, 3] != acc[2, 3]
