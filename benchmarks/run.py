@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
@@ -494,6 +496,110 @@ def bench_scenario_grid():
     )
 
 
+def _sharded_child(quick: bool) -> None:
+    """Child-process body of ``bench_sharded_sweep`` (the parent forces
+    ``--xla_force_host_platform_device_count=4`` via XLA_FLAGS before jax
+    initialises): time the 3-axis grid single-device vs grid-sharded and
+    print one JSON payload line."""
+    from repro.core import Execution
+
+    if quick:
+        thresholds = [60.0, 300.0]
+        rates = [0.5, 1.5]
+        horizons = [500.0, 1000.0]
+        steps, replicas = 1800, 2
+    else:
+        thresholds = list(np.linspace(60.0, 1200.0, 4))
+        rates = list(np.linspace(0.2, 2.0, 5))
+        horizons = [500.0, 1000.0, 2000.0]
+        steps, replicas = 4600, 4
+    D = len(jax.devices())
+    cfg = paper_cfg(sim_time=max(horizons), skip_time=50.0)
+    over = {
+        "expiration_threshold": thresholds,
+        "arrival_rate": rates,
+        "sim_time": horizons,
+    }
+    kw = dict(key=jax.random.key(1), replicas=replicas, steps=steps)
+    plan = Execution(shard="grid")  # all visible (fake) devices
+
+    scn_api.sweep(cfg, over=over, **kw)  # warm the single-device compile
+    scn_api.sweep(cfg, over=over, execution=plan, **kw)  # warm the sharded one
+    before = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"],
+        sim_mod.TRACE_COUNTS["simulate_sweep_sharded"],
+    )
+    t0 = time.perf_counter()
+    single = scn_api.sweep(cfg, over=over, **kw)
+    dt_single = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    shard = scn_api.sweep(cfg, over=over, execution=plan, **kw)
+    dt_shard = time.perf_counter() - t0
+    traces = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"] - before[0],
+        sim_mod.TRACE_COUNTS["simulate_sweep_sharded"] - before[1],
+    )
+    bitdiff = float(
+        np.abs(shard.cold_start_prob - single.cold_start_prob).max()
+    )
+    cells = len(thresholds) * len(rates) * len(horizons)
+    arrivals = cells * replicas * steps
+    print(
+        json.dumps(
+            {
+                "us_per_call": dt_shard / arrivals * 1e6,
+                "derived": (
+                    f"devices={D} cells={cells} traces={traces}(expect (0, 0) warm) "
+                    f"single={dt_single:.2f}s sharded={dt_shard:.2f}s "
+                    f"scaling={dt_single / dt_shard:.2f}x bitdiff={bitdiff:.1e}(=0)"
+                ),
+            }
+        )
+    )
+
+
+def bench_sharded_sweep():
+    """Grid-sharded sweep (Execution(shard='grid')) on 4 fake CPU devices.
+
+    JAX pins the device count at first init, so the measurement runs in a
+    child process with ``--xla_force_host_platform_device_count=4``;
+    derived reports the compile counts (expect zero warm traces), the
+    single-vs-sharded wall clock and the bitwise-equality check.  Fake
+    CPU devices share the same cores — the scaling number is about
+    dispatch overhead, not real parallel speedup.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    args = [sys.executable, os.path.abspath(__file__), "--sharded-child"]
+    if QUICK:
+        args.append("--quick")
+    try:
+        out = subprocess.run(
+            args, capture_output=True, text=True, env=env, timeout=1200
+        )
+    except subprocess.TimeoutExpired:
+        emit("bench_sharded_sweep", 0.0, "FAILED timeout=1200s")
+        return
+    if out.returncode != 0:
+        emit("bench_sharded_sweep", 0.0, f"FAILED rc={out.returncode}")
+        print(out.stderr[-2000:], file=sys.stderr)
+        return
+    payload = None
+    for line in reversed(out.stdout.strip().splitlines()):
+        try:
+            payload = json.loads(line)
+            break
+        except json.JSONDecodeError:
+            continue
+    if not isinstance(payload, dict) or "us_per_call" not in payload:
+        emit("bench_sharded_sweep", 0.0, "FAILED no JSON payload in child stdout")
+        print(out.stdout[-2000:], file=sys.stderr)
+        return
+    emit("bench_sharded_sweep", payload["us_per_call"], payload["derived"])
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -544,14 +650,23 @@ def main(argv=None) -> None:
         default=None,
         help="also write rows as JSON (e.g. BENCH_sweep.json) for cross-PR tracking",
     )
+    p.add_argument(
+        "--sharded-child",
+        action="store_true",
+        help=argparse.SUPPRESS,  # internal: bench_sharded_sweep's subprocess
+    )
     args = p.parse_args(argv)
     QUICK = args.quick
+    if args.sharded_child:
+        _sharded_child(QUICK)
+        return
 
     print("name,us_per_call,derived")
     if QUICK:
         bench_table1()
         bench_fig5_sweep()
         bench_scenario_grid()
+        bench_sharded_sweep()
         bench_pallas_block()
         bench_nhpp_sweep()
     else:
@@ -561,6 +676,7 @@ def main(argv=None) -> None:
         bench_fig5_whatif_thresholds()
         bench_fig5_sweep()
         bench_scenario_grid()
+        bench_sharded_sweep()
         bench_pallas_block()
         bench_nhpp_sweep()
         bench_fig1_concurrency_value()

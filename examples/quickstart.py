@@ -12,7 +12,7 @@ sys.path.insert(0, "src")
 
 import jax
 
-from repro.core import ExpSimProcess, Scenario, scenario
+from repro.core import Execution, ExpSimProcess, Scenario, scenario
 
 
 def main(argv=None):
@@ -46,7 +46,10 @@ def main(argv=None):
     print(f"  provider infra       ${res.cost.provider_infra_cost:.4f}")
     print(f"  provider margin      {res.cost.provider_margin_ratio:.3f}x")
 
-    # One declarative what-if grid: threshold × rate, single compile.
+    # One declarative what-if grid: threshold × rate, single compile.  The
+    # Execution plan picks engine/backend/devices — Execution(backend="ref")
+    # would run the f32 block engine, Execution(devices=N, shard="grid") a
+    # device-sharded grid (examples/sharded_sweep.py).
     grid = scenario.sweep(
         scn,
         over={
@@ -55,6 +58,7 @@ def main(argv=None):
         },
         key=jax.random.key(1),
         replicas=max(args.replicas // 2, 1),
+        execution=Execution(engine="scan", backend="scan"),
     )
     print("== what-if grid: cold-start probability [%] ==")
     print("  threshold \\ rate " + "".join(f"{r:>8.2f}" for r in grid.axes["arrival_rate"]))

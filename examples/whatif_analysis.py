@@ -1,10 +1,12 @@
 """What-if analysis (paper §4.3 / Fig 5) through the Scenario API: one
-declarative scenario, one ``sweep`` over (threshold × rate × horizon),
-print the QoS/cost grid and the SLO-optimal threshold.
+declarative scenario, one ``sweep`` over (threshold × rate × horizon)
+under an explicit ``Execution`` plan, named-axis ``sel`` instead of raw
+index math, ``to_dict`` for export.
 
     PYTHONPATH=src python examples/whatif_analysis.py
 """
 
+import json
 import sys
 
 sys.path.insert(0, "src")
@@ -12,7 +14,7 @@ sys.path.insert(0, "src")
 import jax
 import numpy as np
 
-from repro.core import ExpSimProcess, Scenario, scenario
+from repro.core import Execution, ExpSimProcess, Scenario, scenario
 
 
 def main():
@@ -26,27 +28,32 @@ def main():
     )
     rates = [0.2, 0.5, 1.0, 2.0]
     thresholds = [60.0, 300.0, 600.0, 1200.0]
+    # The execution plan is explicit (engine/backend resolved through the
+    # registry); Execution(backend="ref") would run the f32 block engine,
+    # Execution(devices=4, shard="grid") a device-sharded grid.
     res = scenario.sweep(
         scn,
         over={"expiration_threshold": thresholds, "arrival_rate": rates},
         key=jax.random.key(0),
         replicas=2,
+        execution=Execution(engine="scan", backend="scan"),
     )
 
     print("cold-start probability [%] (rows: threshold s, cols: rate req/s)")
     print("          " + "".join(f"{r:>9.1f}" for r in rates))
-    for i, t in enumerate(thresholds):
-        row = "".join(f"{100*res.cold_start_prob[i, j]:>9.3f}" for j in range(len(rates)))
-        print(f"  {t:>6.0f}s {row}")
+    for t in thresholds:
+        row_vals = res.sel(expiration_threshold=t).cold_start_prob
+        print(f"  {t:>6.0f}s " + "".join(f"{100*v:>9.3f}" for v in row_vals))
 
     print("provider infra cost [$] per horizon")
     print("          " + "".join(f"{r:>9.1f}" for r in rates))
-    for i, t in enumerate(thresholds):
-        row = "".join(f"{res.provider_cost[i, j]:>9.4f}" for j in range(len(rates)))
-        print(f"  {t:>6.0f}s {row}")
+    for t in thresholds:
+        row_vals = res.sel(expiration_threshold=t).provider_cost
+        print(f"  {t:>6.0f}s " + "".join(f"{v:>9.4f}" for v in row_vals))
 
-    for j, rate in enumerate(rates):
-        ok = res.cold_start_prob[:, j] <= 0.01
+    for rate in rates:
+        col = res.sel(arrival_rate=rate)  # named-axis selection, no index math
+        ok = col.cold_start_prob <= 0.01
         best = thresholds[int(np.argmax(ok))] if ok.any() else thresholds[-1]
         print(f"smallest threshold meeting 1% cold SLO @ {rate} req/s: {best:.0f}s")
 
@@ -62,7 +69,13 @@ def main():
         replicas=2,
     )
     print("three-axis grid (threshold × rate × horizon):", res3.shape)
-    print("cold% @ (600s, 1.0rps):", 100 * res3.cold_start_prob[1, 1, :])
+    cell = res3.sel(expiration_threshold=600.0, arrival_rate=1.0)
+    print("cold% @ (600s, 1.0rps):", 100 * cell.cold_start_prob)
+
+    # to_dict(): the whole grid as one JSON-able record
+    export = res3.to_dict()
+    print("export keys:", sorted(export)[:6], "...")
+    print("export bytes:", len(json.dumps(export)))
 
 
 if __name__ == "__main__":

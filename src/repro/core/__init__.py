@@ -43,6 +43,13 @@ from repro.core.processes import (  # noqa: E402
     SimProcess,
     TraceArrivalProcess,
 )
+from repro.core.execution import (  # noqa: E402
+    Execution,
+    register_backend,
+    register_engine,
+    registered_backends,
+    registered_engines,
+)
 from repro.core.scenario import (  # noqa: E402
     GridResult,
     Result,
@@ -85,6 +92,11 @@ __all__ = [
     "Scenario",
     "Result",
     "GridResult",
+    "Execution",
+    "register_backend",
+    "register_engine",
+    "registered_backends",
+    "registered_engines",
     "run",
     "sweep",
     "scenario",

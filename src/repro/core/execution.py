@@ -1,0 +1,347 @@
+"""Execution plans and the engine/backend registry (DESIGN.md §9).
+
+The Scenario API separates *what to simulate* (a frozen :class:`Scenario`)
+from *how to execute it*.  This module owns the "how": a frozen
+:class:`Execution` plan naming the engine (simulation semantics), the
+backend (execution substrate), device placement and grid sharding,
+precision expectations, the block-kernel chunk size and buffer donation —
+resolved against a registry the engine/backend modules populate:
+
+* ``repro.core.simulator`` registers engine ``"scan"`` and backend
+  ``"scan"`` (f64 ``lax.scan``, exact);
+* ``repro.core.temporal`` / ``repro.core.par_simulator`` register engines
+  ``"temporal"`` / ``"par"`` — declaring ``backends=("scan",)`` instead of
+  scattering ``if backend != "scan"`` checks;
+* ``repro.kernels.ref`` / ``repro.kernels.faas_event_step`` register the
+  f32 block backends ``"ref"`` / ``"pallas"`` (each contributes its row
+  launcher).
+
+Registration happens at module import; the registry lazy-imports the
+providing module on first resolution (``_PROVIDERS``), so the default
+scan path never pays the kernel/model-stack import.  Unknown names raise
+with the full registered list; capability violations (a backend an engine
+cannot drive, a non-shardable backend under ``shard="grid"``) raise with
+the declared capability.
+
+Sharded sweeps: ``Execution(devices=..., shard="grid")`` makes
+``scenario.sweep`` split the single flattened grid axis across a 1-D
+device mesh with ``shard_map`` (axis name ``"grid"``), padding the axis
+to a multiple of the device count.  Rows are independent, so the sharded
+sweep is bitwise-equal per cell to the single-device one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """A registered simulation engine (the semantics axis).
+
+    ``run(scn, key, plan, *, replicas, steps, grid, initial_instances)``
+    returns ``(summary, temporal_or_None)``.  ``backends`` declares which
+    execution substrates the engine can drive — the registry enforces it
+    so engines never need per-call-site backend checks.  ``sweepable``
+    declares whether :func:`repro.core.scenario.sweep` can batch this
+    engine onto the flattened grid axis; the grid machinery itself lives
+    in the built-in ``scan`` engine, so today only it may declare this
+    (``sweep`` rejects other sweepable engines loudly instead of running
+    scan semantics under their name).
+    """
+
+    name: str
+    run: Callable[..., Any]
+    backends: Tuple[str, ...]
+    sweepable: bool = False
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """A registered execution substrate (the how-to-run axis).
+
+    ``kind="native"`` backends are executed directly by the engine
+    (the f64 scan); ``kind="block"`` backends provide ``launch`` — the
+    f32 row-kernel entry point the sweep machinery calls with prepared
+    ``[C, ...]`` row buffers.  ``shardable`` declares support for
+    ``Execution(shard="grid")``; ``precision`` is the substrate's compute
+    dtype, checked against ``Execution.precision`` when given.
+    """
+
+    name: str
+    precision: str  # "f64" | "f32"
+    kind: str = "block"  # "native" | "block"
+    shardable: bool = False
+    launch: Optional[Callable[..., Any]] = None
+    description: str = ""
+
+
+_ENGINES: dict = {}
+_BACKENDS: dict = {}
+
+# name -> module that registers it on import (kept lazy so the default
+# scan path never imports the kernel/model stack)
+_PROVIDERS = {
+    ("engine", "scan"): "repro.core.simulator",
+    ("engine", "temporal"): "repro.core.temporal",
+    ("engine", "par"): "repro.core.par_simulator",
+    ("backend", "scan"): "repro.core.simulator",
+    ("backend", "ref"): "repro.kernels.ref",
+    ("backend", "pallas"): "repro.kernels.faas_event_step",
+}
+
+
+def register_engine(
+    name: str,
+    *,
+    backends: Sequence[str],
+    sweepable: bool = False,
+    description: str = "",
+):
+    """Decorator: register ``fn`` as engine ``name``'s run entry point."""
+
+    def deco(fn):
+        _ENGINES[name] = EngineSpec(
+            name=name,
+            run=fn,
+            backends=tuple(backends),
+            sweepable=sweepable,
+            description=description,
+        )
+        return fn
+
+    return deco
+
+
+def register_backend(
+    name: str,
+    *,
+    precision: str,
+    kind: str = "block",
+    shardable: bool = False,
+    description: str = "",
+):
+    """Register backend ``name``.  Usable two ways: a plain call registers
+    a ``kind="native"``-style backend with no launcher; applying the
+    returned decorator to a function registers it as the backend's block
+    row launcher (``launch``)."""
+    _BACKENDS[name] = BackendSpec(
+        name=name,
+        precision=precision,
+        kind=kind,
+        shardable=shardable,
+        description=description,
+    )
+
+    def deco(fn):
+        _BACKENDS[name] = dataclasses.replace(_BACKENDS[name], launch=fn)
+        return fn
+
+    return deco
+
+
+def _materialize(kind: str, name: Optional[str] = None) -> None:
+    """Import the module(s) that register the requested (or all) names.
+
+    Importing the *specifically requested* name is strict: a provider
+    that fails while importing (broken transitive dep) is a real bug and
+    must not be masked as "unknown engine/backend" — only the provider
+    module itself being absent hides its name.  The ``name=None`` pass
+    only builds the registered-names listing for error messages and
+    introspection, so there every unimportable provider just drops out.
+    """
+    for (k, n), mod in _PROVIDERS.items():
+        if k == kind and (name is None or n == name):
+            try:
+                importlib.import_module(mod)
+            except ImportError as e:
+                if (
+                    name is not None
+                    and e.name != mod
+                    and not mod.startswith(f"{e.name}.")
+                ):
+                    raise
+
+
+def resolve_engine(name: str) -> EngineSpec:
+    if name not in _ENGINES:
+        _materialize("engine", name)
+    if name not in _ENGINES:
+        _materialize("engine")  # the error should list everything known
+        raise ValueError(
+            f"unknown engine {name!r}; registered engines: "
+            f"{sorted(_ENGINES)}"
+        )
+    return _ENGINES[name]
+
+
+def resolve_backend(name: str) -> BackendSpec:
+    if name not in _BACKENDS:
+        _materialize("backend", name)
+    if name not in _BACKENDS:
+        _materialize("backend")
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_BACKENDS)}"
+        )
+    return _BACKENDS[name]
+
+
+def registered_engines() -> dict:
+    """Snapshot of every registered engine spec (imports all providers)."""
+    _materialize("engine")
+    return dict(sorted(_ENGINES.items()))
+
+
+def registered_backends() -> dict:
+    """Snapshot of every registered backend spec (imports all providers)."""
+    _materialize("backend")
+    return dict(sorted(_BACKENDS.items()))
+
+
+@dataclasses.dataclass(frozen=True)
+class Execution:
+    """One frozen execution plan: how a scenario (grid) actually runs.
+
+    * ``engine`` — simulation semantics (``"scan"`` steady-state,
+      ``"temporal"`` transient, ``"par"`` concurrency-value).
+    * ``backend`` — execution substrate (``"scan"`` f64 exact,
+      ``"pallas"``/``"ref"`` f32 block engine).
+    * ``devices`` — placement for sharded sweeps: ``None`` (all local
+      devices), an ``int`` (first N local devices) or an explicit
+      sequence of ``jax.Device``.
+    * ``shard`` — ``"grid"`` splits the flattened sweep axis over a 1-D
+      mesh of ``devices`` via ``shard_map`` (padding the axis to a
+      multiple of the device count; bitwise-equal per cell).  ``None``
+      runs single-device.
+    * ``precision`` — expected compute dtype; when set it is validated
+      against the backend's declared precision (the plan fails loudly
+      instead of silently computing in the wrong domain).
+    * ``block_k`` — arrival-chunk size for the Pallas block kernel.
+    * ``donate`` — donate the grid's sample buffers into the sweep call
+      (they dominate the allocation and are dead afterwards); turn off
+      to reuse sample arrays across calls.
+    """
+
+    engine: str = "scan"
+    backend: str = "scan"
+    devices: Optional[Union[int, Tuple[Any, ...]]] = None
+    shard: Optional[str] = None
+    precision: Optional[str] = None
+    block_k: int = 512
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.shard not in (None, "grid"):
+            raise ValueError(
+                f"unknown shard spec {self.shard!r}; supported: 'grid' "
+                "(split the flattened sweep axis across devices)"
+            )
+        if self.precision not in (None, "f32", "f64"):
+            raise ValueError(
+                f"unknown precision {self.precision!r}; supported: "
+                "'f32', 'f64'"
+            )
+        if self.block_k < 1:
+            raise ValueError("block_k must be >= 1")
+        d = self.devices
+        if d is not None and not isinstance(d, int):
+            d = tuple(d)
+            if not d:
+                raise ValueError(
+                    "devices sequence is empty (e.g. a platform filter "
+                    "that matched nothing); pass None for all local devices"
+                )
+            object.__setattr__(self, "devices", d)
+        elif isinstance(d, int) and d < 1:
+            raise ValueError("devices count must be >= 1")
+
+    # ---- registry resolution -------------------------------------------
+    def resolve(self) -> Tuple[EngineSpec, BackendSpec]:
+        """Look up and validate the (engine, backend) pair.
+
+        Raises with the registered list on unknown names and with the
+        declared capability on invalid combinations.
+        """
+        espec = resolve_engine(self.engine)
+        bspec = resolve_backend(self.backend)
+        if self.backend not in espec.backends:
+            raise ValueError(
+                f"engine {self.engine!r} supports backends "
+                f"{espec.backends}; got backend {self.backend!r}"
+            )
+        if self.precision is not None and self.precision != bspec.precision:
+            raise ValueError(
+                f"backend {self.backend!r} computes in {bspec.precision}; "
+                f"requested precision {self.precision!r} (drop precision= "
+                "or pick a backend in that domain)"
+            )
+        if self.shard == "grid" and not bspec.shardable:
+            shardable = sorted(
+                n for n, s in registered_backends().items() if s.shardable
+            )
+            raise ValueError(
+                f"backend {self.backend!r} does not support shard='grid'; "
+                f"shardable backends: {shardable}"
+            )
+        if self.devices is not None and self.shard is None:
+            # device placement only takes effect through grid sharding —
+            # silently running single-device would make the plan lie
+            raise ValueError(
+                "devices= is set but shard is None, so the plan would run "
+                "single-device; add shard='grid' (or drop devices=)"
+            )
+        return espec, bspec
+
+    # ---- device placement ----------------------------------------------
+    def resolved_devices(self) -> tuple:
+        """The concrete device tuple this plan runs on."""
+        import jax
+
+        if self.devices is None:
+            return tuple(jax.devices())
+        if isinstance(self.devices, int):
+            avail = jax.devices()
+            if self.devices > len(avail):
+                raise ValueError(
+                    f"Execution.devices={self.devices} but only "
+                    f"{len(avail)} devices are visible"
+                )
+            return tuple(avail[: self.devices])
+        return tuple(self.devices)
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.resolved_devices())
+
+    def mesh(self):
+        """1-D device mesh over ``resolved_devices()`` (axis ``"grid"``)."""
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(self.resolved_devices()), ("grid",))
+
+
+def plan_of(
+    execution: Optional[Execution],
+    engine: Optional[str] = None,
+    backend: Optional[str] = None,
+) -> Execution:
+    """The compatibility seam: merge an optional plan with the legacy
+    ``engine=``/``backend=`` string kwargs (kwargs win, so pre-plan call
+    sites keep working unchanged)."""
+    plan = execution if execution is not None else Execution()
+    if not isinstance(plan, Execution):
+        raise TypeError(
+            f"execution must be an Execution plan, got {type(plan).__name__}"
+        )
+    changes = {}
+    if engine is not None:
+        changes["engine"] = engine
+    if backend is not None:
+        changes["backend"] = backend
+    return dataclasses.replace(plan, **changes) if changes else plan

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution import register_engine
 from repro.core.scenario import Scenario, StaticConfig, WorkloadParams
 from repro.core.simulator import (
     SimulationSummary,
@@ -262,3 +263,16 @@ class ParServerlessSimulator:
             overflow=acc["overflow"],
             time_in_flight=acc["time_in_flight"],
         )
+
+
+@register_engine(
+    "par",
+    backends=("scan",),  # declared capability: f64 scan substrate only
+    description="concurrency-value platforms (Knative / Cloud Run pattern)",
+)
+def _par_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
+    del grid, initial_instances  # temporal-engine knobs
+    summary = ParServerlessSimulator(scn, scn.concurrency_value).run(
+        key, replicas=replicas, steps=steps
+    )
+    return summary, None

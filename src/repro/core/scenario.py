@@ -7,14 +7,21 @@ This module is that front door:
 * :class:`Scenario` — one declarative, frozen description of a simulation:
   the arrival process *or* a rate profile, the service/cold-start
   processes, platform limits, horizon/warm-up, metric windows and billing.
-* :func:`run` — execute one scenario on any engine (``scan`` steady-state,
-  ``temporal`` transient, ``par`` concurrency-value) and any backend
-  (``scan`` f64, ``pallas``/``ref`` f32 block engine), returning a
-  :class:`Result` bundling the summary and its cost estimate.
+* :func:`run` — execute one scenario under an :class:`Execution` plan:
+  any registered engine (``scan`` steady-state, ``temporal`` transient,
+  ``par`` concurrency-value) × backend (``scan`` f64, ``pallas``/``ref``
+  f32 block engine), returning a :class:`Result` bundling the summary and
+  its cost estimate.  *How to execute* lives in
+  :mod:`repro.core.execution` (DESIGN.md §9) — this module only consumes
+  resolved plans; ``engine=``/``backend=`` kwargs are a thin layer that
+  builds one.
 * :func:`sweep` — an arbitrary product grid over scenario fields
   (``over={"expiration_threshold": [...], "arrival_rate": [...],
   "sim_time": [...], "profile": [...]}``) returning a :class:`GridResult`
-  with named axes.
+  with named axes (``.sel(axis=value)`` selection, ``.to_dict()``
+  export).  ``Execution(devices=..., shard="grid")`` splits the flattened
+  grid axis across a 1-D device mesh — one compile, bitwise-equal per
+  cell to the single-device sweep.
 
 ``sweep`` auto-partitions swept fields (see ``_STATIC_FIELDS`` /
 ``_DRAW_FIELDS`` / ``_PARAM_FIELDS``):
@@ -46,7 +53,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import functools
 import itertools
 import warnings
 from typing import Any, Mapping, Optional, Sequence
@@ -56,6 +62,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import BillingModel, CostEstimate, estimate_cost
+from repro.core.execution import Execution, plan_of, resolve_backend
 from repro.core.processes import (
     ArrivalTimeProcess,
     ExpSimProcess,
@@ -360,63 +367,49 @@ def run(
     key,
     *,
     replicas: int = 8,
-    engine: str = "scan",
-    backend: str = "scan",
+    engine: Optional[str] = None,
+    backend: Optional[str] = None,
+    execution: Optional[Execution] = None,
     steps: Optional[int] = None,
     grid=None,
     initial_instances: Sequence = (),
 ) -> Result:
-    """Run one scenario: ``engine`` picks the simulator semantics,
-    ``backend`` the execution substrate.
+    """Run one scenario under an :class:`Execution` plan.
+
+    ``execution`` names the engine (simulation semantics), backend
+    (execution substrate), precision and chunking; both are resolved
+    through the registry in :mod:`repro.core.execution`, so unknown names
+    raise with the registered list and invalid engine × backend pairs
+    raise with the engine's declared capability.  The legacy ``engine=`` /
+    ``backend=`` string kwargs build (or override) the plan:
 
     * ``engine="scan"`` — steady-state scale-per-request
       (:class:`ServerlessSimulator`); backends ``"scan"`` (f64 exact),
       ``"pallas"``/``"ref"`` (f32 block engine).
     * ``engine="temporal"`` — transient analysis with a custom initial
       pool (``initial_instances``) and point-in-time curves on ``grid``
-      (default: 33 points over the horizon).  Scan backend only.
+      (default: 33 points over the horizon).  Declares scan-backend only.
     * ``engine="par"`` — concurrency-value platforms
-      (``scenario.concurrency_value`` requests per instance).  Scan
-      backend only.
+      (``scenario.concurrency_value`` requests per instance).  Declares
+      scan-backend only.
     """
+    plan = plan_of(execution, engine, backend)
+    espec, _ = plan.resolve()
+    if plan.shard is not None:
+        raise ValueError(
+            "shard= applies to sweep() (there is no grid axis to split "
+            "in a single run)"
+        )
     scn = Scenario.of(scenario)
-    temporal = None
-    if engine == "scan":
-        if backend == "scan":
-            from repro.core.simulator import ServerlessSimulator
-
-            summary = ServerlessSimulator(scn).run(
-                key, replicas=replicas, steps=steps
-            )
-        elif backend in ("pallas", "ref"):
-            summary = _run_block_single(scn, key, replicas, steps, backend)
-        else:
-            raise ValueError(f"unknown run backend {backend!r}")
-    elif engine == "temporal":
-        if backend != "scan":
-            raise ValueError("the temporal engine supports backend='scan' only")
-        from repro.core.temporal import ServerlessTemporalSimulator
-
-        g = np.asarray(
-            grid
-            if grid is not None
-            else np.linspace(0.0, scn.sim_time, 33),
-            dtype=np.float64,
-        )
-        temporal = ServerlessTemporalSimulator(
-            scn, initial_instances=initial_instances
-        ).run(key, g, replicas=replicas, steps=steps)
-        summary = temporal.steady
-    elif engine == "par":
-        if backend != "scan":
-            raise ValueError("the par engine supports backend='scan' only")
-        from repro.core.par_simulator import ParServerlessSimulator
-
-        summary = ParServerlessSimulator(scn, scn.concurrency_value).run(
-            key, replicas=replicas, steps=steps
-        )
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
+    summary, temporal = espec.run(
+        scn,
+        key,
+        plan,
+        replicas=replicas,
+        steps=steps,
+        grid=grid,
+        initial_instances=initial_instances,
+    )
     return Result(
         scenario=scn,
         summary=summary,
@@ -425,7 +418,7 @@ def run(
     )
 
 
-def _run_block_single(scn, key, replicas, steps, backend):
+def _run_block_single(scn, key, replicas, steps, plan):
     """Single-scenario f32 block-engine run (C = replicas rows)."""
     from repro.core.simulator import SimulationSummary, draw_workload_samples
 
@@ -462,8 +455,9 @@ def _run_block_single(scn, key, replicas, steps, backend):
         dts,
         warms,
         colds,
-        backend,
+        resolve_backend(plan.backend),
         kw,
+        block_k=plan.block_k,
     )
     zeros = np.zeros((replicas,))
     return SimulationSummary(
@@ -542,6 +536,26 @@ class GridResult:
     windowed_cold_prob: Optional[np.ndarray] = None  # [*dims, W]
     windowed_arrivals: Optional[np.ndarray] = None  # [*dims, W] replica-mean
     windowed_instance_count: Optional[np.ndarray] = None  # scan backend only
+    execution: Optional[Execution] = None  # the resolved plan
+
+    # grid fields indexed by the named axes (in order); windowed ones carry
+    # a trailing [W] axis that selection leaves untouched
+    _METRIC_FIELDS = (
+        "cold_start_prob",
+        "rejection_prob",
+        "avg_server_count",
+        "avg_running_count",
+        "avg_idle_count",
+        "wasted_ratio",
+        "avg_response_time",
+        "developer_cost",
+        "provider_cost",
+    )
+    _WINDOWED_FIELDS = (
+        "windowed_cold_prob",
+        "windowed_arrivals",
+        "windowed_instance_count",
+    )
 
     @property
     def shape(self) -> tuple:
@@ -550,14 +564,66 @@ class GridResult:
     def axis(self, name: str) -> tuple:
         return self.axes[name]
 
+    def _index_of(self, name: str, value) -> int:
+        if name not in self.axes:
+            raise KeyError(
+                f"unknown axis {name!r}; axes: {list(self.axes)}"
+            )
+        vals = list(self.axes[name])
+        try:
+            return vals.index(value)
+        except ValueError:
+            raise KeyError(
+                f"{value!r} is not on axis {name!r}; values: {vals}"
+            ) from None
+
     def cell(self, **coords):
         """The per-cell summary at axis *values* (e.g. ``sim_time=500.0``)."""
-        idx = []
-        for name, vals in self.axes.items():
+        for name in self.axes:
             if name not in coords:
                 raise KeyError(f"missing coordinate {name!r}")
-            idx.append(list(vals).index(coords[name]))
-        return self.summaries[tuple(idx)]
+        idx = tuple(self._index_of(n, coords[n]) for n in self.axes)
+        return self.summaries[idx]
+
+    def sel(self, **coords) -> "GridResult":
+        """Named-axis selection by *value*: ``grid.sel(arrival_rate=1.0)``
+        pins that axis and drops it from the result, so plots and reports
+        never do raw index math.  Selecting every axis leaves scalar
+        metric arrays (and the bare per-cell summary in ``summaries``)."""
+        picked = {n: self._index_of(n, v) for n, v in coords.items()}
+        indexer = tuple(
+            picked.get(n, slice(None)) for n in self.axes
+        )
+
+        def take(a):
+            return None if a is None else np.asarray(a)[indexer]
+
+        return dataclasses.replace(
+            self,
+            axes={n: v for n, v in self.axes.items() if n not in picked},
+            summaries=self.summaries[indexer],
+            **{f: take(getattr(self, f)) for f in self._METRIC_FIELDS},
+            **{f: take(getattr(self, f)) for f in self._WINDOWED_FIELDS},
+        )
+
+    def to_dict(self) -> dict:
+        """JSON-able export: axes (non-scalar values stringified), every
+        scalar metric grid, and the windowed grids when present."""
+        jsonable = lambda x: (
+            x if isinstance(x, (int, float, str, bool)) else repr(x)
+        )
+        out = {
+            "axes": {n: [jsonable(x) for x in v] for n, v in self.axes.items()},
+            "replicas": self.replicas,
+            "backend": self.backend,
+        }
+        for f in self._METRIC_FIELDS + self._WINDOWED_FIELDS:
+            a = getattr(self, f)
+            if a is not None:
+                out[f] = np.asarray(a).tolist()
+        if self.window_bounds is not None:
+            out["window_bounds"] = np.asarray(self.window_bounds).tolist()
+        return out
 
 
 def _apply_axis(scn: Scenario, name: str, value) -> Scenario:
@@ -588,7 +654,8 @@ def sweep(
     key,
     *,
     replicas: int = 4,
-    backend: str = "scan",
+    backend: Optional[str] = None,
+    execution: Optional[Execution] = None,
     steps: Optional[int] = None,
 ) -> GridResult:
     """Product-grid what-if sweep over arbitrary scenario fields.
@@ -597,10 +664,31 @@ def sweep(
     named axis per entry, in insertion order.  All non-static axes are
     flattened onto the single vmapped grid axis and executed as ONE
     compiled device call per static-field combination (module docstring
-    has the partitioning rules).  Backends as in :func:`run`.
+    has the partitioning rules).
+
+    ``execution`` picks the substrate (backends as in :func:`run`; the
+    legacy ``backend=`` kwarg overrides the plan's backend).  With
+    ``Execution(devices=..., shard="grid")`` the flattened grid axis is
+    split across a 1-D device mesh via ``shard_map`` — padded to a
+    multiple of the device count, still one compile, and bitwise-equal
+    per cell to the single-device sweep.
     """
-    if backend not in ("scan", "pallas", "ref"):
-        raise ValueError(f"unknown sweep backend {backend!r}")
+    plan = plan_of(execution, None, backend)
+    espec, bspec = plan.resolve()
+    if not espec.sweepable:
+        raise ValueError(
+            f"engine {plan.engine!r} does not support sweep(); it runs "
+            "single scenarios only (use run(), or engine='scan' for grids)"
+        )
+    if espec.name != "scan":
+        # the flattened-grid machinery below IS the scan engine's; a
+        # third-party engine declaring sweepable would otherwise silently
+        # get scan semantics instead of its own
+        raise ValueError(
+            f"engine {plan.engine!r} declares sweepable but sweep() "
+            "batching is implemented by the built-in 'scan' grid engine "
+            "only; run() the engine per cell instead"
+        )
     names = list(over.keys())
     if not names:
         raise ValueError("over must name at least one axis to sweep")
@@ -717,14 +805,15 @@ def sweep(
             if S > 1
             else samples
         )
-        if backend == "scan":
+        if bspec.kind == "native":
             cells, win = _scan_cells(
-                scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped
+                scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
+                prestamped, plan,
             )
         else:
             cells, win = _block_cells(
                 scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
-                backend,
+                bspec, plan,
             )
         all_summaries.extend(cells)
         windowed.append(win)
@@ -772,7 +861,8 @@ def sweep(
     return GridResult(
         axes={n: vals[n] for n in names},
         replicas=R,
-        backend=backend,
+        backend=plan.backend,
+        execution=plan,
         summaries=summaries_grid,
         cold_start_prob=metric(lambda s: s.cold_start_prob),
         rejection_prob=metric(lambda s: s.rejection_prob),
@@ -790,12 +880,21 @@ def sweep(
     )
 
 
-def _scan_cells(scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped):
-    """One f64 ``_simulate_sweep`` launch → per-cell summaries."""
+def _scan_cells(
+    scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan
+):
+    """One f64 sweep launch → per-cell summaries.
+
+    ``plan.shard == "grid"`` runs the same vmapped scan under a
+    ``shard_map`` over the plan's 1-D device mesh: the flattened row axis
+    is padded (with copies of row 0, sliced off afterwards) to a multiple
+    of the device count.  Rows are independent, so every real cell is
+    bitwise-identical to the single-device launch.
+    """
     from repro.core.simulator import (
         SimulationSummary,
         WindowedMetrics,
-        _simulate_sweep,
+        sweep_executable,
     )
 
     C = len(thr_rows)
@@ -807,14 +906,25 @@ def _scan_cells(scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamp
         else np.zeros((C, 0))
     )
     params = WorkloadParams.of(thr_rows, sim_rows, skip_rows, wb_rows)
+    mesh = None
+    if plan.shard == "grid":
+        mesh = plan.mesh()
+        pad = (-C) % int(mesh.devices.size)
+        if pad:
+            pad_rows = lambda x: jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]
+            )
+            params = jax.tree.map(pad_rows, params)
+            samples = tuple(pad_rows(x) for x in samples)
+    fn = sweep_executable(mesh=mesh, donate=plan.donate)
     with warnings.catch_warnings():
         # buffer donation is a no-op on CPU; the warning is expected there
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable"
         )
-        acc, t_last = _simulate_sweep(scfg, params, *samples)
-    acc = jax.tree.map(np.asarray, acc)
-    t_last = np.asarray(t_last)
+        acc, t_last = fn(scfg, params, *samples)
+    acc = jax.tree.map(lambda x: np.asarray(x)[:C], acc)
+    t_last = np.asarray(t_last)[:C]
     if not prestamped and (t_last < sim_rows).any():
         raise RuntimeError(
             "pre-drawn arrivals ended before sim_time "
@@ -872,55 +982,29 @@ def _scan_cells(scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamp
     return summaries, win
 
 
-_BLOCK_R = 8
-
-
-@functools.lru_cache(maxsize=1)
-def _ref_jit():
-    # kernels.ref pulls the model stack; import lazily so the default scan
-    # backend keeps core imports light.
-    from repro.kernels.ref import faas_sweep_ref
-
-    def counted(*args, **kw):
-        TRACE_COUNTS["sweep_block_ref"] += 1
-        return faas_sweep_ref(*args, **kw)
-
-    return jax.jit(
-        counted,
-        static_argnames=(
-            "max_concurrency",
-            "prestamped",
-            "n_windows",
-            "w_start",
-            "w_dt",
-        ),
-    )
-
-
 def _block_launch(
-    scn, t_exp, t_end, skip, dts, warms, colds, backend, kw, block_k=512
+    scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512
 ):
-    """Shared f32 block-engine launch: pad to the kernel grid and run the
-    Pallas kernel (interpret mode off-TPU), or the jnp ref mirror.
+    """Shared f32 block-engine launch: prepare the per-row f32 state and
+    sample buffers and hand them to the registered backend's row launcher
+    (``BackendSpec.launch`` — the Pallas kernel's padded grid, or the jnp
+    ref mirror).
 
     ``t_exp``/``t_end``/``skip`` are per-row ``[C]`` vectors (all three are
     traced sweep axes).  ``dts`` rows are gaps, or absolute times when
-    ``kw['prestamped']`` — both use the same 1e30 column fill: as a gap it
-    jumps the clock past the row's ``t_end``, as a timestamp it IS past
-    ``t_end``, so padding is inert either way.  Returns the f64
-    accumulator ``[C, cols]`` after the overflow guard.
+    ``kw['prestamped']``.  Returns the f64 accumulator ``[C, cols]`` after
+    the overflow guard.
     """
     # kernel imports stay local so the default scan backend keeps core
     # imports light; NEG is the kernel's dead-slot sentinel
     from repro.kernels.faas_event_step import NEG as _F32_NEG
-    from repro.kernels.faas_event_step import faas_sweep_pallas
 
     if scn.routing != "newest":
         raise ValueError(
             "block backends implement newest-idle routing only; use "
             f"backend='scan' for routing={scn.routing!r}"
         )
-    C, n = dts.shape
+    C = dts.shape[0]
     dts, warms, colds = (
         jnp.asarray(dts, jnp.float32),
         jnp.asarray(warms, jnp.float32),
@@ -934,55 +1018,13 @@ def _block_launch(
     alive0 = jnp.zeros((C, M), jnp.float32)
     frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
     t0 = jnp.zeros((C,), jnp.float32)
-    if backend == "pallas":
-        # pad rows to the replica-block, arrivals to the chunk size
-        block_k = min(block_k, max(n, 1))
-        pad_c = (-C) % _BLOCK_R
-        pad_k = (-n) % block_k
-
-        def pad(x, col_fill):
-            # extra rows are copies of row 0, sliced off after the launch
-            if pad_k:
-                x = jnp.concatenate(
-                    [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
-                )
-            if pad_c:
-                x = jnp.concatenate(
-                    [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-                )
-            return x
-
-        dts_p = pad(dts, 1e30)
-        warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
-        row_pad = lambda x: jnp.concatenate(
-            [x, jnp.ones((pad_c,), jnp.float32)]
-        ) if pad_c else x
-        state_pad = lambda x: jnp.concatenate(
-            [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-        ) if pad_c else x
-        out = faas_sweep_pallas(
-            state_pad(alive0),
-            state_pad(frozen),
-            state_pad(frozen),
-            jnp.zeros((C + pad_c,), jnp.float32),
-            row_pad(t_exp),
-            dts_p,
-            warms_p,
-            colds_p,
-            t_end=row_pad(t_end),
-            skip=row_pad(skip),
-            block_r=_BLOCK_R,
-            block_k=block_k,
-            interpret=jax.default_backend() != "tpu",
-            **kw,
-        )
-        acc = np.asarray(out[4], np.float64)[:C]
-    else:
-        out = _ref_jit()(
-            alive0, frozen, frozen, t0, t_exp, dts, warms, colds,
-            t_end=t_end, skip=skip, **kw,
-        )
-        acc = np.asarray(out[4], np.float64)
+    acc = np.asarray(
+        bspec.launch(
+            alive0, frozen, frozen, t0, t_exp, t_end, skip,
+            dts, warms, colds, block_k=block_k, **kw,
+        ),
+        np.float64,
+    )
     if acc[:, 7].sum() > 0:
         raise RuntimeError(
             "instance-pool overflow during sweep; raise Scenario.slots"
@@ -991,7 +1033,7 @@ def _block_launch(
 
 
 def _block_cells(
-    scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, backend
+    scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan
 ):
     """One f32 block-engine launch → per-cell summaries."""
     from repro.core.simulator import SimulationSummary
@@ -1032,7 +1074,8 @@ def _block_cells(
         w_dt=w_dt,
     )
     acc = _block_launch(
-        scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, backend, kw
+        scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, bspec, kw,
+        block_k=plan.block_k,
     )
     n_cells = len(thr_rows) // R
     cell = acc.reshape(n_cells, R, ACC_COLS + 3 * W)

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution import register_backend, register_engine
 from repro.core.processes import (
     ArrivalTimeProcess,
     ExpSimProcess,
@@ -499,6 +500,16 @@ def _simulate_batch(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds
     return jax.vmap(one)(dts, warms, colds)
 
 
+def _sweep_rows(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds):
+    """The unjitted sweep body: vmap the per-row scan over the flattened
+    grid axis (shared by the plain, non-donating and sharded entries)."""
+
+    def one(p, dt_row, warm_row, cold_row):
+        return _scan_one(cfg, p, dt_row, warm_row, cold_row)
+
+    return jax.vmap(one)(params, dts, warms, colds)
+
+
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
 def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds):
     """The single-compile what-if engine: one jitted, donated call.
@@ -511,11 +522,45 @@ def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds
     the call.
     """
     TRACE_COUNTS["simulate_sweep"] += 1
+    return _sweep_rows(cfg, params, dts, warms, colds)
 
-    def one(p, dt_row, warm_row, cold_row):
-        return _scan_one(cfg, p, dt_row, warm_row, cold_row)
 
-    return jax.vmap(one)(params, dts, warms, colds)
+@functools.lru_cache(maxsize=None)
+def sweep_executable(mesh=None, donate: bool = True):
+    """The jitted sweep entry point for an :class:`Execution` plan.
+
+    ``mesh=None`` is the single-device engine; a 1-D ``Mesh`` (axis
+    ``"grid"``) wraps the same vmapped body in ``shard_map`` so each
+    device runs its contiguous slice of the flattened grid axis — rows
+    are independent, so per-cell results are bitwise-identical to the
+    unsharded call.  The caller pads the axis to a multiple of the device
+    count.  Cached per (mesh, donate) so each variant compiles once;
+    sharded traces are pinned by ``TRACE_COUNTS["simulate_sweep_sharded"]``.
+    """
+    if mesh is None and donate:
+        return _simulate_sweep
+    counter = "simulate_sweep" if mesh is None else "simulate_sweep_sharded"
+
+    def fn(cfg, params, dts, warms, colds):
+        TRACE_COUNTS[counter] += 1
+        if mesh is None:
+            return _sweep_rows(cfg, params, dts, warms, colds)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        spec = PartitionSpec("grid")
+        return shard_map(
+            functools.partial(_sweep_rows, cfg),
+            mesh=mesh,
+            in_specs=(spec, spec, spec, spec),
+            out_specs=spec,
+        )(params, dts, warms, colds)
+
+    return jax.jit(
+        fn,
+        static_argnums=(0,),
+        donate_argnums=(2, 3, 4) if donate else (),
+    )
 
 
 class ServerlessSimulator:
@@ -611,3 +656,34 @@ class ServerlessSimulator:
             overflow=acc["overflow"],
             windows=windows,
         )
+
+
+# ---------------------------------------------------------------------------
+# Execution-registry entries (DESIGN.md §9): this module provides the f64
+# scan substrate and the steady-state engine.
+# ---------------------------------------------------------------------------
+
+register_backend(
+    "scan",
+    precision="f64",
+    kind="native",
+    shardable=True,
+    description="f64 lax.scan engine (exact; the default substrate)",
+)
+
+
+@register_engine(
+    "scan",
+    backends=("scan", "pallas", "ref"),
+    sweepable=True,
+    description="steady-state scale-per-request simulator (paper §3/§4.1)",
+)
+def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
+    del grid, initial_instances  # temporal-engine knobs
+    if plan.backend == "scan":
+        summary = ServerlessSimulator(scn).run(key, replicas=replicas, steps=steps)
+    else:
+        from repro.core.scenario import _run_block_single
+
+        summary = _run_block_single(scn, key, replicas, steps, plan)
+    return summary, None

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.execution import register_engine
 from repro.core.scenario import Scenario, StaticConfig, WorkloadParams
 from repro.core.simulator import (
     SimulationSummary,
@@ -186,3 +187,19 @@ class ServerlessTemporalSimulator:
             cold_prob_at=curves["no_idle"].mean(0),
             steady=steady,
         )
+
+
+@register_engine(
+    "temporal",
+    backends=("scan",),  # declared capability: f64 scan substrate only
+    description="transient analysis: custom initial pool + grid curves",
+)
+def _temporal_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
+    g = np.asarray(
+        grid if grid is not None else np.linspace(0.0, scn.sim_time, 33),
+        dtype=np.float64,
+    )
+    temporal = ServerlessTemporalSimulator(
+        scn, initial_instances=initial_instances
+    ).run(key, g, replicas=replicas, steps=steps)
+    return temporal.steady, temporal

@@ -28,6 +28,7 @@ import jax
 import numpy as np
 
 from repro.core.cost import BillingModel
+from repro.core.execution import Execution
 from repro.core.processes import ArrivalTimeProcess, RateProfile
 from repro.core.scenario import Scenario, _rated  # noqa: F401 (re-export)
 from repro.core.scenario import sweep as _scenario_sweep
@@ -121,7 +122,7 @@ def sweep(
         },
         key=key,
         replicas=replicas,
-        backend=backend,
+        execution=Execution(backend=backend),
         steps=steps,
     )
     return _result(
@@ -168,7 +169,7 @@ def sweep_profiles(
         over={"profile": list(profiles)},
         key=key,
         replicas=replicas,
-        backend=backend,
+        execution=Execution(backend=backend),
         steps=steps,
     )
     windows = (

@@ -41,7 +41,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.execution import register_backend
+
 NEG = -1e30
+
+# replica-block row granularity of the sweep launcher (rows are padded to
+# a multiple of this before the kernel grid is formed)
+BLOCK_R = 8
 
 # Trace counter (kernel-local to avoid importing repro.core at call time):
 # incremented when faas_sweep_pallas is (re-)traced.  Tests pin that a
@@ -305,6 +311,71 @@ def faas_sweep_pallas(
     )
     alive_n, creation_n, busy_n, t_n, acc = out
     return alive_n, creation_n, busy_n, t_n[:, 0], acc
+
+
+@register_backend(
+    "pallas",
+    precision="f32",
+    kind="block",
+    description="VMEM-resident f32 Pallas block kernel (interpret off-TPU)",
+)
+def _pallas_sweep_rows(
+    alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
+    *, block_k, **kw,
+):
+    """The sweep engine's ``pallas`` row launcher (``BackendSpec.launch``):
+    pad rows to the replica block and arrivals to the chunk size, run
+    :func:`faas_sweep_pallas`, return the ``[C, cols]`` accumulator.
+
+    ``dts`` rows are gaps, or absolute times when ``kw['prestamped']`` —
+    both use the same 1e30 column fill: as a gap it jumps the clock past
+    the row's ``t_end``, as a timestamp it IS past ``t_end``, so padding
+    is inert either way.  Extra rows are copies of row 0, sliced off
+    after the launch.
+    """
+    C, n = dts.shape
+    block_k = min(block_k, max(n, 1))
+    pad_c = (-C) % BLOCK_R
+    pad_k = (-n) % block_k
+
+    def pad(x, col_fill):
+        if pad_k:
+            x = jnp.concatenate(
+                [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+            )
+        if pad_c:
+            x = jnp.concatenate(
+                [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+            )
+        return x
+
+    dts_p = pad(dts, 1e30)
+    warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
+    row_pad = lambda x: jnp.concatenate(
+        [x, jnp.ones((pad_c,), jnp.float32)]
+    ) if pad_c else x
+    state_pad = lambda x: jnp.concatenate(
+        [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
+    ) if pad_c else x
+    out = faas_sweep_pallas(
+        state_pad(alive0),
+        state_pad(creation0),
+        state_pad(busy0),
+        jnp.concatenate([t0, jnp.zeros((pad_c,), jnp.float32)])
+        if pad_c
+        else t0,
+        row_pad(t_exp),
+        dts_p,
+        warms_p,
+        colds_p,
+        t_end=row_pad(t_end),
+        skip=row_pad(skip),
+        block_r=BLOCK_R,
+        block_k=block_k,
+        interpret=jax.default_backend() != "tpu",
+        **kw,
+    )
+    return out[4][:C]
 
 
 def faas_block_step_pallas(

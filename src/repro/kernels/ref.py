@@ -5,9 +5,12 @@ has a ``kernels.ref`` counterpart as required by the repo convention."""
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core.execution import register_backend
 from repro.models.attention import (  # noqa: F401
     decode_attention_ref,
     flash_attention_ref,
@@ -144,6 +147,48 @@ def faas_sweep_ref(
 
     acc0 = jnp.zeros((R, 8 + 3 * n_windows), jnp.float32)
     return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
+
+
+@functools.lru_cache(maxsize=1)
+def _sweep_ref_jit():
+    def counted(*args, **kw):
+        # the counter lives on the scenario-level Counter so the test
+        # suite pins block-backend re-traces in one place
+        from repro.core.scenario import TRACE_COUNTS
+
+        TRACE_COUNTS["sweep_block_ref"] += 1
+        return faas_sweep_ref(*args, **kw)
+
+    return jax.jit(
+        counted,
+        static_argnames=(
+            "max_concurrency",
+            "prestamped",
+            "n_windows",
+            "w_start",
+            "w_dt",
+        ),
+    )
+
+
+@register_backend(
+    "ref",
+    precision="f32",
+    kind="block",
+    description="jnp mirror of the Pallas block kernel (bit-comparable)",
+)
+def _ref_sweep_rows(
+    alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
+    *, block_k, **kw,
+):
+    """The sweep engine's ``ref`` row launcher (``BackendSpec.launch``):
+    no padding needed — the jitted mirror consumes the rows directly."""
+    del block_k  # chunking is a Pallas grid concept
+    out = _sweep_ref_jit()(
+        alive0, creation0, busy0, t0, t_exp, dts, warms, colds,
+        t_end=t_end, skip=skip, **kw,
+    )
+    return out[4]
 
 
 def faas_block_step_ref(

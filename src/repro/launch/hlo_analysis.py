@@ -147,6 +147,14 @@ def _find_entry(comps: Dict[str, Computation], hlo: str) -> str:
     return max(comps, key=lambda c: len(comps[c].instructions))
 
 
+# lhs operand of a dot: either inline-typed (`dot(f32[512,256]{1,0} %x, …)`
+# — newer XLA text) or bare (`dot(%x, …)`); group 2 = inline dims, group 3 =
+# operand name for the shape-table fallback.
+_DOT_LHS = re.compile(
+    r"\bdot\(\s*(?:([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?\s+)?%?([\w\.\-]+)"
+)
+
+
 def _dot_flops(comp: Computation, shapes: Dict[str, str]) -> float:
     total = 0.0
     for ins in comp.instructions:
@@ -157,17 +165,25 @@ def _dot_flops(comp: Computation, shapes: Dict[str, str]) -> float:
             continue
         result_elems = sum(n for _, n in elems)
         mm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.body)
-        operands = re.findall(r"dot\(%?([\w\.\-]+),", ins.body)
+        lhs = _DOT_LHS.search(ins.body)
         contracted = 1
-        if mm and operands:
-            lhs_shape = shapes.get(operands[0])
-            if lhs_shape:
-                dims_m = _SHAPE.search(lhs_shape)
-                if dims_m:
-                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
-                    for idx in mm.group(1).split(","):
-                        if idx and int(idx) < len(dims):
-                            contracted *= dims[int(idx)]
+        if mm and lhs:
+            dims: List[int] = []
+            if lhs.group(2) is not None:  # inline-typed operand
+                dims = [int(d) for d in lhs.group(2).split(",") if d]
+            else:  # bare operand name → result-shape table
+                lhs_shape = shapes.get(lhs.group(3))
+                if lhs_shape:
+                    dims_m = _SHAPE.search(lhs_shape)
+                    if dims_m:
+                        dims = [
+                            int(d)
+                            for d in dims_m.group(2).split(",")
+                            if d
+                        ]
+            for idx in mm.group(1).split(","):
+                if idx and int(idx) < len(dims):
+                    contracted *= dims[int(idx)]
         total += 2.0 * result_elems * contracted
     return total
 

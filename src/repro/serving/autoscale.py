@@ -9,10 +9,12 @@ what-if workflow, wired to the live platform's configuration.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import numpy as np
 
+from repro.core.execution import Execution
 from repro.core.processes import ExpSimProcess
 from repro.core.scenario import Scenario
 from repro.core.scenario import sweep as scenario_sweep
@@ -35,7 +37,12 @@ def plan_expiration_threshold(
     sim_time: float = 2e4,
     seed: int = 0,
     replicas: int = 4,
+    execution: Optional[Execution] = None,
 ) -> PlanResult:
+    """``execution`` picks the sweep's substrate/placement (e.g.
+    ``Execution(backend="ref")`` for the f32 block engine, or
+    ``Execution(devices=..., shard="grid")`` to shard a large candidate
+    grid across devices); default is the exact single-device f64 scan."""
     base = Scenario(
         arrival_process=ExpSimProcess(rate=arrival_rate),
         warm_service_process=ExpSimProcess(rate=1.0 / warm_time),
@@ -49,12 +56,14 @@ def plan_expiration_threshold(
         over={"expiration_threshold": thresholds},
         key=jax.random.key(seed),
         replicas=replicas,
+        execution=execution,
     )
     ok = result.cold_start_prob <= cold_slo
-    i = int(np.argmax(ok)) if ok.any() else len(thresholds) - 1
+    chosen = thresholds[int(np.argmax(ok))] if ok.any() else thresholds[-1]
+    best = result.sel(expiration_threshold=chosen)
     return PlanResult(
-        expiration_threshold=thresholds[i],
-        predicted_cold_prob=float(result.cold_start_prob[i]),
-        predicted_avg_replicas=float(result.avg_server_count[i]),
-        predicted_wasted_ratio=float(result.wasted_ratio[i]),
+        expiration_threshold=chosen,
+        predicted_cold_prob=float(best.cold_start_prob),
+        predicted_avg_replicas=float(best.avg_server_count),
+        predicted_wasted_ratio=float(best.wasted_ratio),
     )

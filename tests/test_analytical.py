@@ -11,7 +11,7 @@ from repro.core import (
     DeterministicSimProcess,
     ExpSimProcess,
     ServerlessSimulator,
-    SimulationConfig,
+    Scenario,
 )
 from repro.core import analytical as ana
 
@@ -31,7 +31,7 @@ def base_cfg(**kw):
         slots=64,
     )
     d.update(kw)
-    return SimulationConfig(**d)
+    return Scenario(**d)
 
 
 def test_littles_law_running_count():

@@ -13,14 +13,22 @@ from repro.core import (
     PiecewiseConstantRate,
     ServerlessSimulator,
     ServerlessTemporalSimulator,
-    SimulationConfig,
+    Scenario,
     SinusoidalRate,
     TraceArrivalProcess,
 )
 from repro.core import simulator as sim_mod
 from repro.core.processes import PAD_TIME
 from repro.core.pyref import simulate_pyref
-from repro.core.whatif import sweep_profiles
+from repro.core import whatif
+
+
+def sweep_profiles(*args, **kw):
+    """The deprecated entry point under test: every call must warn (tier-1
+    runs with repro deprecations escalated to errors), then behave exactly
+    like its pre-Scenario self."""
+    with pytest.warns(DeprecationWarning, match="scenario.sweep"):
+        return whatif.sweep_profiles(*args, **kw)
 
 
 def base_cfg(**kw):
@@ -34,7 +42,7 @@ def base_cfg(**kw):
         slots=32,
     )
     d.update(kw)
-    return SimulationConfig(**d)
+    return Scenario(**d)
 
 
 class TestRateProfiles:
@@ -419,12 +427,11 @@ class TestProfileSweep:
             )
 
     def test_rate_sweep_refuses_timestamp_processes(self):
-        from repro.core.whatif import sweep
-
         cfg = base_cfg(
             arrival_process=NHPPArrivalProcess(
                 profile=SinusoidalRate(1.0, 0.5, 100.0)
             )
         )
-        with pytest.raises(ValueError, match="sweep_profiles"):
-            sweep(cfg, [1.0], [20.0], jax.random.key(0))
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="sweep_profiles"):
+                whatif.sweep(cfg, [1.0], [20.0], jax.random.key(0))

@@ -11,7 +11,7 @@ from repro.core import (
     ParServerlessSimulator,
     ServerlessSimulator,
     ServerlessTemporalSimulator,
-    SimulationConfig,
+    Scenario,
 )
 
 
@@ -26,7 +26,7 @@ def base_cfg(**kw):
         slots=48,
     )
     d.update(kw)
-    return SimulationConfig(**d)
+    return Scenario(**d)
 
 
 class TestParSimulator:

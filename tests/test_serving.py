@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.core import ExpSimProcess, ServerlessSimulator, Scenario
 from repro.data.workload import (
     Request,
     batch_arrivals,
@@ -35,7 +35,7 @@ class TestPlatformVsSimulator:
         obs = platform.run(poisson_arrivals(rate, horizon, seed=1), horizon)
 
         sim = ServerlessSimulator(
-            SimulationConfig(
+            Scenario(
                 arrival_process=ExpSimProcess(rate=rate),
                 warm_service_process=ExpSimProcess(rate=1 / warm),
                 cold_service_process=ExpSimProcess(rate=1 / cold),

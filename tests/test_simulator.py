@@ -12,7 +12,7 @@ from repro.core import (
     ExpSimProcess,
     GaussianSimProcess,
     ServerlessSimulator,
-    SimulationConfig,
+    Scenario,
 )
 from repro.core.pyref import simulate_pyref
 
@@ -30,7 +30,7 @@ def make_cfg(**kw):
         hist_bins=33,
     )
     base.update(kw)
-    return SimulationConfig(**base)
+    return Scenario(**base)
 
 
 def run_both(cfg, seed=0, replicas=2):

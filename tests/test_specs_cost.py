@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_config, get_smoke_config, list_archs
-from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.core import ExpSimProcess, ServerlessSimulator, Scenario
 from repro.core.cost import BillingModel, estimate_cost
 from repro.launch import input_specs as ispec
 from repro.models.model import build_model
@@ -62,7 +62,7 @@ def test_cache_shapes_match_decode_consumption(arch):
 
 class TestCostModel:
     def _summary(self):
-        cfg = SimulationConfig(
+        cfg = Scenario(
             arrival_process=ExpSimProcess(rate=1.0),
             warm_service_process=ExpSimProcess(rate=0.5),
             cold_service_process=ExpSimProcess(rate=0.4),
@@ -95,7 +95,7 @@ class TestCostModel:
         import dataclasses
 
         def run(t_exp):
-            cfg = SimulationConfig(
+            cfg = Scenario(
                 arrival_process=ExpSimProcess(rate=1.0),
                 warm_service_process=ExpSimProcess(rate=0.5),
                 cold_service_process=ExpSimProcess(rate=0.4),

@@ -11,9 +11,9 @@ import dataclasses
 import jax
 import numpy as np
 
-from repro.core import ExpSimProcess, ServerlessSimulator, SimulationConfig
+from repro.core import ExpSimProcess, ServerlessSimulator, Scenario
+from repro.core import scenario as scn_mod
 from repro.core.cost import BillingModel, estimate_cost
-from repro.core.whatif import sweep
 from repro.data.workload import poisson_arrivals
 from repro.serving.platform import ServerlessPlatform
 
@@ -23,7 +23,7 @@ def test_full_predict_deploy_compare_cycle():
     horizon = 3000.0
 
     # 1. predict
-    cfg = SimulationConfig(
+    cfg = Scenario(
         arrival_process=ExpSimProcess(rate=rate),
         warm_service_process=ExpSimProcess(rate=1 / warm),
         cold_service_process=ExpSimProcess(rate=1 / cold),
@@ -55,10 +55,12 @@ def test_full_predict_deploy_compare_cycle():
     assert cost_pred.provider_infra_cost > cost_pred.developer_runtime_cost * 0.01
 
     # 5. what-if: pick a cheaper threshold meeting a 10% cold SLO
-    res = sweep(
+    res = scn_mod.sweep(
         cfg,
-        arrival_rates=[rate],
-        expiration_thresholds=[5.0, 25.0, 100.0],
+        over={
+            "expiration_threshold": [5.0, 25.0, 100.0],
+            "arrival_rate": [rate],
+        },
         key=jax.random.key(3),
         replicas=2,
     )

@@ -5,7 +5,7 @@ the trace taken from our own platform instead of AWS)."""
 import jax
 import numpy as np
 
-from repro.core import ServerlessSimulator, SimulationConfig
+from repro.core import ServerlessSimulator, Scenario
 from repro.core.processes import (
     EmpiricalSimProcess,
     ExpSimProcess,
@@ -37,7 +37,7 @@ def test_trace_roundtrip_reproduces_platform_metrics():
     obs = platform.run(iter(reqs), horizon)
 
     # replay: recorded arrival trace + bootstrap service distributions
-    cfg = SimulationConfig(
+    cfg = Scenario(
         arrival_process=TraceArrivalProcess(
             timestamps=tuple(r.arrival_time for r in reqs)
         ),

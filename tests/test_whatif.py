@@ -14,9 +14,18 @@ def jnp_ones(shape):
 
     return jnp.ones(shape)
 
-from repro.core import ExpSimProcess, SimulationConfig
+from repro.core import ExpSimProcess, Scenario
 from repro.core import simulator as sim_mod
-from repro.core.whatif import sweep, sweep_legacy
+from repro.core import whatif
+from repro.core.whatif import sweep_legacy
+
+
+def sweep(*args, **kw):
+    """The deprecated entry point under test: every call must warn (tier-1
+    runs with repro deprecations escalated to errors), then behave exactly
+    like its pre-Scenario self."""
+    with pytest.warns(DeprecationWarning, match="scenario.sweep"):
+        return whatif.sweep(*args, **kw)
 
 
 def base_cfg(**kw):
@@ -30,7 +39,7 @@ def base_cfg(**kw):
         slots=32,
     )
     d.update(kw)
-    return SimulationConfig(**d)
+    return Scenario(**d)
 
 
 RATES = [0.5, 1.0]
@@ -154,7 +163,7 @@ class TestBlockBackends:
     def test_table1_workload_agreement(self):
         """Acceptance: the block backend stays within 1e-3 relative of the
         f64 scan on the paper's Table 1 rates (shortened horizon)."""
-        cfg = SimulationConfig(
+        cfg = Scenario(
             arrival_process=ExpSimProcess(rate=0.9),
             warm_service_process=ExpSimProcess(rate=1 / 1.991),
             cold_service_process=ExpSimProcess(rate=1 / 2.244),
