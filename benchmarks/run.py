@@ -40,9 +40,19 @@ from repro.core.whatif import sweep_legacy  # noqa: E402
 ROWS = []
 QUICK = False
 
+# --json schema version: one object per bench with the stable keys
+# {name, us_per_call, derived} plus optional structured fields
+# {wall_clock_s, traces, bitdiff} so the perf trajectory is machine-
+# comparable PR-over-PR (CI uploads the file as an artifact).
+BENCH_SCHEMA = "simfaas-bench-v1"
 
-def emit(name: str, us_per_call: float, derived: str):
-    ROWS.append((name, us_per_call, derived))
+
+def emit(name: str, us_per_call: float, derived: str, **extra):
+    """Record one bench row.  ``extra`` carries the structured fields of
+    the ``--json`` schema: ``wall_clock_s`` (dict of label → seconds),
+    ``traces`` (dict of counter → count), ``bitdiff`` (float)."""
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived, **extra})
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
 
@@ -600,6 +610,136 @@ def bench_sharded_sweep():
     emit("bench_sharded_sweep", payload["us_per_call"], payload["derived"])
 
 
+def _block_sharded_child(quick: bool) -> None:
+    """Child-process body of ``bench_block_sharded``: a threshold × profile
+    grid with (irregular) metric windows on the f32 block backend,
+    single-device vs grid-sharded over the 4 fake devices, one JSON
+    payload line.  Backend: pallas on TPU, its jnp ref mirror elsewhere
+    (interpret-mode pallas timing would measure the interpreter)."""
+    from repro.core import Execution, scenario as scn
+    from repro.core.scenario import TRACE_COUNTS as SCN_TRACE_COUNTS
+
+    backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if quick:
+        sim_time, replicas, n_thr, n_amp = 1000.0, 2, 3, 4
+    else:
+        sim_time, replicas, n_thr, n_amp = 4000.0, 4, 4, 8
+    day = sim_time / 2.0
+    profiles = [
+        SinusoidalRate(base=0.9, amplitude=a, period=day)
+        for a in np.linspace(0.1, 0.9, n_amp)
+    ]
+    bounds = np.concatenate(
+        [np.linspace(0.0, sim_time / 2, 5), [sim_time * 0.8, sim_time]]
+    )
+    cfg = paper_cfg(
+        sim_time=sim_time,
+        expiration_threshold=120.0,
+        window_bounds=tuple(bounds),  # irregular: in-kernel windowed path
+        skip_time=0.0,
+    )
+    steps = int(sim_time * 0.9 * 1.9 + 300)
+    over = {
+        "expiration_threshold": list(np.linspace(60.0, 600.0, n_thr)),
+        "profile": profiles,
+    }
+    kw = dict(key=jax.random.key(3), replicas=replicas, steps=steps,
+              backend=backend)
+    plan = Execution(backend=backend, shard="grid")  # all visible devices
+    D = len(jax.devices())
+
+    scn.sweep(cfg, over=over, **kw)  # warm the single-device compile
+    scn.sweep(cfg, over=over, execution=plan, **kw)  # warm the sharded one
+    before = (
+        SCN_TRACE_COUNTS["sweep_block_ref"],
+        SCN_TRACE_COUNTS["sweep_block_sharded"],
+    )
+    t0 = time.perf_counter()
+    single = scn.sweep(cfg, over=over, **kw)
+    dt_single = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    shard = scn.sweep(cfg, over=over, execution=plan, **kw)
+    dt_shard = time.perf_counter() - t0
+    traces = {
+        "sweep_block_ref": SCN_TRACE_COUNTS["sweep_block_ref"] - before[0],
+        "sweep_block_sharded": (
+            SCN_TRACE_COUNTS["sweep_block_sharded"] - before[1]
+        ),
+    }
+    bitdiff = max(
+        float(np.abs(np.asarray(getattr(shard, f))
+                     - np.asarray(getattr(single, f))).max())
+        for f in ("cold_start_prob", "windowed_instance_count")
+    )
+    cells = n_thr * n_amp
+    arrivals = int(single.windowed_arrivals.sum() * replicas)
+    print(
+        json.dumps(
+            {
+                "us_per_call": dt_shard / max(arrivals, 1) * 1e6,
+                "derived": (
+                    f"backend={backend} devices={D} cells={cells} "
+                    f"block_k={single.execution.block_k} "
+                    f"traces={tuple(traces.values())}(expect (0, 0) warm) "
+                    f"single={dt_single:.2f}s sharded={dt_shard:.2f}s "
+                    f"scaling={dt_single / dt_shard:.2f}x "
+                    f"bitdiff={bitdiff:.1e}(=0)"
+                ),
+                "wall_clock_s": {"single": dt_single, "sharded": dt_shard},
+                "traces": traces,
+                "bitdiff": bitdiff,
+            }
+        )
+    )
+
+
+def bench_block_sharded():
+    """Grid-sharded f32 block sweep (the headline of the block-backend
+    promotion): a threshold × profile grid with irregular metric windows
+    under ``Execution(backend=<block>, shard='grid')`` on 4 fake CPU
+    devices vs single-device — expect zero warm traces and bitdiff=0.
+    Fake CPU devices share cores, so scaling measures dispatch overhead
+    off-TPU; on real devices the row-parallel launch scales near-linearly.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()
+    args = [sys.executable, os.path.abspath(__file__), "--block-sharded-child"]
+    if QUICK:
+        args.append("--quick")
+    try:
+        out = subprocess.run(
+            args, capture_output=True, text=True, env=env, timeout=1200
+        )
+    except subprocess.TimeoutExpired:
+        emit("bench_block_sharded", 0.0, "FAILED timeout=1200s")
+        return
+    if out.returncode != 0:
+        emit("bench_block_sharded", 0.0, f"FAILED rc={out.returncode}")
+        print(out.stderr[-2000:], file=sys.stderr)
+        return
+    payload = None
+    for line in reversed(out.stdout.strip().splitlines()):
+        try:
+            payload = json.loads(line)
+            break
+        except json.JSONDecodeError:
+            continue
+    if not isinstance(payload, dict) or "us_per_call" not in payload:
+        emit("bench_block_sharded", 0.0, "FAILED no JSON payload in child stdout")
+        print(out.stdout[-2000:], file=sys.stderr)
+        return
+    emit(
+        "bench_block_sharded",
+        payload["us_per_call"],
+        payload["derived"],
+        wall_clock_s=payload.get("wall_clock_s"),
+        traces=payload.get("traces"),
+        bitdiff=payload.get("bitdiff"),
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -655,10 +795,18 @@ def main(argv=None) -> None:
         action="store_true",
         help=argparse.SUPPRESS,  # internal: bench_sharded_sweep's subprocess
     )
+    p.add_argument(
+        "--block-sharded-child",
+        action="store_true",
+        help=argparse.SUPPRESS,  # internal: bench_block_sharded's subprocess
+    )
     args = p.parse_args(argv)
     QUICK = args.quick
     if args.sharded_child:
         _sharded_child(QUICK)
+        return
+    if args.block_sharded_child:
+        _block_sharded_child(QUICK)
         return
 
     print("name,us_per_call,derived")
@@ -667,6 +815,7 @@ def main(argv=None) -> None:
         bench_fig5_sweep()
         bench_scenario_grid()
         bench_sharded_sweep()
+        bench_block_sharded()
         bench_pallas_block()
         bench_nhpp_sweep()
     else:
@@ -677,6 +826,7 @@ def main(argv=None) -> None:
         bench_fig5_sweep()
         bench_scenario_grid()
         bench_sharded_sweep()
+        bench_block_sharded()
         bench_pallas_block()
         bench_nhpp_sweep()
         bench_fig1_concurrency_value()
@@ -689,14 +839,8 @@ def main(argv=None) -> None:
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(
-                [
-                    {"name": n, "us_per_call": u, "derived": d}
-                    for n, u, d in ROWS
-                ],
-                f,
-                indent=2,
-            )
+            json.dump({"schema": BENCH_SCHEMA, "quick": QUICK,
+                       "benchmarks": ROWS}, f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
 
 

@@ -70,6 +70,22 @@ def main():
     cell = res.sel(expiration_threshold=600.0, arrival_rate=1.0, sim_time=2e3)
     print(f"cold% @ (600s, 1.0rps, 2000s): {100 * float(cell.cold_start_prob):.3f}")
 
+    # The f32 block backends shard the same way (DESIGN.md §10): same
+    # mesh, bitwise-equal per cell to their own single-device launch.
+    blk = dict(kw, replicas=1)
+    single = scenario.sweep(scn, over=over, backend="ref", **blk)
+    shard = scenario.sweep(
+        scn, over=over,
+        execution=Execution(backend="ref", shard="grid"), **blk,
+    )
+    diff = np.abs(
+        np.asarray(shard.cold_start_prob) - np.asarray(single.cold_start_prob)
+    ).max()
+    print(
+        f"f32 block backend (ref, block_k={shard.execution.block_k}): "
+        f"sharded vs single-device max |Δ| = {diff:.1e} (=0)"
+    )
+
 
 if __name__ == "__main__":
     main()

@@ -58,6 +58,9 @@ class EngineSpec:
     run: Callable[..., Any]
     backends: Tuple[str, ...]
     sweepable: bool = False
+    # backends on which this engine produces windowed (per-time-grid)
+    # metrics — the capability-matrix column; a declaration, not a check
+    windowed_backends: Tuple[str, ...] = ()
     description: str = ""
 
 
@@ -66,9 +69,11 @@ class BackendSpec:
     """A registered execution substrate (the how-to-run axis).
 
     ``kind="native"`` backends are executed directly by the engine
-    (the f64 scan); ``kind="block"`` backends provide ``launch`` — the
-    f32 row-kernel entry point the sweep machinery calls with prepared
-    ``[C, ...]`` row buffers.  ``shardable`` declares support for
+    (the f64 scan); ``kind="block"`` backends provide per-engine row
+    launchers in ``launchers`` — the f32 row-kernel entry points the
+    engines call with prepared ``[C, ...]`` row buffers (the pool-state
+    engines share one launcher; the par engine's ``finish[M, c]`` state
+    has its own).  ``shardable`` declares support for
     ``Execution(shard="grid")``; ``precision`` is the substrate's compute
     dtype, checked against ``Execution.precision`` when given.
     """
@@ -77,8 +82,24 @@ class BackendSpec:
     precision: str  # "f64" | "f32"
     kind: str = "block"  # "native" | "block"
     shardable: bool = False
-    launch: Optional[Callable[..., Any]] = None
+    launchers: Any = dataclasses.field(default_factory=dict)  # engine -> fn
     description: str = ""
+
+    @property
+    def launch(self) -> Optional[Callable[..., Any]]:
+        """The steady-state (scan-engine) row launcher — the common case."""
+        return self.launchers.get("scan")
+
+    def launch_for(self, engine: str) -> Callable[..., Any]:
+        """The row launcher serving ``engine``; raises with the served
+        list when the backend has none for it."""
+        fn = self.launchers.get(engine)
+        if fn is None:
+            raise ValueError(
+                f"backend {self.name!r} has no row launcher for engine "
+                f"{engine!r}; launchers: {sorted(self.launchers)}"
+            )
+        return fn
 
 
 _ENGINES: dict = {}
@@ -101,6 +122,7 @@ def register_engine(
     *,
     backends: Sequence[str],
     sweepable: bool = False,
+    windowed_backends: Sequence[str] = (),
     description: str = "",
 ):
     """Decorator: register ``fn`` as engine ``name``'s run entry point."""
@@ -111,6 +133,7 @@ def register_engine(
             run=fn,
             backends=tuple(backends),
             sweepable=sweepable,
+            windowed_backends=tuple(windowed_backends),
             description=description,
         )
         return fn
@@ -121,25 +144,39 @@ def register_engine(
 def register_backend(
     name: str,
     *,
-    precision: str,
+    precision: Optional[str] = None,
     kind: str = "block",
     shardable: bool = False,
     description: str = "",
+    engines: Sequence[str] = ("scan",),
 ):
-    """Register backend ``name``.  Usable two ways: a plain call registers
-    a ``kind="native"``-style backend with no launcher; applying the
-    returned decorator to a function registers it as the backend's block
-    row launcher (``launch``)."""
-    _BACKENDS[name] = BackendSpec(
-        name=name,
-        precision=precision,
-        kind=kind,
-        shardable=shardable,
-        description=description,
-    )
+    """Register backend ``name``.  Usable three ways: a plain call with
+    ``precision`` registers a ``kind="native"``-style backend with no
+    launcher; applying the returned decorator to a function registers it
+    as the backend's block row launcher for every engine in ``engines``;
+    and a later call *without* ``precision`` augments an already-declared
+    backend with additional per-engine launchers (e.g. the par platform's
+    ``finish[M, c]`` kernel) without re-stating its metadata."""
+    if precision is None:
+        if name not in _BACKENDS:
+            raise ValueError(
+                f"backend {name!r} is not declared yet; pass precision= "
+                "on the first registration"
+            )
+    else:
+        _BACKENDS[name] = BackendSpec(
+            name=name,
+            precision=precision,
+            kind=kind,
+            shardable=shardable,
+            description=description,
+        )
 
     def deco(fn):
-        _BACKENDS[name] = dataclasses.replace(_BACKENDS[name], launch=fn)
+        spec = _BACKENDS[name]
+        _BACKENDS[name] = dataclasses.replace(
+            spec, launchers={**spec.launchers, **{e: fn for e in engines}}
+        )
         return fn
 
     return deco
@@ -222,10 +259,15 @@ class Execution:
     * ``precision`` — expected compute dtype; when set it is validated
       against the backend's declared precision (the plan fails loudly
       instead of silently computing in the wrong domain).
-    * ``block_k`` — arrival-chunk size for the Pallas block kernel.
+    * ``block_k`` — arrival-chunk size for the Pallas block kernel;
+      ``None`` (the default) auto-selects from the stream length and a
+      VMEM budget at launch time (:meth:`resolved_block_k`), and the
+      chosen value is exposed on the result's resolved plan.
     * ``donate`` — donate the grid's sample buffers into the sweep call
       (they dominate the allocation and are dead afterwards); turn off
-      to reuse sample arrays across calls.
+      to reuse sample arrays across calls.  Applies to the f64 scan
+      backend only: the block launchers stage their own f32 copies of
+      the samples, so there is nothing of the caller's to donate there.
     """
 
     engine: str = "scan"
@@ -233,7 +275,7 @@ class Execution:
     devices: Optional[Union[int, Tuple[Any, ...]]] = None
     shard: Optional[str] = None
     precision: Optional[str] = None
-    block_k: int = 512
+    block_k: Optional[int] = None
     donate: bool = True
 
     def __post_init__(self):
@@ -247,7 +289,7 @@ class Execution:
                 f"unknown precision {self.precision!r}; supported: "
                 "'f32', 'f64'"
             )
-        if self.block_k < 1:
+        if self.block_k is not None and self.block_k < 1:
             raise ValueError("block_k must be >= 1")
         d = self.devices
         if d is not None and not isinstance(d, int):
@@ -274,6 +316,20 @@ class Execution:
             raise ValueError(
                 f"engine {self.engine!r} supports backends "
                 f"{espec.backends}; got backend {self.backend!r}"
+            )
+        if (
+            self.shard == "grid"
+            and self.precision == "f64"
+            and bspec.precision == "f32"
+        ):
+            # the generic precision mismatch below would fire too, but a
+            # sharded-f64 ask deserves the full answer: the f64 domain IS
+            # shardable — on the scan backend
+            raise ValueError(
+                f"shard='grid' with precision='f64' cannot run on backend "
+                f"{self.backend!r} (an f32 block backend); sharded f64 "
+                "sweeps run on backend='scan' — switch to it, or drop "
+                "precision='f64' to keep the f32 block path"
             )
         if self.precision is not None and self.precision != bspec.precision:
             raise ValueError(
@@ -324,6 +380,54 @@ class Execution:
         from jax.sharding import Mesh
 
         return Mesh(np.asarray(self.resolved_devices()), ("grid",))
+
+    # ---- block-kernel chunking -----------------------------------------
+    def resolved_block_k(self, n_steps: int) -> int:
+        """The concrete arrival-chunk size for an ``n_steps``-long stream.
+
+        An explicit ``block_k`` is honoured (clamped to the stream
+        length); ``block_k=None`` derives it from ``n_steps`` and the
+        :data:`BLOCK_K_VMEM_BUDGET` for the three ``[block_r, block_k]``
+        f32 sample blocks — ``min(K, budget)``, so short streams run as
+        one chunk and long ones chunk at the VMEM ceiling.  The launcher
+        pads ``K`` up to a ``block_k`` multiple either way (the
+        ``K % block_k == 0`` rule), so every choice is semantics-free;
+        engines report the chosen value on the result's resolved plan.
+        """
+        n = max(int(n_steps), 1)
+        if self.block_k is not None:
+            return min(self.block_k, n)
+        return min(n, _AUTO_BLOCK_K_MAX)
+
+
+# Auto block_k VMEM budget: bytes allowed for the three f32 sample blocks
+# of one replica-row block (BLOCK_R=8 rows).  1 MiB / (3 · 8 · 4 B) =
+# 10922 columns, rounded down to a 128-lane multiple.
+BLOCK_K_VMEM_BUDGET = 1 << 20
+_AUTO_BLOCK_K_MAX = (BLOCK_K_VMEM_BUDGET // (3 * 8 * 4)) // 128 * 128
+
+
+def capability_markdown() -> str:
+    """The engine × backend capability matrix as a markdown table,
+    generated from the live registry (README "Capability matrix" section;
+    a test pins the README copy against this output)."""
+    engines = registered_engines()
+    backends = registered_backends()
+    lines = [
+        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics |",
+        "|---|---|---|---|---|",
+    ]
+    for ename, espec in engines.items():
+        for bname, bspec in backends.items():
+            if bname not in espec.backends:
+                continue
+            sweepable = espec.sweepable
+            lines.append(
+                f"| `{ename}` | `{bname}` | {bspec.precision} | "
+                f"{'✓' if sweepable and bspec.shardable else '—'} | "
+                f"{'✓' if bname in espec.windowed_backends else '—'} |"
+            )
+    return "\n".join(lines)
 
 
 def plan_of(

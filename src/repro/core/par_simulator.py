@@ -265,13 +265,73 @@ class ParServerlessSimulator:
         )
 
 
+def _run_block_par(scn, key, plan, replicas, steps):
+    """Concurrency-value platform on an f32 block backend: the par row
+    launcher drives the ``finish[M, c]`` kernel (``c`` lane-aligned VMEM
+    planes; see ``kernels/faas_event_step.py``) from an empty pool.
+    Lifespan metrics stay a scan capability (zeros here)."""
+    from repro.core.execution import resolve_backend
+    from repro.kernels.faas_event_step import PAR_ACC_COLS
+
+    if scn.track_histogram:
+        raise ValueError("histograms need the f64 scan backend")
+    n = steps or scn.steps_needed()
+    dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
+    if not scn.prestamped:
+        covered = np.asarray(dts, np.float64).sum(axis=1)
+        if (covered < scn.sim_time).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {covered.min():.1f} < {scn.sim_time}); "
+                "pass a larger `steps`"
+            )
+    rows = lambda v: jnp.full((replicas,), v, jnp.float32)
+    launch = resolve_backend(plan.backend).launch_for("par")
+    acc = np.asarray(
+        launch(
+            rows(scn.expiration_threshold),
+            rows(scn.sim_time),
+            rows(scn.skip_time),
+            jnp.asarray(dts, jnp.float32),
+            jnp.asarray(warms, jnp.float32),
+            jnp.asarray(colds, jnp.float32),
+            block_k=plan.resolved_block_k(n),
+            max_concurrency=scn.max_concurrency,
+            concurrency=scn.concurrency_value,
+            slots=scn.slots,
+            prestamped=scn.prestamped,
+        ),
+        np.float64,
+    )
+    assert acc.shape[1] == PAR_ACC_COLS
+    if acc[:, 7].sum() > 0:
+        raise RuntimeError("instance-pool overflow; raise Scenario.slots")
+    zeros = np.zeros((replicas,))
+    return ParSimulationSummary(
+        n_cold=acc[:, 0],
+        n_warm=acc[:, 1],
+        n_reject=acc[:, 2],
+        time_running=acc[:, 3],
+        time_idle=acc[:, 4],
+        sum_cold_resp=acc[:, 5],
+        sum_warm_resp=acc[:, 6],
+        lifespan_sum=zeros,
+        lifespan_count=zeros,
+        measured_time=scn.sim_time - scn.skip_time,
+        overflow=acc[:, 7],
+        time_in_flight=acc[:, 8],
+    )
+
+
 @register_engine(
     "par",
-    backends=("scan",),  # declared capability: f64 scan substrate only
+    backends=("scan", "pallas", "ref"),
     description="concurrency-value platforms (Knative / Cloud Run pattern)",
 )
 def _par_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
     del grid, initial_instances  # temporal-engine knobs
+    if plan.backend != "scan":
+        return _run_block_par(scn, key, plan, replicas, steps), None
     summary = ParServerlessSimulator(scn, scn.concurrency_value).run(
         key, replicas=replicas, steps=steps
     )

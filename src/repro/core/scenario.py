@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import itertools
 import warnings
 from typing import Any, Mapping, Optional, Sequence
@@ -444,8 +445,6 @@ def _run_block_single(scn, key, replicas, steps, plan):
         max_concurrency=scn.max_concurrency,
         prestamped=scn.prestamped,
         n_windows=0,
-        w_start=0.0,
-        w_dt=0.0,
     )
     acc = _block_launch(
         scn,
@@ -457,7 +456,7 @@ def _run_block_single(scn, key, replicas, steps, plan):
         colds,
         resolve_backend(plan.backend),
         kw,
-        block_k=plan.block_k,
+        block_k=plan.resolved_block_k(n),
     )
     zeros = np.zeros((replicas,))
     return SimulationSummary(
@@ -535,8 +534,8 @@ class GridResult:
     window_bounds: Optional[np.ndarray] = None  # [W+1]
     windowed_cold_prob: Optional[np.ndarray] = None  # [*dims, W]
     windowed_arrivals: Optional[np.ndarray] = None  # [*dims, W] replica-mean
-    windowed_instance_count: Optional[np.ndarray] = None  # scan backend only
-    execution: Optional[Execution] = None  # the resolved plan
+    windowed_instance_count: Optional[np.ndarray] = None  # [*dims, W]
+    execution: Optional[Execution] = None  # the resolved plan (block_k filled)
 
     # grid fields indexed by the named axes (in order); windowed ones carry
     # a trailing [W] axis that selection leaves untouched
@@ -741,6 +740,12 @@ def sweep(
             Scenario.of(c, sim_time=max_sim).steps_needed() for c in draw_cfgs
         )
     )
+    if bspec.kind == "block":
+        # pin the concrete (possibly auto-selected) chunk size on the plan
+        # so GridResult.execution reports what actually ran
+        plan = dataclasses.replace(
+            plan, block_k=plan.resolved_block_k(n_steps)
+        )
     R = int(replicas)
     D = len(draw_cfgs)
     ds, ws, cs = [], [], []
@@ -982,8 +987,51 @@ def _scan_cells(
     return summaries, win
 
 
+@functools.lru_cache(maxsize=None)
+def _block_sharded_executable(backend: str, mesh, kw_items: tuple):
+    """The jitted shard_map wrapper for a block backend's row launcher.
+
+    Mirrors :func:`repro.core.simulator.sweep_executable`: a 1-D mesh
+    (axis ``"grid"``) splits the flattened row axis, each device runs the
+    same row launcher on its contiguous slice (rows are independent, so
+    per-cell results are bitwise-identical to the unsharded launch).  The
+    caller pads the row axis to a multiple of ``lcm(BLOCK_R, devices)``
+    so every shard is whole replica-blocks.  Cached per (backend, mesh,
+    static launch config); traces pinned by
+    ``TRACE_COUNTS["sweep_block_sharded"]``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec
+
+    bspec = resolve_backend(backend)
+    kw = dict(kw_items)
+    windowed = kw.pop("windowed")
+    spec = PartitionSpec("grid")
+
+    def body(*arrays):
+        if windowed:
+            *main, wb = arrays
+            return bspec.launch(*main, window_bounds=wb, **kw)
+        return bspec.launch(*arrays, **kw)
+
+    def fn(*arrays):
+        TRACE_COUNTS["sweep_block_sharded"] += 1
+        # check_rep=False: the row-parallel body has no collectives, and
+        # pallas_call has no replication rule under shard_map
+        return shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(spec,) * len(arrays),
+            out_specs=spec,
+            check_rep=False,
+        )(*arrays)
+
+    return jax.jit(fn)
+
+
 def _block_launch(
-    scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512
+    scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512,
+    plan=None, window_rows=None,
 ):
     """Shared f32 block-engine launch: prepare the per-row f32 state and
     sample buffers and hand them to the registered backend's row launcher
@@ -991,13 +1039,23 @@ def _block_launch(
     ref mirror).
 
     ``t_exp``/``t_end``/``skip`` are per-row ``[C]`` vectors (all three are
-    traced sweep axes).  ``dts`` rows are gaps, or absolute times when
-    ``kw['prestamped']``.  Returns the f64 accumulator ``[C, cols]`` after
-    the overflow guard.
+    traced sweep axes); ``window_rows`` is the optional ``[C, W+1]`` traced
+    window-boundary matrix (irregular grids welcome).  ``dts`` rows are
+    gaps, or absolute times when ``kw['prestamped']``.  When ``plan`` asks
+    for ``shard="grid"``, the row axis is padded to a multiple of
+    ``lcm(BLOCK_R, devices)`` with copies of row 0 (sliced off after) and
+    the launch runs under :func:`_block_sharded_executable`.  Returns the
+    f64 accumulator ``[C, cols]`` after the overflow guard.
     """
+    import math
+
     # kernel imports stay local so the default scan backend keeps core
     # imports light; NEG is the kernel's dead-slot sentinel
-    from repro.kernels.faas_event_step import NEG as _F32_NEG
+    from repro.kernels.faas_event_step import (
+        BLOCK_R,
+        NEG as _F32_NEG,
+        _pad_rows,
+    )
 
     if scn.routing != "newest":
         raise ValueError(
@@ -1018,13 +1076,35 @@ def _block_launch(
     alive0 = jnp.zeros((C, M), jnp.float32)
     frozen = jnp.full((C, M), _F32_NEG, jnp.float32)
     t0 = jnp.zeros((C,), jnp.float32)
-    acc = np.asarray(
-        bspec.launch(
-            alive0, frozen, frozen, t0, t_exp, t_end, skip,
-            dts, warms, colds, block_k=block_k, **kw,
-        ),
-        np.float64,
-    )
+    args = (alive0, frozen, frozen, t0, t_exp, t_end, skip, dts, warms, colds)
+    if window_rows is not None:
+        window_rows = jnp.asarray(window_rows, jnp.float32)
+    if plan is not None and plan.shard == "grid":
+        mesh = plan.mesh()
+        pad = (-C) % math.lcm(BLOCK_R, int(mesh.devices.size))
+        if window_rows is not None:
+            args = args + (window_rows,)
+        if pad:
+            args = tuple(_pad_rows(x, pad) for x in args)
+        fn = _block_sharded_executable(
+            bspec.name,
+            mesh,
+            tuple(
+                sorted(
+                    {
+                        **kw,
+                        "block_k": block_k,
+                        "windowed": window_rows is not None,
+                    }.items()
+                )
+            ),
+        )
+        acc = np.asarray(fn(*args), np.float64)[:C]
+    else:
+        launch_kw = dict(kw, block_k=block_k)
+        if window_rows is not None:
+            launch_kw["window_bounds"] = window_rows
+        acc = np.asarray(bspec.launch(*args, **launch_kw), np.float64)
     if acc[:, 7].sum() > 0:
         raise RuntimeError(
             "instance-pool overflow during sweep; raise Scenario.slots"
@@ -1035,9 +1115,15 @@ def _block_launch(
 def _block_cells(
     scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan
 ):
-    """One f32 block-engine launch → per-cell summaries."""
-    from repro.core.simulator import SimulationSummary
-    from repro.kernels.faas_event_step import ACC_COLS
+    """One f32 block-engine launch → per-cell summaries.
+
+    Windowed metrics run in-kernel (irregular grids included, the window
+    boundaries being traced rows) and produce full per-cell
+    :class:`WindowedMetrics` — counts *and* the per-window ∫running/∫idle
+    instance-time integrals — exactly like the f64 scan path.
+    """
+    from repro.core.simulator import SimulationSummary, WindowedMetrics
+    from repro.kernels.faas_event_step import ACC_COLS, WINDOW_COLS
 
     if scn_s.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
@@ -1055,34 +1141,49 @@ def _block_cells(
             )
     wb = scn_s.window_bounds
     W = len(wb) - 1 if wb else 0
+    window_rows = None
     if W:
         bounds = np.asarray(wb, np.float64)
         widths = np.diff(bounds)
-        if not np.allclose(widths, widths[0], rtol=1e-9, atol=1e-12):
-            raise ValueError(
-                "block backends support uniform window grids only; use "
-                "backend='scan' for irregular window_bounds"
-            )
-        w_start, w_dt = float(bounds[0]), float(widths[0])
-    else:
-        w_start = w_dt = 0.0
+        window_rows = np.tile(bounds, (len(thr_rows), 1))
     kw = dict(
         max_concurrency=scn_s.max_concurrency,
         prestamped=prestamped,
         n_windows=W,
-        w_start=w_start,
-        w_dt=w_dt,
     )
     acc = _block_launch(
         scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, bspec, kw,
-        block_k=plan.block_k,
+        block_k=plan.resolved_block_k(dts.shape[1]),
+        plan=plan,
+        window_rows=window_rows,
     )
     n_cells = len(thr_rows) // R
-    cell = acc.reshape(n_cells, R, ACC_COLS + 3 * W)
+    cell = acc.reshape(n_cells, R, ACC_COLS + WINDOW_COLS * W)
+    A = ACC_COLS
     zeros = lambda: np.zeros((R,))
     summaries = []
+    w_cold = np.zeros((n_cells, W)) if W else None
+    w_arr = np.zeros((n_cells, W)) if W else None
+    w_inst = np.zeros((n_cells, W)) if W else None
     for c in range(n_cells):
         row = c * R
+        windows = None
+        if W:
+            cold_c = cell[c, :, A : A + W]
+            served_c = cell[c, :, A + W : A + 2 * W]
+            windows = WindowedMetrics(
+                bounds=bounds,
+                n_cold=cold_c,
+                n_warm=served_c - cold_c,
+                n_arrivals=cell[c, :, A + 2 * W : A + 3 * W],
+                time_running=cell[c, :, A + 3 * W : A + 4 * W],
+                time_idle=cell[c, :, A + 4 * W : A + 5 * W],
+            )
+            w_cold[c] = windows.cold_start_prob
+            w_arr[c] = windows.n_arrivals.mean(axis=0)
+            w_inst[c] = (
+                windows.time_running + windows.time_idle
+            ).mean(axis=0) / widths
         summaries.append(
             SimulationSummary(
                 n_cold=cell[c, :, 0],
@@ -1096,16 +1197,10 @@ def _block_cells(
                 lifespan_count=zeros(),
                 measured_time=float(sim_rows[row] - skip_rows[row]),
                 overflow=cell[c, :, 7],
+                windows=windows,
             )
         )
-    win = None
-    if W:
-        w_cold = cell[:, :, ACC_COLS : ACC_COLS + W].sum(axis=1)
-        w_served = cell[:, :, ACC_COLS + W : ACC_COLS + 2 * W].sum(axis=1)
-        w_arr = cell[:, :, ACC_COLS + 2 * W : ACC_COLS + 3 * W].sum(axis=1)
-        win = dict(
-            cold=w_cold / np.maximum(w_served, 1),
-            arrivals=w_arr / R,
-            instances=None,
-        )
+    win = (
+        dict(cold=w_cold, arrivals=w_arr, instances=w_inst) if W else None
+    )
     return summaries, win

@@ -676,6 +676,7 @@ register_backend(
     "scan",
     backends=("scan", "pallas", "ref"),
     sweepable=True,
+    windowed_backends=("scan", "pallas", "ref"),
     description="steady-state scale-per-request simulator (paper §3/§4.1)",
 )
 def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

@@ -189,9 +189,106 @@ class ServerlessTemporalSimulator:
         )
 
 
+def _run_block_temporal(scn, key, plan, grid, replicas, steps, initial_instances):
+    """Transient analysis on an f32 block backend: the same pool-state row
+    launcher as the steady-state sweep, with the query grid passed as
+    traced ``grid_times`` rows — the kernel accumulates running/idle
+    counts and the no-idle indicator at each grid point (each point falls
+    in exactly one inter-arrival interval, so additive accumulation
+    reproduces the scan engine's snapshots).  Lifespan metrics stay a scan
+    capability (zeros here, as on the steady-state block path)."""
+    from repro.core.execution import resolve_backend
+    from repro.kernels.faas_event_step import ACC_COLS
+
+    cfg = scn if scn.skip_time == 0.0 else Scenario.of(scn, skip_time=0.0)
+    if cfg.track_histogram:
+        raise ValueError("histograms need the f64 scan backend")
+    if cfg.routing != "newest":
+        raise ValueError(
+            "block backends implement newest-idle routing only; use "
+            f"backend='scan' for routing={cfg.routing!r}"
+        )
+    n = steps or cfg.steps_needed()
+    dts, warms, colds = draw_workload_samples(cfg, key, replicas, n)
+    if not cfg.prestamped:
+        # The kernel's tail integration and grid-point snapshots rely on
+        # the stream crossing the horizon (the arrival that steps past
+        # t_end closes the books up to it) — a truncated stream would
+        # silently zero the late curves, so guard like the other block
+        # paths.  f64 sum of the f32 gaps.
+        covered = np.asarray(dts, np.float64).sum(axis=1)
+        if (covered < cfg.sim_time).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {covered.min():.1f} < {cfg.sim_time}); "
+                "pass a larger `steps`"
+            )
+    alive64, creation64, busy64 = _snapshots_to_pool(
+        initial_instances, cfg.slots
+    )
+    bcast = lambda x: jnp.broadcast_to(
+        jnp.asarray(x, jnp.float32), (replicas, cfg.slots)
+    )
+    rows = lambda v: jnp.full((replicas,), v, jnp.float32)
+    G = len(grid)
+    launch = resolve_backend(plan.backend).launch_for("temporal")
+    acc = np.asarray(
+        launch(
+            bcast(alive64),
+            bcast(creation64),
+            bcast(busy64),
+            rows(0.0),
+            rows(cfg.expiration_threshold),
+            rows(cfg.sim_time),
+            rows(0.0),
+            jnp.asarray(dts, jnp.float32),
+            jnp.asarray(warms, jnp.float32),
+            jnp.asarray(colds, jnp.float32),
+            block_k=plan.resolved_block_k(n),
+            grid_times=jnp.asarray(
+                np.tile(grid, (replicas, 1)), jnp.float32
+            ),
+            max_concurrency=cfg.max_concurrency,
+            prestamped=cfg.prestamped,
+            n_windows=0,
+            n_grid=G,
+        ),
+        np.float64,
+    )
+    if acc[:, 7].sum() > 0:
+        raise RuntimeError(
+            f"instance-pool overflow; raise Scenario.slots (={cfg.slots})"
+        )
+    zeros = np.zeros((replicas,))
+    steady = SimulationSummary(
+        n_cold=acc[:, 0],
+        n_warm=acc[:, 1],
+        n_reject=acc[:, 2],
+        time_running=acc[:, 3],
+        time_idle=acc[:, 4],
+        sum_cold_resp=acc[:, 5],
+        sum_warm_resp=acc[:, 6],
+        lifespan_sum=zeros,
+        lifespan_count=zeros,
+        measured_time=cfg.sim_time,
+        overflow=acc[:, 7],
+    )
+    B = ACC_COLS
+    running = acc[:, B : B + G].mean(axis=0)
+    idle = acc[:, B + G : B + 2 * G].mean(axis=0)
+    return steady, TemporalSummary(
+        grid=np.asarray(grid),
+        running_at=running,
+        idle_at=idle,
+        total_at=running + idle,
+        cold_prob_at=acc[:, B + 2 * G : B + 3 * G].mean(axis=0),
+        steady=steady,
+    )
+
+
 @register_engine(
     "temporal",
-    backends=("scan",),  # declared capability: f64 scan substrate only
+    backends=("scan", "pallas", "ref"),
     description="transient analysis: custom initial pool + grid curves",
 )
 def _temporal_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
@@ -199,6 +296,10 @@ def _temporal_engine_run(scn, key, plan, *, replicas, steps, grid, initial_insta
         grid if grid is not None else np.linspace(0.0, scn.sim_time, 33),
         dtype=np.float64,
     )
+    if plan.backend != "scan":
+        return _run_block_temporal(
+            scn, key, plan, g, replicas, steps, initial_instances
+        )
     temporal = ServerlessTemporalSimulator(
         scn, initial_instances=initial_instances
     ).run(key, g, replicas=replicas, steps=steps)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the SimFaaS hot loop: blocks of arrivals applied
+"""Pallas TPU kernels for the SimFaaS hot loop: blocks of arrivals applied
 to blocks of Monte-Carlo replicas with the instance pool resident in VMEM.
 
 This is the paper's event-processing loop adapted to the TPU memory
@@ -19,8 +19,8 @@ Precision domain: the kernel state is f32 (TPU has no f64 VPU), so it is
 the *throughput* engine for many-replica/many-cell what-if sweeps over
 horizons where f32 clocks are exact enough.  The f64 ``lax.scan`` simulator
 in ``repro.core`` remains the exactness path; ``kernels/ref.py`` mirrors
-this kernel in pure f32 jnp (same arithmetic order, same tie-breaks) so the
-two are bit-comparable and serve as the interpreter fallback off-TPU.
+these kernels in pure f32 jnp (same arithmetic order, same tie-breaks) so
+the two are bit-comparable and serve as the interpreter fallback off-TPU.
 
 Semantics per arrival (identical to ``core.simulator`` including the
 measurement window): integrate running/idle instance-time over the window
@@ -30,6 +30,21 @@ threshold → route to the newest idle instance (warm) → else create (cold)
 engage after ``skip`` (warm-up exclusion).  ``t_exp``, ``t_end`` and
 ``skip`` are all per-row traced inputs, so threshold/rate/horizon product
 grids share one compile.
+
+Windowed metrics (DESIGN.md §10): the metric-window *boundaries* are a
+traced ``[R, W+1]`` input (only the window count ``W`` is static), so
+irregular window grids and boundary-value sweeps share one compile; per
+window the kernel accumulates cold/served/arrival counts by half-open
+``[b_w, b_{w+1})`` membership plus exact ∫running / ∫idle instance-time
+integrals (windows ignore ``skip`` — the grid is the caller's own
+measurement request).  Transient curves (the temporal engine): a traced
+``[R, G]`` grid of query times accumulates running/idle instance counts
+and the no-idle-instance (cold-availability) indicator at each point —
+each grid point falls in exactly one inter-arrival interval, so plain
+additive accumulation reproduces the scan engine's point snapshots.
+
+The par platform (``finish[M, c]`` per-request-slot state) has its own
+kernel at the bottom of this module; see ``_par_kernel``.
 """
 
 from __future__ import annotations
@@ -49,41 +64,50 @@ NEG = -1e30
 # a multiple of this before the kernel grid is formed)
 BLOCK_R = 8
 
+# lane width the par kernel pads its slot axis to so each of the c
+# ``finish`` planes is lane-aligned in VMEM (DESIGN.md §10)
+LANE = 128
+
 # Trace counter (kernel-local to avoid importing repro.core at call time):
-# incremented when faas_sweep_pallas is (re-)traced.  Tests pin that a
-# horizon sweep with per-row t_end/skip costs one trace, not one per cell.
+# incremented when faas_sweep_pallas / par_sweep_pallas is (re-)traced.
+# Tests pin that a horizon sweep with per-row t_end/skip costs one trace,
+# not one per cell.
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 # acc columns: cold, warm, reject, t_run, t_idle, resp_cold, resp_warm, overflow
 ACC_COLS = 8
+# windowed columns per window: cold, served, arrivals, ∫running, ∫idle
+WINDOW_COLS = 5
+# transient-curve columns per grid point: running, idle, no_idle indicator
+GRID_COLS = 3
+# par acc columns: ACC_COLS + ∫in-flight-requests
+PAR_ACC_COLS = ACC_COLS + 1
 
 
 def _faas_kernel(
-    # inputs (VMEM blocks)
-    alive_in,  # f32 [Rb, M]  (0/1)
-    creation_in,  # f32 [Rb, M]
-    busy_in,  # f32 [Rb, M]
-    t0_ref,  # f32 [Rb, 1]
-    texp_ref,  # f32 [Rb, 1]  per-row expiration threshold
-    tend_ref,  # f32 [Rb, 1]  per-row horizon (sim_time)
-    skip_ref,  # f32 [Rb, 1]  per-row warm-up exclusion
-    dt_ref,  # f32 [Rb, Kb]
-    warm_ref,  # f32 [Rb, Kb]
-    cold_ref,  # f32 [Rb, Kb]
-    # outputs (revisited across the k grid axis — live in VMEM)
-    alive_out,
-    creation_out,
-    busy_out,
-    t_out,  # f32 [Rb, 1]
-    acc_out,  # f32 [Rb, ACC_COLS]
-    *,
+    *refs,
     max_concurrency: int,
     n_steps: int,
     prestamped: bool,
     n_windows: int,
-    w_start: float,
-    w_dt: float,
+    n_grid: int,
 ):
+    # inputs (VMEM blocks): state [Rb, M] ×3, per-row scalars [Rb, 1] ×4,
+    # optional window bounds [Rb, W+1] and curve grid [Rb, G], samples
+    # [Rb, Kb] ×3; outputs are revisited across the k grid axis.
+    (alive_in, creation_in, busy_in, t0_ref, texp_ref, tend_ref, skip_ref) = refs[:7]
+    i = 7
+    wb_ref = None
+    grid_ref = None
+    if n_windows:
+        wb_ref = refs[i]
+        i += 1
+    if n_grid:
+        grid_ref = refs[i]
+        i += 1
+    dt_ref, warm_ref, cold_ref = refs[i : i + 3]
+    alive_out, creation_out, busy_out, t_out, acc_out = refs[i + 3 :]
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         alive_out[...] = alive_in[...]
@@ -100,6 +124,9 @@ def _faas_kernel(
     t_exp = texp_ref[...][:, 0]  # [Rb]
     t_end = tend_ref[...][:, 0]  # [Rb]
     skip = skip_ref[...][:, 0]  # [Rb]
+    w_lo = wb_ref[...][:, :-1] if n_windows else None  # [Rb, W]
+    w_hi = wb_ref[...][:, 1:] if n_windows else None
+    g_times = grid_ref[...] if n_grid else None  # [Rb, G]
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
 
     def step(i, carry):
@@ -123,6 +150,48 @@ def _faas_kernel(
         )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
+
+        if n_windows:
+            # per-window exact integrals over (lo_e, hi_e] ∩ window — the
+            # interval clipped to the horizon but NOT to skip (windows are
+            # the caller's own measurement grid, DESIGN.md §7)
+            lo_e = jnp.minimum(t, t_end)
+            hi_e = jnp.minimum(t_new, t_end)
+            wlo = jnp.maximum(w_lo, lo_e[:, None])  # [Rb, W]
+            whi = jnp.minimum(w_hi, hi_e[:, None])
+            run_w = jnp.clip(
+                jnp.minimum(busy[:, None, :], whi[:, :, None]) - wlo[:, :, None],
+                0.0,
+                None,
+            )
+            idle_w = jnp.clip(
+                jnp.minimum(expire[:, None, :], whi[:, :, None])
+                - jnp.maximum(busy[:, None, :], wlo[:, :, None]),
+                0.0,
+                None,
+            )
+            w_run = (run_w * alive[:, None, :]).sum(axis=2)  # [Rb, W]
+            w_idle = (idle_w * alive[:, None, :]).sum(axis=2)
+
+        if n_grid:
+            # point snapshots at grid times inside (t, min(t_new, t_end)]:
+            # instance counts from the pre-expiration state, exactly as the
+            # temporal scan engine samples them
+            in_win = (g_times > t[:, None]) & (
+                g_times <= jnp.minimum(t_new, t_end)[:, None]
+            )  # [Rb, G]
+            live_g = (alive[:, None, :] > 0) & (
+                expire[:, None, :] > g_times[:, :, None]
+            )  # [Rb, G, M]
+            running_g = (live_g & (busy[:, None, :] > g_times[:, :, None])).sum(
+                axis=2
+            )
+            idle_g = (live_g & (busy[:, None, :] <= g_times[:, :, None])).sum(
+                axis=2
+            )
+            g_run = jnp.where(in_win, running_g.astype(jnp.float32), 0.0)
+            g_idle = jnp.where(in_win, idle_g.astype(jnp.float32), 0.0)
+            g_cold = (in_win & (idle_g == 0)).astype(jnp.float32)
 
         # expirations
         expired = (alive > 0) & (expire <= t_new[:, None])
@@ -172,22 +241,22 @@ def _faas_kernel(
             axis=1,
         )
         if n_windows:
-            # uniform metric windows [w_start + w*w_dt, w_start + (w+1)*w_dt):
-            # per-window cold / served / arrival counts (windows ignore skip —
-            # the grid is the caller's own measurement request)
-            w_idx = jnp.floor((t_new - w_start) / w_dt)
+            # half-open window membership [b_w, b_{w+1}) of the arrival
+            # instant (windows ignore skip — the grid is the caller's own
+            # measurement request)
             onehot = (
-                jax.lax.broadcasted_iota(
-                    jnp.float32, (t_new.shape[0], n_windows), 1
-                )
-                == w_idx[:, None]
+                (t_new[:, None] >= w_lo) & (t_new[:, None] < w_hi)
             ) & active[:, None]
             w_cold = (onehot & is_cold[:, None]).astype(jnp.float32)
             w_served = (onehot & (is_cold | is_warm)[:, None]).astype(
                 jnp.float32
             )
             w_arr = onehot.astype(jnp.float32)  # includes rejects
-            delta = jnp.concatenate([delta, w_cold, w_served, w_arr], axis=1)
+            delta = jnp.concatenate(
+                [delta, w_cold, w_served, w_arr, w_run, w_idle], axis=1
+            )
+        if n_grid:
+            delta = jnp.concatenate([delta, g_run, g_idle, g_cold], axis=1)
         acc = acc + delta
         return alive, creation, busy, t_new, acc
 
@@ -210,8 +279,7 @@ def _faas_kernel(
         "interpret",
         "prestamped",
         "n_windows",
-        "w_start",
-        "w_dt",
+        "n_grid",
     ),
 )
 def faas_sweep_pallas(
@@ -226,28 +294,35 @@ def faas_sweep_pallas(
     *,
     t_end=float("inf"),  # f32 [R] or scalar — per-row horizon (sweep axis)
     skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
+    window_bounds=None,  # f32 [R, W+1] traced window boundaries (irregular OK)
+    grid_times=None,  # f32 [R, G] traced transient-curve query times
     max_concurrency: int,
     block_r: int = 8,
     block_k: int = 512,
     interpret: bool = False,
     prestamped: bool = False,
     n_windows: int = 0,
-    w_start: float = 0.0,
-    w_dt: float = 0.0,
+    n_grid: int = 0,
 ):
     """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
 
-    Returns ``(alive, creation, busy, t, acc[R, ACC_COLS + 3*n_windows])``.
-    Rows are independent (replica × grid-cell); ``t_exp``, ``t_end`` and
-    ``skip`` vary per row (traced inputs, NOT compile-time constants), so an
-    entire (threshold × rate × horizon) product grid is one kernel launch
-    and one compile — and with ``prestamped=True`` the rows carry
-    absolute-timestamp streams, so a sweep over *rate profiles* (each row
-    thinned from its own profile) is also one launch.  ``n_windows > 0``
-    appends per-window cold / served / arrival counters over the uniform
-    grid ``w_start + [0..n_windows]*w_dt`` (columns
-    ``[ACC_COLS, ACC_COLS+W)`` cold, ``[ACC_COLS+W, ACC_COLS+2W)`` served,
-    ``[ACC_COLS+2W, ACC_COLS+3W)`` arrivals incl. rejects).
+    Returns ``(alive, creation, busy, t, acc)`` with
+    ``acc[R, ACC_COLS + WINDOW_COLS*W + GRID_COLS*G]``.  Rows are
+    independent (replica × grid-cell); ``t_exp``, ``t_end``, ``skip`` and
+    the window boundaries all vary per row (traced inputs, NOT compile-time
+    constants), so an entire (threshold × rate × horizon) product grid is
+    one kernel launch and one compile — and with ``prestamped=True`` the
+    rows carry absolute-timestamp streams, so a sweep over *rate profiles*
+    (each row thinned from its own profile) is also one launch.
+
+    ``n_windows > 0`` appends per-window metric columns over the traced
+    (possibly irregular) boundary rows ``window_bounds``: cold
+    ``[A, A+W)``, served ``[A+W, A+2W)``, arrivals incl. rejects
+    ``[A+2W, A+3W)``, ∫running ``[A+3W, A+4W)``, ∫idle ``[A+4W, A+5W)``
+    where ``A = ACC_COLS``.  ``n_grid > 0`` appends transient-curve
+    columns at the traced query times ``grid_times``: running counts
+    ``[B, B+G)``, idle counts ``[B+G, B+2G)``, no-idle indicator
+    ``[B+2G, B+3G)`` where ``B = A + WINDOW_COLS*W``.
     """
     TRACE_COUNTS["faas_sweep_pallas"] += 1
     R, M = alive.shape
@@ -257,7 +332,7 @@ def faas_sweep_pallas(
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
     skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
     grid = (R // block_r, K // block_k)
-    acc_cols = ACC_COLS + 3 * n_windows
+    acc_cols = ACC_COLS + WINDOW_COLS * n_windows + GRID_COLS * n_grid
 
     state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
     samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
@@ -270,24 +345,30 @@ def faas_sweep_pallas(
         n_steps=block_k,
         prestamped=prestamped,
         n_windows=n_windows,
-        w_start=w_start,
-        w_dt=w_dt,
+        n_grid=n_grid,
     )
+    in_specs = [state_spec, state_spec, state_spec, t_spec, t_spec, t_spec, t_spec]
+    inputs = [
+        alive,
+        creation,
+        busy,
+        t0[:, None],
+        t_exp[:, None],
+        t_end[:, None],
+        skip[:, None],
+    ]
+    if n_windows:
+        in_specs.append(pl.BlockSpec((block_r, n_windows + 1), lambda r, k: (r, 0)))
+        inputs.append(jnp.asarray(window_bounds, jnp.float32))
+    if n_grid:
+        in_specs.append(pl.BlockSpec((block_r, n_grid), lambda r, k: (r, 0)))
+        inputs.append(jnp.asarray(grid_times, jnp.float32))
+    in_specs += [samp_spec, samp_spec, samp_spec]
+    inputs += [dts, warms, colds]
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            state_spec,
-            state_spec,
-            state_spec,
-            t_spec,
-            t_spec,
-            t_spec,
-            t_spec,
-            samp_spec,
-            samp_spec,
-            samp_spec,
-        ],
+        in_specs=in_specs,
         out_specs=[state_spec, state_spec, state_spec, t_spec, acc_spec],
         out_shape=[
             jax.ShapeDtypeStruct((R, M), jnp.float32),
@@ -297,31 +378,33 @@ def faas_sweep_pallas(
             jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
         ],
         interpret=interpret,
-    )(
-        alive,
-        creation,
-        busy,
-        t0[:, None],
-        t_exp[:, None],
-        t_end[:, None],
-        skip[:, None],
-        dts,
-        warms,
-        colds,
-    )
+    )(*inputs)
     alive_n, creation_n, busy_n, t_n, acc = out
     return alive_n, creation_n, busy_n, t_n[:, 0], acc
+
+
+def _pad_rows(x, pad_c, fill=None):
+    """Row-pad ``[C, ...]`` with copies of row 0 (or a constant fill)."""
+    if not pad_c:
+        return x
+    if fill is None:
+        return jnp.concatenate([x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])])
+    return jnp.concatenate(
+        [x, jnp.full((pad_c,) + x.shape[1:], fill, x.dtype)]
+    )
 
 
 @register_backend(
     "pallas",
     precision="f32",
     kind="block",
+    shardable=True,
     description="VMEM-resident f32 Pallas block kernel (interpret off-TPU)",
+    engines=("scan", "temporal"),
 )
 def _pallas_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
-    *, block_k, **kw,
+    *, block_k, window_bounds=None, grid_times=None, **kw,
 ):
     """The sweep engine's ``pallas`` row launcher (``BackendSpec.launch``):
     pad rows to the replica block and arrivals to the chunk size, run
@@ -331,7 +414,8 @@ def _pallas_sweep_rows(
     both use the same 1e30 column fill: as a gap it jumps the clock past
     the row's ``t_end``, as a timestamp it IS past ``t_end``, so padding
     is inert either way.  Extra rows are copies of row 0, sliced off
-    after the launch.
+    after the launch.  Serves both the steady-state (scan) and transient
+    (temporal, via ``grid_times``) engines — the pool-state family.
     """
     C, n = dts.shape
     block_k = min(block_k, max(n, 1))
@@ -343,33 +427,28 @@ def _pallas_sweep_rows(
             x = jnp.concatenate(
                 [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
             )
-        if pad_c:
-            x = jnp.concatenate(
-                [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-            )
-        return x
+        return _pad_rows(x, pad_c)
 
     dts_p = pad(dts, 1e30)
     warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
-    row_pad = lambda x: jnp.concatenate(
-        [x, jnp.ones((pad_c,), jnp.float32)]
-    ) if pad_c else x
-    state_pad = lambda x: jnp.concatenate(
-        [x, jnp.broadcast_to(x[:1], (pad_c,) + x.shape[1:])]
-    ) if pad_c else x
+    row_pad = lambda x: _pad_rows(x, pad_c, fill=1.0)
     out = faas_sweep_pallas(
-        state_pad(alive0),
-        state_pad(creation0),
-        state_pad(busy0),
-        jnp.concatenate([t0, jnp.zeros((pad_c,), jnp.float32)])
-        if pad_c
-        else t0,
+        _pad_rows(alive0, pad_c),
+        _pad_rows(creation0, pad_c),
+        _pad_rows(busy0, pad_c),
+        _pad_rows(t0, pad_c, fill=0.0),
         row_pad(t_exp),
         dts_p,
         warms_p,
         colds_p,
         t_end=row_pad(t_end),
         skip=row_pad(skip),
+        window_bounds=(
+            None if window_bounds is None else _pad_rows(window_bounds, pad_c)
+        ),
+        grid_times=(
+            None if grid_times is None else _pad_rows(grid_times, pad_c)
+        ),
         block_r=BLOCK_R,
         block_k=block_k,
         interpret=jax.default_backend() != "tpu",
@@ -415,3 +494,286 @@ def faas_block_step_pallas(
         block_k=K,
         interpret=interpret,
     )
+
+
+# ---------------------------------------------------------------------------
+# Par platform kernel: per-instance concurrency value > 1 (finish[M, c])
+# ---------------------------------------------------------------------------
+
+
+def _par_kernel(
+    alive_in,  # f32 [Rb, Mp] 0/1 (padded slots dead)
+    creation_in,  # f32 [Rb, Mp]
+    finish_in,  # f32 [Rb, c*Mp] — c lane-aligned planes of Mp slots
+    t0_ref,  # f32 [Rb, 1]
+    texp_ref,  # f32 [Rb, 1]
+    tend_ref,  # f32 [Rb, 1]
+    skip_ref,  # f32 [Rb, 1]
+    dt_ref,  # f32 [Rb, Kb]
+    warm_ref,  # f32 [Rb, Kb]
+    cold_ref,  # f32 [Rb, Kb]
+    alive_out,
+    creation_out,
+    finish_out,
+    t_out,
+    acc_out,  # f32 [Rb, PAR_ACC_COLS]
+    *,
+    max_concurrency: int,
+    concurrency: int,
+    slots: int,  # real slot count M (<= Mp; padded slots masked out)
+    n_steps: int,
+    prestamped: bool,
+):
+    """The par platform's event loop: ``finish`` holds per-request-slot
+    finish times as ``c`` lane-aligned ``[Rb, Mp]`` planes concatenated
+    along the column axis (plane ``j`` at columns ``[j*Mp, (j+1)*Mp)``) —
+    the explicit VMEM layout for the ``finish[M, c]`` state.  Padded slots
+    (``m >= slots``) are masked out of the free-slot search so they are
+    never cold-started into."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        alive_out[...] = alive_in[...]
+        creation_out[...] = creation_in[...]
+        finish_out[...] = finish_in[...]
+        t_out[...] = t0_ref[...]
+        acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
+
+    alive = alive_out[...]
+    creation = creation_out[...]
+    finish2 = finish_out[...]  # [Rb, c*Mp]
+    t = t_out[...][:, 0]
+    acc0 = acc_out[...]
+    t_exp = texp_ref[...][:, 0]
+    t_end = tend_ref[...][:, 0]
+    skip = skip_ref[...][:, 0]
+    Rb, Mp = alive.shape
+    c = concurrency
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, (Rb, Mp), 1)
+    real = slot_iota < slots  # padded slots excluded from the pool
+    sub_iota = jax.lax.broadcasted_iota(jnp.float32, (Rb, c), 1)
+
+    def step(i, carry):
+        alive, creation, finish2, t, acc = carry
+        finish = finish2.reshape(Rb, c, Mp)
+        dt = dt_ref[:, i]
+        warm_s = warm_ref[:, i]
+        cold_s = cold_ref[:, i]
+        t_new = dt if prestamped else t + dt
+        busy = finish.max(axis=1)  # [Rb, Mp]
+
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+        # request-level in-flight integral: every request slot of a live
+        # instance contributes its overlap with the window
+        flight_t = jnp.clip(
+            jnp.minimum(finish, hi[:, None, None]) - lo[:, None, None], 0.0, None
+        )
+        flight_sum = (flight_t * alive[:, None, :]).sum(axis=(1, 2))
+
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+
+        # routing: newest instance with spare request capacity
+        in_flight = (finish > t_new[:, None, None]).sum(axis=1)  # [Rb, Mp]
+        has_cap = (alive > 0) & (in_flight < c)
+        best = jnp.max(jnp.where(has_cap, creation, NEG), axis=1)
+        any_cap = best > NEG * 0.5
+        is_best = has_cap & (creation >= best[:, None]) & any_cap[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+
+        free = (alive <= 0) & real
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+
+        active = t_new <= t_end
+        counted = t_new > skip
+        can_cold = (~any_cap) & (n_alive < max_concurrency) & any_free
+        overflow = (~any_cap) & (n_alive < max_concurrency) & (~any_free) & active
+        is_warm = any_cap & active
+        is_cold = can_cold & active
+        is_reject = (~any_cap) & (~can_cold) & active
+
+        chosen = jnp.where(is_warm, first_best, first_free)
+        service = jnp.where(is_warm, warm_s, cold_s)
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]  # [Rb, Mp]
+        # first free request sub-slot on the chosen instance (pre-wipe
+        # finishes, as the scan: a cold-started instance has every finish
+        # stale <= t_new, so its sub-slot is 0)
+        chosen_fin = jnp.where(sel[:, None, :], finish, 0.0).sum(axis=2)  # [Rb, c]
+        sub_free = chosen_fin <= t_new[:, None]
+        first_sub = jnp.min(jnp.where(sub_free, sub_iota, 1e9), axis=1)  # [Rb]
+        # a cold start repurposes a (possibly stale) slot: wipe it first
+        wipe = sel & is_cold[:, None]
+        finish = jnp.where(wipe[:, None, :], NEG, finish)
+        set3 = sel[:, None, :] & (sub_iota == first_sub[:, None])[:, :, None]
+        finish = jnp.where(set3, (t_new + service)[:, None, None], finish)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+
+        cc = counted
+        delta = jnp.stack(
+            [
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold & cc, cold_s, 0.0),
+                jnp.where(is_warm & cc, warm_s, 0.0),
+                overflow.astype(jnp.float32),
+                flight_sum,
+            ],
+            axis=1,
+        )
+        return alive, creation, finish.reshape(Rb, c * Mp), t_new, acc + delta
+
+    alive, creation, finish2, t, acc = jax.lax.fori_loop(
+        0, n_steps, step, (alive, creation, finish2, t, acc0)
+    )
+    alive_out[...] = alive
+    creation_out[...] = creation
+    finish_out[...] = finish2
+    t_out[...] = t[:, None]
+    acc_out[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "max_concurrency",
+        "concurrency",
+        "slots",
+        "block_r",
+        "block_k",
+        "interpret",
+        "prestamped",
+    ),
+)
+def par_sweep_pallas(
+    t_exp,  # f32 [R]
+    dts,  # f32 [R, K]
+    warms,
+    colds,
+    *,
+    t_end,  # f32 [R] or scalar
+    skip,  # f32 [R] or scalar
+    max_concurrency: int,
+    concurrency: int,
+    slots: int,
+    block_r: int = 8,
+    block_k: int = 512,
+    interpret: bool = False,
+    prestamped: bool = False,
+):
+    """Par-platform block sweep from an empty pool.  The slot axis is
+    padded to a :data:`LANE` multiple so each of the ``concurrency``
+    ``finish`` planes is lane-aligned; returns ``acc[R, PAR_ACC_COLS]``."""
+    TRACE_COUNTS["par_sweep_pallas"] += 1
+    R = dts.shape[0]
+    K = dts.shape[1]
+    assert R % block_r == 0, (R, block_r)
+    assert K % block_k == 0, (K, block_k)
+    Mp = -(-slots // LANE) * LANE
+    c = concurrency
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
+    skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
+    alive0 = jnp.zeros((R, Mp), jnp.float32)
+    creation0 = jnp.full((R, Mp), NEG, jnp.float32)
+    finish0 = jnp.full((R, c * Mp), NEG, jnp.float32)
+    t0 = jnp.zeros((R,), jnp.float32)
+    grid = (R // block_r, K // block_k)
+
+    state_spec = pl.BlockSpec((block_r, Mp), lambda r, k: (r, 0))
+    fin_spec = pl.BlockSpec((block_r, c * Mp), lambda r, k: (r, 0))
+    samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
+    t_spec = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, PAR_ACC_COLS), lambda r, k: (r, 0))
+
+    kernel = functools.partial(
+        _par_kernel,
+        max_concurrency=max_concurrency,
+        concurrency=c,
+        slots=slots,
+        n_steps=block_k,
+        prestamped=prestamped,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            state_spec,
+            state_spec,
+            fin_spec,
+            t_spec,
+            t_spec,
+            t_spec,
+            t_spec,
+            samp_spec,
+            samp_spec,
+            samp_spec,
+        ],
+        out_specs=[state_spec, state_spec, fin_spec, t_spec, acc_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((R, Mp), jnp.float32),
+            jax.ShapeDtypeStruct((R, c * Mp), jnp.float32),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((R, PAR_ACC_COLS), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        alive0,
+        creation0,
+        finish0,
+        t0[:, None],
+        t_exp[:, None],
+        t_end[:, None],
+        skip[:, None],
+        dts,
+        warms,
+        colds,
+    )
+    return out[4]
+
+
+@register_backend("pallas", engines=("par",))
+def _pallas_par_rows(t_exp, t_end, skip, dts, warms, colds, *, block_k, **kw):
+    """The par engine's ``pallas`` row launcher: replica-block row padding
+    + arrival-chunk padding around :func:`par_sweep_pallas`."""
+    C, n = dts.shape
+    block_k = min(block_k, max(n, 1))
+    pad_c = (-C) % BLOCK_R
+    pad_k = (-n) % block_k
+
+    def pad(x, col_fill):
+        if pad_k:
+            x = jnp.concatenate(
+                [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+            )
+        return _pad_rows(x, pad_c)
+
+    acc = par_sweep_pallas(
+        _pad_rows(t_exp, pad_c, fill=1.0),
+        pad(dts, 1e30),
+        pad(warms, 1.0),
+        pad(colds, 1.0),
+        t_end=_pad_rows(t_end, pad_c, fill=1.0),
+        skip=_pad_rows(skip, pad_c, fill=1.0),
+        block_r=BLOCK_R,
+        block_k=block_k,
+        interpret=jax.default_backend() != "tpu",
+        **kw,
+    )
+    return acc[:C]

@@ -55,19 +55,21 @@ def faas_sweep_ref(
     *,
     t_end=float("inf"),  # f32 [R] or scalar — per-row horizon
     skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
+    window_bounds=None,  # f32 [R, W+1] traced boundaries (irregular OK)
+    grid_times=None,  # f32 [R, G] traced transient-curve query times
     max_concurrency,
     prestamped: bool = False,
     n_windows: int = 0,
-    w_start: float = 0.0,
-    w_dt: float = 0.0,
+    n_grid: int = 0,
 ):
     """f32 jnp mirror of ``faas_sweep_pallas`` (same arithmetic order, same
     tie-breaks) — bit-comparable on CPU, and the interpreter fallback for
     the what-if sweep's throughput backend off-TPU.  ``prestamped`` /
-    ``n_windows`` mirror the kernel's absolute-timestamp and uniform
-    metric-window extensions (acc gains ``3*n_windows`` columns);
-    ``t_end``/``skip`` are per-row traced values like ``t_exp``, so
-    horizon sweeps share one compile."""
+    ``n_windows`` / ``n_grid`` mirror the kernel's absolute-timestamp,
+    traced-window-bounds (acc gains ``5*n_windows`` columns: counts plus
+    ∫running/∫idle) and transient-curve (``3*n_grid`` columns) extensions;
+    ``t_end``/``skip``/the boundary rows are per-row traced values like
+    ``t_exp``, so horizon and window-grid sweeps share one compile."""
     R, M = alive.shape
     K = dts.shape[1]
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
@@ -76,6 +78,11 @@ def faas_sweep_ref(
     slot_iota = jnp.broadcast_to(
         jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
     )
+    if n_windows:
+        wb = jnp.asarray(window_bounds, jnp.float32)
+        w_lo, w_hi = wb[:, :-1], wb[:, 1:]
+    if n_grid:
+        g_times = jnp.asarray(grid_times, jnp.float32)
 
     def step(i, carry):
         alive, creation, busy, t, acc = carry
@@ -91,6 +98,40 @@ def faas_sweep_ref(
         )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
+        if n_windows:
+            lo_e = jnp.minimum(t, t_end)
+            hi_e = jnp.minimum(t_new, t_end)
+            wlo = jnp.maximum(w_lo, lo_e[:, None])
+            whi = jnp.minimum(w_hi, hi_e[:, None])
+            run_w = jnp.clip(
+                jnp.minimum(busy[:, None, :], whi[:, :, None]) - wlo[:, :, None],
+                0.0,
+                None,
+            )
+            idle_w = jnp.clip(
+                jnp.minimum(expire[:, None, :], whi[:, :, None])
+                - jnp.maximum(busy[:, None, :], wlo[:, :, None]),
+                0.0,
+                None,
+            )
+            w_run = (run_w * alive[:, None, :]).sum(axis=2)
+            w_idle = (idle_w * alive[:, None, :]).sum(axis=2)
+        if n_grid:
+            in_win = (g_times > t[:, None]) & (
+                g_times <= jnp.minimum(t_new, t_end)[:, None]
+            )
+            live_g = (alive[:, None, :] > 0) & (
+                expire[:, None, :] > g_times[:, :, None]
+            )
+            running_g = (live_g & (busy[:, None, :] > g_times[:, :, None])).sum(
+                axis=2
+            )
+            idle_g = (live_g & (busy[:, None, :] <= g_times[:, :, None])).sum(
+                axis=2
+            )
+            g_run = jnp.where(in_win, running_g.astype(jnp.float32), 0.0)
+            g_idle = jnp.where(in_win, idle_g.astype(jnp.float32), 0.0)
+            g_cold = (in_win & (idle_g == 0)).astype(jnp.float32)
         expired = (alive > 0) & (expire <= t_new[:, None])
         alive = jnp.where(expired, 0.0, alive)
         idle = (alive > 0) & (busy <= t_new[:, None])
@@ -131,21 +172,23 @@ def faas_sweep_ref(
             axis=1,
         )
         if n_windows:
-            w_idx = jnp.floor((t_new - w_start) / w_dt)
             onehot = (
-                jax.lax.broadcasted_iota(jnp.float32, (R, n_windows), 1)
-                == w_idx[:, None]
+                (t_new[:, None] >= w_lo) & (t_new[:, None] < w_hi)
             ) & active[:, None]
             w_cold = (onehot & is_cold[:, None]).astype(jnp.float32)
             w_served = (onehot & (is_cold | is_warm)[:, None]).astype(
                 jnp.float32
             )
             w_arr = onehot.astype(jnp.float32)  # includes rejects
-            delta = jnp.concatenate([delta, w_cold, w_served, w_arr], axis=1)
+            delta = jnp.concatenate(
+                [delta, w_cold, w_served, w_arr, w_run, w_idle], axis=1
+            )
+        if n_grid:
+            delta = jnp.concatenate([delta, g_run, g_idle, g_cold], axis=1)
         acc = acc + delta
         return alive, creation, busy, t_new, acc
 
-    acc0 = jnp.zeros((R, 8 + 3 * n_windows), jnp.float32)
+    acc0 = jnp.zeros((R, 8 + 5 * n_windows + 3 * n_grid), jnp.float32)
     return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
 
 
@@ -165,8 +208,7 @@ def _sweep_ref_jit():
             "max_concurrency",
             "prestamped",
             "n_windows",
-            "w_start",
-            "w_dt",
+            "n_grid",
         ),
     )
 
@@ -175,20 +217,163 @@ def _sweep_ref_jit():
     "ref",
     precision="f32",
     kind="block",
+    shardable=True,
     description="jnp mirror of the Pallas block kernel (bit-comparable)",
+    engines=("scan", "temporal"),
 )
 def _ref_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
-    *, block_k, **kw,
+    *, block_k, window_bounds=None, grid_times=None, **kw,
 ):
     """The sweep engine's ``ref`` row launcher (``BackendSpec.launch``):
-    no padding needed — the jitted mirror consumes the rows directly."""
+    no padding needed — the jitted mirror consumes the rows directly.
+    Serves both the steady-state (scan) and transient (temporal, via
+    ``grid_times``) engines."""
     del block_k  # chunking is a Pallas grid concept
     out = _sweep_ref_jit()(
         alive0, creation0, busy0, t0, t_exp, dts, warms, colds,
-        t_end=t_end, skip=skip, **kw,
+        t_end=t_end, skip=skip, window_bounds=window_bounds,
+        grid_times=grid_times, **kw,
     )
     return out[4]
+
+
+def faas_par_sweep_ref(
+    t_exp,  # f32 [R]
+    dts,
+    warms,
+    colds,
+    *,
+    t_end,
+    skip,
+    max_concurrency,
+    concurrency: int,
+    slots: int,
+    prestamped: bool = False,
+):
+    """f32 jnp mirror of ``par_sweep_pallas`` — the par platform's
+    ``finish[M, c]`` event loop from an empty pool, same lane-padded slot
+    layout (``Mp = ceil(M/LANE)·LANE`` padded slots masked out of the
+    free-slot search), same arithmetic order and tie-breaks."""
+    from repro.kernels.faas_event_step import LANE, PAR_ACC_COLS
+
+    R, K = dts.shape
+    c = concurrency
+    Mp = -(-slots // LANE) * LANE
+    t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
+    skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
+    slot_iota = jnp.broadcast_to(
+        jnp.arange(Mp, dtype=jnp.float32)[None, :], (R, Mp)
+    )
+    real = slot_iota < slots
+    sub_iota = jnp.broadcast_to(
+        jnp.arange(c, dtype=jnp.float32)[None, :], (R, c)
+    )
+
+    def step(i, carry):
+        alive, creation, finish, t, acc = carry
+        t_new = dts[:, i] if prestamped else t + dts[:, i]
+        busy = finish.max(axis=1)
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+        flight_t = jnp.clip(
+            jnp.minimum(finish, hi[:, None, None]) - lo[:, None, None], 0.0, None
+        )
+        flight_sum = (flight_t * alive[:, None, :]).sum(axis=(1, 2))
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+        in_flight = (finish > t_new[:, None, None]).sum(axis=1)
+        has_cap = (alive > 0) & (in_flight < c)
+        best = jnp.max(jnp.where(has_cap, creation, NEG), axis=1)
+        any_cap = best > NEG * 0.5
+        is_best = has_cap & (creation >= best[:, None]) & any_cap[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+        free = (alive <= 0) & real
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+        active = t_new <= t_end
+        counted = t_new > skip
+        can_cold = (~any_cap) & (n_alive < max_concurrency) & any_free
+        overflow = (~any_cap) & (n_alive < max_concurrency) & (~any_free) & active
+        is_warm = any_cap & active
+        is_cold = can_cold & active
+        is_reject = (~any_cap) & (~can_cold) & active
+        chosen = jnp.where(is_warm, first_best, first_free)
+        service = jnp.where(is_warm, warms[:, i], colds[:, i])
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]
+        chosen_fin = jnp.where(sel[:, None, :], finish, 0.0).sum(axis=2)
+        sub_free = chosen_fin <= t_new[:, None]
+        first_sub = jnp.min(jnp.where(sub_free, sub_iota, 1e9), axis=1)
+        wipe = sel & is_cold[:, None]
+        finish = jnp.where(wipe[:, None, :], NEG, finish)
+        set3 = sel[:, None, :] & (sub_iota == first_sub[:, None])[:, :, None]
+        finish = jnp.where(set3, (t_new + service)[:, None, None], finish)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        cc = counted
+        delta = jnp.stack(
+            [
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold & cc, colds[:, i], 0.0),
+                jnp.where(is_warm & cc, warms[:, i], 0.0),
+                overflow.astype(jnp.float32),
+                flight_sum,
+            ],
+            axis=1,
+        )
+        return alive, creation, finish, t_new, acc + delta
+
+    alive0 = jnp.zeros((R, Mp), jnp.float32)
+    creation0 = jnp.full((R, Mp), NEG, jnp.float32)
+    finish0 = jnp.full((R, c, Mp), NEG, jnp.float32)
+    t0 = jnp.zeros((R,), jnp.float32)
+    acc0 = jnp.zeros((R, PAR_ACC_COLS), jnp.float32)
+    out = jax.lax.fori_loop(0, K, step, (alive0, creation0, finish0, t0, acc0))
+    return out[4]
+
+
+@functools.lru_cache(maxsize=1)
+def _par_ref_jit():
+    def counted(*args, **kw):
+        from repro.core.scenario import TRACE_COUNTS
+
+        TRACE_COUNTS["par_block_ref"] += 1
+        return faas_par_sweep_ref(*args, **kw)
+
+    return jax.jit(
+        counted,
+        static_argnames=(
+            "max_concurrency",
+            "concurrency",
+            "slots",
+            "prestamped",
+        ),
+    )
+
+
+@register_backend("ref", engines=("par",))
+def _ref_par_rows(t_exp, t_end, skip, dts, warms, colds, *, block_k, **kw):
+    """The par engine's ``ref`` row launcher — the jitted par mirror."""
+    del block_k
+    return _par_ref_jit()(
+        t_exp, dts, warms, colds, t_end=t_end, skip=skip, **kw
+    )
 
 
 def faas_block_step_ref(

@@ -1,0 +1,223 @@
+"""Irregular window grids + in-kernel instance integrals on the f32 block
+backends (DESIGN.md §10): window boundaries are traced per-row inputs, so
+non-uniform grids run in one compile; each window reports cold/served/
+arrival counts AND exact ∫running/∫idle instance-time integrals — pallas
+bitwise == ref, both ≤1e-3 vs the f64 scan."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    ExpSimProcess,
+    Scenario,
+    TraceArrivalProcess,
+)
+from repro.core import scenario as scn_mod
+from repro.core import simulator as sim_mod
+
+# deliberately non-uniform widths (60 / 90 / 200 / 50)
+IRREGULAR = (0.0, 60.0, 150.0, 350.0, 400.0)
+
+
+def base_scn(**kw):
+    d = dict(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0,
+        sim_time=400.0,
+        skip_time=0.0,
+        slots=32,
+        window_bounds=IRREGULAR,
+    )
+    d.update(kw)
+    return Scenario(**d)
+
+
+def _windows_of(grid):
+    """Stack per-cell WindowedMetrics arrays: dict of [cells, R, W]."""
+    cells = grid.summaries.ravel()
+    return {
+        f: np.stack([np.asarray(getattr(c.windows, f)) for c in cells])
+        for f in ("n_cold", "n_warm", "n_arrivals", "time_running", "time_idle")
+    }
+
+
+class TestIrregularWindows:
+    OVER = {"expiration_threshold": [10.0, 30.0]}
+    KW = dict(key=jax.random.key(7), steps=800)
+
+    def _three(self, scn, replicas=2, over=None):
+        over = over or self.OVER
+        kw = dict(self.KW, replicas=replicas)
+        scan = scn_mod.sweep(scn, over=over, **kw)
+        ref = scn_mod.sweep(scn, over=over, backend="ref", **kw)
+        pal = scn_mod.sweep(scn, over=over, backend="pallas", **kw)
+        return scan, ref, pal
+
+    def test_block_windows_match_scan_and_each_other(self):
+        """The acceptance bar: on an irregular grid, every per-window
+        quantity — counts and the new instance integrals — agrees with
+        the f64 scan to 1e-3 and pallas agrees with ref bitwise."""
+        scan, ref, pal = self._three(base_scn())
+        w_scan, w_ref, w_pal = map(_windows_of, (scan, ref, pal))
+        for f in w_scan:
+            np.testing.assert_array_equal(
+                w_pal[f], w_ref[f], err_msg=f"pallas vs ref: {f}"
+            )
+            np.testing.assert_allclose(
+                w_ref[f], w_scan[f], atol=1e-3, rtol=1e-3,
+                err_msg=f"ref vs scan: {f}",
+            )
+        for f in (
+            "windowed_cold_prob",
+            "windowed_arrivals",
+            "windowed_instance_count",
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pal, f)), np.asarray(getattr(ref, f))
+            )
+            np.testing.assert_allclose(
+                np.asarray(getattr(ref, f)),
+                np.asarray(getattr(scan, f)),
+                atol=1e-3,
+                rtol=1e-3,
+            )
+
+    def test_window_mass_conserved_in_kernel(self):
+        """Windows spanning [0, sim_time] with skip=0: the per-window
+        integrals must sum to the aggregate ∫running/∫idle."""
+        _, ref, _ = self._three(base_scn())
+        w = _windows_of(ref)
+        cells = ref.summaries.ravel()
+        run_total = np.stack([np.asarray(c.time_running) for c in cells])
+        idle_total = np.stack([np.asarray(c.time_idle) for c in cells])
+        np.testing.assert_allclose(
+            w["time_running"].sum(axis=-1), run_total, rtol=1e-5, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            w["time_idle"].sum(axis=-1), idle_total, rtol=1e-5, atol=1e-3
+        )
+
+    def test_padded_tail_replica_rows_inert(self):
+        """replicas=3 on one draw cell → C=3 rows, padded to BLOCK_R=8
+        inside the launcher: the pad rows must not leak into any window
+        column (same result as the scan path computes)."""
+        scn = base_scn()
+        kw = dict(self.KW, replicas=3)
+        over = {"expiration_threshold": [25.0]}
+        scan = scn_mod.sweep(scn, over=over, **kw)
+        ref = scn_mod.sweep(scn, over=over, backend="ref", **kw)
+        pal = scn_mod.sweep(scn, over=over, backend="pallas", **kw)
+        np.testing.assert_array_equal(
+            np.asarray(pal.windowed_instance_count),
+            np.asarray(ref.windowed_instance_count),
+        )
+        np.testing.assert_allclose(
+            np.asarray(ref.windowed_instance_count),
+            np.asarray(scan.windowed_instance_count),
+            atol=1e-3,
+            rtol=1e-3,
+        )
+        w_scan, w_ref = _windows_of(scan), _windows_of(ref)
+        assert w_ref["n_cold"].shape == (1, 3, len(IRREGULAR) - 1)
+        np.testing.assert_allclose(
+            w_ref["n_arrivals"], w_scan["n_arrivals"], atol=1e-3
+        )
+
+    def test_empty_windows_report_zero(self):
+        """A window grid reaching past the horizon: windows beyond
+        sim_time see no arrivals and no instance time, on every backend."""
+        bounds = (0.0, 100.0, 400.0, 450.0, 600.0)
+        scn = base_scn(window_bounds=bounds)
+        scan, ref, pal = self._three(scn)
+        for g in (scan, ref, pal):
+            arr = np.asarray(g.windowed_arrivals)
+            inst = np.asarray(g.windowed_instance_count)
+            # the horizon is 400: the last two windows are empty (an
+            # arrival AT exactly t=400 would land in [400, 450) — measure
+            # zero for continuous processes, and absent from this seed)
+            assert arr[..., -1].max() == 0.0
+            assert inst[..., -1].max() == 0.0
+        np.testing.assert_array_equal(
+            np.asarray(pal.windowed_instance_count),
+            np.asarray(ref.windowed_instance_count),
+        )
+        np.testing.assert_allclose(
+            np.asarray(ref.windowed_instance_count),
+            np.asarray(scan.windowed_instance_count),
+            atol=1e-3,
+            rtol=1e-3,
+        )
+
+    def test_boundary_exactly_on_arrival_timestamp(self):
+        """A window boundary placed exactly on a (replayed, f32-exact)
+        arrival timestamp: the arrival belongs to the window *starting*
+        there (half-open [b_w, b_{w+1})) on scan and block backends
+        alike."""
+        # timestamps exactly representable in f32 so the block path sees
+        # the same instants the f64 scan does
+        ts = (8.0, 24.0, 64.0, 96.0, 160.0, 224.0, 320.0)
+        scn = base_scn(
+            arrival_process=TraceArrivalProcess(timestamps=ts),
+            window_bounds=(0.0, 64.0, 224.0, 400.0),  # two bounds ON arrivals
+        )
+        over = {"expiration_threshold": [30.0]}
+        kw = dict(key=jax.random.key(0), replicas=2, steps=16)
+        scan = scn_mod.sweep(scn, over=over, **kw)
+        ref = scn_mod.sweep(scn, over=over, backend="ref", **kw)
+        pal = scn_mod.sweep(scn, over=over, backend="pallas", **kw)
+        # expectation from the replayed stream itself (the trace wraps
+        # cyclically past its last timestamp); the two boundary-exact
+        # instants t=64 → window 1 and t=224 → window 2 are inside it
+        times, _ = scn.arrival_process.arrival_times(jax.random.key(0), (1, 16))
+        t = np.asarray(times)[0]
+        expected, _ = np.histogram(
+            t[t <= scn.sim_time], bins=np.asarray(scn.window_bounds)
+        )
+        assert expected[0] == 2 and expected[1] >= 3  # 64 counted right
+        for g in (scan, ref, pal):
+            np.testing.assert_array_equal(
+                np.asarray(g.windowed_arrivals)[0], expected
+            )
+        np.testing.assert_array_equal(
+            _windows_of(pal)["time_running"], _windows_of(ref)["time_running"]
+        )
+
+    def test_windowed_block_single_trace(self):
+        """An irregular-window profile×threshold-shaped grid costs one
+        block trace; new boundary values on the same structure re-use it
+        (bounds are traced rows, not compile-time constants)."""
+        scn = base_scn()
+        kw = dict(key=jax.random.key(1), replicas=1, steps=800)
+        scn_mod.sweep(scn, over=self.OVER, backend="ref", **kw)
+        before = scn_mod.TRACE_COUNTS["sweep_block_ref"]
+        scn2 = base_scn(window_bounds=(0.0, 80.0, 130.0, 300.0, 400.0))
+        scn_mod.sweep(scn2, over=self.OVER, backend="ref", **kw)
+        assert scn_mod.TRACE_COUNTS["sweep_block_ref"] == before
+
+
+class TestGridResultExport:
+    def test_to_dict_carries_window_bounds_and_instance_grid(self):
+        """Exported JSON is self-describing: the window grids come with
+        their boundary vector, on block backends too."""
+        import json
+
+        g = scn_mod.sweep(
+            base_scn(),
+            over={"expiration_threshold": [10.0, 30.0]},
+            key=jax.random.key(2),
+            replicas=1,
+            steps=800,
+            backend="pallas",
+        )
+        d = json.loads(json.dumps(g.to_dict()))
+        assert d["window_bounds"] == list(IRREGULAR)
+        assert (
+            np.asarray(d["windowed_instance_count"]).shape
+            == g.windowed_instance_count.shape
+        )
+        assert np.asarray(d["windowed_cold_prob"]).shape == (2, 4)

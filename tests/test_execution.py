@@ -84,9 +84,10 @@ class TestRegistry:
         engines = registered_engines()
         assert {"scan", "temporal", "par"} <= set(engines)
         assert engines["scan"].sweepable
-        assert engines["temporal"].backends == ("scan",)
-        assert engines["par"].backends == ("scan",)
+        assert engines["temporal"].backends == ("scan", "pallas", "ref")
+        assert engines["par"].backends == ("scan", "pallas", "ref")
         assert not engines["temporal"].sweepable
+        assert engines["scan"].windowed_backends == ("scan", "pallas", "ref")
 
     def test_registered_backends_and_capabilities(self):
         backends = registered_backends()
@@ -94,7 +95,17 @@ class TestRegistry:
         assert backends["scan"].precision == "f64"
         assert backends["scan"].shardable
         assert backends["ref"].precision == "f32"
-        assert not backends["pallas"].shardable
+        # the f32 block backends are full citizens of the sharded matrix
+        assert backends["pallas"].shardable
+        assert backends["ref"].shardable
+        # per-engine launchers: the pool-state engines share one, par has
+        # its own finish[M, c] kernel launcher
+        for name in ("pallas", "ref"):
+            spec = backends[name]
+            assert spec.launch_for("scan") is spec.launch_for("temporal")
+            assert spec.launch_for("par") is not spec.launch
+        with pytest.raises(ValueError, match="no row launcher"):
+            backends["ref"].launch_for("nope")
 
     def test_unknown_names_list_registered(self):
         with pytest.raises(ValueError, match=r"unknown engine 'nope'.*par.*scan.*temporal"):
@@ -103,10 +114,25 @@ class TestRegistry:
             Execution(backend="nope").resolve()
 
     def test_capability_errors(self):
-        with pytest.raises(ValueError, match=r"'temporal' supports backends \('scan',\)"):
-            Execution(engine="temporal", backend="ref").resolve()
-        with pytest.raises(ValueError, match=r"'par' supports backends"):
-            Execution(engine="par", backend="pallas").resolve()
+        """Engine × backend validation still fires for combinations an
+        engine does not declare (temporal/par now declare the block
+        backends, so a scan-only test engine stands in)."""
+        from repro.core.execution import register_engine
+
+        @register_engine("scan-only-test", backends=("scan",))
+        def scan_only_run(scn, key, plan, **kw):  # pragma: no cover
+            return None, None
+
+        try:
+            with pytest.raises(
+                ValueError, match=r"'scan-only-test' supports backends \('scan',\)"
+            ):
+                Execution(engine="scan-only-test", backend="ref").resolve()
+        finally:
+            del exe_mod._ENGINES["scan-only-test"]
+        # the former scan-only pairs resolve now
+        Execution(engine="temporal", backend="ref").resolve()
+        Execution(engine="par", backend="pallas").resolve()
 
     def test_precision_declaration_checked(self):
         with pytest.raises(ValueError, match="computes in f64"):
@@ -115,8 +141,71 @@ class TestRegistry:
         Execution(backend="ref", precision="f32").resolve()
 
     def test_shard_capability_declared(self):
-        with pytest.raises(ValueError, match="shardable backends"):
-            Execution(backend="ref", shard="grid").resolve()
+        """Every shipped backend is shardable now; the declaration is
+        still enforced for backends that opt out."""
+        from repro.core.execution import register_backend, register_engine
+
+        register_backend("noshard-test", precision="f32")
+
+        @register_engine("anyback-test", backends=("scan", "noshard-test"))
+        def anyback_run(scn, key, plan, **kw):  # pragma: no cover
+            return None, None
+
+        try:
+            with pytest.raises(ValueError, match="shardable backends"):
+                Execution(
+                    engine="anyback-test", backend="noshard-test", shard="grid"
+                ).resolve()
+        finally:
+            del exe_mod._BACKENDS["noshard-test"]
+            del exe_mod._ENGINES["anyback-test"]
+        Execution(backend="ref", shard="grid").resolve()
+        Execution(backend="pallas", shard="grid").resolve()
+
+    def test_sharded_f64_on_block_backend_points_at_scan(self):
+        """shard='grid' + precision='f64' on an f32 block backend must
+        say where sharded f64 sweeps actually live, not just complain
+        about the precision mismatch."""
+        for be in ("pallas", "ref"):
+            with pytest.raises(ValueError, match="backend='scan'"):
+                Execution(backend=be, shard="grid", precision="f64").resolve()
+        # plain mismatch (no shard) keeps the generic message
+        with pytest.raises(ValueError, match="computes in f32"):
+            Execution(backend="ref", precision="f64").resolve()
+
+    def test_block_k_auto_resolution(self):
+        """block_k=None derives the chunk from the stream length and the
+        VMEM budget; explicit values are honoured (clamped to K)."""
+        from repro.core.execution import _AUTO_BLOCK_K_MAX
+
+        e = Execution()
+        assert e.block_k is None
+        assert e.resolved_block_k(800) == 800  # short stream: one chunk
+        assert e.resolved_block_k(10**6) == _AUTO_BLOCK_K_MAX
+        assert _AUTO_BLOCK_K_MAX % 128 == 0
+        assert Execution(block_k=256).resolved_block_k(800) == 256
+        assert Execution(block_k=4096).resolved_block_k(800) == 800
+
+    def test_readme_capability_matrix_matches_registry(self):
+        """The README capability matrix is generated from the registry;
+        the committed copy must not drift from the declarations."""
+        from repro.core.execution import capability_markdown
+
+        readme = open(
+            os.path.join(os.path.dirname(__file__), "..", "README.md")
+        ).read()
+        table = capability_markdown()
+        assert table in readme, (
+            "README capability matrix is stale; regenerate with "
+            "capability_markdown() and paste it in"
+        )
+
+    def test_sweep_exposes_resolved_block_k(self):
+        g = scn_mod.sweep(
+            base_scn(), over=OVER, key=jax.random.key(0), replicas=1,
+            steps=STEPS, backend="ref",
+        )
+        assert g.execution.block_k == STEPS
 
     def test_devices_without_shard_rejected(self):
         """devices= only takes effect through shard='grid'; a plan that
@@ -341,6 +430,64 @@ def test_sharded_sweep_matches_single_device_on_4_devices():
     s2 = scenario.sweep(scn, over=over2, execution=Execution(shard="grid"), **kw)
     np.testing.assert_array_equal(s2.cold_start_prob, s1.cold_start_prob)
     np.testing.assert_array_equal(s2.avg_server_count, s1.avg_server_count)
+    print("OK")
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    assert "OK" in out.stdout
+
+
+def test_sharded_block_sweep_matches_single_device_on_4_devices():
+    """The block-backend acceptance bar: an f32 ref/pallas sweep under a
+    4-fake-device Execution(shard='grid') compiles ONCE and is
+    bitwise-equal cell-by-cell to the single-device sweep — including a
+    padded tail (C=6 rows on 4 devices → lcm(BLOCK_R, 4)=8) and the
+    in-kernel windowed grids on an *irregular* window grid."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = """
+    import jax, numpy as np
+    from repro.core import Execution, ExpSimProcess, Scenario, scenario
+    from repro.core import scenario as scn_mod
+
+    assert len(jax.devices()) == 4
+    scn = Scenario(
+        arrival_process=ExpSimProcess(rate=0.8),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=0.4),
+        expiration_threshold=20.0, sim_time=400.0, skip_time=0.0, slots=32,
+        window_bounds=(0.0, 60.0, 150.0, 400.0),  # irregular widths
+    )
+    # C = 3 thresholds * 2 horizons * 1 replica = 6 rows: padded tail
+    over = {"expiration_threshold": [10.0, 30.0, 60.0], "sim_time": [300.0, 400.0]}
+    kw = dict(key=jax.random.key(5), replicas=1, steps=800)
+    fields = ("cold_start_prob", "avg_server_count", "avg_response_time",
+              "windowed_cold_prob", "windowed_arrivals",
+              "windowed_instance_count")
+    for be in ("ref", "pallas"):
+        single = scenario.sweep(scn, over=over, backend=be, **kw)
+        before = scn_mod.TRACE_COUNTS["sweep_block_sharded"]
+        plan = Execution(backend=be, devices=4, shard="grid")
+        shard = scenario.sweep(scn, over=over, execution=plan, **kw)
+        assert scn_mod.TRACE_COUNTS["sweep_block_sharded"] == before + 1, "one trace"
+        for f in fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(shard, f)), np.asarray(getattr(single, f)),
+                err_msg=f"{be}:{f}",
+            )
+        # same structure, new values: pure cache hit
+        scenario.sweep(scn, over={
+            "expiration_threshold": [15.0, 25.0, 45.0],
+            "sim_time": [250.0, 350.0],
+        }, execution=plan, **kw)
+        assert scn_mod.TRACE_COUNTS["sweep_block_sharded"] == before + 1
     print("OK")
     """
     out = subprocess.run(

@@ -419,12 +419,22 @@ class TestProfileSweep:
                 base_cfg(), PROFILES, jax.random.key(0), replicas=1
             )
 
-    def test_block_rejects_irregular_windows(self):
-        cfg = self._cfg(window_bounds=(0.0, 100.0, 900.0))
-        with pytest.raises(ValueError, match="uniform"):
-            sweep_profiles(
-                cfg, PROFILES, jax.random.key(0), replicas=1, backend="ref"
-            )
+    def test_block_handles_irregular_windows(self):
+        """Formerly scan-only: irregular window grids now run in-kernel
+        (traced boundary rows) and agree with the f64 scan."""
+        cfg = self._cfg(window_bounds=(0.0, 100.0, 400.0, 900.0))
+        key = jax.random.key(0)
+        scan = sweep_profiles(cfg, PROFILES, key, replicas=1)
+        ref = sweep_profiles(cfg, PROFILES, key, replicas=1, backend="ref")
+        np.testing.assert_allclose(
+            ref.windowed_cold_prob, scan.windowed_cold_prob, atol=1e-3
+        )
+        np.testing.assert_allclose(
+            ref.windowed_instance_count,
+            scan.windowed_instance_count,
+            rtol=1e-3,
+            atol=1e-3,
+        )
 
     def test_rate_sweep_refuses_timestamp_processes(self):
         cfg = base_cfg(

@@ -4,6 +4,7 @@ import dataclasses
 
 import jax
 import numpy as np
+import pytest
 
 from repro.core import (
     ExpSimProcess,
@@ -13,6 +14,7 @@ from repro.core import (
     ServerlessTemporalSimulator,
     Scenario,
 )
+from repro.core import scenario as scn_mod
 
 
 def base_cfg(**kw):
@@ -115,3 +117,125 @@ class TestTemporalSimulator:
         out = sim.run(jax.random.key(3), grid, replicas=64)
         assert out.cold_prob_at[0] > 0.9
         assert out.cold_prob_at[-1] < out.cold_prob_at[0]
+
+
+class TestBlockBackends:
+    """temporal/par on the f32 block backends: same draws as the scan
+    path, pallas bitwise == ref, both within the established f32 tolerance
+    of the f64 scan engine (DESIGN.md §10)."""
+
+    def _run3(self, scn, engine, **kw):
+        out = {}
+        for be in ("scan", "ref", "pallas"):
+            out[be] = scn_mod.run(
+                scn, jax.random.key(4), engine=engine, backend=be, **kw
+            )
+        return out
+
+    def test_temporal_block_matches_scan(self):
+        scn = base_cfg(sim_time=400.0, skip_time=0.0)
+        init = [
+            InstanceSnapshot(age=5.0, remaining=2.0),
+            InstanceSnapshot(age=9.0, idle_for=1.0),
+        ]
+        grid = np.linspace(0.0, 400.0, 17)
+        out = self._run3(
+            scn, "temporal", replicas=4, steps=1000,
+            initial_instances=init, grid=grid,
+        )
+        scan_t, ref_t, pal_t = (out[k].temporal for k in ("scan", "ref", "pallas"))
+        for f in ("running_at", "idle_at", "total_at", "cold_prob_at"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(pal_t, f)),
+                np.asarray(getattr(ref_t, f)),
+                err_msg=f"pallas vs ref: {f}",
+            )
+            # counts at grid points: an f32-flipped decision moves one
+            # replica's count by 1 → 1/replicas on the mean
+            np.testing.assert_allclose(
+                np.asarray(getattr(ref_t, f)),
+                np.asarray(getattr(scan_t, f)),
+                atol=0.26,
+                err_msg=f"ref vs scan: {f}",
+            )
+        np.testing.assert_allclose(
+            out["ref"].avg_server_count,
+            out["scan"].avg_server_count,
+            rtol=1e-3,
+        )
+        np.testing.assert_allclose(
+            out["ref"].cold_start_prob, out["scan"].cold_start_prob, atol=1e-3
+        )
+
+    def test_par_block_matches_scan(self):
+        scn = base_cfg(concurrency_value=3, sim_time=800.0)
+        out = self._run3(scn, "par", replicas=4, steps=1600)
+        for be in ("ref", "pallas"):
+            s, b = out["scan"].summary, out[be].summary
+            np.testing.assert_allclose(
+                np.asarray(b.n_cold), np.asarray(s.n_cold), atol=1
+            )
+            np.testing.assert_allclose(
+                b.avg_server_count, s.avg_server_count, rtol=1e-3
+            )
+            np.testing.assert_allclose(
+                b.avg_in_flight, s.avg_in_flight, rtol=1e-3
+            )
+            np.testing.assert_allclose(
+                b.avg_response_time, s.avg_response_time, rtol=1e-3
+            )
+        p, r = out["pallas"].summary, out["ref"].summary
+        for f in ("n_cold", "n_warm", "n_reject", "time_running",
+                  "time_idle", "time_in_flight"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(p, f)), np.asarray(getattr(r, f)),
+                err_msg=f"pallas vs ref: {f}",
+            )
+
+    def test_par_c1_block_equals_base_block(self):
+        """concurrency_value=1 on the par block kernel reproduces the
+        scale-per-request block engine's decisions (same draws)."""
+        scn = base_cfg(sim_time=400.0)
+        kw = dict(replicas=2, steps=800)
+        base = scn_mod.run(scn, jax.random.key(5), backend="ref", **kw)
+        par = scn_mod.run(
+            scn, jax.random.key(5), engine="par", backend="ref", **kw
+        )
+        np.testing.assert_array_equal(
+            np.asarray(par.summary.n_cold), np.asarray(base.summary.n_cold)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(par.summary.n_warm), np.asarray(base.summary.n_warm)
+        )
+        np.testing.assert_allclose(
+            np.asarray(par.summary.time_running),
+            np.asarray(base.summary.time_running),
+            rtol=1e-5,
+        )
+
+    def test_par_block_rejects_histogram(self):
+        scn = base_cfg(track_histogram=True)
+        with pytest.raises(ValueError, match="scan backend"):
+            scn_mod.run(
+                scn, jax.random.key(0), engine="par", backend="ref",
+                replicas=1, steps=800,
+            )
+
+    def test_temporal_block_guards_truncated_stream(self):
+        """A stream ending before sim_time must raise (the kernel's tail
+        integration and grid snapshots need the horizon crossed), not
+        silently zero the late curves."""
+        scn = base_cfg(sim_time=800.0, skip_time=0.0)
+        with pytest.raises(RuntimeError, match="ended before sim_time"):
+            scn_mod.run(
+                scn, jax.random.key(0), engine="temporal", backend="ref",
+                replicas=2, steps=50,
+            )
+
+    def test_temporal_block_rejects_non_newest_routing(self):
+        scn = base_cfg(routing="oldest")
+        with pytest.raises(ValueError, match="newest-idle"):
+            scn_mod.run(
+                scn, jax.random.key(0), engine="temporal", backend="ref",
+                replicas=1, steps=800,
+            )

@@ -172,8 +172,12 @@ class TestRun:
             scn_mod.run(s, jax.random.key(0), engine="nope")
         with pytest.raises(ValueError, match="backend"):
             scn_mod.run(s, jax.random.key(0), backend="nope")
-        with pytest.raises(ValueError, match="scan"):
-            scn_mod.run(s, jax.random.key(0), engine="par", backend="ref")
+        # formerly scan-only: the par engine now drives the block backends
+        res = scn_mod.run(
+            s, jax.random.key(0), engine="par", backend="ref",
+            replicas=1, steps=STEPS,
+        )
+        assert res.summary.time_in_flight is not None
 
 
 class TestSweepEquivalence:
