@@ -27,6 +27,9 @@ import numpy as np  # noqa: E402
 
 from repro.core import (  # noqa: E402
     ExpSimProcess,
+    FailurePolicy,
+    Reliability,
+    RetryPolicy,
     Scenario,
     ServerlessSimulator,
 )
@@ -740,6 +743,75 @@ def bench_block_sharded():
     )
 
 
+def bench_retry_sweep():
+    """Reliability what-if (DESIGN.md §11): a (t_timeout × threshold) retry
+    sweep as ONE batched call on the f64 scan engine, vs the f32 block ref.
+
+    ``us_per_call`` is the scan engine's wall-time per simulated *attempt*
+    over the whole grid; derived pins the trace counts (the acceptance bar:
+    zero warm compiles on both backends — timeout/failure rates are traced
+    param axes, ``max_retries`` stays static) plus goodput/amplification
+    and the cross-backend agreement.
+    """
+    if QUICK:
+        timeouts = [4.0, 16.0]
+        thresholds = [60.0, 300.0]
+        sim_time, steps, replicas = 1000.0, 1400, 1
+    else:
+        timeouts = [2.0, 4.0, 8.0, 16.0]
+        thresholds = [30.0, 120.0, 480.0]
+        sim_time, steps, replicas = 4000.0, 5400, 2
+    rel = Reliability(
+        failure=FailurePolicy(p_fail=0.05, t_timeout=8.0),
+        retry=RetryPolicy(max_retries=2, backoff_base=2.0, backoff_jitter=0.3),
+    )
+    cfg = paper_cfg(
+        sim_time=sim_time, skip_time=50.0, expiration_threshold=120.0,
+        reliability=rel,
+    )
+    over = {"t_timeout": timeouts, "expiration_threshold": thresholds}
+    kw = dict(key=jax.random.key(7), replicas=replicas, steps=steps)
+
+    scn_api.sweep(cfg, over=over, **kw)  # warm the scan compile
+    scn_api.sweep(cfg, over=over, backend="ref", **kw)  # warm the block ref
+    before = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"],
+        scn_api.TRACE_COUNTS["sweep_block_ref"],
+    )
+    t0 = time.perf_counter()
+    res = scn_api.sweep(cfg, over=over, **kw)
+    dt_scan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = scn_api.sweep(cfg, over=over, backend="ref", **kw)
+    dt_ref = time.perf_counter() - t0
+    traces = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"] - before[0],
+        scn_api.TRACE_COUNTS["sweep_block_ref"] - before[1],
+    )
+
+    agree = float(np.abs(ref.goodput / np.maximum(res.goodput, 1e-12) - 1).max())
+    attempts = float(
+        np.array([[s.n_attempts.sum() for s in row] for row in res.summaries]).sum()
+    )
+    amp = float(
+        np.array(
+            [[s.retry_amplification for s in row] for row in res.summaries]
+        ).max()
+    )
+    cells = len(timeouts) * len(thresholds)
+    emit(
+        "bench_retry_sweep",
+        dt_scan / max(attempts, 1.0) * 1e6,
+        f"cells={cells} traces={traces}(expect (0, 0) warm) "
+        f"scan={dt_scan:.2f}s block_ref={dt_ref:.2f}s "
+        f"goodput[{timeouts[-1]:.0f}s,{thresholds[-1]:.0f}s]="
+        f"{res.goodput[-1, -1]:.3f}/s max_retry_amp={amp:.3f}x "
+        f"ref_vs_scan_goodput_rel={agree:.1e}(<=1e-3)",
+        traces={"simulate_sweep": traces[0], "sweep_block_ref": traces[1]},
+        wall_clock_s={"scan": dt_scan, "block_ref": dt_ref},
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -818,6 +890,7 @@ def main(argv=None) -> None:
         bench_block_sharded()
         bench_pallas_block()
         bench_nhpp_sweep()
+        bench_retry_sweep()
     else:
         bench_table1()
         bench_fig3_instance_distribution()
@@ -829,6 +902,7 @@ def main(argv=None) -> None:
         bench_block_sharded()
         bench_pallas_block()
         bench_nhpp_sweep()
+        bench_retry_sweep()
         bench_fig1_concurrency_value()
         bench_routing_policy()
         bench_fig6_cold_start_probability()

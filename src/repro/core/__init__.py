@@ -50,6 +50,11 @@ from repro.core.execution import (  # noqa: E402
     registered_backends,
     registered_engines,
 )
+from repro.core.reliability import (  # noqa: E402
+    FailurePolicy,
+    Reliability,
+    RetryPolicy,
+)
 from repro.core.scenario import (  # noqa: E402
     GridResult,
     Result,
@@ -92,6 +97,9 @@ __all__ = [
     "Scenario",
     "Result",
     "GridResult",
+    "Reliability",
+    "FailurePolicy",
+    "RetryPolicy",
     "Execution",
     "register_backend",
     "register_engine",

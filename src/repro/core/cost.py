@@ -52,7 +52,14 @@ class CostEstimate:
 def estimate_cost(
     summary: SimulationSummary, billing: BillingModel = BillingModel()
 ) -> CostEstimate:
-    """Costs over the measured window, normalised per replica."""
+    """Costs over the measured window, normalised per replica.
+
+    Retry-billed by construction: under a reliability policy every served
+    *attempt* lands in ``n_cold``/``n_warm`` (and its cut-at-timeout
+    runtime in ``time_running``), so failed and timed-out attempts are
+    charged exactly like the platforms charge them — the developer pays
+    for the retry amplification, not just for completions.
+    """
     replicas = max(len(summary.n_cold), 1)
     served = float((summary.n_cold + summary.n_warm).sum()) / replicas
     running_time = float(summary.time_running.sum()) / replicas
@@ -63,3 +70,20 @@ def estimate_cost(
         provider_infra_cost=total_time / 3600.0 * billing.provider_instance_cost_per_hour,
         horizon=summary.measured_time,
     )
+
+
+def cost_per_completion(
+    summary: SimulationSummary, billing: BillingModel = BillingModel()
+) -> float:
+    """Developer $ per *successful* completion (DESIGN.md §11).
+
+    The reliability counterpart of cost-per-request: the numerator bills
+    every attempt (see :func:`estimate_cost`), the denominator counts only
+    attempts that neither timed out nor failed — the goodput-cost a
+    timeout/retry policy sweep trades off.  Works on plain runs too,
+    where completions == served requests.
+    """
+    est = estimate_cost(summary, billing)
+    replicas = max(len(summary.n_cold), 1)
+    completions = float(summary.n_completions.sum()) / replicas
+    return est.developer_total / max(completions, 1e-12)

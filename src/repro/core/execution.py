@@ -61,6 +61,9 @@ class EngineSpec:
     # backends on which this engine produces windowed (per-time-grid)
     # metrics — the capability-matrix column; a declaration, not a check
     windowed_backends: Tuple[str, ...] = ()
+    # backends on which this engine serves the reliability layer
+    # (timeouts / failures / retries, DESIGN.md §11)
+    reliability_backends: Tuple[str, ...] = ()
     description: str = ""
 
 
@@ -123,6 +126,7 @@ def register_engine(
     backends: Sequence[str],
     sweepable: bool = False,
     windowed_backends: Sequence[str] = (),
+    reliability_backends: Sequence[str] = (),
     description: str = "",
 ):
     """Decorator: register ``fn`` as engine ``name``'s run entry point."""
@@ -134,6 +138,7 @@ def register_engine(
             backends=tuple(backends),
             sweepable=sweepable,
             windowed_backends=tuple(windowed_backends),
+            reliability_backends=tuple(reliability_backends),
             description=description,
         )
         return fn
@@ -414,8 +419,8 @@ def capability_markdown() -> str:
     engines = registered_engines()
     backends = registered_backends()
     lines = [
-        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics |",
-        "|---|---|---|---|---|",
+        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability |",
+        "|---|---|---|---|---|---|",
     ]
     for ename, espec in engines.items():
         for bname, bspec in backends.items():
@@ -425,7 +430,8 @@ def capability_markdown() -> str:
             lines.append(
                 f"| `{ename}` | `{bname}` | {bspec.precision} | "
                 f"{'✓' if sweepable and bspec.shardable else '—'} | "
-                f"{'✓' if bname in espec.windowed_backends else '—'} |"
+                f"{'✓' if bname in espec.windowed_backends else '—'} | "
+                f"{'✓' if bname in espec.reliability_backends else '—'} |"
             )
     return "\n".join(lines)
 

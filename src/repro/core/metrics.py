@@ -66,3 +66,34 @@ def mape(pred: Sequence[float], truth: Sequence[float]) -> float:
     t = np.asarray(truth, dtype=np.float64)
     mask = np.abs(t) > 1e-12
     return float(np.mean(np.abs((p[mask] - t[mask]) / t[mask])) * 100.0)
+
+
+def reliability_report(summary) -> dict:
+    """Attempts-vs-completions view of a reliability run (DESIGN.md §11).
+
+    Takes any :class:`~repro.core.simulator.SimulationSummary` from a run
+    with ``Scenario.reliability=`` set and flattens its derived
+    reliability metrics into one plain dict — served attempts (cold +
+    warm starts, i.e. the retry-amplified load the platform actually
+    carried), successful completions, per-outcome counts, goodput
+    (completions per second of measured time) and the retry
+    amplification factor (attempts per distinct request served).
+    """
+    if summary.n_timeout is None:
+        raise ValueError(
+            "summary has no reliability counters; run with "
+            "Scenario.reliability= set"
+        )
+    return {
+        "attempts": float(summary.n_attempts.sum()),
+        "completions": float(summary.n_completions.sum()),
+        "timeouts": float(summary.n_timeout.sum()),
+        "failures": float(summary.n_fail.sum()),
+        "retries": float(summary.n_retry.sum()),
+        "abandoned": float(summary.n_abandon.sum()),
+        "rejected": float(summary.n_reject.sum()),
+        "timeout_prob": summary.timeout_prob,
+        "failure_prob": summary.failure_prob,
+        "goodput": summary.goodput,
+        "retry_amplification": summary.retry_amplification,
+    }

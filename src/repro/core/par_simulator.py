@@ -34,11 +34,13 @@ import numpy as np
 
 from repro.core.execution import register_engine
 from repro.core.scenario import Scenario, StaticConfig, WorkloadParams
+from repro.core.reliability import NO_CHILD
 from repro.core.simulator import (
     SimulationSummary,
     interval_integrals,
     histogram_update,
     _NEG_INF,
+    draw_reliability_stream,
     draw_workload_samples,
 )
 
@@ -68,10 +70,17 @@ def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
     t_end = params.sim_time
     skip = params.skip_time
     max_c = cfg.max_concurrency
+    rely = cfg.reliability
+    retries = cfg.max_retries > 0
 
     def step(state, xs):
         (alive, creation, finish, t_prev, acc) = state
-        dt, warm_s, cold_s = xs
+        if retries:
+            dt, warm_s, cold_s, fail_u, is_first, child_pos, pos = xs
+        elif rely:
+            dt, warm_s, cold_s, fail_u = xs
+        else:
+            dt, warm_s, cold_s = xs
         if cfg.prestamped:
             t = dt.astype(jnp.float64)  # absolute-timestamp stream
         else:
@@ -102,6 +111,10 @@ def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
         alive = alive & ~expired_now
 
         active = t <= t_end
+        if retries:
+            # Inert non-first attempts still advance the clock / integrals.
+            act = acc["act"]
+            active = active & (is_first | act[pos])
         in_flight = (finish > t).sum(axis=1)  # per instance
         has_cap = alive & (in_flight < concurrency)
         any_cap = has_cap.any()
@@ -123,17 +136,35 @@ def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
         sub = jnp.argmax(sub_free)
         service = jnp.where(is_warm, warm_s, cold_s).astype(jnp.float64)
         assign = is_warm | is_cold
+        if rely:
+            # Request slot freed at min(departure, t + t_timeout) — the
+            # NO_TIMEOUT sentinel keeps min() the identity.
+            occupancy = jnp.minimum(service, params.t_timeout)
+        else:
+            occupancy = service
         # A cold start repurposes a (possibly stale) slot: wipe it first.
         wiped_row = jnp.where(is_cold, jnp.full((concurrency,), _NEG_INF), finish[inst])
         new_row = wiped_row.at[sub].set(
-            jnp.where(assign, t + service, wiped_row[sub])
+            jnp.where(assign, t + occupancy, wiped_row[sub])
         )
         finish = finish.at[inst].set(new_row)
         creation = creation.at[inst].set(jnp.where(is_cold, t, creation[inst]))
         alive = alive.at[inst].set(alive[inst] | is_cold)
 
         counted = t > skip
-        acc = dict(
+        if rely:
+            timed_out = assign & (service > params.t_timeout)
+            failed = (
+                assign
+                & ~timed_out
+                & (fail_u.astype(jnp.float64) < params.p_fail)
+            )
+            trigger = timed_out | failed | is_reject
+            cold_resp = jnp.minimum(cold_s.astype(jnp.float64), params.t_timeout)
+            warm_resp = jnp.minimum(warm_s.astype(jnp.float64), params.t_timeout)
+        else:
+            cold_resp, warm_resp = cold_s, warm_s
+        new_acc = dict(
             n_cold=acc["n_cold"] + (is_cold & counted),
             n_warm=acc["n_warm"] + (is_warm & counted),
             n_reject=acc["n_reject"] + (is_reject & counted),
@@ -141,25 +172,46 @@ def _par_scan_fn(cfg: StaticConfig, params: WorkloadParams, concurrency: int):
             time_idle=acc["time_idle"] + idle_t,
             time_in_flight=acc["time_in_flight"] + in_flight_t,
             sum_cold_resp=acc["sum_cold_resp"]
-            + jnp.where(is_cold & counted, cold_s, 0.0),
+            + jnp.where(is_cold & counted, cold_resp, 0.0),
             sum_warm_resp=acc["sum_warm_resp"]
-            + jnp.where(is_warm & counted, warm_s, 0.0),
+            + jnp.where(is_warm & counted, warm_resp, 0.0),
             lifespan_sum=lifespan_sum,
             lifespan_count=lifespan_count,
             overflow=acc["overflow"] + overflow,
             hist=hist,
         )
-        return (alive, creation, finish, t, acc), None
+        if rely:
+            new_acc["n_timeout"] = acc["n_timeout"] + (timed_out & counted)
+            new_acc["n_fail"] = acc["n_fail"] + (failed & counted)
+            if retries:
+                has_child = child_pos < NO_CHILD
+                new_acc["n_retry"] = acc["n_retry"] + (
+                    ~is_first & active & counted
+                )
+                new_acc["n_abandon"] = acc["n_abandon"] + (
+                    trigger & ~has_child & counted
+                )
+                child_c = jnp.minimum(child_pos, act.shape[0] - 1)
+                new_acc["act"] = act.at[child_pos].set(
+                    act[child_c] | trigger, mode="drop"
+                )
+            else:
+                new_acc["n_retry"] = acc["n_retry"]
+                new_acc["n_abandon"] = acc["n_abandon"] + (trigger & counted)
+        return (alive, creation, finish, t, new_acc), None
 
     return step
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1))
-def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadParams, dts, warms, colds):
+def _simulate_par_batch(
+    cfg: StaticConfig, concurrency: int, params: WorkloadParams,
+    dts, warms, colds, *extras,
+):
     step = _par_scan_fn(cfg, params, concurrency)
     m = cfg.slots
 
-    def one(dt_row, warm_row, cold_row):
+    def one(dt_row, warm_row, cold_row, *ex):
         z = jnp.zeros((), dtype=jnp.float64)
         zi = jnp.zeros((), dtype=jnp.int64)
         acc = dict(
@@ -176,6 +228,12 @@ def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadPar
             overflow=zi,
             hist=jnp.zeros((cfg.hist_bins,), dtype=jnp.float64),
         )
+        xs = (dt_row, warm_row, cold_row) + tuple(ex)
+        if cfg.reliability:
+            acc.update(n_timeout=zi, n_fail=zi, n_retry=zi, n_abandon=zi)
+        if cfg.max_retries > 0:
+            acc["act"] = jnp.zeros(dt_row.shape, dtype=bool)
+            xs = xs + (jnp.arange(dt_row.shape[0]),)
         state0 = (
             jnp.zeros((m,), dtype=bool),
             jnp.full((m,), _NEG_INF, dtype=jnp.float64),
@@ -183,7 +241,7 @@ def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadPar
             jnp.zeros((), jnp.float64),
             acc,
         )
-        state, _ = jax.lax.scan(step, state0, (dt_row, warm_row, cold_row))
+        state, _ = jax.lax.scan(step, state0, xs)
         (alive, creation, finish, t_prev, acc) = state
         # tail flush
         busy_until = finish.max(axis=1)
@@ -208,9 +266,10 @@ def _simulate_par_batch(cfg: StaticConfig, concurrency: int, params: WorkloadPar
             tail_exp, expire_time - creation, 0.0
         ).sum()
         acc["lifespan_count"] = acc["lifespan_count"] + tail_exp.sum()
+        acc.pop("act", None)
         return acc, t_prev
 
-    return jax.vmap(one)(dts, warms, colds)
+    return jax.vmap(one)(dts, warms, colds, *extras)
 
 
 class ParServerlessSimulator:
@@ -230,9 +289,23 @@ class ParServerlessSimulator:
         samples=None,
     ) -> ParSimulationSummary:
         cfg = self.config
+        rel = cfg.reliability
+        extras = ()
         if samples is None:
-            n = steps or cfg.steps_needed()
-            samples = draw_workload_samples(cfg, key, replicas, n)
+            if rel is not None:
+                n = steps or cfg.steps_needed()
+                samples, extras = draw_reliability_stream(cfg, key, replicas, n)
+            else:
+                n = steps or cfg.steps_needed()
+                samples = draw_workload_samples(cfg, key, replicas, n)
+        elif len(samples) == 2 and isinstance(samples[0], (tuple, list)):
+            samples, extras = samples
+        elif rel is not None:
+            raise ValueError(
+                "a reliability run needs the extras drawn alongside the "
+                "samples; pass samples=draw_reliability_stream(...) (a "
+                "(samples, extras) pair)"
+            )
         dts, warms, colds = samples
         acc, t_last = _simulate_par_batch(
             cfg.static_config(),
@@ -241,6 +314,7 @@ class ParServerlessSimulator:
             dts,
             warms,
             colds,
+            *extras,
         )
         acc = jax.tree.map(np.asarray, acc)
         t_last = np.asarray(t_last)
@@ -248,6 +322,14 @@ class ParServerlessSimulator:
             raise RuntimeError("arrivals ended before sim_time; pass larger steps")
         if acc["overflow"].sum() > 0:
             raise RuntimeError("instance-pool overflow; raise Scenario.slots")
+        rely_kw = {}
+        if rel is not None:
+            rely_kw = dict(
+                n_timeout=acc["n_timeout"],
+                n_fail=acc["n_fail"],
+                n_retry=acc["n_retry"],
+                n_abandon=acc["n_abandon"],
+            )
         return ParSimulationSummary(
             n_cold=acc["n_cold"],
             n_warm=acc["n_warm"],
@@ -262,6 +344,7 @@ class ParServerlessSimulator:
             histogram=acc["hist"] if cfg.track_histogram else None,
             overflow=acc["overflow"],
             time_in_flight=acc["time_in_flight"],
+            **rely_kw,
         )
 
 
@@ -273,6 +356,11 @@ def _run_block_par(scn, key, plan, replicas, steps):
     from repro.core.execution import resolve_backend
     from repro.kernels.faas_event_step import PAR_ACC_COLS
 
+    if scn.reliability is not None:
+        raise ValueError(
+            "the par engine serves reliability on the f64 scan backend "
+            "only; use backend='scan'"
+        )
     if scn.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
     n = steps or scn.steps_needed()
@@ -326,6 +414,7 @@ def _run_block_par(scn, key, plan, replicas, steps):
 @register_engine(
     "par",
     backends=("scan", "pallas", "ref"),
+    reliability_backends=("scan",),
     description="concurrency-value platforms (Knative / Cloud Run pattern)",
 )
 def _par_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

@@ -28,6 +28,18 @@ Array = jax.Array
 _EPS = 1e-9  # service/inter-arrival times are clamped strictly positive
 
 
+def absolute_times_from_gaps(gaps) -> Array:
+    """f64 absolute timestamps from an inter-arrival gap stream.
+
+    One cumulative sum along the last axis — the reliability layer uses
+    this to anchor retry attempts on a shared absolute clock, so the f64
+    scan, the f32 block kernels and the pure-Python oracle all consume the
+    identical pre-built event table (the f32 cast happens *after* the
+    table is sorted).
+    """
+    return jnp.cumsum(jnp.asarray(gaps, jnp.float64), axis=-1)
+
+
 @dataclasses.dataclass(frozen=True)
 class SimProcess:
     """Base class.  Subclasses implement ``_raw_sample`` and ``mean``."""

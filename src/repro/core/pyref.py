@@ -48,6 +48,12 @@ class PyRefResults:
     w_arrivals: Optional[np.ndarray] = None
     w_run_t: Optional[np.ndarray] = None
     w_idle_t: Optional[np.ndarray] = None
+    # reliability counters (DESIGN.md §11)
+    n_timeout: int = 0
+    n_fail: int = 0
+    n_retry: int = 0
+    n_abandon: int = 0
+    w_fail: Optional[np.ndarray] = None
 
     @property
     def cold_start_prob(self) -> float:
@@ -71,6 +77,11 @@ def simulate_pyref(
     routing: str = "newest",
     prestamped: bool = False,
     window_bounds=None,
+    t_timeout: Optional[float] = None,
+    p_fail: float = 0.0,
+    fail_u=None,
+    is_first=None,
+    child_pos=None,
 ) -> PyRefResults:
     """Event-driven simulation consuming pre-drawn samples.
 
@@ -85,8 +96,31 @@ def simulate_pyref(
     accumulators: arrival counts by half-open window membership of the
     arrival instant, exact instance-time integrals per window clipped to
     ``[0, sim_time]`` (windows ignore ``skip_time``).
+
+    Reliability (DESIGN.md §11): ``fail_u`` (pre-drawn f32 per-event
+    failure uniforms) switches the failure/timeout path on — instances are
+    freed at ``min(departure, t + t_timeout)``, a served attempt times out
+    when its service draw exceeds ``t_timeout``, otherwise it fails when
+    ``fail_u < p_fail`` (the f64 comparison the scan engine uses).
+    ``is_first``/``child_pos`` add the retry path over a pre-built attempt
+    table (``core.reliability.build_attempt_table``): non-first events are
+    inert until their parent's failure/timeout/rejection activates them;
+    every decision consumes the same pre-drawn uniforms as the scan, so
+    the two match event-for-event.
     """
+    from repro.core.reliability import NO_CHILD
+
     t_exp = float(expiration_threshold)
+    rely = fail_u is not None
+    retries = is_first is not None
+    t_to = float("inf") if t_timeout is None else float(t_timeout)
+    p_f = float(p_fail)
+    if rely:
+        fail_arr = np.asarray(fail_u, np.float32)
+    if retries:
+        first_arr = np.asarray(is_first)
+        child_arr = np.asarray(child_pos)
+        act = np.zeros(len(np.asarray(dts)), dtype=bool)
     res = PyRefResults()
     hist = np.zeros(hist_bins, dtype=np.float64) if hist_bins else None
     bounds = (
@@ -101,6 +135,8 @@ def simulate_pyref(
         res.w_arrivals = np.zeros(n_w, dtype=np.int64)
         res.w_run_t = np.zeros(n_w, dtype=np.float64)
         res.w_idle_t = np.zeros(n_w, dtype=np.float64)
+        if rely:
+            res.w_fail = np.zeros(n_w, dtype=np.int64)
     pool: List[_Instance] = []
     t_prev = 0.0
 
@@ -147,10 +183,12 @@ def simulate_pyref(
                     res.w_idle_t[w] += idle
 
     arr_dtype = np.float64 if prestamped else np.float32
-    for dt, warm_s, cold_s in zip(
-        np.asarray(dts, arr_dtype),
-        np.asarray(warms, np.float32),
-        np.asarray(colds, np.float32),
+    for i, (dt, warm_s, cold_s) in enumerate(
+        zip(
+            np.asarray(dts, arr_dtype),
+            np.asarray(warms, np.float32),
+            np.asarray(colds, np.float32),
+        )
     ):
         t = float(dt) if prestamped else t_prev + float(dt)
         lo = min(max(t_prev, skip_time), sim_time)
@@ -173,6 +211,14 @@ def simulate_pyref(
         if t > sim_time:
             t_prev = t
             continue
+        first_i = True
+        if retries:
+            # inactive non-first attempts are no-op arrivals: they still
+            # advanced the clock, integrated and expired above
+            first_i = bool(first_arr[i])
+            if not (first_i or act[i]):
+                t_prev = t
+                continue
 
         w = -1
         if bounds is not None:
@@ -182,27 +228,57 @@ def simulate_pyref(
             else:
                 w = -1
 
-        idle = [i for i in pool if i.is_idle(t)]
+        idle = [i_ for i_ in pool if i_.is_idle(t)]
         counted = t > skip_time
+        is_warm_e = is_cold_e = is_reject_e = False
+        service = 0.0
         if idle:
             pick = max if routing == "newest" else min
-            target = pick(idle, key=lambda i: i.creation)
-            target.busy_until = t + float(warm_s)
+            target = pick(idle, key=lambda i_: i_.creation)
+            service = float(warm_s)
+            target.busy_until = t + min(service, t_to)
+            is_warm_e = True
             if counted:
                 res.n_warm += 1
-                res.sum_warm_resp += float(warm_s)
+                res.sum_warm_resp += min(service, t_to)
             if w >= 0:
                 res.w_warm[w] += 1
         elif len(pool) < max_concurrency:
-            pool.append(_Instance(creation=t, busy_until=t + float(cold_s)))
+            service = float(cold_s)
+            pool.append(_Instance(creation=t, busy_until=t + min(service, t_to)))
+            is_cold_e = True
             if counted:
                 res.n_cold += 1
-                res.sum_cold_resp += float(cold_s)
+                res.sum_cold_resp += min(service, t_to)
             if w >= 0:
                 res.w_cold[w] += 1
         else:
+            is_reject_e = True
             if counted:
                 res.n_reject += 1
+        if rely:
+            assign = is_warm_e or is_cold_e
+            timed_out = assign and service > t_to
+            failed = (
+                assign and not timed_out and float(fail_arr[i]) < p_f
+            )
+            trigger = timed_out or failed or is_reject_e
+            if counted:
+                res.n_timeout += int(timed_out)
+                res.n_fail += int(failed)
+            if w >= 0 and (timed_out or failed):
+                res.w_fail[w] += 1
+            if retries:
+                if counted and not first_i:
+                    res.n_retry += 1
+                child = int(child_arr[i])
+                if trigger:
+                    if child < NO_CHILD:
+                        act[child] = True
+                    elif counted:
+                        res.n_abandon += 1
+            elif trigger and counted:
+                res.n_abandon += 1
         t_prev = t
 
     # tail flush (t_last, sim_time]

@@ -1,0 +1,186 @@
+"""Reliability layer: invocation failures, timeouts, and client retries.
+
+Frozen policy configs wired as ``Scenario.reliability=`` plus the host-side
+builder that turns a base arrival stream into a sorted *attempt table* when
+retries are enabled.
+
+Design (DESIGN.md §11):
+
+* ``FailurePolicy`` — each served invocation independently fails with
+  probability ``p_fail`` (after running to completion), and/or is cut off
+  at ``t_timeout``: the instance is freed at ``min(departure, t_arrival +
+  t_timeout)`` and the request counts as a timeout.
+* ``RetryPolicy`` — a failed / timed-out / rejected request is re-enqueued
+  as a synthetic arrival after a client-anchored exponential backoff
+  ``b_j = base * mult**j * (1 + jitter * (2u_j - 1))`` (attempt ``j``,
+  pre-drawn uniform ``u_j``), bounded by ``max_retries``.  Backoff is
+  anchored at the *triggering attempt's arrival time*, so every retry time
+  is pool-state independent and the whole attempt table can be built
+  before the simulation runs — this is what keeps retry sweeps one
+  compile and the pure-Python oracle decision-exact.
+
+All decisions consume pre-drawn uniforms, so the JAX scan, the f32 block
+kernels, and ``pyref.py`` replay the identical event table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+#: Inert timeout sentinel: ``min(service, NO_TIMEOUT) == service`` bitwise
+#: in both f64 and f32, so "no timeout" costs nothing on the traced path.
+NO_TIMEOUT = 1.0e30
+
+#: ``child_pos`` sentinel for a last attempt (no retry budget left).  Far
+#: beyond any padded stream width, exactly representable in f32 (power of
+#: two), and dropped by JAX out-of-bounds scatters.
+NO_CHILD = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class FailurePolicy:
+    """Per-invocation failure probability and/or execution timeout."""
+
+    p_fail: float = 0.0
+    t_timeout: Optional[float] = None
+
+    def __post_init__(self):
+        p = float(self.p_fail)
+        if not 0.0 <= p < 1.0:
+            raise ValueError(
+                f"FailurePolicy.p_fail must be in [0, 1), got {self.p_fail}"
+            )
+        if self.t_timeout is not None and not float(self.t_timeout) > 0.0:
+            raise ValueError(
+                "FailurePolicy.t_timeout must be > 0 (or None for no "
+                f"timeout), got {self.t_timeout}"
+            )
+
+    @property
+    def timeout_or_inf(self) -> float:
+        """The traced timeout value: ``t_timeout`` or the inert sentinel."""
+        return NO_TIMEOUT if self.t_timeout is None else float(self.t_timeout)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Client retry budget and backoff schedule.
+
+    ``max_retries`` is compile-time static (it sets the attempt-table
+    width); the backoff parameters are run-time values that shape the
+    pre-built attempt times.
+    """
+
+    max_retries: int = 0
+    backoff_base: float = 1.0
+    backoff_mult: float = 2.0
+    backoff_jitter: float = 0.0
+
+    def __post_init__(self):
+        if int(self.max_retries) != self.max_retries or self.max_retries < 0:
+            raise ValueError(
+                "RetryPolicy.max_retries must be a non-negative integer, "
+                f"got {self.max_retries}"
+            )
+        if not float(self.backoff_base) > 0.0:
+            raise ValueError(
+                f"RetryPolicy.backoff_base must be > 0, got {self.backoff_base}"
+            )
+        if not float(self.backoff_mult) > 0.0:
+            raise ValueError(
+                f"RetryPolicy.backoff_mult must be > 0, got {self.backoff_mult}"
+            )
+        j = float(self.backoff_jitter)
+        if not 0.0 <= j < 1.0:
+            raise ValueError(
+                "RetryPolicy.backoff_jitter must be in [0, 1) so backoffs "
+                f"stay strictly positive, got {self.backoff_jitter}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class Reliability:
+    """Container wired as ``Scenario.reliability=``."""
+
+    failure: FailurePolicy = FailurePolicy()
+    retry: RetryPolicy = RetryPolicy()
+
+    def __post_init__(self):
+        if not isinstance(self.failure, FailurePolicy):
+            raise ValueError("Reliability.failure must be a FailurePolicy")
+        if not isinstance(self.retry, RetryPolicy):
+            raise ValueError("Reliability.retry must be a RetryPolicy")
+
+    @property
+    def enabled(self) -> bool:
+        """True when any policy knob departs from the no-op defaults.
+
+        ``max_retries`` alone matters: rejections (concurrency-limit
+        drops) trigger retries even with no failure model.
+        """
+        return (
+            self.failure.p_fail > 0.0
+            or self.failure.t_timeout is not None
+            or self.retry.max_retries > 0
+        )
+
+
+def build_attempt_table(times0, warms_a, colds_a, fail_a, jitter_u, retry):
+    """Build the sorted per-attempt event table for a retry stream.
+
+    times0   [R, N] f64 absolute base arrival times (``PAD_TIME`` inert).
+    warms_a  [R, N, J+1] per-attempt warm service draws (attempt 0 is the
+             base draw, so a trivial policy replays the base stream).
+    colds_a  [R, N, J+1] per-attempt cold service draws.
+    fail_a   [R, N, J+1] per-attempt failure uniforms.
+    jitter_u [R, N, J]   backoff jitter uniforms.
+
+    Returns ``(times, warms, colds, fail_u, is_first, child_pos)``, each
+    ``[R, N * (J+1)]``, sorted by attempt time (stable, so a parent always
+    precedes its child — backoffs are strictly positive).  ``child_pos``
+    holds each event's retry successor as a *sorted position*, or
+    ``NO_CHILD`` for last attempts.  Non-first attempts start inactive and
+    are switched on at run time when their parent fails, times out, or is
+    rejected — inactive events are no-op arrivals that still advance the
+    clock.
+    """
+    import jax.numpy as jnp
+
+    R, N = times0.shape
+    J = int(retry.max_retries)
+    if J == 0:
+        raise ValueError("build_attempt_table needs max_retries > 0")
+    K = N * (J + 1)
+    js = jnp.arange(J, dtype=jnp.float64)
+    factor = float(retry.backoff_base) * (float(retry.backoff_mult) ** js)
+    spread = 1.0 + float(retry.backoff_jitter) * (
+        2.0 * jitter_u.astype(jnp.float64) - 1.0
+    )
+    backoff = factor[None, None, :] * spread  # [R, N, J], strictly > 0
+    times_a = jnp.concatenate(
+        [
+            times0[:, :, None],
+            times0[:, :, None] + jnp.cumsum(backoff, axis=2),
+        ],
+        axis=2,
+    )  # [R, N, J+1]
+    times_f = times_a.reshape(R, K)
+    order = jnp.argsort(times_f, axis=1, stable=True)
+    rank = jnp.argsort(order, axis=1, stable=True).astype(jnp.int32)
+    take = lambda x: jnp.take_along_axis(x, order, axis=1)
+    attempt = jnp.arange(K, dtype=jnp.int32) % (J + 1)  # flat attempt index
+    # Flat child of i is i+1 within the same chain (attempt < J).
+    rank_next = jnp.concatenate(
+        [rank[:, 1:], jnp.full((R, 1), NO_CHILD, jnp.int32)], axis=1
+    )
+    child_f = jnp.where(attempt[None, :] < J, rank_next, NO_CHILD)
+    first_f = jnp.broadcast_to((attempt == 0)[None, :], (R, K))
+    return (
+        take(times_f),
+        take(warms_a.reshape(R, K)),
+        take(colds_a.reshape(R, K)),
+        take(fail_a.reshape(R, K)),
+        take(first_f),
+        take(child_f),
+    )

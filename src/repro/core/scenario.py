@@ -71,6 +71,7 @@ from repro.core.processes import (
     RateProfile,
     SimProcess,
 )
+from repro.core.reliability import NO_TIMEOUT, Reliability
 
 Array = jax.Array
 
@@ -101,6 +102,13 @@ class StaticConfig:
     # number of metric windows (0 = windowed metrics off); the window
     # *boundaries* are traced values in WorkloadParams.window_bounds.
     n_windows: int = 0
+    # reliability layer (DESIGN.md §11): when True the step consumes a
+    # per-event failure uniform and applies the traced timeout; the
+    # *values* (t_timeout, p_fail, backoffs) stay in WorkloadParams.
+    reliability: bool = False
+    # retry budget — static because it sets the attempt-table width
+    # (each base arrival expands to max_retries+1 pre-sorted events).
+    max_retries: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,19 +129,63 @@ class WorkloadParams:
     window_bounds: Array = dataclasses.field(
         default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
     )
+    # Reliability values (DESIGN.md §11).  All default to inert sentinels
+    # so a scenario without a reliability policy carries them for free:
+    # min(service, NO_TIMEOUT) is the bitwise identity and p_fail=0 never
+    # fires.  The backoff triple is carried for introspection/sweep
+    # bookkeeping — backoffs shape the pre-built attempt table (host-side,
+    # per draw cell), not the in-step arithmetic.
+    t_timeout: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(NO_TIMEOUT, dtype=jnp.float64)
+    )
+    p_fail: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0.0, dtype=jnp.float64)
+    )
+    backoff_base: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(1.0, dtype=jnp.float64)
+    )
+    backoff_mult: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(2.0, dtype=jnp.float64)
+    )
+    backoff_jitter: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0.0, dtype=jnp.float64)
+    )
 
     @classmethod
     def of(
-        cls, expiration_threshold, sim_time, skip_time, window_bounds=None
+        cls,
+        expiration_threshold,
+        sim_time,
+        skip_time,
+        window_bounds=None,
+        t_timeout=None,
+        p_fail=None,
+        backoff_base=None,
+        backoff_mult=None,
+        backoff_jitter=None,
     ) -> "WorkloadParams":
         as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
+        thr = as64(expiration_threshold)
         wb = (
             as64(window_bounds)
             if window_bounds is not None
             else jnp.zeros((0,), dtype=jnp.float64)
         )
+        # Reliability defaults broadcast to the threshold's shape so every
+        # leaf shares the sweep's leading [C] axis (vmap requirement).
+        fill = lambda x, d: (
+            jnp.full(thr.shape, d, jnp.float64) if x is None else as64(x)
+        )
         return cls(
-            as64(expiration_threshold), as64(sim_time), as64(skip_time), wb
+            thr,
+            as64(sim_time),
+            as64(skip_time),
+            wb,
+            fill(t_timeout, NO_TIMEOUT),
+            fill(p_fail, 0.0),
+            fill(backoff_base, 1.0),
+            fill(backoff_mult, 2.0),
+            fill(backoff_jitter, 0.0),
         )
 
 
@@ -144,6 +196,11 @@ jax.tree_util.register_dataclass(
         "sim_time",
         "skip_time",
         "window_bounds",
+        "t_timeout",
+        "p_fail",
+        "backoff_base",
+        "backoff_mult",
+        "backoff_jitter",
     ),
     meta_fields=(),
 )
@@ -204,12 +261,39 @@ class Scenario:
     # Per-instance request concurrency (engine="par"); 1 = scale-per-request.
     concurrency_value: int = 1
     billing: BillingModel = BillingModel()
+    # Failure/timeout/retry model (DESIGN.md §11); None = ideal platform.
+    reliability: Optional[Reliability] = None
 
     def __post_init__(self):
         if self.slots < 1:
             raise ValueError("slots must be >= 1")
+        if not self.sim_time > 0:
+            raise ValueError(f"sim_time must be > 0, got {self.sim_time}")
+        if self.skip_time < 0:
+            raise ValueError(f"skip_time must be >= 0, got {self.skip_time}")
         if self.skip_time >= self.sim_time:
             raise ValueError("skip_time must be < sim_time")
+        if not self.expiration_threshold > 0:
+            raise ValueError(
+                f"expiration_threshold must be > 0, got {self.expiration_threshold}"
+            )
+        if self.max_concurrency < 1:
+            raise ValueError("max_concurrency must be >= 1")
+        if self.hist_bins < 1:
+            raise ValueError("hist_bins must be >= 1")
+        if self.scan_unroll < 1:
+            raise ValueError("scan_unroll must be >= 1")
+        if self.arrival_rate is not None and not self.arrival_rate > 0:
+            raise ValueError(
+                f"arrival_rate must be > 0, got {self.arrival_rate}"
+            )
+        if self.reliability is not None and not isinstance(
+            self.reliability, Reliability
+        ):
+            raise ValueError(
+                "Scenario.reliability must be a Reliability (or None), got "
+                f"{type(self.reliability).__name__}"
+            )
         if self.concurrency_value < 1:
             raise ValueError("concurrency_value must be >= 1")
         if self.window_bounds is not None:
@@ -273,6 +357,8 @@ class Scenario:
 
     def static_config(self) -> StaticConfig:
         """The compile-relevant slice of this config."""
+        rel = self.reliability
+        retries = int(rel.retry.max_retries) if rel is not None else 0
         return StaticConfig(
             slots=self.slots,
             max_concurrency=self.max_concurrency,
@@ -280,17 +366,26 @@ class Scenario:
             scan_unroll=self.scan_unroll,
             track_histogram=self.track_histogram,
             hist_bins=self.hist_bins,
-            prestamped=self.prestamped,
+            # a retry stream is a pre-sorted absolute-time attempt table
+            prestamped=self.prestamped or retries > 0,
             n_windows=len(self.window_bounds) - 1 if self.window_bounds else 0,
+            reliability=rel is not None,
+            max_retries=retries,
         )
 
     def workload_params(self) -> WorkloadParams:
         """The traced (run-time) slice of this config."""
+        rel = self.reliability
         return WorkloadParams.of(
             self.expiration_threshold,
             self.sim_time,
             self.skip_time,
             self.window_bounds,
+            t_timeout=rel.failure.timeout_or_inf if rel else None,
+            p_fail=rel.failure.p_fail if rel else None,
+            backoff_base=rel.retry.backoff_base if rel else None,
+            backoff_mult=rel.retry.backoff_mult if rel else None,
+            backoff_jitter=rel.retry.backoff_jitter if rel else None,
         )
 
 
@@ -421,7 +516,11 @@ def run(
 
 def _run_block_single(scn, key, replicas, steps, plan):
     """Single-scenario f32 block-engine run (C = replicas rows)."""
-    from repro.core.simulator import SimulationSummary, draw_workload_samples
+    from repro.core.simulator import (
+        SimulationSummary,
+        draw_reliability_stream,
+        draw_workload_samples,
+    )
 
     if scn.window_bounds:
         raise ValueError(
@@ -431,8 +530,18 @@ def _run_block_single(scn, key, replicas, steps, plan):
     if scn.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
     n = steps or scn.steps_needed()
-    dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
-    if not scn.prestamped:
+    rel = scn.reliability
+    extras = ()
+    if rel is not None:
+        (dts, warms, colds), extras = draw_reliability_stream(
+            scn, key, replicas, n
+        )
+    else:
+        dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
+    prestamped = scn.prestamped or (
+        rel is not None and rel.retry.max_retries > 0
+    )
+    if not prestamped:
         covered = np.asarray(dts, np.float64).sum(axis=1)
         if (covered < scn.sim_time).any():
             raise RuntimeError(
@@ -443,7 +552,7 @@ def _run_block_single(scn, key, replicas, steps, plan):
     rows = lambda v: np.full((replicas,), v)
     kw = dict(
         max_concurrency=scn.max_concurrency,
-        prestamped=scn.prestamped,
+        prestamped=prestamped,
         n_windows=0,
     )
     acc = _block_launch(
@@ -456,9 +565,22 @@ def _run_block_single(scn, key, replicas, steps, plan):
         colds,
         resolve_backend(plan.backend),
         kw,
-        block_k=plan.resolved_block_k(n),
+        block_k=plan.resolved_block_k(dts.shape[1]),
+        t_to_rows=rows(rel.failure.timeout_or_inf) if rel else None,
+        pf_rows=rows(rel.failure.p_fail) if rel else None,
+        extras=extras,
     )
     zeros = np.zeros((replicas,))
+    rely_kw = {}
+    if rel is not None:
+        from repro.kernels.faas_event_step import ACC_COLS
+
+        rely_kw = dict(
+            n_timeout=acc[:, ACC_COLS + 0],
+            n_fail=acc[:, ACC_COLS + 1],
+            n_retry=acc[:, ACC_COLS + 2],
+            n_abandon=acc[:, ACC_COLS + 3],
+        )
     return SimulationSummary(
         n_cold=acc[:, 0],
         n_warm=acc[:, 1],
@@ -471,6 +593,7 @@ def _run_block_single(scn, key, replicas, steps, plan):
         lifespan_count=zeros,
         measured_time=scn.sim_time - scn.skip_time,
         overflow=acc[:, 7],
+        **rely_kw,
     )
 
 
@@ -501,9 +624,31 @@ _DRAW_FIELDS = (
     "warm_service_process",
     "cold_service_process",
 )
+_DRAW_FIELDS = _DRAW_FIELDS + (
+    # Backoff parameters shape the pre-built attempt table, so each value
+    # is its own draw cell (stream rebuild); the traced copies still ride
+    # in WorkloadParams.  max_retries is static *and* changes the table
+    # width, so it is not sweepable — split the sweep instead.
+    "backoff_base",
+    "backoff_mult",
+    "backoff_jitter",
+)
 # Pure traced values: cells along these axes share the draw cells' sample
-# buffers (common random numbers across horizons/warm-ups).
-_PARAM_FIELDS = ("sim_time", "skip_time")
+# buffers (common random numbers across horizons/warm-ups).  t_timeout and
+# p_fail are pure per-row comparisons against pre-drawn uniforms, so a
+# (t_timeout × threshold) reliability grid shares one set of draws and ONE
+# compile.
+_PARAM_FIELDS = ("sim_time", "skip_time", "t_timeout", "p_fail")
+
+# Axes that require Scenario.reliability to be set (the static flag and
+# the failure uniforms come from it).
+_RELY_AXES = (
+    "t_timeout",
+    "p_fail",
+    "backoff_base",
+    "backoff_mult",
+    "backoff_jitter",
+)
 
 
 @dataclasses.dataclass
@@ -531,6 +676,8 @@ class GridResult:
     avg_response_time: np.ndarray
     developer_cost: np.ndarray
     provider_cost: np.ndarray
+    goodput: Optional[np.ndarray] = None  # [*dims] completions/s
+    ok: Optional[np.ndarray] = None  # [*dims] all-finite-metrics mask
     window_bounds: Optional[np.ndarray] = None  # [W+1]
     windowed_cold_prob: Optional[np.ndarray] = None  # [*dims, W]
     windowed_arrivals: Optional[np.ndarray] = None  # [*dims, W] replica-mean
@@ -549,6 +696,8 @@ class GridResult:
         "avg_response_time",
         "developer_cost",
         "provider_cost",
+        "goodput",
+        "ok",
     )
     _WINDOWED_FIELDS = (
         "windowed_cold_prob",
@@ -644,6 +793,14 @@ def _apply_axis(scn: Scenario, name: str, value) -> Scenario:
         )
     if name == "arrival_rate":
         return Scenario.of(scn, arrival_rate=float(value))
+    if name in ("backoff_base", "backoff_mult", "backoff_jitter"):
+        retry = dataclasses.replace(
+            scn.reliability.retry, **{name: float(value)}
+        )
+        return Scenario.of(
+            scn,
+            reliability=dataclasses.replace(scn.reliability, retry=retry),
+        )
     return Scenario.of(scn, **{name: value})
 
 
@@ -706,6 +863,19 @@ def sweep(
     param_names = [n for n in names if n in _PARAM_FIELDS]
     dims = {n: len(vals[n]) for n in names}
     base = Scenario.of(scenario)
+    rely_axes = [n for n in names if n in _RELY_AXES]
+    if rely_axes and base.reliability is None:
+        raise ValueError(
+            f"sweeping {rely_axes} needs Scenario.reliability= to be set "
+            "on the base scenario (it provides the static reliability "
+            "structure and the failure uniforms)"
+        )
+    for v in vals.get("t_timeout", ()):
+        if not float(v) > 0:
+            raise ValueError(f"t_timeout values must be > 0, got {v}")
+    for v in vals.get("p_fail", ()):
+        if not 0.0 <= float(v) < 1.0:
+            raise ValueError(f"p_fail values must be in [0, 1), got {v}")
 
     # ---- draw cells: product over draw axes, one chained key split each
     draw_combos = list(
@@ -731,7 +901,10 @@ def sweep(
         raise ValueError("every skip_time must be < every sim_time on the grid")
     max_sim = float(max(sim_vals))
 
-    from repro.core.simulator import draw_workload_samples
+    from repro.core.simulator import (
+        draw_reliability_stream,
+        draw_workload_samples,
+    )
 
     n_steps = (
         int(steps)
@@ -748,18 +921,25 @@ def sweep(
         )
     R = int(replicas)
     D = len(draw_cfgs)
-    ds, ws, cs = [], [], []
+    rel = base.reliability
+    retries = int(rel.retry.max_retries) if rel is not None else 0
+    if retries > 0:
+        # the attempt table is absolute f64 times — the whole grid runs
+        # prestamped regardless of the base arrival process
+        prestamped = True
+    parts = []
     for c in draw_cfgs:
         key, sub = jax.random.split(key)
-        d_, w_, c_ = draw_workload_samples(
-            Scenario.of(c, sim_time=max_sim), sub, R, n_steps
-        )
-        ds.append(d_)
-        ws.append(w_)
-        cs.append(c_)
-    dts = jnp.concatenate(ds)  # [D*R, N]
-    warms = jnp.concatenate(ws)
-    colds = jnp.concatenate(cs)
+        c_sim = Scenario.of(c, sim_time=max_sim)
+        if rel is not None:
+            smp_c, ext_c = draw_reliability_stream(c_sim, sub, R, n_steps)
+            parts.append(tuple(smp_c) + tuple(ext_c))
+        else:
+            parts.append(tuple(draw_workload_samples(c_sim, sub, R, n_steps)))
+    # [D*R, K] per buffer; with retries K = n_steps * (max_retries + 1)
+    bufs = tuple(
+        jnp.concatenate([p[j] for p in parts]) for j in range(len(parts[0]))
+    )
 
     # ---- param cells share draws: tile rows to C = D*Wn*R
     param_combos = list(
@@ -776,21 +956,35 @@ def sweep(
             col = np.full((Wn,), default, np.float64)
         return np.tile(np.repeat(col, R), D)  # [C]
 
-    thr_rows = np.repeat(
-        np.asarray([c.expiration_threshold for c in draw_cfgs], np.float64),
-        Wn * R,
-    )
+    def _draw_col(values):
+        return np.repeat(np.asarray(values, np.float64), Wn * R)  # [C]
+
+    thr_rows = _draw_col([c.expiration_threshold for c in draw_cfgs])
     sim_rows = _param_col("sim_time", base.sim_time)
     skip_rows = _param_col("skip_time", base.skip_time)
+    rely_rows = None
+    if rel is not None:
+        rely_rows = dict(
+            t_timeout=_param_col("t_timeout", rel.failure.timeout_or_inf),
+            p_fail=_param_col("p_fail", rel.failure.p_fail),
+            backoff_base=_draw_col(
+                [c.reliability.retry.backoff_base for c in draw_cfgs]
+            ),
+            backoff_mult=_draw_col(
+                [c.reliability.retry.backoff_mult for c in draw_cfgs]
+            ),
+            backoff_jitter=_draw_col(
+                [c.reliability.retry.backoff_jitter for c in draw_cfgs]
+            ),
+        )
 
     def _expand(x):
         if Wn == 1:
             return x
-        return jnp.repeat(
-            x.reshape(D, 1, R, n_steps), Wn, axis=1
-        ).reshape(C, n_steps)
+        k = x.shape[1]  # per-buffer width: retries widen K past n_steps
+        return jnp.repeat(x.reshape(D, 1, R, k), Wn, axis=1).reshape(C, k)
 
-    samples = tuple(_expand(x) for x in (dts, warms, colds))
+    samples = tuple(_expand(x) for x in bufs)
 
     # ---- static combos: one compile each (outermost Python loop)
     static_combos = list(
@@ -813,12 +1007,12 @@ def sweep(
         if bspec.kind == "native":
             cells, win = _scan_cells(
                 scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
-                prestamped, plan,
+                prestamped, plan, rely_rows=rely_rows,
             )
         else:
             cells, win = _block_cells(
                 scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
-                bspec, plan,
+                bspec, plan, rely_rows=rely_rows,
             )
         all_summaries.extend(cells)
         windowed.append(win)
@@ -838,7 +1032,9 @@ def sweep(
 
     billing = base.billing
     costs = [estimate_cost(s, billing) for s in all_summaries]
-    metric = lambda f: _grid(np.asarray([f(s) for s in all_summaries]))
+    metric = lambda f: _grid(
+        np.asarray([f(s) for s in all_summaries], np.float64)
+    )
     summaries_grid = np.empty((len(all_summaries),), dtype=object)
     summaries_grid[:] = all_summaries
     summaries_grid = _grid(summaries_grid)
@@ -863,12 +1059,7 @@ def sweep(
                 np.concatenate([w["instances"] for w in windowed]), trailing=1
             )
 
-    return GridResult(
-        axes={n: vals[n] for n in names},
-        replicas=R,
-        backend=plan.backend,
-        execution=plan,
-        summaries=summaries_grid,
+    metrics = dict(
         cold_start_prob=metric(lambda s: s.cold_start_prob),
         rejection_prob=metric(lambda s: s.rejection_prob),
         avg_server_count=metric(lambda s: s.avg_server_count),
@@ -878,6 +1069,22 @@ def sweep(
         avg_response_time=metric(lambda s: s.avg_response_time),
         developer_cost=_grid(np.asarray([c.developer_total for c in costs])),
         provider_cost=_grid(np.asarray([c.provider_infra_cost for c in costs])),
+        goodput=metric(lambda s: s.goodput),
+    )
+    ok = np.ones(metrics["cold_start_prob"].shape, bool)
+    for m in metrics.values():
+        ok &= np.isfinite(m)
+    if not ok.all():
+        _warn_nonfinite({n: vals[n] for n in names}, ok)
+
+    return GridResult(
+        axes={n: vals[n] for n in names},
+        replicas=R,
+        backend=plan.backend,
+        execution=plan,
+        summaries=summaries_grid,
+        **metrics,
+        ok=ok,
         window_bounds=shared_bounds,
         windowed_cold_prob=w_cold,
         windowed_arrivals=w_arr,
@@ -885,8 +1092,28 @@ def sweep(
     )
 
 
+def _warn_nonfinite(axes: dict, ok: np.ndarray) -> None:
+    """Name the grid cells whose metrics came back non-finite."""
+    bad = np.argwhere(~ok)
+    names = list(axes)
+    cells = [
+        "("
+        + ", ".join(f"{n}={axes[n][i]!r}" for n, i in zip(names, idx))
+        + ")"
+        for idx in bad[:8]
+    ]
+    more = "" if len(bad) <= 8 else f" (+{len(bad) - 8} more)"
+    warnings.warn(
+        f"sweep produced non-finite metrics in {len(bad)} cell(s): "
+        + ", ".join(cells) + more + "; see GridResult.ok",
+        RuntimeWarning,
+        stacklevel=3,
+    )
+
+
 def _scan_cells(
-    scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan
+    scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
+    rely_rows=None,
 ):
     """One f64 sweep launch → per-cell summaries.
 
@@ -910,7 +1137,15 @@ def _scan_cells(
         if wb
         else np.zeros((C, 0))
     )
-    params = WorkloadParams.of(thr_rows, sim_rows, skip_rows, wb_rows)
+    rr = rely_rows or {}
+    params = WorkloadParams.of(
+        thr_rows, sim_rows, skip_rows, wb_rows,
+        t_timeout=rr.get("t_timeout"),
+        p_fail=rr.get("p_fail"),
+        backoff_base=rr.get("backoff_base"),
+        backoff_mult=rr.get("backoff_mult"),
+        backoff_jitter=rr.get("backoff_jitter"),
+    )
     mesh = None
     if plan.shard == "grid":
         mesh = plan.mesh()
@@ -958,12 +1193,21 @@ def _scan_cells(
                 n_arrivals=cell["w_arrivals"][c],
                 time_running=cell["w_run_t"][c],
                 time_idle=cell["w_idle_t"][c],
+                n_fail=cell["w_fail"][c] if scfg.reliability else None,
             )
             w_cold[c] = windows.cold_start_prob
             w_arr[c] = windows.n_arrivals.mean(axis=0)
             w_inst[c] = (
                 windows.time_running + windows.time_idle
             ).mean(axis=0) / widths
+        rely_kw = {}
+        if scfg.reliability:
+            rely_kw = dict(
+                n_timeout=cell["n_timeout"][c],
+                n_fail=cell["n_fail"][c],
+                n_retry=cell["n_retry"][c],
+                n_abandon=cell["n_abandon"][c],
+            )
         summaries.append(
             SimulationSummary(
                 n_cold=cell["n_cold"][c],
@@ -979,6 +1223,7 @@ def _scan_cells(
                 histogram=cell["hist"][c] if scfg.track_histogram else None,
                 overflow=cell["overflow"][c],
                 windows=windows,
+                **rely_kw,
             )
         )
     win = (
@@ -1031,7 +1276,7 @@ def _block_sharded_executable(backend: str, mesh, kw_items: tuple):
 
 def _block_launch(
     scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512,
-    plan=None, window_rows=None,
+    plan=None, window_rows=None, t_to_rows=None, pf_rows=None, extras=(),
 ):
     """Shared f32 block-engine launch: prepare the per-row f32 state and
     sample buffers and hand them to the registered backend's row launcher
@@ -1079,7 +1324,24 @@ def _block_launch(
     args = (alive0, frozen, frozen, t0, t_exp, t_end, skip, dts, warms, colds)
     if window_rows is not None:
         window_rows = jnp.asarray(window_rows, jnp.float32)
+    rely_kw = {}
+    if t_to_rows is not None:
+        rely_kw = dict(
+            t_timeout=as_rows(t_to_rows),
+            p_fail=as_rows(pf_rows),
+        )
+        if extras:
+            # (fail_u,) without retries, (fail_u, is_first, child_pos) with
+            ex = tuple(jnp.asarray(x, jnp.float32) for x in extras)
+            rely_kw["fail_u"] = ex[0]
+            if len(ex) == 3:
+                rely_kw.update(is_first=ex[1], child_pos=ex[2])
     if plan is not None and plan.shard == "grid":
+        if rely_kw:
+            raise ValueError(
+                "reliability sweeps on block backends are single-device; "
+                "drop shard='grid' or use backend='scan'"
+            )
         mesh = plan.mesh()
         pad = (-C) % math.lcm(BLOCK_R, int(mesh.devices.size))
         if window_rows is not None:
@@ -1101,7 +1363,7 @@ def _block_launch(
         )
         acc = np.asarray(fn(*args), np.float64)[:C]
     else:
-        launch_kw = dict(kw, block_k=block_k)
+        launch_kw = dict(kw, block_k=block_k, **rely_kw)
         if window_rows is not None:
             launch_kw["window_bounds"] = window_rows
         acc = np.asarray(bspec.launch(*args, **launch_kw), np.float64)
@@ -1113,7 +1375,8 @@ def _block_launch(
 
 
 def _block_cells(
-    scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan
+    scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan,
+    rely_rows=None,
 ):
     """One f32 block-engine launch → per-cell summaries.
 
@@ -1123,11 +1386,13 @@ def _block_cells(
     instance-time integrals — exactly like the f64 scan path.
     """
     from repro.core.simulator import SimulationSummary, WindowedMetrics
-    from repro.kernels.faas_event_step import ACC_COLS, WINDOW_COLS
+    from repro.kernels.faas_event_step import ACC_COLS, RELY_COLS, WINDOW_COLS
 
     if scn_s.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
-    dts, warms, colds = samples
+    rel = scn_s.reliability
+    dts, warms, colds = samples[:3]
+    extras = tuple(samples[3:])
     if not prestamped:
         # Coverage guard on the REAL draws (before any padding): every
         # row's arrivals must reach its horizon, else the grid would be
@@ -1151,15 +1416,21 @@ def _block_cells(
         prestamped=prestamped,
         n_windows=W,
     )
+    rr = rely_rows or {}
     acc = _block_launch(
         scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, bspec, kw,
         block_k=plan.resolved_block_k(dts.shape[1]),
         plan=plan,
         window_rows=window_rows,
+        t_to_rows=rr.get("t_timeout") if rel is not None else None,
+        pf_rows=rr.get("p_fail") if rel is not None else None,
+        extras=extras,
     )
     n_cells = len(thr_rows) // R
-    cell = acc.reshape(n_cells, R, ACC_COLS + WINDOW_COLS * W)
+    cols = ACC_COLS + WINDOW_COLS * W + (RELY_COLS if rel is not None else 0)
+    cell = acc.reshape(n_cells, R, cols)
     A = ACC_COLS
+    RB = ACC_COLS + WINDOW_COLS * W  # reliability cols sit at the very end
     zeros = lambda: np.zeros((R,))
     summaries = []
     w_cold = np.zeros((n_cells, W)) if W else None
@@ -1184,6 +1455,14 @@ def _block_cells(
             w_inst[c] = (
                 windows.time_running + windows.time_idle
             ).mean(axis=0) / widths
+        rely_kw = {}
+        if rel is not None:
+            rely_kw = dict(
+                n_timeout=cell[c, :, RB + 0],
+                n_fail=cell[c, :, RB + 1],
+                n_retry=cell[c, :, RB + 2],
+                n_abandon=cell[c, :, RB + 3],
+            )
         summaries.append(
             SimulationSummary(
                 n_cold=cell[c, :, 0],
@@ -1198,6 +1477,7 @@ def _block_cells(
                 measured_time=float(sim_rows[row] - skip_rows[row]),
                 overflow=cell[c, :, 7],
                 windows=windows,
+                **rely_kw,
             )
         )
     win = (

@@ -53,7 +53,9 @@ from repro.core.processes import (
     ArrivalTimeProcess,
     ExpSimProcess,
     SimProcess,
+    absolute_times_from_gaps,
 )
+from repro.core.reliability import NO_CHILD, build_attempt_table
 
 # The config machinery lives in repro.core.scenario (the unified Scenario
 # API); re-exported here for the engines and for pre-Scenario import paths.
@@ -86,10 +88,23 @@ class WindowedMetrics:
     n_arrivals: np.ndarray  # [R, W] (includes rejected arrivals)
     time_running: np.ndarray  # [R, W] exact integral per window
     time_idle: np.ndarray  # [R, W]
+    n_fail: np.ndarray = None  # [R, W] timeouts+failures (reliability runs)
 
     @property
     def widths(self) -> np.ndarray:
         return np.diff(self.bounds)
+
+    @property
+    def failure_prob(self) -> np.ndarray:
+        """[W] pooled timeouts+failures per served request.
+
+        Zeros when reliability is off (scan engine only — the block
+        kernels track aggregate reliability columns, not per-window ones).
+        """
+        if self.n_fail is None:
+            return np.zeros(len(self.bounds) - 1)
+        served = (self.n_cold + self.n_warm).sum(axis=0)
+        return self.n_fail.sum(axis=0) / np.maximum(served, 1)
 
     @property
     def cold_start_prob(self) -> np.ndarray:
@@ -137,11 +152,58 @@ class SimulationSummary:
     histogram: Optional[np.ndarray] = None  # [R, hist_bins] time at count=k
     overflow: Optional[np.ndarray] = None
     windows: Optional[WindowedMetrics] = None  # set when window_bounds given
+    # ---- reliability counters (None unless Scenario.reliability is set) --
+    n_timeout: Optional[np.ndarray] = None  # served but cut at t_timeout
+    n_fail: Optional[np.ndarray] = None  # served, completed, then failed
+    n_retry: Optional[np.ndarray] = None  # re-enqueued attempts processed
+    n_abandon: Optional[np.ndarray] = None  # gave up (retry budget spent)
 
     # ---- paper metrics -------------------------------------------------
     @property
     def n_requests(self) -> np.ndarray:
+        """Processed attempts per replica (retries count individually)."""
         return self.n_cold + self.n_warm + self.n_reject
+
+    def _rely(self, x) -> np.ndarray:
+        return np.zeros_like(np.asarray(self.n_cold)) if x is None else x
+
+    # ---- reliability metrics -------------------------------------------
+    @property
+    def n_attempts(self) -> np.ndarray:
+        """Alias of ``n_requests`` emphasising attempts vs completions."""
+        return self.n_requests
+
+    @property
+    def n_completions(self) -> np.ndarray:
+        """Served attempts that neither timed out nor failed."""
+        return (
+            self.n_cold
+            + self.n_warm
+            - self._rely(self.n_timeout)
+            - self._rely(self.n_fail)
+        )
+
+    @property
+    def timeout_prob(self) -> float:
+        served = (self.n_cold + self.n_warm).sum()
+        return float(self._rely(self.n_timeout).sum() / np.maximum(served, 1))
+
+    @property
+    def failure_prob(self) -> float:
+        served = (self.n_cold + self.n_warm).sum()
+        return float(self._rely(self.n_fail).sum() / np.maximum(served, 1))
+
+    @property
+    def goodput(self) -> float:
+        """Successful completions per second (replica mean)."""
+        return float(self.n_completions.mean() / max(self.measured_time, 1e-12))
+
+    @property
+    def retry_amplification(self) -> float:
+        """Attempts per original request — the retry-amplified load."""
+        attempts = self.n_requests.sum()
+        firsts = attempts - self._rely(self.n_retry).sum()
+        return float(attempts / np.maximum(firsts, 1))
 
     @property
     def cold_start_prob(self) -> float:
@@ -201,6 +263,13 @@ class SimulationSummary:
             "avg_response_time": self.avg_response_time,
             "avg_wasted_ratio": self.avg_wasted_ratio,
             "n_requests": int(self.n_requests.sum()),
+            "n_completions": int(self.n_completions.sum()),
+            "n_timeouts": int(self._rely(self.n_timeout).sum()),
+            "n_failures": int(self._rely(self.n_fail).sum()),
+            "n_retries": int(self._rely(self.n_retry).sum()),
+            "n_abandoned": int(self._rely(self.n_abandon).sum()),
+            "goodput": self.goodput,
+            "retry_amplification": self.retry_amplification,
         }
 
 
@@ -288,6 +357,67 @@ def draw_workload_samples(cfg: Scenario, key: Array, replicas: int, n: int):
     return arr, warms, colds
 
 
+# fold_in salts for the reliability side-draws: the base (arrival, warm,
+# cold) draws keep the exact ``split(key, 3)`` schedule above, so enabling
+# a trivial reliability policy replays the base stream bitwise.
+_RELY_SALT_JITTER = 1013
+_RELY_SALT_WARM = 1014
+_RELY_SALT_COLD = 1015
+_RELY_SALT_FAIL = 1016
+
+
+def draw_reliability_stream(cfg: Scenario, key: Array, replicas: int, n: int):
+    """Draw ``(arrivals, warm, cold)`` plus the reliability extras.
+
+    Returns ``(samples, extras)``.  With ``max_retries == 0`` the native
+    stream is kept and ``extras = (fail_u,)``.  With retries, the sorted
+    per-attempt table replaces the stream (absolute f64 times — the scan
+    runs prestamped) and ``extras = (fail_u, is_first, child_pos)``; the
+    table is built host-side once, so the f64 scan, the f32 block kernels
+    and the pure-Python oracle all replay identical events.
+    """
+    rel = cfg.reliability
+    arr, warms, colds = draw_workload_samples(cfg, key, replicas, n)
+    if rel is None:
+        return (arr, warms, colds), ()
+    J = int(rel.retry.max_retries)
+    kf = jax.random.fold_in(key, _RELY_SALT_FAIL)
+    if J == 0:
+        fail_u = jax.random.uniform(kf, (replicas, n), dtype=jnp.float32)
+        return (arr, warms, colds), (fail_u,)
+    if cfg.prestamped:
+        times0 = jnp.asarray(arr, jnp.float64)
+    else:
+        # The gap stream becomes absolute timestamps; its final-clock
+        # coverage check can no longer run inside the engines, so guard
+        # here (f64 sum of the f32 gaps, as on the block paths).
+        covered = np.asarray(arr, np.float64).sum(axis=1)
+        if (covered < cfg.sim_time).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {covered.min():.1f} < {cfg.sim_time}); "
+                "pass a larger `steps`"
+            )
+        times0 = absolute_times_from_gaps(arr)
+    kj = jax.random.fold_in(key, _RELY_SALT_JITTER)
+    kw = jax.random.fold_in(key, _RELY_SALT_WARM)
+    kc = jax.random.fold_in(key, _RELY_SALT_COLD)
+    jitter_u = jax.random.uniform(kj, (replicas, n, J), dtype=jnp.float64)
+    warms_x = cfg.warm_service_process.sample(kw, (replicas, n * J))
+    colds_x = cfg.cold_service_process.sample(kc, (replicas, n * J))
+    fail_a = jax.random.uniform(kf, (replicas, n, J + 1), dtype=jnp.float32)
+    warms_a = jnp.concatenate(
+        [warms[:, :, None], warms_x.reshape(replicas, n, J)], axis=2
+    )
+    colds_a = jnp.concatenate(
+        [colds[:, :, None], colds_x.reshape(replicas, n, J)], axis=2
+    )
+    times, warms_s, colds_s, fail_s, first_s, child_s = build_attempt_table(
+        times0, warms_a, colds_a, fail_a, jitter_u, rel.retry
+    )
+    return (times, warms_s, colds_s), (fail_s, first_s, child_s)
+
+
 # ---------------------------------------------------------------------------
 # Single-replica scan
 # ---------------------------------------------------------------------------
@@ -307,10 +437,19 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
     t_end = params.sim_time
     skip = params.skip_time
     max_c = cfg.max_concurrency
+    rely = cfg.reliability
+    retries = cfg.max_retries > 0
 
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc) = state
-        dt, warm_s, cold_s = xs
+        if retries:
+            # Attempt-table stream: per-event failure uniform, first-attempt
+            # flag, retry-successor position and the event's own position.
+            dt, warm_s, cold_s, fail_u, is_first, child_pos, pos = xs
+        elif rely:
+            dt, warm_s, cold_s, fail_u = xs
+        else:
+            dt, warm_s, cold_s = xs
         if cfg.prestamped:
             # xs carries the absolute arrival timestamp (f64), not a gap.
             t = dt.astype(jnp.float64)
@@ -348,6 +487,13 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
 
         # ---- routing
         active = t <= t_end
+        if retries:
+            # Non-first attempts stay inert until their parent's failure /
+            # timeout / rejection switches them on; inactive events still
+            # advance the clock, integrate, and expire (interval
+            # additivity keeps that exact) — they are no-op arrivals.
+            act = acc["act"]
+            active = active & (is_first | act[pos])
         idle_mask = alive & (busy_until <= t)
         any_idle = idle_mask.any()
         # priority by creation time: newest (paper) or oldest
@@ -367,13 +513,35 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
         chosen = jnp.where(is_warm, warm_idx, free_idx)
         service = jnp.where(is_warm, warm_s, cold_s).astype(jnp.float64)
         assign = is_warm | is_cold
-        new_busy = jnp.where(assign, t + service, busy_until[chosen])
+        if rely:
+            # The instance is freed at min(departure, t_arrival + t_timeout)
+            # — the sentinel NO_TIMEOUT (1e30) makes min() the identity, so
+            # an enabled-but-trivial policy stays bitwise-exact.
+            occupancy = jnp.minimum(service, params.t_timeout)
+        else:
+            occupancy = service
+        new_busy = jnp.where(assign, t + occupancy, busy_until[chosen])
         busy_until = busy_until.at[chosen].set(new_busy)
         new_creation = jnp.where(is_cold, t, creation[chosen])
         creation = creation.at[chosen].set(new_creation)
         alive = alive.at[chosen].set(alive[chosen] | is_cold)
 
         counted = t > skip  # warm-up exclusion for request-level metrics
+        if rely:
+            # A timed-out attempt was cut at t_timeout; a failed one ran to
+            # completion and then failed (pre-drawn per-attempt uniform).
+            # Response-time sums bill the actual occupancy.
+            timed_out = assign & (service > params.t_timeout)
+            failed = (
+                assign
+                & ~timed_out
+                & (fail_u.astype(jnp.float64) < params.p_fail)
+            )
+            trigger = timed_out | failed | is_reject
+            cold_resp = jnp.minimum(cold_s.astype(jnp.float64), params.t_timeout)
+            warm_resp = jnp.minimum(warm_s.astype(jnp.float64), params.t_timeout)
+        else:
+            cold_resp, warm_resp = cold_s, warm_s
         acc = dict(
             n_cold=acc["n_cold"] + (is_cold & counted),
             n_warm=acc["n_warm"] + (is_warm & counted),
@@ -381,9 +549,9 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
             time_running=acc["time_running"] + run_t,
             time_idle=acc["time_idle"] + idle_t,
             sum_cold_resp=acc["sum_cold_resp"]
-            + jnp.where(is_cold & counted, cold_s, 0.0),
+            + jnp.where(is_cold & counted, cold_resp, 0.0),
             sum_warm_resp=acc["sum_warm_resp"]
-            + jnp.where(is_warm & counted, warm_s, 0.0),
+            + jnp.where(is_warm & counted, warm_resp, 0.0),
             lifespan_sum=lifespan_sum,
             lifespan_count=lifespan_count,
             overflow=acc["overflow"] + overflow,
@@ -393,7 +561,31 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
             w_arrivals=acc["w_arrivals"],
             w_run_t=acc["w_run_t"],
             w_idle_t=acc["w_idle_t"],
+            n_timeout=acc["n_timeout"],
+            n_fail=acc["n_fail"],
+            n_retry=acc["n_retry"],
+            n_abandon=acc["n_abandon"],
+            w_fail=acc["w_fail"],
         )
+        if rely:
+            acc["n_timeout"] = acc["n_timeout"] + (timed_out & counted)
+            acc["n_fail"] = acc["n_fail"] + (failed & counted)
+            if retries:
+                has_child = child_pos < NO_CHILD
+                acc["n_retry"] = acc["n_retry"] + (
+                    ~is_first & active & counted
+                )
+                acc["n_abandon"] = acc["n_abandon"] + (
+                    trigger & ~has_child & counted
+                )
+                # Re-enqueue: switch on the retry successor.  Out-of-bounds
+                # sentinel positions are dropped by the scatter.
+                child_c = jnp.minimum(child_pos, act.shape[0] - 1)
+                acc["act"] = act.at[child_pos].set(
+                    act[child_c] | trigger, mode="drop"
+                )
+            else:
+                acc["n_abandon"] = acc["n_abandon"] + (trigger & counted)
         if cfg.n_windows:
             # half-open window membership [b_w, b_{w+1}) of the arrival
             # instant; windows deliberately ignore skip_time (the grid is
@@ -407,6 +599,10 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
             acc["w_arrivals"] = acc["w_arrivals"] + onehot
             acc["w_run_t"] = acc["w_run_t"] + run_w
             acc["w_idle_t"] = acc["w_idle_t"] + idle_w
+            if rely:
+                acc["w_fail"] = acc["w_fail"] + (
+                    onehot & (timed_out | failed)
+                )
         return (alive, creation, busy_until, t, acc), None
 
     return step
@@ -432,6 +628,11 @@ def _empty_acc(cfg: StaticConfig):
         w_arrivals=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
         w_run_t=jnp.zeros((cfg.n_windows,), dtype=jnp.float64),
         w_idle_t=jnp.zeros((cfg.n_windows,), dtype=jnp.float64),
+        n_timeout=zi,
+        n_fail=zi,
+        n_retry=zi,
+        n_abandon=zi,
+        w_fail=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
     )
 
 
@@ -475,43 +676,68 @@ def _flush(cfg: StaticConfig, params: WorkloadParams, state):
     return acc, t_prev
 
 
-def _scan_one(cfg: StaticConfig, params: WorkloadParams, dt_row, warm_row, cold_row, pool0=None):
-    """One replica: scan over its arrival stream, then flush the tail."""
+def _scan_one(
+    cfg: StaticConfig,
+    params: WorkloadParams,
+    dt_row,
+    warm_row,
+    cold_row,
+    pool0=None,
+    extra_rows=(),
+):
+    """One replica: scan over its arrival stream, then flush the tail.
+
+    ``extra_rows`` carries the reliability columns — ``(fail_u,)`` on a
+    native stream, ``(fail_u, is_first, child_pos)`` on an attempt table
+    (then the activation mask rides in the carry and the event's own
+    position is appended as an iota column).
+    """
     step = _make_scan_fn(cfg, params)
     pool = _empty_pool(cfg) if pool0 is None else pool0
-    state0 = (*pool, jnp.zeros((), jnp.float64), _empty_acc(cfg))
-    state, _ = jax.lax.scan(
-        step, state0, (dt_row, warm_row, cold_row), unroll=cfg.scan_unroll
-    )
-    return _flush(cfg, params, state)
+    acc = _empty_acc(cfg)
+    xs = (dt_row, warm_row, cold_row) + tuple(extra_rows)
+    if cfg.max_retries > 0:
+        acc["act"] = jnp.zeros(dt_row.shape, dtype=bool)
+        xs = xs + (jnp.arange(dt_row.shape[0]),)
+    state0 = (*pool, jnp.zeros((), jnp.float64), acc)
+    state, _ = jax.lax.scan(step, state0, xs, unroll=cfg.scan_unroll)
+    acc, t_last = _flush(cfg, params, state)
+    acc.pop("act", None)
+    return acc, t_last
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _simulate_batch(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds, init_pool=None):
+def _simulate_batch(
+    cfg: StaticConfig, params: WorkloadParams, dts, warms, colds,
+    init_pool=None, extras=(),
+):
     """vmap over replicas of the arrival-driven scan. Inputs: f32[R, N].
 
     ``params`` leaves are scalars shared by every replica.
     """
     TRACE_COUNTS["simulate_batch"] += 1
 
-    def one(dt_row, warm_row, cold_row):
-        return _scan_one(cfg, params, dt_row, warm_row, cold_row, pool0=init_pool)
+    def one(dt_row, warm_row, cold_row, *ex):
+        return _scan_one(
+            cfg, params, dt_row, warm_row, cold_row,
+            pool0=init_pool, extra_rows=ex,
+        )
 
-    return jax.vmap(one)(dts, warms, colds)
+    return jax.vmap(one)(dts, warms, colds, *extras)
 
 
-def _sweep_rows(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds):
+def _sweep_rows(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds, *extras):
     """The unjitted sweep body: vmap the per-row scan over the flattened
     grid axis (shared by the plain, non-donating and sharded entries)."""
 
-    def one(p, dt_row, warm_row, cold_row):
-        return _scan_one(cfg, p, dt_row, warm_row, cold_row)
+    def one(p, dt_row, warm_row, cold_row, *ex):
+        return _scan_one(cfg, p, dt_row, warm_row, cold_row, extra_rows=ex)
 
-    return jax.vmap(one)(params, dts, warms, colds)
+    return jax.vmap(one)(params, dts, warms, colds, *extras)
 
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(2, 3, 4))
-def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds):
+def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds, *extras):
     """The single-compile what-if engine: one jitted, donated call.
 
     ``params`` leaves and the sample arrays all carry a leading flattened
@@ -522,7 +748,7 @@ def _simulate_sweep(cfg: StaticConfig, params: WorkloadParams, dts, warms, colds
     the call.
     """
     TRACE_COUNTS["simulate_sweep"] += 1
-    return _sweep_rows(cfg, params, dts, warms, colds)
+    return _sweep_rows(cfg, params, dts, warms, colds, *extras)
 
 
 @functools.lru_cache(maxsize=None)
@@ -541,10 +767,10 @@ def sweep_executable(mesh=None, donate: bool = True):
         return _simulate_sweep
     counter = "simulate_sweep" if mesh is None else "simulate_sweep_sharded"
 
-    def fn(cfg, params, dts, warms, colds):
+    def fn(cfg, params, dts, warms, colds, *extras):
         TRACE_COUNTS[counter] += 1
         if mesh is None:
-            return _sweep_rows(cfg, params, dts, warms, colds)
+            return _sweep_rows(cfg, params, dts, warms, colds, *extras)
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec
 
@@ -552,9 +778,9 @@ def sweep_executable(mesh=None, donate: bool = True):
         return shard_map(
             functools.partial(_sweep_rows, cfg),
             mesh=mesh,
-            in_specs=(spec, spec, spec, spec),
+            in_specs=(spec,) * (4 + len(extras)),
             out_specs=spec,
-        )(params, dts, warms, colds)
+        )(params, dts, warms, colds, *extras)
 
     return jax.jit(
         fn,
@@ -611,11 +837,26 @@ class ServerlessSimulator:
         samples=None,
     ) -> SimulationSummary:
         cfg = self.config
+        rel = cfg.reliability
+        extras = ()
         if samples is None:
-            samples = self.draw_samples(key, replicas, steps)
+            if rel is not None:
+                n = steps or cfg.steps_needed()
+                samples, extras = draw_reliability_stream(cfg, key, replicas, n)
+            else:
+                samples = self.draw_samples(key, replicas, steps)
+        elif len(samples) == 2 and isinstance(samples[0], (tuple, list)):
+            samples, extras = samples
+        elif rel is not None:
+            raise ValueError(
+                "a reliability run needs the extras drawn alongside the "
+                "samples; pass samples=draw_reliability_stream(...) (a "
+                "(samples, extras) pair)"
+            )
         dts, warms, colds = samples
         acc, t_last = _simulate_batch(
-            cfg.static_config(), cfg.workload_params(), dts, warms, colds
+            cfg.static_config(), cfg.workload_params(), dts, warms, colds,
+            extras=tuple(extras),
         )
         acc = jax.tree.map(np.asarray, acc)
         t_last = np.asarray(t_last)
@@ -640,6 +881,15 @@ class ServerlessSimulator:
                 n_arrivals=acc["w_arrivals"],
                 time_running=acc["w_run_t"],
                 time_idle=acc["w_idle_t"],
+                n_fail=acc["w_fail"] if rel is not None else None,
+            )
+        rely_kw = {}
+        if rel is not None:
+            rely_kw = dict(
+                n_timeout=acc["n_timeout"],
+                n_fail=acc["n_fail"],
+                n_retry=acc["n_retry"],
+                n_abandon=acc["n_abandon"],
             )
         return SimulationSummary(
             n_cold=acc["n_cold"],
@@ -655,6 +905,7 @@ class ServerlessSimulator:
             histogram=acc["hist"] if cfg.track_histogram else None,
             overflow=acc["overflow"],
             windows=windows,
+            **rely_kw,
         )
 
 
@@ -677,6 +928,7 @@ register_backend(
     backends=("scan", "pallas", "ref"),
     sweepable=True,
     windowed_backends=("scan", "pallas", "ref"),
+    reliability_backends=("scan", "pallas", "ref"),
     description="steady-state scale-per-request simulator (paper §3/§4.1)",
 )
 def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

@@ -28,6 +28,7 @@ from repro.core.simulator import (
     _make_scan_fn,
     _flush,
     _NEG_INF,
+    draw_reliability_stream,
     draw_workload_samples,
 )
 
@@ -75,12 +76,14 @@ class TemporalSummary:
 
 
 @functools.partial(jax.jit, static_argnums=(0,))
-def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, dts, warms, colds):
+def _simulate_temporal(
+    cfg: StaticConfig, params: WorkloadParams, grid, pool0, dts, warms, colds, *extras
+):
     base_step = _make_scan_fn(cfg, params)
 
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc, curves) = state
-        dt, warm_s, cold_s = xs
+        dt = xs[0]
         if cfg.prestamped:
             t = dt.astype(jnp.float64)  # absolute-timestamp stream
         else:
@@ -103,8 +106,12 @@ def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, d
         (alive, creation, busy_until, t_prev, acc) = new_state
         return (alive, creation, busy_until, t_prev, acc, curves), None
 
-    def one(dt_row, warm_row, cold_row):
+    def one(dt_row, warm_row, cold_row, *ex):
         acc = _empty_acc(cfg)
+        xs = (dt_row, warm_row, cold_row) + tuple(ex)
+        if cfg.max_retries > 0:
+            acc["act"] = jnp.zeros(dt_row.shape, dtype=bool)
+            xs = xs + (jnp.arange(dt_row.shape[0]),)
         curves = dict(
             running=jnp.zeros(grid.shape, dtype=jnp.int64),
             idle=jnp.zeros(grid.shape, dtype=jnp.int64),
@@ -112,7 +119,7 @@ def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, d
             seen=jnp.zeros(grid.shape, dtype=bool),
         )
         state0 = (*pool0, jnp.zeros((), jnp.float64), acc, curves)
-        state, _ = jax.lax.scan(step, state0, (dt_row, warm_row, cold_row))
+        state, _ = jax.lax.scan(step, state0, xs)
         (alive, creation, busy_until, t_prev, acc, curves) = state
         # Grid points after the last arrival.
         expire = busy_until + params.expiration_threshold
@@ -128,9 +135,10 @@ def _simulate_temporal(cfg: StaticConfig, params: WorkloadParams, grid, pool0, d
             seen=curves["seen"] | tail,
         )
         acc, t_last = _flush(cfg, params, (alive, creation, busy_until, t_prev, acc))
+        acc.pop("act", None)
         return acc, t_last, curves
 
-    return jax.vmap(one)(dts, warms, colds)
+    return jax.vmap(one)(dts, warms, colds, *extras)
 
 
 class ServerlessTemporalSimulator:
@@ -155,14 +163,23 @@ class ServerlessTemporalSimulator:
     ) -> TemporalSummary:
         cfg = self.config
         n = steps or cfg.steps_needed()
-        dts, warms, colds = draw_workload_samples(cfg, key, replicas, n)
+        (dts, warms, colds), extras = draw_reliability_stream(cfg, key, replicas, n)
         pool0 = _snapshots_to_pool(self.initial_instances, cfg.slots)
         grid_j = jnp.asarray(grid, dtype=jnp.float64)
         acc, t_last, curves = _simulate_temporal(
-            cfg.static_config(), cfg.workload_params(), grid_j, pool0, dts, warms, colds
+            cfg.static_config(), cfg.workload_params(), grid_j, pool0,
+            dts, warms, colds, *extras,
         )
         acc = jax.tree.map(np.asarray, acc)
         curves = jax.tree.map(np.asarray, curves)
+        rely_kw = {}
+        if cfg.reliability is not None:
+            rely_kw = dict(
+                n_timeout=acc["n_timeout"],
+                n_fail=acc["n_fail"],
+                n_retry=acc["n_retry"],
+                n_abandon=acc["n_abandon"],
+            )
         steady = SimulationSummary(
             n_cold=acc["n_cold"],
             n_warm=acc["n_warm"],
@@ -176,6 +193,7 @@ class ServerlessTemporalSimulator:
             measured_time=cfg.sim_time,
             histogram=acc["hist"] if cfg.track_histogram else None,
             overflow=acc["overflow"],
+            **rely_kw,
         )
         running = curves["running"].mean(0)
         idle = curves["idle"].mean(0)
@@ -201,6 +219,11 @@ def _run_block_temporal(scn, key, plan, grid, replicas, steps, initial_instances
     from repro.kernels.faas_event_step import ACC_COLS
 
     cfg = scn if scn.skip_time == 0.0 else Scenario.of(scn, skip_time=0.0)
+    if cfg.reliability is not None:
+        raise ValueError(
+            "the temporal engine serves reliability on the f64 scan backend "
+            "only; use backend='scan'"
+        )
     if cfg.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
     if cfg.routing != "newest":
@@ -289,6 +312,7 @@ def _run_block_temporal(scn, key, plan, grid, replicas, steps, initial_instances
 @register_engine(
     "temporal",
     backends=("scan", "pallas", "ref"),
+    reliability_backends=("scan",),
     description="transient analysis: custom initial pool + grid curves",
 )
 def _temporal_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

@@ -80,8 +80,17 @@ ACC_COLS = 8
 WINDOW_COLS = 5
 # transient-curve columns per grid point: running, idle, no_idle indicator
 GRID_COLS = 3
+# reliability columns (DESIGN.md §11): timeout, fail, retry, abandon —
+# appended at the very END of the accumulator (after window and grid
+# columns) so every pre-existing column offset is unchanged
+RELY_COLS = 4
 # par acc columns: ACC_COLS + ∫in-flight-requests
 PAR_ACC_COLS = ACC_COLS + 1
+
+# child_pos sentinel for a last attempt (mirrors core.reliability.NO_CHILD):
+# a power of two exactly representable in f32, larger than any padded
+# stream width, so the one-hot activation scatter never matches it
+NO_CHILD_F = float(1 << 30)
 
 
 def _faas_kernel(
@@ -91,10 +100,13 @@ def _faas_kernel(
     prestamped: bool,
     n_windows: int,
     n_grid: int,
+    reliability: bool = False,
+    retries: bool = False,
 ):
-    # inputs (VMEM blocks): state [Rb, M] ×3, per-row scalars [Rb, 1] ×4,
-    # optional window bounds [Rb, W+1] and curve grid [Rb, G], samples
-    # [Rb, Kb] ×3; outputs are revisited across the k grid axis.
+    # inputs (VMEM blocks): state [Rb, M] ×3, per-row scalars [Rb, 1] ×4
+    # (+2 reliability scalars), optional window bounds [Rb, W+1] and curve
+    # grid [Rb, G], samples [Rb, Kb] ×3 (+1 failure uniform, +2 retry
+    # streams); outputs are revisited across the k grid axis.
     (alive_in, creation_in, busy_in, t0_ref, texp_ref, tend_ref, skip_ref) = refs[:7]
     i = 7
     wb_ref = None
@@ -105,8 +117,24 @@ def _faas_kernel(
     if n_grid:
         grid_ref = refs[i]
         i += 1
+    tto_ref = pf_ref = None
+    if reliability:
+        tto_ref, pf_ref = refs[i : i + 2]
+        i += 2
     dt_ref, warm_ref, cold_ref = refs[i : i + 3]
-    alive_out, creation_out, busy_out, t_out, acc_out = refs[i + 3 :]
+    i += 3
+    fail_ref = first_ref = child_ref = None
+    if reliability:
+        fail_ref = refs[i]
+        i += 1
+    if retries:
+        first_ref, child_ref = refs[i : i + 2]
+        i += 2
+    act_out = None
+    if retries:
+        alive_out, creation_out, busy_out, t_out, acc_out, act_out = refs[i:]
+    else:
+        alive_out, creation_out, busy_out, t_out, acc_out = refs[i:]
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -115,6 +143,8 @@ def _faas_kernel(
         busy_out[...] = busy_in[...]
         t_out[...] = t0_ref[...]
         acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
+        if retries:
+            act_out[...] = jnp.zeros(act_out.shape, act_out.dtype)
 
     alive = alive_out[...]
     creation = creation_out[...]
@@ -124,13 +154,25 @@ def _faas_kernel(
     t_exp = texp_ref[...][:, 0]  # [Rb]
     t_end = tend_ref[...][:, 0]  # [Rb]
     skip = skip_ref[...][:, 0]  # [Rb]
+    t_to = tto_ref[...][:, 0] if reliability else None  # [Rb]
+    p_fail = pf_ref[...][:, 0] if reliability else None  # [Rb]
     w_lo = wb_ref[...][:, :-1] if n_windows else None  # [Rb, W]
     w_hi = wb_ref[...][:, 1:] if n_windows else None
     g_times = grid_ref[...] if n_grid else None  # [Rb, G]
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
+    if retries:
+        # full-width activation plane [Rb, Ktot]: event positions are
+        # GLOBAL across k chunks, so the revisited output block spans the
+        # whole padded stream; one-hot gather/scatter keeps it vectorized
+        act0 = act_out[...]
+        k_iota = jax.lax.broadcasted_iota(jnp.float32, act0.shape, 1)
+        k0 = pl.program_id(1) * n_steps
 
     def step(i, carry):
-        alive, creation, busy, t, acc = carry
+        if retries:
+            alive, creation, busy, t, acc, act = carry
+        else:
+            alive, creation, busy, t, acc = carry
         dt = dt_ref[:, i]
         warm_s = warm_ref[:, i]
         cold_s = cold_ref[:, i]
@@ -211,6 +253,15 @@ def _faas_kernel(
         n_alive = alive.sum(axis=1)
 
         active = t_new <= t_end
+        if retries:
+            # Non-first attempts stay inert until their parent's failure /
+            # timeout / rejection switched them on (inactive events still
+            # advance the clock, integrate and expire — no-op arrivals).
+            is_first = first_ref[:, i]
+            child = child_ref[:, i]
+            gf = (k0 + i).astype(jnp.float32)  # global event position
+            act_i = jnp.where(k_iota == gf, act, 0.0).sum(axis=1)
+            active = active & ((is_first > 0) | (act_i > 0))
         counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
         overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
@@ -220,13 +271,27 @@ def _faas_kernel(
 
         chosen = jnp.where(is_warm, first_best, first_free)  # f32 slot id
         service = jnp.where(is_warm, warm_s, cold_s)
+        if reliability:
+            # instance freed at min(departure, t_arrival + t_timeout); the
+            # 1e30 sentinel makes min() the identity when timeouts are off
+            occupancy = jnp.minimum(service, t_to)
+        else:
+            occupancy = service
         assign = is_warm | is_cold
         sel = (slot_iota == chosen[:, None]) & assign[:, None]
-        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        busy = jnp.where(sel, (t_new + occupancy)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
 
         cc = counted
+        if reliability:
+            timed_out = assign & (service > t_to)
+            failed = assign & ~timed_out & (fail_ref[:, i] < p_fail)
+            trigger = timed_out | failed | is_reject
+            cold_resp = jnp.minimum(cold_s, t_to)
+            warm_resp = jnp.minimum(warm_s, t_to)
+        else:
+            cold_resp, warm_resp = cold_s, warm_s
         delta = jnp.stack(
             [
                 (is_cold & cc).astype(jnp.float32),
@@ -234,8 +299,8 @@ def _faas_kernel(
                 (is_reject & cc).astype(jnp.float32),
                 run_sum,
                 idle_sum,
-                jnp.where(is_cold & cc, cold_s, 0.0),
-                jnp.where(is_warm & cc, warm_s, 0.0),
+                jnp.where(is_cold & cc, cold_resp, 0.0),
+                jnp.where(is_warm & cc, warm_resp, 0.0),
                 overflow.astype(jnp.float32),
             ],
             axis=1,
@@ -257,12 +322,47 @@ def _faas_kernel(
             )
         if n_grid:
             delta = jnp.concatenate([delta, g_run, g_idle, g_cold], axis=1)
+        if reliability:
+            if retries:
+                has_child = child < NO_CHILD_F
+                r_retry = (is_first <= 0) & active & cc
+                r_abandon = trigger & ~has_child & cc
+                # re-enqueue: one-hot scatter switches on the successor
+                # (NO_CHILD matches no column, so last attempts drop out)
+                hit = (k_iota == child[:, None]) & trigger[:, None]
+                act = jnp.where(hit, 1.0, act)
+            else:
+                r_retry = jnp.zeros_like(trigger)
+                r_abandon = trigger & cc
+            delta = jnp.concatenate(
+                [
+                    delta,
+                    jnp.stack(
+                        [
+                            (timed_out & cc).astype(jnp.float32),
+                            (failed & cc).astype(jnp.float32),
+                            r_retry.astype(jnp.float32),
+                            r_abandon.astype(jnp.float32),
+                        ],
+                        axis=1,
+                    ),
+                ],
+                axis=1,
+            )
         acc = acc + delta
+        if retries:
+            return alive, creation, busy, t_new, acc, act
         return alive, creation, busy, t_new, acc
 
-    alive, creation, busy, t, acc = jax.lax.fori_loop(
-        0, n_steps, step, (alive, creation, busy, t, acc0)
-    )
+    if retries:
+        alive, creation, busy, t, acc, act = jax.lax.fori_loop(
+            0, n_steps, step, (alive, creation, busy, t, acc0, act0)
+        )
+        act_out[...] = act
+    else:
+        alive, creation, busy, t, acc = jax.lax.fori_loop(
+            0, n_steps, step, (alive, creation, busy, t, acc0)
+        )
     alive_out[...] = alive
     creation_out[...] = creation
     busy_out[...] = busy
@@ -280,6 +380,8 @@ def _faas_kernel(
         "prestamped",
         "n_windows",
         "n_grid",
+        "reliability",
+        "retries",
     ),
 )
 def faas_sweep_pallas(
@@ -296,6 +398,11 @@ def faas_sweep_pallas(
     skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
     window_bounds=None,  # f32 [R, W+1] traced window boundaries (irregular OK)
     grid_times=None,  # f32 [R, G] traced transient-curve query times
+    t_timeout=None,  # f32 [R] per-row execution timeout (reliability)
+    p_fail=None,  # f32 [R] per-row failure probability (reliability)
+    fail_u=None,  # f32 [R, K] per-event failure uniforms (reliability)
+    is_first=None,  # f32 [R, K] 0/1 first-attempt flags (retries)
+    child_pos=None,  # f32 [R, K] retry-successor positions (retries)
     max_concurrency: int,
     block_r: int = 8,
     block_k: int = 512,
@@ -303,6 +410,8 @@ def faas_sweep_pallas(
     prestamped: bool = False,
     n_windows: int = 0,
     n_grid: int = 0,
+    reliability: bool = False,
+    retries: bool = False,
 ):
     """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
 
@@ -332,7 +441,12 @@ def faas_sweep_pallas(
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
     skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
     grid = (R // block_r, K // block_k)
-    acc_cols = ACC_COLS + WINDOW_COLS * n_windows + GRID_COLS * n_grid
+    acc_cols = (
+        ACC_COLS
+        + WINDOW_COLS * n_windows
+        + GRID_COLS * n_grid
+        + (RELY_COLS if reliability else 0)
+    )
 
     state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
     samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
@@ -346,6 +460,8 @@ def faas_sweep_pallas(
         prestamped=prestamped,
         n_windows=n_windows,
         n_grid=n_grid,
+        reliability=reliability,
+        retries=retries,
     )
     in_specs = [state_spec, state_spec, state_spec, t_spec, t_spec, t_spec, t_spec]
     inputs = [
@@ -363,23 +479,46 @@ def faas_sweep_pallas(
     if n_grid:
         in_specs.append(pl.BlockSpec((block_r, n_grid), lambda r, k: (r, 0)))
         inputs.append(jnp.asarray(grid_times, jnp.float32))
+    if reliability:
+        in_specs += [t_spec, t_spec]
+        inputs += [
+            jnp.broadcast_to(jnp.asarray(t_timeout, jnp.float32), (R,))[:, None],
+            jnp.broadcast_to(jnp.asarray(p_fail, jnp.float32), (R,))[:, None],
+        ]
     in_specs += [samp_spec, samp_spec, samp_spec]
     inputs += [dts, warms, colds]
+    if reliability:
+        in_specs.append(samp_spec)
+        inputs.append(jnp.asarray(fail_u, jnp.float32))
+    if retries:
+        in_specs += [samp_spec, samp_spec]
+        inputs += [
+            jnp.asarray(is_first, jnp.float32),
+            jnp.asarray(child_pos, jnp.float32),
+        ]
+    out_specs = [state_spec, state_spec, state_spec, t_spec, acc_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
+    ]
+    if retries:
+        # the activation plane spans the WHOLE padded stream (event
+        # positions are global across k chunks), so its revisited output
+        # block is full-width and stays pinned in VMEM like the acc
+        out_specs.append(pl.BlockSpec((block_r, K), lambda r, k: (r, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((R, K), jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=[state_spec, state_spec, state_spec, t_spec, acc_spec],
-        out_shape=[
-            jax.ShapeDtypeStruct((R, M), jnp.float32),
-            jax.ShapeDtypeStruct((R, M), jnp.float32),
-            jax.ShapeDtypeStruct((R, M), jnp.float32),
-            jax.ShapeDtypeStruct((R, 1), jnp.float32),
-            jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(*inputs)
-    alive_n, creation_n, busy_n, t_n, acc = out
+    alive_n, creation_n, busy_n, t_n, acc = out[:5]
     return alive_n, creation_n, busy_n, t_n[:, 0], acc
 
 
@@ -404,7 +543,9 @@ def _pad_rows(x, pad_c, fill=None):
 )
 def _pallas_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
-    *, block_k, window_bounds=None, grid_times=None, **kw,
+    *, block_k, window_bounds=None, grid_times=None,
+    t_timeout=None, p_fail=None, fail_u=None, is_first=None, child_pos=None,
+    **kw,
 ):
     """The sweep engine's ``pallas`` row launcher (``BackendSpec.launch``):
     pad rows to the replica block and arrivals to the chunk size, run
@@ -432,6 +573,24 @@ def _pallas_sweep_rows(
     dts_p = pad(dts, 1e30)
     warms_p, colds_p = pad(warms, 1.0), pad(colds, 1.0)
     row_pad = lambda x: _pad_rows(x, pad_c, fill=1.0)
+    reliability = t_timeout is not None
+    retries = is_first is not None
+    rely_kw = {}
+    if reliability:
+        # padded events are inert (active=False via the 1e30 clock), so
+        # the sample fills only need to keep the arithmetic finite:
+        # fail_u=1.0 never fails (p_fail < 1), child=NO_CHILD never
+        # scatters, is_first=0 keeps padded events inactive
+        rely_kw = dict(
+            t_timeout=row_pad(t_timeout),
+            p_fail=_pad_rows(p_fail, pad_c, fill=0.0),
+            fail_u=pad(fail_u, 1.0),
+        )
+        if retries:
+            rely_kw.update(
+                is_first=pad(is_first, 0.0),
+                child_pos=pad(child_pos, NO_CHILD_F),
+            )
     out = faas_sweep_pallas(
         _pad_rows(alive0, pad_c),
         _pad_rows(creation0, pad_c),
@@ -452,6 +611,9 @@ def _pallas_sweep_rows(
         block_r=BLOCK_R,
         block_k=block_k,
         interpret=jax.default_backend() != "tpu",
+        reliability=reliability,
+        retries=retries,
+        **rely_kw,
         **kw,
     )
     return out[4][:C]

@@ -57,6 +57,11 @@ def faas_sweep_ref(
     skip=0.0,  # f32 [R] or scalar — per-row warm-up exclusion
     window_bounds=None,  # f32 [R, W+1] traced boundaries (irregular OK)
     grid_times=None,  # f32 [R, G] traced transient-curve query times
+    t_timeout=None,  # f32 [R] per-row execution timeout (reliability)
+    p_fail=None,  # f32 [R] per-row failure probability (reliability)
+    fail_u=None,  # f32 [R, K] per-event failure uniforms (reliability)
+    is_first=None,  # f32 [R, K] 0/1 first-attempt flags (retries)
+    child_pos=None,  # f32 [R, K] retry-successor positions (retries)
     max_concurrency,
     prestamped: bool = False,
     n_windows: int = 0,
@@ -70,14 +75,28 @@ def faas_sweep_ref(
     ∫running/∫idle) and transient-curve (``3*n_grid`` columns) extensions;
     ``t_end``/``skip``/the boundary rows are per-row traced values like
     ``t_exp``, so horizon and window-grid sweeps share one compile."""
+    from repro.kernels.faas_event_step import NO_CHILD_F, RELY_COLS
+
     R, M = alive.shape
     K = dts.shape[1]
+    reliability = t_timeout is not None
+    retries = is_first is not None
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
     skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
     slot_iota = jnp.broadcast_to(
         jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
     )
+    if reliability:
+        t_to = jnp.broadcast_to(jnp.asarray(t_timeout, jnp.float32), (R,))
+        p_f = jnp.broadcast_to(jnp.asarray(p_fail, jnp.float32), (R,))
+        fail_u = jnp.asarray(fail_u, jnp.float32)
+    if retries:
+        is_first = jnp.asarray(is_first, jnp.float32)
+        child_pos = jnp.asarray(child_pos, jnp.float32)
+        k_iota = jnp.broadcast_to(
+            jnp.arange(K, dtype=jnp.float32)[None, :], (R, K)
+        )
     if n_windows:
         wb = jnp.asarray(window_bounds, jnp.float32)
         w_lo, w_hi = wb[:, :-1], wb[:, 1:]
@@ -85,7 +104,10 @@ def faas_sweep_ref(
         g_times = jnp.asarray(grid_times, jnp.float32)
 
     def step(i, carry):
-        alive, creation, busy, t, acc = carry
+        if retries:
+            alive, creation, busy, t, acc, act = carry
+        else:
+            alive, creation, busy, t, acc = carry
         t_new = dts[:, i] if prestamped else t + dts[:, i]
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
@@ -144,6 +166,12 @@ def faas_sweep_ref(
         first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
         n_alive = alive.sum(axis=1)
         active = t_new <= t_end
+        if retries:
+            first_i = is_first[:, i]
+            child = child_pos[:, i]
+            gf = i.astype(jnp.float32)
+            act_i = jnp.where(k_iota == gf, act, 0.0).sum(axis=1)
+            active = active & ((first_i > 0) | (act_i > 0))
         counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
         overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
@@ -152,12 +180,24 @@ def faas_sweep_ref(
         is_reject = (~any_idle) & (~can_cold) & active
         chosen = jnp.where(is_warm, first_best, first_free)
         service = jnp.where(is_warm, warms[:, i], colds[:, i])
+        if reliability:
+            occupancy = jnp.minimum(service, t_to)
+        else:
+            occupancy = service
         assign = is_warm | is_cold
         sel = (slot_iota == chosen[:, None]) & assign[:, None]
-        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        busy = jnp.where(sel, (t_new + occupancy)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
         cc = counted
+        if reliability:
+            timed_out = assign & (service > t_to)
+            failed = assign & ~timed_out & (fail_u[:, i] < p_f)
+            trigger = timed_out | failed | is_reject
+            cold_resp = jnp.minimum(colds[:, i], t_to)
+            warm_resp = jnp.minimum(warms[:, i], t_to)
+        else:
+            cold_resp, warm_resp = colds[:, i], warms[:, i]
         delta = jnp.stack(
             [
                 (is_cold & cc).astype(jnp.float32),
@@ -165,8 +205,8 @@ def faas_sweep_ref(
                 (is_reject & cc).astype(jnp.float32),
                 run_sum,
                 idle_sum,
-                jnp.where(is_cold & cc, colds[:, i], 0.0),
-                jnp.where(is_warm & cc, warms[:, i], 0.0),
+                jnp.where(is_cold & cc, cold_resp, 0.0),
+                jnp.where(is_warm & cc, warm_resp, 0.0),
                 overflow.astype(jnp.float32),
             ],
             axis=1,
@@ -185,10 +225,46 @@ def faas_sweep_ref(
             )
         if n_grid:
             delta = jnp.concatenate([delta, g_run, g_idle, g_cold], axis=1)
+        if reliability:
+            if retries:
+                has_child = child < NO_CHILD_F
+                r_retry = (first_i <= 0) & active & cc
+                r_abandon = trigger & ~has_child & cc
+                hit = (k_iota == child[:, None]) & trigger[:, None]
+                act = jnp.where(hit, 1.0, act)
+            else:
+                r_retry = jnp.zeros_like(trigger)
+                r_abandon = trigger & cc
+            delta = jnp.concatenate(
+                [
+                    delta,
+                    jnp.stack(
+                        [
+                            (timed_out & cc).astype(jnp.float32),
+                            (failed & cc).astype(jnp.float32),
+                            r_retry.astype(jnp.float32),
+                            r_abandon.astype(jnp.float32),
+                        ],
+                        axis=1,
+                    ),
+                ],
+                axis=1,
+            )
         acc = acc + delta
+        if retries:
+            return alive, creation, busy, t_new, acc, act
         return alive, creation, busy, t_new, acc
 
-    acc0 = jnp.zeros((R, 8 + 5 * n_windows + 3 * n_grid), jnp.float32)
+    acc0 = jnp.zeros(
+        (R, 8 + 5 * n_windows + 3 * n_grid + (RELY_COLS if reliability else 0)),
+        jnp.float32,
+    )
+    if retries:
+        act0 = jnp.zeros((R, K), jnp.float32)
+        out = jax.lax.fori_loop(
+            0, K, step, (alive, creation, busy, t0, acc0, act0)
+        )
+        return out[:5]
     return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
 
 

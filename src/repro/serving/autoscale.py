@@ -26,6 +26,7 @@ class PlanResult:
     predicted_cold_prob: float
     predicted_avg_replicas: float
     predicted_wasted_ratio: float
+    predicted_goodput: Optional[float] = None  # set under a failure model
 
 
 def plan_expiration_threshold(
@@ -38,17 +39,25 @@ def plan_expiration_threshold(
     seed: int = 0,
     replicas: int = 4,
     execution: Optional[Execution] = None,
+    reliability=None,
 ) -> PlanResult:
     """``execution`` picks the sweep's substrate/placement (e.g.
     ``Execution(backend="ref")`` for the f32 block engine, or
     ``Execution(devices=..., shard="grid")`` to shard a large candidate
-    grid across devices); default is the exact single-device f64 scan."""
+    grid across devices); default is the exact single-device f64 scan.
+
+    ``reliability=`` (a :class:`repro.core.reliability.Reliability`) plans
+    under a failure model: the candidate sweep then carries the
+    timeout/failure/retry dynamics — retry-amplified load inflates the
+    predicted replica counts — and the chosen threshold's goodput is
+    reported on the result."""
     base = Scenario(
         arrival_process=ExpSimProcess(rate=arrival_rate),
         warm_service_process=ExpSimProcess(rate=1.0 / warm_time),
         cold_service_process=ExpSimProcess(rate=1.0 / cold_time),
         sim_time=sim_time,
         skip_time=min(100.0, sim_time / 100),
+        reliability=reliability,
     )
     thresholds = [float(t) for t in candidate_thresholds]
     result = scenario_sweep(
@@ -66,4 +75,7 @@ def plan_expiration_threshold(
         predicted_cold_prob=float(best.cold_start_prob),
         predicted_avg_replicas=float(best.avg_server_count),
         predicted_wasted_ratio=float(best.wasted_ratio),
+        predicted_goodput=(
+            float(best.goodput) if reliability is not None else None
+        ),
     )
