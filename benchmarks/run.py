@@ -812,6 +812,91 @@ def bench_retry_sweep():
     )
 
 
+def bench_fused_rng():
+    """DrawPlan fused in-kernel RNG vs the host-staged draw stacks
+    (DESIGN.md §12): the same (threshold × rate) grid with
+    ``Execution(draws='fused')`` vs the staged default.
+
+    ``us_per_call`` is the fused engine's wall-time per simulated arrival.
+    Derived pins the two acceptance bars: the fused executable's HLO must
+    carry NO ``[C, K]`` sample operands (the staged path stages three — the
+    whole point of the refactor), and the analytic peak-HBM per grid row
+    must buy a ≥2× larger max feasible grid at fixed memory.
+    """
+    from repro.core import Execution
+
+    if QUICK:
+        thresholds = list(np.linspace(60.0, 600.0, 4))
+        rates = list(np.linspace(0.3, 1.5, 4))
+        sim_time, replicas = 1000.0, 4
+    else:
+        thresholds = list(np.linspace(60.0, 1200.0, 8))
+        rates = list(np.linspace(0.2, 2.0, 8))
+        sim_time, replicas = 2000.0, 8
+    steps = int(sim_time * max(rates) * 1.25) + 200  # arrival-stream budget
+    cfg = paper_cfg(sim_time=sim_time, skip_time=50.0)
+    over = {"expiration_threshold": thresholds, "arrival_rate": rates}
+    kw = dict(key=jax.random.key(5), replicas=replicas, steps=steps)
+    fused_plan = Execution(draws="fused")
+    C = len(thresholds) * len(rates) * replicas
+    K = steps
+
+    # spy on the fused scan engine: capture its call args so the compiled
+    # HLO can be AOT-lowered and searched for [C, K] operands afterwards
+    captured = {}
+    orig = sim_mod._simulate_sweep_fused
+
+    def spy(*a):
+        captured["args"] = a
+        return orig(*a)
+
+    sim_mod._simulate_sweep_fused = spy
+    try:
+        scn_api.sweep(cfg, over=over, execution=fused_plan, **kw)  # warm
+        before = sim_mod.TRACE_COUNTS["simulate_sweep_fused"]
+        t0 = time.perf_counter()
+        fus = scn_api.sweep(cfg, over=over, execution=fused_plan, **kw)
+        dt_fused = time.perf_counter() - t0
+        traces = sim_mod.TRACE_COUNTS["simulate_sweep_fused"] - before
+    finally:
+        sim_mod._simulate_sweep_fused = orig
+
+    scn_api.sweep(cfg, over=over, **kw)  # warm the staged compile
+    t0 = time.perf_counter()
+    stg = scn_api.sweep(cfg, over=over, **kw)
+    dt_staged = time.perf_counter() - t0
+
+    hlo = orig.lower(*captured["args"]).as_text()
+    fused_has_ck = any(f"{d}[{C},{K}]" in hlo for d in ("f32", "f64", "u32"))
+
+    # analytic peak-HBM per grid row: staged stages 3 f64[K] sample stacks
+    # per row; fused carries 3 uint32[2] key rows + 3 f64[2] param rows.
+    # Row state (instance pool) is common to both.
+    state_row = cfg.slots * 3 * 8 + 256
+    staged_row = 3 * K * 8 + state_row
+    fused_row = 3 * (8 + 16) + state_row
+    headroom = staged_row / fused_row
+    agree = float(
+        np.abs(fus.avg_server_count - stg.avg_server_count).max()
+    )  # independent streams: same physics, different draws
+    arrivals = C * K
+    emit(
+        "bench_fused_rng",
+        dt_fused / arrivals * 1e6,
+        f"rows={C} steps={K} staged={dt_staged:.2f}s fused={dt_fused:.2f}s "
+        f"traces={traces}(expect 0 warm) "
+        f"fused_hlo_has_CK={fused_has_ck}(expect False) "
+        f"staged_hbm/row={staged_row/1e3:.0f}KB fused_hbm/row={fused_row/1e3:.1f}KB "
+        f"grid_headroom={headroom:.0f}x(>=2) "
+        f"server_count_absdiff={agree:.2f}(MC noise)",
+        wall_clock_s={"staged": dt_staged, "fused": dt_fused},
+        traces={"simulate_sweep_fused": traces},
+        hbm_bytes_per_row={"staged": staged_row, "fused": fused_row},
+        fused_hlo_has_ck=fused_has_ck,
+        grid_headroom=headroom,
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -891,6 +976,7 @@ def main(argv=None) -> None:
         bench_pallas_block()
         bench_nhpp_sweep()
         bench_retry_sweep()
+        bench_fused_rng()
     else:
         bench_table1()
         bench_fig3_instance_distribution()
@@ -903,6 +989,7 @@ def main(argv=None) -> None:
         bench_pallas_block()
         bench_nhpp_sweep()
         bench_retry_sweep()
+        bench_fused_rng()
         bench_fig1_concurrency_value()
         bench_routing_policy()
         bench_fig6_cold_start_probability()
@@ -912,10 +999,29 @@ def main(argv=None) -> None:
         bench_kernel_event_step()
 
     if args.json:
+        payload = {"schema": BENCH_SCHEMA, "quick": QUICK, "benchmarks": ROWS}
+        payload["roofline"] = _roofline_rows()
         with open(args.json, "w") as f:
-            json.dump({"schema": BENCH_SCHEMA, "quick": QUICK,
-                       "benchmarks": ROWS}, f, indent=2)
+            json.dump(payload, f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
+
+
+def _roofline_rows() -> dict:
+    """Roofline terms for the uploaded artifact: run
+    ``benchmarks/roofline.py`` over any dry-run artifacts present so the
+    BENCH_ci.json upload carries the compute/memory/collective split
+    alongside the wall-clock rows.  Dry-run artifacts are optional — an
+    empty row list (with the searched paths) is still recorded."""
+    import glob
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    paths = sorted(glob.glob(os.path.join("benchmarks", "results", "*.json")))
+    try:
+        import roofline
+
+        return {"paths": paths, "rows": roofline.table(paths)}
+    except Exception as e:  # pragma: no cover - depends on artifact presence
+        return {"paths": paths, "error": f"{type(e).__name__}: {e}"}
 
 
 if __name__ == "__main__":

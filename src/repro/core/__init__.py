@@ -59,7 +59,6 @@ from repro.core.scenario import (  # noqa: E402
     GridResult,
     Result,
     Scenario,
-    SimulationConfig,
     StaticConfig,
     WorkloadParams,
     run,
@@ -109,7 +108,6 @@ __all__ = [
     "sweep",
     "scenario",
     "ServerlessSimulator",
-    "SimulationConfig",
     "SimulationSummary",
     "StaticConfig",
     "WindowedMetrics",

@@ -64,6 +64,10 @@ class EngineSpec:
     # backends on which this engine serves the reliability layer
     # (timeouts / failures / retries, DESIGN.md §11)
     reliability_backends: Tuple[str, ...] = ()
+    # backends on which this engine can generate draws inline from a
+    # DrawPlan (``Execution(draws="fused")``, DESIGN.md §12) instead of
+    # consuming host-staged [C, K] sample buffers
+    fused_backends: Tuple[str, ...] = ()
     description: str = ""
 
 
@@ -127,6 +131,7 @@ def register_engine(
     sweepable: bool = False,
     windowed_backends: Sequence[str] = (),
     reliability_backends: Sequence[str] = (),
+    fused_backends: Sequence[str] = (),
     description: str = "",
 ):
     """Decorator: register ``fn`` as engine ``name``'s run entry point."""
@@ -139,6 +144,7 @@ def register_engine(
             sweepable=sweepable,
             windowed_backends=tuple(windowed_backends),
             reliability_backends=tuple(reliability_backends),
+            fused_backends=tuple(fused_backends),
             description=description,
         )
         return fn
@@ -268,6 +274,15 @@ class Execution:
       ``None`` (the default) auto-selects from the stream length and a
       VMEM budget at launch time (:meth:`resolved_block_k`), and the
       chosen value is exposed on the result's resolved plan.
+    * ``draws`` — how sample streams reach the engine.  ``"staged"``
+      (the default) pre-draws ``[C, K]`` buffers host-side and streams
+      them through the engine — bitwise-stable against earlier releases.
+      ``"fused"`` lowers the scenario's processes to a :mod:`drawplan`
+      and generates every draw *inline* (counter-based threefry inside
+      the scan body / kernel row-chunk), eliminating the O(C·K) HBM
+      sample buffers; only engines declaring the backend in
+      ``fused_backends`` accept it, and the resolved value is exposed on
+      the result's plan.
     * ``donate`` — donate the grid's sample buffers into the sweep call
       (they dominate the allocation and are dead afterwards); turn off
       to reuse sample arrays across calls.  Applies to the f64 scan
@@ -281,9 +296,16 @@ class Execution:
     shard: Optional[str] = None
     precision: Optional[str] = None
     block_k: Optional[int] = None
+    draws: Optional[str] = None
     donate: bool = True
 
     def __post_init__(self):
+        if self.draws not in (None, "staged", "fused"):
+            raise ValueError(
+                f"unknown draws mode {self.draws!r}; supported: 'staged' "
+                "(host-built sample buffers) and 'fused' (inline "
+                "counter-based generation from a DrawPlan)"
+            )
         if self.shard not in (None, "grid"):
             raise ValueError(
                 f"unknown shard spec {self.shard!r}; supported: 'grid' "
@@ -342,6 +364,20 @@ class Execution:
                 f"requested precision {self.precision!r} (drop precision= "
                 "or pick a backend in that domain)"
             )
+        if self.resolved_draws == "fused":
+            if self.backend not in espec.fused_backends:
+                raise ValueError(
+                    f"engine {self.engine!r} cannot generate fused draws on "
+                    f"backend {self.backend!r}; fused-capable backends: "
+                    f"{espec.fused_backends or '()'} (drop draws='fused' to "
+                    "keep the staged pipeline)"
+                )
+            if self.shard == "grid":
+                raise ValueError(
+                    "draws='fused' does not support shard='grid' yet; the "
+                    "sharded sweep executable consumes staged sample "
+                    "buffers — drop shard= or use draws='staged'"
+                )
         if self.shard == "grid" and not bspec.shardable:
             shardable = sorted(
                 n for n, s in registered_backends().items() if s.shardable
@@ -386,6 +422,12 @@ class Execution:
 
         return Mesh(np.asarray(self.resolved_devices()), ("grid",))
 
+    # ---- draw generation mode ------------------------------------------
+    @property
+    def resolved_draws(self) -> str:
+        """The concrete draw mode: an unset ``draws`` means staged."""
+        return self.draws or "staged"
+
     # ---- block-kernel chunking -----------------------------------------
     def resolved_block_k(self, n_steps: int) -> int:
         """The concrete arrival-chunk size for an ``n_steps``-long stream.
@@ -419,19 +461,21 @@ def capability_markdown() -> str:
     engines = registered_engines()
     backends = registered_backends()
     lines = [
-        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability |",
-        "|---|---|---|---|---|---|",
+        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability | draws |",
+        "|---|---|---|---|---|---|---|",
     ]
     for ename, espec in engines.items():
         for bname, bspec in backends.items():
             if bname not in espec.backends:
                 continue
             sweepable = espec.sweepable
+            fused = bname in espec.fused_backends
             lines.append(
                 f"| `{ename}` | `{bname}` | {bspec.precision} | "
                 f"{'✓' if sweepable and bspec.shardable else '—'} | "
                 f"{'✓' if bname in espec.windowed_backends else '—'} | "
-                f"{'✓' if bname in espec.reliability_backends else '—'} |"
+                f"{'✓' if bname in espec.reliability_backends else '—'} | "
+                f"{'staged+fused' if fused else 'staged'} |"
             )
     return "\n".join(lines)
 

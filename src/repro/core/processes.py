@@ -67,6 +67,16 @@ class SimProcess:
             f"{type(self).__name__} does not support rate rescaling"
         )
 
+    def draw_spec(self) -> tuple[str, tuple[float, ...]]:
+        """Lower to a fused per-event generator: ``(dist_id, params)``.
+
+        The DrawPlan machinery (``core/drawplan.py``, DESIGN.md §12) calls
+        this to fuse sampling into the engines; only processes with a
+        closed-form per-event transform (inverse CDF or Box–Muller) can
+        lower — everything else stays on the staged path.
+        """
+        raise NotImplementedError("no closed-form per-event transform")
+
     # Optional analytical handles (paper: user-provided PDF/CDF are compared
     # against simulation histograms by the metrics tools).
     def pdf(self, x: Array) -> Array:  # pragma: no cover - optional
@@ -91,6 +101,9 @@ class ExpSimProcess(SimProcess):
     def with_rate(self, rate):
         return dataclasses.replace(self, rate=float(rate))
 
+    def draw_spec(self):
+        return "exp", (self.rate,)
+
     def pdf(self, x):
         return self.rate * jnp.exp(-self.rate * x)
 
@@ -114,6 +127,9 @@ class DeterministicSimProcess(SimProcess):
     def with_rate(self, rate):
         return dataclasses.replace(self, interval=1.0 / float(rate))
 
+    def draw_spec(self):
+        return "det", (self.interval,)
+
 
 @dataclasses.dataclass(frozen=True)
 class GaussianSimProcess(SimProcess):
@@ -135,6 +151,9 @@ class GaussianSimProcess(SimProcess):
         # by the same factor, keeping the coefficient of variation.
         f = (1.0 / float(rate)) / self.mu
         return dataclasses.replace(self, mu=self.mu * f, sigma=self.sigma * f)
+
+    def draw_spec(self):
+        return "gauss", (self.mu, self.sigma)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +178,9 @@ class WeibullSimProcess(SimProcess):
         return dataclasses.replace(
             self, scale=1.0 / (float(rate) * gamma(1.0 + 1.0 / self.shape_k))
         )
+
+    def draw_spec(self):
+        return "weibull", (self.shape_k, self.scale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +215,9 @@ class LogNormalSimProcess(SimProcess):
             self, mu=float(-np.log(rate) - 0.5 * self.sigma**2)
         )
 
+    def draw_spec(self):
+        return "lognorm", (self.mu, self.sigma)
+
 
 @dataclasses.dataclass(frozen=True)
 class ParetoSimProcess(SimProcess):
@@ -220,6 +245,9 @@ class ParetoSimProcess(SimProcess):
         return dataclasses.replace(
             self, x_m=(self.alpha - 1.0) / (self.alpha * float(rate))
         )
+
+    def draw_spec(self):
+        return "pareto", (self.alpha, self.x_m)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -464,6 +492,12 @@ class NHPPArrivalProcess(SimProcess, ArrivalTimeProcess):
             "NHPP arrivals have no stationary gap distribution; engines "
             "consume them through arrival_times() (prestamped path)"
         )
+
+    def draw_spec(self):
+        # Fused NHPP: candidate gaps at the envelope rate, thinning decided
+        # inline at the candidate's clock (scan engine only — the block
+        # kernels have no profile.rate(t) evaluation).
+        return "nhpp", (self.profile.max_rate(),)
 
     def arrival_times(self, key, shape):
         lam = self.profile.max_rate()

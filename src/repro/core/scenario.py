@@ -45,8 +45,7 @@ product grid is ONE compile and ONE device call, pinned by
 
 The compile-time/run-time machinery lives here too: :class:`StaticConfig`
 (hashable jit structure) and :class:`WorkloadParams` (traced pytree) are
-the two halves every engine consumes; :class:`SimulationConfig` survives
-as a deprecated alias of :class:`Scenario` for pre-Scenario code.
+the two halves every engine consumes.
 """
 
 from __future__ import annotations
@@ -338,8 +337,8 @@ class Scenario:
 
     @classmethod
     def of(cls, config, **changes) -> "Scenario":
-        """A plain Scenario copied from any Scenario-shaped config (e.g. a
-        deprecated ``SimulationConfig``), with field overrides applied."""
+        """A plain Scenario copied from any Scenario-shaped config, with
+        field overrides applied."""
         kw = {f.name: getattr(config, f.name) for f in dataclasses.fields(cls)}
         kw.update(changes)
         return Scenario(**kw)
@@ -387,24 +386,6 @@ class Scenario:
             backoff_mult=rel.retry.backoff_mult if rel else None,
             backoff_jitter=rel.retry.backoff_jitter if rel else None,
         )
-
-
-class SimulationConfig(Scenario):
-    """Deprecated alias of :class:`Scenario` (the pre-Scenario config).
-
-    Kept so existing code and pickles keep working; construction emits a
-    ``DeprecationWarning``.  Use :class:`Scenario` with
-    :func:`repro.core.scenario.run` / :func:`sweep` instead.
-    """
-
-    def __post_init__(self):
-        warnings.warn(
-            "SimulationConfig is deprecated; use repro.core.Scenario with "
-            "scenario.run()/scenario.sweep()",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        super().__post_init__()
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +495,35 @@ def run(
     )
 
 
+def _fused_stream_state(scn, key, replicas, n):
+    """Lower a scenario to the block backends' fused-draw launch dict.
+
+    The entire per-row sample state is three (four with a failure stream)
+    uint32 key pairs plus the f32 distribution params — the O(C·K) staged
+    buffers never exist (DESIGN.md §12).  Rejects arrival families the
+    kernels cannot thin inline (NHPP needs ``profile.rate(t)`` at trace
+    time — scan-engine only).
+    """
+    from repro.core import drawplan as dp
+
+    fplan, pvals = dp.lower_scenario(scn)
+    if fplan.arrival.kind == "nhpp":
+        raise ValueError(
+            "fused NHPP thinning is scan-backend only (the block kernels "
+            "have no profile.rate(t) at trace time); use backend='scan' "
+            "or draws='staged'"
+        )
+    krows = dp.stream_row_keys(key, replicas, fail=fplan.fail)
+    tile = lambda v: np.tile(np.asarray(v, np.float32), (replicas, 1))
+    return dict(
+        dists=fplan.dists,
+        keys=(krows["arrival"], krows["warm"], krows["cold"]),
+        params=(tile(pvals["arrival"]), tile(pvals["warm"]), tile(pvals["cold"])),
+        fail_keys=krows.get("fail"),
+        n_steps=int(n),
+    )
+
+
 def _run_block_single(scn, key, replicas, steps, plan):
     """Single-scenario f32 block-engine run (C = replicas rows)."""
     from repro.core.simulator import (
@@ -531,45 +541,74 @@ def _run_block_single(scn, key, replicas, steps, plan):
         raise ValueError("histograms need the f64 scan backend")
     n = steps or scn.steps_needed()
     rel = scn.reliability
-    extras = ()
-    if rel is not None:
-        (dts, warms, colds), extras = draw_reliability_stream(
-            scn, key, replicas, n
+    rows = lambda v: np.full((replicas,), v)
+    if plan.resolved_draws == "fused":
+        fused = _fused_stream_state(scn, key, replicas, n)
+        kw = dict(
+            max_concurrency=scn.max_concurrency,
+            prestamped=False,
+            n_windows=0,
         )
-    else:
-        dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
-    prestamped = scn.prestamped or (
-        rel is not None and rel.retry.max_retries > 0
-    )
-    if not prestamped:
-        covered = np.asarray(dts, np.float64).sum(axis=1)
-        if (covered < scn.sim_time).any():
+        acc, t_last = _block_launch(
+            scn,
+            rows(scn.expiration_threshold),
+            rows(scn.sim_time),
+            rows(scn.skip_time),
+            None,
+            None,
+            None,
+            resolve_backend(plan.backend),
+            kw,
+            block_k=plan.resolved_block_k(n),
+            t_to_rows=rows(rel.failure.timeout_or_inf) if rel else None,
+            pf_rows=rows(rel.failure.p_fail) if rel else None,
+            fused=fused,
+        )
+        if (t_last < scn.sim_time).any():
             raise RuntimeError(
-                "pre-drawn arrivals ended before sim_time "
-                f"(min final t {covered.min():.1f} < {scn.sim_time}); "
+                "fused arrival stream ended before sim_time "
+                f"(min final t {t_last.min():.1f} < {scn.sim_time}); "
                 "pass a larger `steps`"
             )
-    rows = lambda v: np.full((replicas,), v)
-    kw = dict(
-        max_concurrency=scn.max_concurrency,
-        prestamped=prestamped,
-        n_windows=0,
-    )
-    acc = _block_launch(
-        scn,
-        rows(scn.expiration_threshold),
-        rows(scn.sim_time),
-        rows(scn.skip_time),
-        dts,
-        warms,
-        colds,
-        resolve_backend(plan.backend),
-        kw,
-        block_k=plan.resolved_block_k(dts.shape[1]),
-        t_to_rows=rows(rel.failure.timeout_or_inf) if rel else None,
-        pf_rows=rows(rel.failure.p_fail) if rel else None,
-        extras=extras,
-    )
+    else:
+        extras = ()
+        if rel is not None:
+            (dts, warms, colds), extras = draw_reliability_stream(
+                scn, key, replicas, n
+            )
+        else:
+            dts, warms, colds = draw_workload_samples(scn, key, replicas, n)
+        prestamped = scn.prestamped or (
+            rel is not None and rel.retry.max_retries > 0
+        )
+        if not prestamped:
+            covered = np.asarray(dts, np.float64).sum(axis=1)
+            if (covered < scn.sim_time).any():
+                raise RuntimeError(
+                    "pre-drawn arrivals ended before sim_time "
+                    f"(min final t {covered.min():.1f} < {scn.sim_time}); "
+                    "pass a larger `steps`"
+                )
+        kw = dict(
+            max_concurrency=scn.max_concurrency,
+            prestamped=prestamped,
+            n_windows=0,
+        )
+        acc = _block_launch(
+            scn,
+            rows(scn.expiration_threshold),
+            rows(scn.sim_time),
+            rows(scn.skip_time),
+            dts,
+            warms,
+            colds,
+            resolve_backend(plan.backend),
+            kw,
+            block_k=plan.resolved_block_k(dts.shape[1]),
+            t_to_rows=rows(rel.failure.timeout_or_inf) if rel else None,
+            pf_rows=rows(rel.failure.p_fail) if rel else None,
+            extras=extras,
+        )
     zeros = np.zeros((replicas,))
     rely_kw = {}
     if rel is not None:
@@ -756,7 +795,9 @@ class GridResult:
 
     def to_dict(self) -> dict:
         """JSON-able export: axes (non-scalar values stringified), every
-        scalar metric grid, and the windowed grids when present."""
+        scalar metric grid (including the ``ok`` non-finite mask), the
+        resolved execution plan's ``block_k``/``draws``, and the windowed
+        grids when present."""
         jsonable = lambda x: (
             x if isinstance(x, (int, float, str, bool)) else repr(x)
         )
@@ -765,6 +806,9 @@ class GridResult:
             "replicas": self.replicas,
             "backend": self.backend,
         }
+        if self.execution is not None:
+            out["block_k"] = self.execution.block_k
+            out["draws"] = self.execution.resolved_draws
         for f in self._METRIC_FIELDS + self._WINDOWED_FIELDS:
             a = getattr(self, f)
             if a is not None:
@@ -919,6 +963,9 @@ def sweep(
         plan = dataclasses.replace(
             plan, block_k=plan.resolved_block_k(n_steps)
         )
+    # pin the resolved draw mode too (None -> "staged")
+    plan = dataclasses.replace(plan, draws=plan.resolved_draws)
+    fused_mode = plan.draws == "fused"
     R = int(replicas)
     D = len(draw_cfgs)
     rel = base.reliability
@@ -927,19 +974,59 @@ def sweep(
         # the attempt table is absolute f64 times — the whole grid runs
         # prestamped regardless of the base arrival process
         prestamped = True
-    parts = []
-    for c in draw_cfgs:
-        key, sub = jax.random.split(key)
-        c_sim = Scenario.of(c, sim_time=max_sim)
-        if rel is not None:
-            smp_c, ext_c = draw_reliability_stream(c_sim, sub, R, n_steps)
-            parts.append(tuple(smp_c) + tuple(ext_c))
-        else:
-            parts.append(tuple(draw_workload_samples(c_sim, sub, R, n_steps)))
-    # [D*R, K] per buffer; with retries K = n_steps * (max_retries + 1)
-    bufs = tuple(
-        jnp.concatenate([p[j] for p in parts]) for j in range(len(parts[0]))
-    )
+    bufs = ()
+    fplan = krows = pvals_list = None
+    if fused_mode:
+        from repro.core import drawplan as dpmod
+
+        plans, pvals_list = [], []
+        for c in draw_cfgs:
+            fp, pv = dpmod.lower_scenario(c)  # rejects retries/unlowerable
+            plans.append(fp)
+            pvals_list.append(pv)
+        if len(set(plans)) > 1:
+            raise ValueError(
+                "fused draws compile one DrawPlan for the whole grid; "
+                "sweeping distribution families or rate profiles across "
+                "draw cells needs draws='staged'"
+            )
+        fplan = plans[0]
+        if fplan.arrival.kind == "nhpp" and bspec.kind == "block":
+            raise ValueError(
+                "fused NHPP thinning is scan-backend only (the block "
+                "kernels have no profile.rate(t) at trace time); use "
+                "backend='scan' or draws='staged'"
+            )
+        # fused streams are gap-based (NHPP thinning happens inline), so
+        # the prestamped flag the staged NHPP path would set stays off
+        prestamped = False
+        kparts = []
+        for c in draw_cfgs:
+            key, sub = jax.random.split(key)  # same chained walk as staged
+            kparts.append(dpmod.stream_row_keys(sub, R, fail=rel is not None))
+        streams = ("arrival", "warm", "cold") + (
+            ("fail",) if rel is not None else ()
+        )
+        # [D*R, 2] per stream — the whole grid's sample state
+        krows = {
+            s: jnp.concatenate([kp[s] for kp in kparts]) for s in streams
+        }
+    else:
+        parts = []
+        for c in draw_cfgs:
+            key, sub = jax.random.split(key)
+            c_sim = Scenario.of(c, sim_time=max_sim)
+            if rel is not None:
+                smp_c, ext_c = draw_reliability_stream(c_sim, sub, R, n_steps)
+                parts.append(tuple(smp_c) + tuple(ext_c))
+            else:
+                parts.append(
+                    tuple(draw_workload_samples(c_sim, sub, R, n_steps))
+                )
+        # [D*R, K] per buffer; with retries K = n_steps * (max_retries + 1)
+        bufs = tuple(
+            jnp.concatenate([p[j] for p in parts]) for j in range(len(parts[0]))
+        )
 
     # ---- param cells share draws: tile rows to C = D*Wn*R
     param_combos = list(
@@ -986,6 +1073,33 @@ def sweep(
 
     samples = tuple(_expand(x) for x in bufs)
 
+    fused_scan = fused_block = None
+    if fused_mode:
+        # [C, 2] per-stream key pairs / param pairs — the grid's whole
+        # sample state; the O(C·K) buffers never exist
+        krows_exp = {s: _expand(v) for s, v in krows.items()}
+        pvals = {
+            s: np.asarray([pv[s] for pv in pvals_list], np.float64)
+            for s in ("arrival", "warm", "cold")
+        }
+        if bspec.kind == "native":
+            prows_exp = {
+                s: jnp.asarray(np.repeat(v, Wn * R, axis=0))
+                for s, v in pvals.items()
+            }
+            fused_scan = (fplan, int(n_steps), krows_exp, prows_exp)
+        else:
+            fused_block = dict(
+                dists=fplan.dists,
+                keys=tuple(krows_exp[s] for s in ("arrival", "warm", "cold")),
+                params=tuple(
+                    np.repeat(np.asarray(pvals[s], np.float32), Wn * R, axis=0)
+                    for s in ("arrival", "warm", "cold")
+                ),
+                fail_keys=krows_exp.get("fail"),
+                n_steps=int(n_steps),
+            )
+
     # ---- static combos: one compile each (outermost Python loop)
     static_combos = list(
         itertools.product(*[vals[n] for n in static_names])
@@ -1007,12 +1121,12 @@ def sweep(
         if bspec.kind == "native":
             cells, win = _scan_cells(
                 scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
-                prestamped, plan, rely_rows=rely_rows,
+                prestamped, plan, rely_rows=rely_rows, fused=fused_scan,
             )
         else:
             cells, win = _block_cells(
                 scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
-                bspec, plan, rely_rows=rely_rows,
+                bspec, plan, rely_rows=rely_rows, fused=fused_block,
             )
         all_summaries.extend(cells)
         windowed.append(win)
@@ -1113,7 +1227,7 @@ def _warn_nonfinite(axes: dict, ok: np.ndarray) -> None:
 
 def _scan_cells(
     scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
-    rely_rows=None,
+    rely_rows=None, fused=None,
 ):
     """One f64 sweep launch → per-cell summaries.
 
@@ -1146,23 +1260,34 @@ def _scan_cells(
         backoff_mult=rr.get("backoff_mult"),
         backoff_jitter=rr.get("backoff_jitter"),
     )
-    mesh = None
-    if plan.shard == "grid":
-        mesh = plan.mesh()
-        pad = (-C) % int(mesh.devices.size)
-        if pad:
-            pad_rows = lambda x: jnp.concatenate(
-                [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]
-            )
-            params = jax.tree.map(pad_rows, params)
-            samples = tuple(pad_rows(x) for x in samples)
-    fn = sweep_executable(mesh=mesh, donate=plan.donate)
-    with warnings.catch_warnings():
-        # buffer donation is a no-op on CPU; the warning is expected there
-        warnings.filterwarnings(
-            "ignore", message="Some donated buffers were not usable"
+    if fused is not None:
+        # one device execution over [C, 2] key/param rows; the counter
+        # scan generates every draw inline (Execution.resolve() already
+        # rejected fused × shard='grid')
+        from repro.core.simulator import _simulate_sweep_fused
+
+        fplan, n_f, krows, prows = fused
+        acc, t_last = _simulate_sweep_fused(
+            scfg, fplan, n_f, params, krows, prows
         )
-        acc, t_last = fn(scfg, params, *samples)
+    else:
+        mesh = None
+        if plan.shard == "grid":
+            mesh = plan.mesh()
+            pad = (-C) % int(mesh.devices.size)
+            if pad:
+                pad_rows = lambda x: jnp.concatenate(
+                    [x, jnp.broadcast_to(x[:1], (pad,) + x.shape[1:])]
+                )
+                params = jax.tree.map(pad_rows, params)
+                samples = tuple(pad_rows(x) for x in samples)
+        fn = sweep_executable(mesh=mesh, donate=plan.donate)
+        with warnings.catch_warnings():
+            # buffer donation is a no-op on CPU; the warning is expected
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            acc, t_last = fn(scfg, params, *samples)
     acc = jax.tree.map(lambda x: np.asarray(x)[:C], acc)
     t_last = np.asarray(t_last)[:C]
     if not prestamped and (t_last < sim_rows).any():
@@ -1277,6 +1402,7 @@ def _block_sharded_executable(backend: str, mesh, kw_items: tuple):
 def _block_launch(
     scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512,
     plan=None, window_rows=None, t_to_rows=None, pf_rows=None, extras=(),
+    fused=None,
 ):
     """Shared f32 block-engine launch: prepare the per-row f32 state and
     sample buffers and hand them to the registered backend's row launcher
@@ -1307,12 +1433,15 @@ def _block_launch(
             "block backends implement newest-idle routing only; use "
             f"backend='scan' for routing={scn.routing!r}"
         )
-    C = dts.shape[0]
-    dts, warms, colds = (
-        jnp.asarray(dts, jnp.float32),
-        jnp.asarray(warms, jnp.float32),
-        jnp.asarray(colds, jnp.float32),
-    )
+    if fused is not None:
+        C = len(np.asarray(t_exp))
+    else:
+        C = dts.shape[0]
+        dts, warms, colds = (
+            jnp.asarray(dts, jnp.float32),
+            jnp.asarray(warms, jnp.float32),
+            jnp.asarray(colds, jnp.float32),
+        )
     as_rows = lambda x: jnp.broadcast_to(
         jnp.asarray(x, jnp.float32), (C,)
     )
@@ -1336,6 +1465,21 @@ def _block_launch(
             rely_kw["fail_u"] = ex[0]
             if len(ex) == 3:
                 rely_kw.update(is_first=ex[1], child_pos=ex[2])
+    if fused is not None:
+        # Execution.resolve() already rejects fused × shard='grid'; the
+        # launcher returns (acc, t_final) — the kernel clock replaces the
+        # host-side gap sum for the caller's coverage guard.
+        if window_rows is not None:
+            kw = dict(kw, window_bounds=window_rows)
+        acc, t_last = bspec.launch(
+            *args, fused=fused, block_k=block_k, **rely_kw, **kw
+        )
+        acc = np.asarray(acc, np.float64)
+        if acc[:, 7].sum() > 0:
+            raise RuntimeError(
+                "instance-pool overflow during sweep; raise Scenario.slots"
+            )
+        return acc, np.asarray(t_last, np.float64)
     if plan is not None and plan.shard == "grid":
         if rely_kw:
             raise ValueError(
@@ -1376,7 +1520,7 @@ def _block_launch(
 
 def _block_cells(
     scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan,
-    rely_rows=None,
+    rely_rows=None, fused=None,
 ):
     """One f32 block-engine launch → per-cell summaries.
 
@@ -1391,19 +1535,26 @@ def _block_cells(
     if scn_s.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
     rel = scn_s.reliability
-    dts, warms, colds = samples[:3]
-    extras = tuple(samples[3:])
-    if not prestamped:
-        # Coverage guard on the REAL draws (before any padding): every
-        # row's arrivals must reach its horizon, else the grid would be
-        # silently truncated.  f64 sum of the f32 gaps — the padded kernel
-        # clock cannot be used for this check.
-        covered = np.asarray(dts, np.float64).sum(axis=1)
-        if (covered < sim_rows).any():
-            raise RuntimeError(
-                "pre-drawn arrivals ended before sim_time "
-                f"(min final t {covered.min():.1f}); pass a larger `steps`"
-            )
+    if fused is not None:
+        dts = warms = colds = None
+        extras = ()
+        n_draws = int(fused["n_steps"])
+    else:
+        dts, warms, colds = samples[:3]
+        extras = tuple(samples[3:])
+        n_draws = dts.shape[1]
+        if not prestamped:
+            # Coverage guard on the REAL draws (before any padding): every
+            # row's arrivals must reach its horizon, else the grid would be
+            # silently truncated.  f64 sum of the f32 gaps — the padded
+            # kernel clock cannot be used for this check.  (Fused rows are
+            # guarded on the kernel's own final clock after the launch.)
+            covered = np.asarray(dts, np.float64).sum(axis=1)
+            if (covered < sim_rows).any():
+                raise RuntimeError(
+                    "pre-drawn arrivals ended before sim_time "
+                    f"(min final t {covered.min():.1f}); pass a larger `steps`"
+                )
     wb = scn_s.window_bounds
     W = len(wb) - 1 if wb else 0
     window_rows = None
@@ -1419,13 +1570,21 @@ def _block_cells(
     rr = rely_rows or {}
     acc = _block_launch(
         scn_s, thr_rows, sim_rows, skip_rows, dts, warms, colds, bspec, kw,
-        block_k=plan.resolved_block_k(dts.shape[1]),
+        block_k=plan.resolved_block_k(n_draws),
         plan=plan,
         window_rows=window_rows,
         t_to_rows=rr.get("t_timeout") if rel is not None else None,
         pf_rows=rr.get("p_fail") if rel is not None else None,
         extras=extras,
+        fused=fused,
     )
+    if fused is not None:
+        acc, t_last = acc
+        if (t_last < sim_rows).any():
+            raise RuntimeError(
+                "fused arrival stream ended before sim_time "
+                f"(min final t {t_last.min():.1f}); pass a larger `steps`"
+            )
     n_cells = len(thr_rows) // R
     cols = ACC_COLS + WINDOW_COLS * W + (RELY_COLS if rel is not None else 0)
     cell = acc.reshape(n_cells, R, cols)

@@ -61,7 +61,6 @@ from repro.core.reliability import NO_CHILD, build_attempt_table
 # API); re-exported here for the engines and for pre-Scenario import paths.
 from repro.core.scenario import (  # noqa: F401
     Scenario,
-    SimulationConfig,
     StaticConfig,
     TRACE_COUNTS,
     WorkloadParams,
@@ -432,7 +431,15 @@ def _window_integrals(bounds, alive, busy_until, t_exp, lo_eff, hi_eff):
     )(wlo, whi)
 
 
-def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
+def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
+    """The per-arrival step function.
+
+    ``thin=(profile, lam)`` arms inline NHPP thinning for the fused draw
+    path: ``xs`` then carries an extra acceptance uniform after the cold
+    sample, and a candidate is *rejected* (made an inert no-op arrival —
+    it still advances the clock, integrates and expires, which interval
+    additivity keeps exact) when ``u · lam > profile.rate(t)``.
+    """
     t_exp = params.expiration_threshold
     t_end = params.sim_time
     skip = params.skip_time
@@ -442,10 +449,15 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
 
     def step(state, xs):
         (alive, creation, busy_until, t_prev, acc) = state
+        u_acc = None
         if retries:
             # Attempt-table stream: per-event failure uniform, first-attempt
             # flag, retry-successor position and the event's own position.
             dt, warm_s, cold_s, fail_u, is_first, child_pos, pos = xs
+        elif thin is not None and rely:
+            dt, warm_s, cold_s, u_acc, fail_u = xs
+        elif thin is not None:
+            dt, warm_s, cold_s, u_acc = xs
         elif rely:
             dt, warm_s, cold_s, fail_u = xs
         else:
@@ -487,6 +499,11 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams):
 
         # ---- routing
         active = t <= t_end
+        if thin is not None:
+            profile, lam = thin
+            active = active & (
+                u_acc.astype(jnp.float64) * lam <= profile.rate(t)
+            )
         if retries:
             # Non-first attempts stay inert until their parent's failure /
             # timeout / rejection switches them on; inactive events still
@@ -789,6 +806,163 @@ def sweep_executable(mesh=None, donate: bool = True):
     )
 
 
+# ---------------------------------------------------------------------------
+# Fused draws (DESIGN.md §12): the scan consumes a DrawPlan instead of
+# pre-staged [R, K] sample buffers — every draw is generated inside the
+# scan body from a counter-based threefry keyed per row/stream.
+# ---------------------------------------------------------------------------
+
+
+def _fused_event_xs(fplan, krow, prow, i):
+    """One event's xs tuple for the staged step fn, generated inline.
+
+    ``krow``/``prow`` are one replica row's per-stream uint32 key pairs /
+    f64 param pairs; ``i`` is the global event counter.  Returns
+    ``(dt, warm, cold[, u_acc][, fail_u])`` matching the unpack order of
+    :func:`_make_scan_fn` (``u_acc`` present iff the arrival spec is NHPP,
+    ``fail_u`` iff the plan carries the failure stream).
+    """
+    from repro.core import drawplan as dp
+
+    a_u0, a_u1 = dp.event_uniforms(krow["arrival"][0], krow["arrival"][1], i)
+    w_u0, w_u1 = dp.event_uniforms(krow["warm"][0], krow["warm"][1], i)
+    c_u0, c_u1 = dp.event_uniforms(krow["cold"][0], krow["cold"][1], i)
+    pa, pw, pc = prow["arrival"], prow["warm"], prow["cold"]
+    nhpp = fplan.arrival.kind == "nhpp"
+    # NHPP candidates come from the exponential envelope (rate lam = p0);
+    # the second threefry word becomes the thinning-acceptance uniform.
+    a_kind = "exp" if nhpp else fplan.arrival.kind
+    dt = dp.sample_dist(a_kind, a_u0, a_u1, pa[0], pa[1])
+    warm_s = dp.sample_dist(fplan.warm.kind, w_u0, w_u1, pw[0], pw[1])
+    cold_s = dp.sample_dist(fplan.cold.kind, c_u0, c_u1, pc[0], pc[1])
+    xs = (dt, warm_s, cold_s)
+    if nhpp:
+        xs = xs + (a_u1,)
+    if fplan.fail:
+        f_u0, _ = dp.event_uniforms(krow["fail"][0], krow["fail"][1], i)
+        xs = xs + (f_u0,)
+    return xs
+
+
+def _scan_one_fused(cfg: StaticConfig, fplan, params: WorkloadParams, krow, prow, n: int):
+    """One replica, fused draws: scan over the event counter, not buffers."""
+    thin = None
+    if fplan.arrival.kind == "nhpp":
+        thin = (fplan.arrival.profile, prow["arrival"][0])
+    step = _make_scan_fn(cfg, params, thin=thin)
+    pool = _empty_pool(cfg)
+    acc = _empty_acc(cfg)
+
+    def fstep(state, i):
+        return step(state, _fused_event_xs(fplan, krow, prow, i))
+
+    state0 = (*pool, jnp.zeros((), jnp.float64), acc)
+    state, _ = jax.lax.scan(
+        fstep, state0, jnp.arange(n, dtype=jnp.uint32), unroll=cfg.scan_unroll
+    )
+    return _flush(cfg, params, state)
+
+
+def _fused_sweep_rows(cfg, fplan, n, params, krows, prows):
+    def one(p, kr, pr):
+        return _scan_one_fused(cfg, fplan, p, kr, pr, n)
+
+    return jax.vmap(one)(params, krows, prows)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _simulate_sweep_fused(cfg: StaticConfig, fplan, n: int, params, krows, prows):
+    """The fused what-if engine: the whole grid in one device execution
+    with O(C) inputs — per-row key pairs and distribution params — in
+    place of the staged path's O(C·K) sample buffers."""
+    TRACE_COUNTS["simulate_sweep_fused"] += 1
+    return _fused_sweep_rows(cfg, fplan, n, params, krows, prows)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2))
+def _simulate_batch_fused(cfg: StaticConfig, fplan, n: int, params, krows, prows):
+    """Fused analogue of :func:`_simulate_batch`: shared scalar params,
+    vmapped over per-replica key rows."""
+    TRACE_COUNTS["simulate_batch_fused"] += 1
+
+    def one(kr, pr):
+        return _scan_one_fused(cfg, fplan, params, kr, pr, n)
+
+    return jax.vmap(one)(krows, prows)
+
+
+def _summarize_scan(cfg: Scenario, acc: dict, t_last) -> SimulationSummary:
+    """Post-scan guards and summary assembly (staged and fused runs)."""
+    rel = cfg.reliability
+    if (t_last < cfg.sim_time).any():
+        raise RuntimeError(
+            "arrival stream ended before sim_time "
+            f"(min final t {t_last.min():.1f} < {cfg.sim_time}); "
+            "pass a larger `steps`"
+        )
+    if acc["overflow"].sum() > 0:
+        raise RuntimeError(
+            f"instance-pool overflow ({int(acc['overflow'].sum())} arrivals "
+            f"needed a slot beyond slots={cfg.slots} while below "
+            "max_concurrency); raise Scenario.slots"
+        )
+    windows = None
+    if cfg.window_bounds:
+        windows = WindowedMetrics(
+            bounds=np.asarray(cfg.window_bounds),
+            n_cold=acc["w_cold"],
+            n_warm=acc["w_warm"],
+            n_arrivals=acc["w_arrivals"],
+            time_running=acc["w_run_t"],
+            time_idle=acc["w_idle_t"],
+            n_fail=acc["w_fail"] if rel is not None else None,
+        )
+    rely_kw = {}
+    if rel is not None:
+        rely_kw = dict(
+            n_timeout=acc["n_timeout"],
+            n_fail=acc["n_fail"],
+            n_retry=acc["n_retry"],
+            n_abandon=acc["n_abandon"],
+        )
+    return SimulationSummary(
+        n_cold=acc["n_cold"],
+        n_warm=acc["n_warm"],
+        n_reject=acc["n_reject"],
+        time_running=acc["time_running"],
+        time_idle=acc["time_idle"],
+        sum_cold_resp=acc["sum_cold_resp"],
+        sum_warm_resp=acc["sum_warm_resp"],
+        lifespan_sum=acc["lifespan_sum"],
+        lifespan_count=acc["lifespan_count"],
+        measured_time=cfg.sim_time - cfg.skip_time,
+        histogram=acc["hist"] if cfg.track_histogram else None,
+        overflow=acc["overflow"],
+        windows=windows,
+        **rely_kw,
+    )
+
+
+def _run_scan_fused(scn: Scenario, key, replicas: int, steps: Optional[int]):
+    """Single-scenario fused run on the f64 scan backend."""
+    from repro.core import drawplan as dp
+
+    fplan, pvals = dp.lower_scenario(scn)
+    n = steps or scn.steps_needed()
+    krows = dp.stream_row_keys(key, replicas, fail=fplan.fail)
+    prows = {
+        s: jnp.tile(jnp.asarray(pvals[s], jnp.float64), (replicas, 1))
+        for s in ("arrival", "warm", "cold")
+    }
+    # fused streams are always gap-based (NHPP thinning is inline), so the
+    # prestamped flag the staged NHPP path would set stays off
+    scfg = dataclasses.replace(scn.static_config(), prestamped=False)
+    acc, t_last = _simulate_batch_fused(
+        scfg, fplan, int(n), scn.workload_params(), krows, prows
+    )
+    return _summarize_scan(scn, jax.tree.map(np.asarray, acc), np.asarray(t_last))
+
+
 class ServerlessSimulator:
     """Steady-state scale-per-request simulator (paper §3, §4.1).
 
@@ -858,54 +1032,8 @@ class ServerlessSimulator:
             cfg.static_config(), cfg.workload_params(), dts, warms, colds,
             extras=tuple(extras),
         )
-        acc = jax.tree.map(np.asarray, acc)
-        t_last = np.asarray(t_last)
-        if (t_last < cfg.sim_time).any():
-            raise RuntimeError(
-                "pre-drawn arrivals ended before sim_time "
-                f"(min final t {t_last.min():.1f} < {cfg.sim_time}); "
-                "pass a larger `steps`"
-            )
-        if acc["overflow"].sum() > 0:
-            raise RuntimeError(
-                f"instance-pool overflow ({int(acc['overflow'].sum())} arrivals "
-                f"needed a slot beyond slots={cfg.slots} while below "
-                "max_concurrency); raise Scenario.slots"
-            )
-        windows = None
-        if cfg.window_bounds:
-            windows = WindowedMetrics(
-                bounds=np.asarray(cfg.window_bounds),
-                n_cold=acc["w_cold"],
-                n_warm=acc["w_warm"],
-                n_arrivals=acc["w_arrivals"],
-                time_running=acc["w_run_t"],
-                time_idle=acc["w_idle_t"],
-                n_fail=acc["w_fail"] if rel is not None else None,
-            )
-        rely_kw = {}
-        if rel is not None:
-            rely_kw = dict(
-                n_timeout=acc["n_timeout"],
-                n_fail=acc["n_fail"],
-                n_retry=acc["n_retry"],
-                n_abandon=acc["n_abandon"],
-            )
-        return SimulationSummary(
-            n_cold=acc["n_cold"],
-            n_warm=acc["n_warm"],
-            n_reject=acc["n_reject"],
-            time_running=acc["time_running"],
-            time_idle=acc["time_idle"],
-            sum_cold_resp=acc["sum_cold_resp"],
-            sum_warm_resp=acc["sum_warm_resp"],
-            lifespan_sum=acc["lifespan_sum"],
-            lifespan_count=acc["lifespan_count"],
-            measured_time=cfg.sim_time - cfg.skip_time,
-            histogram=acc["hist"] if cfg.track_histogram else None,
-            overflow=acc["overflow"],
-            windows=windows,
-            **rely_kw,
+        return _summarize_scan(
+            cfg, jax.tree.map(np.asarray, acc), np.asarray(t_last)
         )
 
 
@@ -929,12 +1057,18 @@ register_backend(
     sweepable=True,
     windowed_backends=("scan", "pallas", "ref"),
     reliability_backends=("scan", "pallas", "ref"),
+    fused_backends=("scan", "pallas", "ref"),
     description="steady-state scale-per-request simulator (paper §3/§4.1)",
 )
 def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):
     del grid, initial_instances  # temporal-engine knobs
     if plan.backend == "scan":
-        summary = ServerlessSimulator(scn).run(key, replicas=replicas, steps=steps)
+        if plan.resolved_draws == "fused":
+            summary = _run_scan_fused(scn, key, replicas, steps)
+        else:
+            summary = ServerlessSimulator(scn).run(
+                key, replicas=replicas, steps=steps
+            )
     else:
         from repro.core.scenario import _run_block_single
 

@@ -1,37 +1,24 @@
-"""What-if analysis (paper §4.3 / Fig. 5) — DEPRECATED entry points.
+"""What-if analysis (paper §4.3 / Fig. 5) — legacy per-cell engine.
 
-This module predates the unified Scenario API.  Its sweep entry points
-survive as thin deprecation shims over :mod:`repro.core.scenario`:
-
-* ``sweep(base_config, rates, thresholds, ...)`` →
-  ``scenario.sweep(scn, over={"expiration_threshold": ..., "arrival_rate":
-  ...})`` reshaped into the legacy :class:`WhatIfResult`;
-* ``sweep_profiles(base_config, profiles, ...)`` →
-  ``scenario.sweep(scn, over={"profile": ...})`` reshaped into
-  :class:`ProfileSweepResult`.
-
-Both delegate to the same single-compile batched engine and are
-cell-by-cell identical to their pre-Scenario implementations (same key
-chaining, same uniform step budget, same row layout — pinned by the test
-suite).  ``sweep_legacy`` keeps the pre-batching per-cell loop as the
-benchmark baseline and as an oracle for the equivalence tests; it is not
-deprecated.
+This module predates the unified Scenario API.  The deprecated shim
+entry points (``sweep``, ``sweep_profiles``) were removed once every
+internal caller had migrated to ``scenario.sweep(over=...)``; what
+remains is :func:`sweep_legacy` — the pre-batching per-cell loop kept
+as the benchmark baseline and as an oracle for the grid-equivalence
+tests — and the :class:`WhatIfResult` container it returns.
+``sweep_legacy`` is NOT deprecated.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 import numpy as np
 
 from repro.core.cost import BillingModel
-from repro.core.execution import Execution
-from repro.core.processes import ArrivalTimeProcess, RateProfile
 from repro.core.scenario import Scenario, _rated  # noqa: F401 (re-export)
-from repro.core.scenario import sweep as _scenario_sweep
 from repro.core.simulator import ServerlessSimulator, _simulate_batch
 
 
@@ -68,124 +55,6 @@ def _result(e, a, out) -> WhatIfResult:
     )
 
 
-@dataclasses.dataclass
-class ProfileSweepResult:
-    """Windowed results of a sweep over non-stationary rate profiles."""
-
-    profiles: tuple  # [P] the swept RateProfiles
-    window_bounds: np.ndarray  # [W+1]
-    cold_start_prob: np.ndarray  # [P] aggregate, pooled over replicas
-    windowed_cold_prob: np.ndarray  # [P, W] per-window cold-start prob
-    windowed_arrivals: np.ndarray  # [P, W] replica-mean arrival counts
-    # [P, W] replica-mean total (running+idle) instance count; None for the
-    # block backends (no per-window integral accumulators in f32 acc)
-    windowed_instance_count: Optional[np.ndarray]
-    windows: Optional[list] = None  # [P] WindowedMetrics (scan backend)
-
-
-def sweep(
-    base_config,
-    arrival_rates: Sequence[float],
-    expiration_thresholds: Sequence[float],
-    key,
-    replicas: int = 4,
-    billing: BillingModel = BillingModel(),
-    backend: str = "scan",
-    steps: int | None = None,
-) -> WhatIfResult:
-    """Deprecated: use ``repro.core.scenario.sweep`` with
-    ``over={"expiration_threshold": [...], "arrival_rate": [...]}``."""
-    warnings.warn(
-        "whatif.sweep is deprecated; use repro.core.scenario.sweep(scn, "
-        'over={"expiration_threshold": [...], "arrival_rate": [...]})',
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    if isinstance(base_config.arrival_process, ArrivalTimeProcess):
-        raise ValueError(
-            "rate sweeps need a stationary (re-ratable) arrival process; "
-            "for non-stationary/trace arrivals sweep over rate *profiles* "
-            "with whatif.sweep_profiles"
-        )
-    a = np.asarray(list(arrival_rates), dtype=np.float64)
-    e = np.asarray(list(expiration_thresholds), dtype=np.float64)
-    # WhatIfResult reports scalar grids only; a window grid on the base
-    # config would make every scan step pay ~W extra integral work for
-    # accumulators nobody reads — strip it (profile sweeps are the
-    # windowed path).
-    scn = Scenario.of(base_config, window_bounds=None, billing=billing)
-    res = _scenario_sweep(
-        scn,
-        over={
-            "expiration_threshold": [float(x) for x in e],
-            "arrival_rate": [float(x) for x in a],
-        },
-        key=key,
-        replicas=replicas,
-        execution=Execution(backend=backend),
-        steps=steps,
-    )
-    return _result(
-        e,
-        a,
-        dict(
-            cold=res.cold_start_prob,
-            servers=res.avg_server_count,
-            running=res.avg_running_count,
-            wasted=res.wasted_ratio,
-            dev_cost=res.developer_cost,
-            prov_cost=res.provider_cost,
-        ),
-    )
-
-
-def sweep_profiles(
-    base_config,
-    profiles: Sequence,
-    key,
-    replicas: int = 4,
-    backend: str = "scan",
-    steps: int | None = None,
-) -> ProfileSweepResult:
-    """Deprecated: use ``repro.core.scenario.sweep`` with
-    ``over={"profile": [...]}`` on a windowed scenario."""
-    warnings.warn(
-        "whatif.sweep_profiles is deprecated; use "
-        'repro.core.scenario.sweep(scn, over={"profile": [...]})',
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    wb = base_config.window_bounds
-    if not wb:
-        raise ValueError(
-            "sweep_profiles requires base_config.window_bounds (the "
-            "windowed-metrics grid non-stationary results are reported on)"
-        )
-    for p in profiles:
-        if not isinstance(p, RateProfile):
-            raise TypeError(f"expected RateProfile, got {type(p).__name__}")
-    res = _scenario_sweep(
-        Scenario.of(base_config),
-        over={"profile": list(profiles)},
-        key=key,
-        replicas=replicas,
-        execution=Execution(backend=backend),
-        steps=steps,
-    )
-    windows = (
-        [s.windows for s in res.summaries] if backend == "scan" else None
-    )
-    return ProfileSweepResult(
-        profiles=tuple(profiles),
-        window_bounds=np.asarray(wb, dtype=np.float64),
-        cold_start_prob=res.cold_start_prob,
-        windowed_cold_prob=res.windowed_cold_prob,
-        windowed_arrivals=res.windowed_arrivals,
-        windowed_instance_count=res.windowed_instance_count,
-        windows=windows,
-    )
-
-
 # ---------------------------------------------------------------------------
 # Legacy per-cell loop: benchmark baseline + equivalence oracle
 # ---------------------------------------------------------------------------
@@ -200,19 +69,6 @@ def _grid_cells(base_config, e, a):
                 arrival_process=_rated(base.arrival_process, rate),
                 expiration_threshold=float(exp_t),
             )
-
-
-def _uniform_steps(base_config, a, steps):
-    """One step budget covering the fastest arrival rate on the grid."""
-    if steps is not None:
-        return int(steps)
-    base = Scenario.of(base_config)
-    return max(
-        Scenario.of(
-            base, arrival_process=_rated(base.arrival_process, r)
-        ).steps_needed()
-        for r in a
-    )
 
 
 def sweep_legacy(

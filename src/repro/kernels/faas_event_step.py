@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.execution import register_backend
+from repro.core import drawplan as dp
 
 NEG = -1e30
 
@@ -102,11 +103,15 @@ def _faas_kernel(
     n_grid: int,
     reliability: bool = False,
     retries: bool = False,
+    fused_dists=None,
 ):
     # inputs (VMEM blocks): state [Rb, M] ×3, per-row scalars [Rb, 1] ×4
     # (+2 reliability scalars), optional window bounds [Rb, W+1] and curve
-    # grid [Rb, G], samples [Rb, Kb] ×3 (+1 failure uniform, +2 retry
-    # streams); outputs are revisited across the k grid axis.
+    # grid [Rb, G], then either samples [Rb, Kb] ×3 (+1 failure uniform,
+    # +2 retry streams) or — fused draws (DESIGN.md §12) — per-row uint32
+    # key pairs [Rb, 2] ×3 and f32 dist params [Rb, 2] ×3 (+1 failure key
+    # pair); outputs are revisited across the k grid axis.
+    fused = fused_dists is not None
     (alive_in, creation_in, busy_in, t0_ref, texp_ref, tend_ref, skip_ref) = refs[:7]
     i = 7
     wb_ref = None
@@ -121,11 +126,22 @@ def _faas_kernel(
     if reliability:
         tto_ref, pf_ref = refs[i : i + 2]
         i += 2
-    dt_ref, warm_ref, cold_ref = refs[i : i + 3]
-    i += 3
+    dt_ref = warm_ref = cold_ref = None
+    akey_ref = wkey_ref = ckey_ref = fkey_ref = None
+    apar_ref = wpar_ref = cpar_ref = None
+    if fused:
+        akey_ref, wkey_ref, ckey_ref = refs[i : i + 3]
+        apar_ref, wpar_ref, cpar_ref = refs[i + 3 : i + 6]
+        i += 6
+    else:
+        dt_ref, warm_ref, cold_ref = refs[i : i + 3]
+        i += 3
     fail_ref = first_ref = child_ref = None
     if reliability:
-        fail_ref = refs[i]
+        if fused:
+            fkey_ref = refs[i]
+        else:
+            fail_ref = refs[i]
         i += 1
     if retries:
         first_ref, child_ref = refs[i : i + 2]
@@ -160,6 +176,20 @@ def _faas_kernel(
     w_hi = wb_ref[...][:, 1:] if n_windows else None
     g_times = grid_ref[...] if n_grid else None  # [Rb, G]
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
+    if fused:
+        # per-row stream keys/params live in VMEM once per chunk; draws are
+        # regenerated per event from the global counter — no [Rb, Kb] sample
+        # blocks exist anywhere (DESIGN.md §12)
+        a_keys = akey_ref[...]  # uint32 [Rb, 2]
+        w_keys = wkey_ref[...]
+        c_keys = ckey_ref[...]
+        a_par = apar_ref[...]  # f32 [Rb, 2]
+        w_par = wpar_ref[...]
+        c_par = cpar_ref[...]
+        f_keys = fkey_ref[...] if reliability else None
+        # global event counter base: chunk index × chunk length, the same
+        # global-position arithmetic the retries activation plane uses
+        gk0 = (pl.program_id(1) * n_steps).astype(jnp.uint32)
     if retries:
         # full-width activation plane [Rb, Ktot]: event positions are
         # GLOBAL across k chunks, so the revisited output block spans the
@@ -173,9 +203,22 @@ def _faas_kernel(
             alive, creation, busy, t, acc, act = carry
         else:
             alive, creation, busy, t, acc = carry
-        dt = dt_ref[:, i]
-        warm_s = warm_ref[:, i]
-        cold_s = cold_ref[:, i]
+        if fused:
+            gk = gk0 + i.astype(jnp.uint32)
+            a_u0, a_u1 = dp.event_uniforms(a_keys[:, 0], a_keys[:, 1], gk)
+            w_u0, w_u1 = dp.event_uniforms(w_keys[:, 0], w_keys[:, 1], gk)
+            c_u0, c_u1 = dp.event_uniforms(c_keys[:, 0], c_keys[:, 1], gk)
+            dt = dp.sample_dist(fused_dists[0], a_u0, a_u1, a_par[:, 0], a_par[:, 1])
+            warm_s = dp.sample_dist(fused_dists[1], w_u0, w_u1, w_par[:, 0], w_par[:, 1])
+            cold_s = dp.sample_dist(fused_dists[2], c_u0, c_u1, c_par[:, 0], c_par[:, 1])
+            if reliability:
+                fail_i, _ = dp.event_uniforms(f_keys[:, 0], f_keys[:, 1], gk)
+        else:
+            dt = dt_ref[:, i]
+            warm_s = warm_ref[:, i]
+            cold_s = cold_ref[:, i]
+            if reliability:
+                fail_i = fail_ref[:, i]
         # prestamped: the sample slot carries the absolute arrival time
         # (non-stationary/trace streams); PAD_TIME entries are inert.
         t_new = dt if prestamped else t + dt
@@ -286,7 +329,7 @@ def _faas_kernel(
         cc = counted
         if reliability:
             timed_out = assign & (service > t_to)
-            failed = assign & ~timed_out & (fail_ref[:, i] < p_fail)
+            failed = assign & ~timed_out & (fail_i < p_fail)
             trigger = timed_out | failed | is_reject
             cold_resp = jnp.minimum(cold_s, t_to)
             warm_resp = jnp.minimum(warm_s, t_to)
@@ -382,6 +425,8 @@ def _faas_kernel(
         "n_grid",
         "reliability",
         "retries",
+        "fused_dists",
+        "fused_k",
     ),
 )
 def faas_sweep_pallas(
@@ -403,6 +448,9 @@ def faas_sweep_pallas(
     fail_u=None,  # f32 [R, K] per-event failure uniforms (reliability)
     is_first=None,  # f32 [R, K] 0/1 first-attempt flags (retries)
     child_pos=None,  # f32 [R, K] retry-successor positions (retries)
+    fused_keys=None,  # uint32 [R, 2] ×3 (arrival, warm, cold) stream keys
+    fused_params=None,  # f32 [R, 2] ×3 per-row (p0, p1) dist params
+    fused_fail_keys=None,  # uint32 [R, 2] failure-stream keys (reliability)
     max_concurrency: int,
     block_r: int = 8,
     block_k: int = 512,
@@ -412,6 +460,8 @@ def faas_sweep_pallas(
     n_grid: int = 0,
     reliability: bool = False,
     retries: bool = False,
+    fused_dists=None,  # static ("exp", ...) ×3 → in-VMEM draw generation
+    fused_k: int = 0,  # static padded event count when fused (no dts)
 ):
     """Run the full event loop: K arrivals in ``block_k`` chunks, pool in VMEM.
 
@@ -434,8 +484,11 @@ def faas_sweep_pallas(
     ``[B+2G, B+3G)`` where ``B = A + WINDOW_COLS*W``.
     """
     TRACE_COUNTS["faas_sweep_pallas"] += 1
+    fused = fused_dists is not None
+    if fused:
+        assert not retries, "fused draws do not serve retry streams"
     R, M = alive.shape
-    K = dts.shape[1]
+    K = fused_k if fused else dts.shape[1]
     assert R % block_r == 0, (R, block_r)
     assert K % block_k == 0, (K, block_k)
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
@@ -462,6 +515,7 @@ def faas_sweep_pallas(
         n_grid=n_grid,
         reliability=reliability,
         retries=retries,
+        fused_dists=fused_dists,
     )
     in_specs = [state_spec, state_spec, state_spec, t_spec, t_spec, t_spec, t_spec]
     inputs = [
@@ -485,11 +539,22 @@ def faas_sweep_pallas(
             jnp.broadcast_to(jnp.asarray(t_timeout, jnp.float32), (R,))[:, None],
             jnp.broadcast_to(jnp.asarray(p_fail, jnp.float32), (R,))[:, None],
         ]
-    in_specs += [samp_spec, samp_spec, samp_spec]
-    inputs += [dts, warms, colds]
-    if reliability:
-        in_specs.append(samp_spec)
-        inputs.append(jnp.asarray(fail_u, jnp.float32))
+    if fused:
+        # the entire per-row sample state: three 8-byte key pairs and three
+        # (p0, p1) param pairs — no [R, K] buffers exist anywhere
+        pair_spec = pl.BlockSpec((block_r, 2), lambda r, k: (r, 0))
+        in_specs += [pair_spec] * 6
+        inputs += [jnp.asarray(k, jnp.uint32) for k in fused_keys]
+        inputs += [jnp.asarray(p, jnp.float32) for p in fused_params]
+        if reliability:
+            in_specs.append(pair_spec)
+            inputs.append(jnp.asarray(fused_fail_keys, jnp.uint32))
+    else:
+        in_specs += [samp_spec, samp_spec, samp_spec]
+        inputs += [dts, warms, colds]
+        if reliability:
+            in_specs.append(samp_spec)
+            inputs.append(jnp.asarray(fail_u, jnp.float32))
     if retries:
         in_specs += [samp_spec, samp_spec]
         inputs += [
@@ -545,6 +610,7 @@ def _pallas_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
     *, block_k, window_bounds=None, grid_times=None,
     t_timeout=None, p_fail=None, fail_u=None, is_first=None, child_pos=None,
+    fused=None,
     **kw,
 ):
     """The sweep engine's ``pallas`` row launcher (``BackendSpec.launch``):
@@ -557,7 +623,66 @@ def _pallas_sweep_rows(
     is inert either way.  Extra rows are copies of row 0, sliced off
     after the launch.  Serves both the steady-state (scan) and transient
     (temporal, via ``grid_times``) engines — the pool-state family.
+
+    With ``fused`` (a dict of ``dists``/``keys``/``params``/``fail_keys``/
+    ``n_steps`` from the DrawPlan lowering, DESIGN.md §12) there are no
+    sample buffers at all: only the [C, 2] key/param pairs are padded, and
+    the return value is ``(acc[:C], t_final[:C])`` so the caller can check
+    stream coverage from the kernel's own clock.  Padded tail events past
+    ``n_steps`` keep drawing from the counter but are inert once the clock
+    clears ``t_end``.
     """
+    if fused is not None:
+        C = alive0.shape[0]
+        n = int(fused["n_steps"])
+        block_k = min(block_k, max(n, 1))
+        pad_c = (-C) % BLOCK_R
+        Kp = n + ((-n) % block_k)
+        row_pad = lambda x: _pad_rows(x, pad_c, fill=1.0)
+        keys = tuple(
+            _pad_rows(jnp.asarray(k, jnp.uint32), pad_c) for k in fused["keys"]
+        )
+        params = tuple(
+            _pad_rows(jnp.asarray(p, jnp.float32), pad_c) for p in fused["params"]
+        )
+        rely_kw = {}
+        if t_timeout is not None:
+            rely_kw = dict(
+                t_timeout=row_pad(t_timeout),
+                p_fail=_pad_rows(p_fail, pad_c, fill=0.0),
+                fused_fail_keys=_pad_rows(
+                    jnp.asarray(fused["fail_keys"], jnp.uint32), pad_c
+                ),
+            )
+        out = faas_sweep_pallas(
+            _pad_rows(alive0, pad_c),
+            _pad_rows(creation0, pad_c),
+            _pad_rows(busy0, pad_c),
+            _pad_rows(t0, pad_c, fill=0.0),
+            row_pad(t_exp),
+            None,
+            None,
+            None,
+            t_end=row_pad(t_end),
+            skip=row_pad(skip),
+            window_bounds=(
+                None if window_bounds is None else _pad_rows(window_bounds, pad_c)
+            ),
+            grid_times=(
+                None if grid_times is None else _pad_rows(grid_times, pad_c)
+            ),
+            block_r=BLOCK_R,
+            block_k=block_k,
+            interpret=jax.default_backend() != "tpu",
+            reliability=t_timeout is not None,
+            fused_dists=tuple(fused["dists"]),
+            fused_k=Kp,
+            fused_keys=keys,
+            fused_params=params,
+            **rely_kw,
+            **kw,
+        )
+        return out[4][:C], out[3][:C]
     C, n = dts.shape
     block_k = min(block_k, max(n, 1))
     pad_c = (-C) % BLOCK_R

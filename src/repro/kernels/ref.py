@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.execution import register_backend
+from repro.core import drawplan as dp
 from repro.models.attention import (  # noqa: F401
     decode_attention_ref,
     flash_attention_ref,
@@ -62,10 +63,15 @@ def faas_sweep_ref(
     fail_u=None,  # f32 [R, K] per-event failure uniforms (reliability)
     is_first=None,  # f32 [R, K] 0/1 first-attempt flags (retries)
     child_pos=None,  # f32 [R, K] retry-successor positions (retries)
+    fused_keys=None,  # uint32 [R, 2] ×3 (arrival, warm, cold) stream keys
+    fused_params=None,  # f32 [R, 2] ×3 per-row (p0, p1) dist params
+    fused_fail_keys=None,  # uint32 [R, 2] failure-stream keys (reliability)
     max_concurrency,
     prestamped: bool = False,
     n_windows: int = 0,
     n_grid: int = 0,
+    fused_dists=None,  # static ("exp", ...) ×3 → inline draw generation
+    fused_k: int = 0,  # static event count when fused (no dts to size from)
 ):
     """f32 jnp mirror of ``faas_sweep_pallas`` (same arithmetic order, same
     tie-breaks) — bit-comparable on CPU, and the interpreter fallback for
@@ -77,10 +83,21 @@ def faas_sweep_ref(
     ``t_exp``, so horizon and window-grid sweeps share one compile."""
     from repro.kernels.faas_event_step import NO_CHILD_F, RELY_COLS
 
+    fused = fused_dists is not None
     R, M = alive.shape
-    K = dts.shape[1]
+    K = fused_k if fused else dts.shape[1]
     reliability = t_timeout is not None
     retries = is_first is not None
+    assert not (fused and retries), "fused draws do not serve retry streams"
+    if fused:
+        a_keys, w_keys, c_keys = (
+            jnp.asarray(k, jnp.uint32) for k in fused_keys
+        )
+        a_par, w_par, c_par = (
+            jnp.asarray(p, jnp.float32) for p in fused_params
+        )
+        if reliability:
+            f_keys = jnp.asarray(fused_fail_keys, jnp.uint32)
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
     skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
@@ -90,7 +107,8 @@ def faas_sweep_ref(
     if reliability:
         t_to = jnp.broadcast_to(jnp.asarray(t_timeout, jnp.float32), (R,))
         p_f = jnp.broadcast_to(jnp.asarray(p_fail, jnp.float32), (R,))
-        fail_u = jnp.asarray(fail_u, jnp.float32)
+        if not fused:
+            fail_u = jnp.asarray(fail_u, jnp.float32)
     if retries:
         is_first = jnp.asarray(is_first, jnp.float32)
         child_pos = jnp.asarray(child_pos, jnp.float32)
@@ -108,7 +126,29 @@ def faas_sweep_ref(
             alive, creation, busy, t, acc, act = carry
         else:
             alive, creation, busy, t, acc = carry
-        t_new = dts[:, i] if prestamped else t + dts[:, i]
+        if fused:
+            # same counter scheme as the Pallas kernel: global event index
+            # (chunk base 0 here — the ref is unchunked), bitwise-equal
+            gk = i.astype(jnp.uint32)
+            a_u0, a_u1 = dp.event_uniforms(a_keys[:, 0], a_keys[:, 1], gk)
+            w_u0, w_u1 = dp.event_uniforms(w_keys[:, 0], w_keys[:, 1], gk)
+            c_u0, c_u1 = dp.event_uniforms(c_keys[:, 0], c_keys[:, 1], gk)
+            dt_i = dp.sample_dist(
+                fused_dists[0], a_u0, a_u1, a_par[:, 0], a_par[:, 1]
+            )
+            warm_i = dp.sample_dist(
+                fused_dists[1], w_u0, w_u1, w_par[:, 0], w_par[:, 1]
+            )
+            cold_i = dp.sample_dist(
+                fused_dists[2], c_u0, c_u1, c_par[:, 0], c_par[:, 1]
+            )
+            if reliability:
+                fail_i, _ = dp.event_uniforms(f_keys[:, 0], f_keys[:, 1], gk)
+        else:
+            dt_i, warm_i, cold_i = dts[:, i], warms[:, i], colds[:, i]
+            if reliability:
+                fail_i = fail_u[:, i]
+        t_new = dt_i if prestamped else t + dt_i
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
@@ -179,7 +219,7 @@ def faas_sweep_ref(
         is_cold = can_cold & active
         is_reject = (~any_idle) & (~can_cold) & active
         chosen = jnp.where(is_warm, first_best, first_free)
-        service = jnp.where(is_warm, warms[:, i], colds[:, i])
+        service = jnp.where(is_warm, warm_i, cold_i)
         if reliability:
             occupancy = jnp.minimum(service, t_to)
         else:
@@ -192,12 +232,12 @@ def faas_sweep_ref(
         cc = counted
         if reliability:
             timed_out = assign & (service > t_to)
-            failed = assign & ~timed_out & (fail_u[:, i] < p_f)
+            failed = assign & ~timed_out & (fail_i < p_f)
             trigger = timed_out | failed | is_reject
-            cold_resp = jnp.minimum(colds[:, i], t_to)
-            warm_resp = jnp.minimum(warms[:, i], t_to)
+            cold_resp = jnp.minimum(cold_i, t_to)
+            warm_resp = jnp.minimum(warm_i, t_to)
         else:
-            cold_resp, warm_resp = colds[:, i], warms[:, i]
+            cold_resp, warm_resp = cold_i, warm_i
         delta = jnp.stack(
             [
                 (is_cold & cc).astype(jnp.float32),
@@ -285,6 +325,8 @@ def _sweep_ref_jit():
             "prestamped",
             "n_windows",
             "n_grid",
+            "fused_dists",
+            "fused_k",
         ),
     )
 
@@ -299,13 +341,36 @@ def _sweep_ref_jit():
 )
 def _ref_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
-    *, block_k, window_bounds=None, grid_times=None, **kw,
+    *, block_k, window_bounds=None, grid_times=None, fused=None, **kw,
 ):
     """The sweep engine's ``ref`` row launcher (``BackendSpec.launch``):
     no padding needed — the jitted mirror consumes the rows directly.
     Serves both the steady-state (scan) and transient (temporal, via
-    ``grid_times``) engines."""
+    ``grid_times``) engines.  With ``fused`` (DrawPlan lowering dict,
+    DESIGN.md §12) draws are regenerated inline from the counter scheme
+    and the return value is ``(acc, t_final)`` for the coverage guard."""
     del block_k  # chunking is a Pallas grid concept
+    if fused is not None:
+        out = _sweep_ref_jit()(
+            alive0, creation0, busy0, t0, t_exp, None, None, None,
+            t_end=t_end, skip=skip, window_bounds=window_bounds,
+            grid_times=grid_times,
+            fused_dists=tuple(fused["dists"]),
+            fused_k=int(fused["n_steps"]),
+            fused_keys=tuple(
+                jnp.asarray(k, jnp.uint32) for k in fused["keys"]
+            ),
+            fused_params=tuple(
+                jnp.asarray(p, jnp.float32) for p in fused["params"]
+            ),
+            fused_fail_keys=(
+                None
+                if fused.get("fail_keys") is None
+                else jnp.asarray(fused["fail_keys"], jnp.uint32)
+            ),
+            **kw,
+        )
+        return out[4], out[3]
     out = _sweep_ref_jit()(
         alive0, creation0, busy0, t0, t_exp, dts, warms, colds,
         t_end=t_end, skip=skip, window_bounds=window_bounds,

@@ -293,7 +293,8 @@ class TestPlanExecution:
         b = scn_mod.sweep(s, execution=Execution(), **kw)
         np.testing.assert_array_equal(a.cold_start_prob, b.cold_start_prob)
         np.testing.assert_array_equal(a.developer_cost, b.developer_cost)
-        assert b.execution == Execution()
+        # the returned plan carries resolved values (draws, like block_k)
+        assert b.execution == Execution(draws="staged")
 
     def test_sweep_donate_off_matches(self):
         s = base_scn()

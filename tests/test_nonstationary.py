@@ -17,18 +17,41 @@ from repro.core import (
     SinusoidalRate,
     TraceArrivalProcess,
 )
+from repro.core import Execution
+from repro.core import scenario as scenario_mod
 from repro.core import simulator as sim_mod
 from repro.core.processes import PAD_TIME
 from repro.core.pyref import simulate_pyref
-from repro.core import whatif
 
 
-def sweep_profiles(*args, **kw):
-    """The deprecated entry point under test: every call must warn (tier-1
-    runs with repro deprecations escalated to errors), then behave exactly
-    like its pre-Scenario self."""
-    with pytest.warns(DeprecationWarning, match="scenario.sweep"):
-        return whatif.sweep_profiles(*args, **kw)
+def sweep_profiles(cfg, profiles, key, replicas=4, backend="scan", steps=None):
+    """Profile sweep through the unified entry point (the whatif
+    sweep_profiles shim was removed once every caller migrated here),
+    reshaped to the legacy per-profile attribute names."""
+    from types import SimpleNamespace
+
+    if not cfg.window_bounds:
+        raise ValueError(
+            "profile sweeps report on window_bounds; set it on the base "
+            "scenario"
+        )
+    res = scenario_mod.sweep(
+        Scenario.of(cfg),
+        over={"profile": list(profiles)},
+        key=key,
+        replicas=replicas,
+        steps=steps,
+        execution=Execution(backend=backend),
+    )
+    return SimpleNamespace(
+        cold_start_prob=res.cold_start_prob,
+        windowed_cold_prob=res.windowed_cold_prob,
+        windowed_arrivals=res.windowed_arrivals,
+        windowed_instance_count=res.windowed_instance_count,
+        windows=(
+            [s.windows for s in res.summaries] if backend == "scan" else None
+        ),
+    )
 
 
 def base_cfg(**kw):
@@ -442,6 +465,10 @@ class TestProfileSweep:
                 profile=SinusoidalRate(1.0, 0.5, 100.0)
             )
         )
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="sweep_profiles"):
-                whatif.sweep(cfg, [1.0], [20.0], jax.random.key(0))
+        with pytest.raises(ValueError, match="rate profiles"):
+            scenario_mod.sweep(
+                cfg,
+                over={"arrival_rate": [1.0, 2.0]},
+                key=jax.random.key(0),
+                replicas=1,
+            )

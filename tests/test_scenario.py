@@ -1,9 +1,8 @@
 """Unified Scenario API: declarative Scenario, run(), product-grid sweep()
-with static/draw/param partitioning, deprecation shims, MMPP arrivals and
-trace → profile fitting."""
+with static/draw/param partitioning, MMPP arrivals and trace → profile
+fitting."""
 
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
@@ -16,7 +15,6 @@ from repro.core import (
     PiecewiseConstantRate,
     Scenario,
     ServerlessSimulator,
-    SimulationConfig,
     SinusoidalRate,
 )
 from repro.core import scenario as scn_mod
@@ -111,14 +109,12 @@ class TestScenarioDeclaration:
             base_scn(concurrency_value=0)
 
     def test_of_returns_plain_scenario(self):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            cfg = SimulationConfig(
-                arrival_process=ExpSimProcess(rate=0.8),
-                warm_service_process=ExpSimProcess(rate=0.5),
-                cold_service_process=ExpSimProcess(rate=0.4),
-                sim_time=500.0,
-            )
+        cfg = Scenario(
+            arrival_process=ExpSimProcess(rate=0.8),
+            warm_service_process=ExpSimProcess(rate=0.5),
+            cold_service_process=ExpSimProcess(rate=0.4),
+            sim_time=500.0,
+        )
         s = Scenario.of(cfg, slots=48)
         assert type(s) is Scenario
         assert s.slots == 48
@@ -330,10 +326,8 @@ class TestSweepEquivalence:
         assert fes.TRACE_COUNTS["faas_sweep_pallas"] == before
 
     def test_profile_grid_through_over(self):
-        """sweep_profiles-style grids are expressible through over= and
-        agree with the deprecated entry point exactly."""
-        from repro.core.whatif import sweep_profiles
-
+        """Profile sweeps are a first-class over= axis, including product
+        grids with thresholds (the ROADMAP item)."""
         s = base_scn(
             arrival_process=ExpSimProcess(rate=0.8),
             sim_time=900.0,
@@ -348,19 +342,9 @@ class TestSweepEquivalence:
         g = scn_mod.sweep(
             s, over={"profile": profiles}, key=jax.random.key(11), replicas=2
         )
-        with pytest.warns(DeprecationWarning):
-            old = sweep_profiles(s, profiles, jax.random.key(11), replicas=2)
-        np.testing.assert_array_equal(g.cold_start_prob, old.cold_start_prob)
-        np.testing.assert_array_equal(
-            g.windowed_cold_prob, old.windowed_cold_prob
-        )
-        np.testing.assert_array_equal(
-            g.windowed_arrivals, old.windowed_arrivals
-        )
-        np.testing.assert_array_equal(
-            g.windowed_instance_count, old.windowed_instance_count
-        )
-        # profile × threshold product grids (the ROADMAP item)
+        assert g.cold_start_prob.shape == (3,)
+        assert g.windowed_cold_prob.shape == (3, 9)
+        assert np.isfinite(g.windowed_instance_count).all()
         g2 = scn_mod.sweep(
             s,
             over={"profile": profiles, "expiration_threshold": [10.0, 30.0]},
@@ -435,56 +419,6 @@ class TestSweepPartitioning:
                 s,
                 over={"arrival_process": [ExpSimProcess(rate=1.0), nhpp]},
                 key=jax.random.key(0),
-            )
-
-
-class TestDeprecationShims:
-    def _cfg_kw(self):
-        return dict(
-            arrival_process=ExpSimProcess(rate=0.8),
-            warm_service_process=ExpSimProcess(rate=0.5),
-            cold_service_process=ExpSimProcess(rate=0.4),
-            sim_time=500.0,
-            skip_time=10.0,
-        )
-
-    def test_simulation_config_warns(self):
-        with pytest.warns(DeprecationWarning, match="Scenario"):
-            cfg = SimulationConfig(**self._cfg_kw())
-        assert isinstance(cfg, Scenario)
-
-    def test_whatif_sweep_warns_and_matches(self):
-        from repro.core import whatif
-
-        s = base_scn()
-        with pytest.warns(DeprecationWarning, match="scenario.sweep"):
-            old = whatif.sweep(
-                s, RATES, THRESHOLDS, jax.random.key(11), replicas=2, steps=STEPS
-            )
-        g = scn_mod.sweep(
-            s,
-            over={"expiration_threshold": THRESHOLDS, "arrival_rate": RATES},
-            key=jax.random.key(11),
-            replicas=2,
-            steps=STEPS,
-        )
-        np.testing.assert_array_equal(old.cold_start_prob, g.cold_start_prob)
-        np.testing.assert_array_equal(old.provider_cost, g.provider_cost)
-
-    def test_whatif_sweep_profiles_warns(self):
-        from repro.core import whatif
-
-        s = base_scn(
-            sim_time=600.0,
-            skip_time=0.0,
-            window_bounds=(0.0, 300.0, 600.0),
-        )
-        with pytest.warns(DeprecationWarning, match="profile"):
-            whatif.sweep_profiles(
-                s,
-                [SinusoidalRate(base=0.8, amplitude=0.4, period=300.0)],
-                jax.random.key(0),
-                replicas=1,
             )
 
 

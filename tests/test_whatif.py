@@ -14,18 +14,37 @@ def jnp_ones(shape):
 
     return jnp.ones(shape)
 
-from repro.core import ExpSimProcess, Scenario
+from repro.core import Execution, ExpSimProcess, Scenario
+from repro.core import scenario as scenario_mod
 from repro.core import simulator as sim_mod
-from repro.core import whatif
-from repro.core.whatif import sweep_legacy
+from repro.core.whatif import WhatIfResult, sweep_legacy
 
 
-def sweep(*args, **kw):
-    """The deprecated entry point under test: every call must warn (tier-1
-    runs with repro deprecations escalated to errors), then behave exactly
-    like its pre-Scenario self."""
-    with pytest.warns(DeprecationWarning, match="scenario.sweep"):
-        return whatif.sweep(*args, **kw)
+def sweep(cfg, rates, thresholds, key, replicas=4, steps=None, backend="scan"):
+    """Legacy-shaped [E, A] grid through the unified entry point (the
+    whatif.sweep shim was removed once every caller migrated here)."""
+    scn = Scenario.of(cfg, window_bounds=None)
+    res = scenario_mod.sweep(
+        scn,
+        over={
+            "expiration_threshold": [float(x) for x in thresholds],
+            "arrival_rate": [float(x) for x in rates],
+        },
+        key=key,
+        replicas=replicas,
+        steps=steps,
+        execution=Execution(backend=backend),
+    )
+    return WhatIfResult(
+        arrival_rates=np.asarray(list(rates), np.float64),
+        expiration_thresholds=np.asarray(list(thresholds), np.float64),
+        cold_start_prob=res.cold_start_prob,
+        avg_server_count=res.avg_server_count,
+        avg_running_count=res.avg_running_count,
+        wasted_ratio=res.wasted_ratio,
+        developer_cost=res.developer_cost,
+        provider_cost=res.provider_cost,
+    )
 
 
 def base_cfg(**kw):
@@ -276,8 +295,8 @@ class TestRateRescaling:
         assert p.rate == 2.0
 
     def test_gaussian_sweep_no_longer_crashes(self):
-        """whatif.sweep over arrival rate with a Gaussian arrival family
-        used to crash via with_rate NotImplementedError."""
+        """Sweeping arrival rate with a Gaussian arrival family used to
+        crash via with_rate NotImplementedError."""
         from repro.core import GaussianSimProcess
 
         cfg = base_cfg(
