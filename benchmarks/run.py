@@ -897,6 +897,88 @@ def bench_fused_rng():
     )
 
 
+def bench_fleet_sweep():
+    """Fleet subsystem (DESIGN.md §13): an 8-function SeBS-flavored
+    catalog mix under binding shared capacity, swept over a keep-alive
+    threshold grid — one compile on each backend.
+
+    ``us_per_call`` is the f64 scan's warm wall-time per simulated
+    arrival.  Derived pins the acceptance bars: traces=(0,0) on the warm
+    pass for both scan and block sweeps, and bitdiff=0 between the
+    pallas fleet kernel and its jnp ref mirror across the whole grid.
+    """
+    from repro.core.fleet import fleet_sweep
+    from repro.data.catalog import catalog_names, fleet_of
+    from repro.kernels import faas_event_step as fe_mod
+
+    names = list(catalog_names())  # all 8 profiles
+    if QUICK:
+        thresholds = [30.0, 120.0, 600.0]
+        sim_time, replicas = 600.0, 2
+    else:
+        thresholds = list(np.linspace(60.0, 1200.0, 6))
+        sim_time, replicas = 4000.0, 4
+    fleet = fleet_of(
+        names, n_cluster=24, sim_time=sim_time, skip_time=20.0, slots=64
+    )
+    over = {"expiration_threshold": thresholds}
+    kw = dict(key=jax.random.key(7), replicas=replicas)
+
+    fleet_sweep(fleet, over=over, **kw)  # warm the scan compile
+    scan_before = scn_api.TRACE_COUNTS.get("fleet_sweep_scan", 0)
+    t0 = time.perf_counter()
+    scan = fleet_sweep(fleet, over=over, **kw)
+    dt_scan = time.perf_counter() - t0
+    scan_traces = scn_api.TRACE_COUNTS.get("fleet_sweep_scan", 0) - scan_before
+
+    fleet_sweep(fleet, over=over, backend="pallas", **kw)  # warm blocks
+    pal_before = fe_mod.TRACE_COUNTS.get("fleet_sweep_pallas", 0)
+    t0 = time.perf_counter()
+    pal = fleet_sweep(fleet, over=over, backend="pallas", **kw)
+    dt_block = time.perf_counter() - t0
+    pal_traces = (
+        fe_mod.TRACE_COUNTS.get("fleet_sweep_pallas", 0) - pal_before
+    )
+    ref = fleet_sweep(fleet, over=over, backend="ref", **kw)
+
+    bitdiff = max(
+        float(
+            np.abs(
+                np.asarray(getattr(pal, f), np.float64)
+                - np.asarray(getattr(ref, f), np.float64)
+            ).max()
+        )
+        for f in ("cold_start_prob", "avg_response_time", "peak_cluster")
+    )
+    scandiff = float(
+        np.abs(scan.cold_start_prob - pal.cold_start_prob).max()
+    )
+    arrivals = float(
+        sum(
+            f.arrival_process.rate * (sim_time - fleet.skip_time)
+            for f in fleet.functions
+        )
+        * len(thresholds)
+        * replicas
+    )
+    peak = float(np.asarray(scan.peak_cluster).max())
+    emit(
+        "bench_fleet_sweep",
+        dt_scan / arrivals * 1e6,
+        f"functions={len(names)} grid={len(thresholds)}x{len(names)} "
+        f"n_cluster={fleet.n_cluster:.0f} peak={peak:.0f} "
+        f"scan={dt_scan:.2f}s block={dt_block:.2f}s "
+        f"traces=({scan_traces},{pal_traces})(expect (0,0) warm) "
+        f"bitdiff={bitdiff}(expect 0) scan_vs_block_cold={scandiff:.4f}",
+        wall_clock_s={"scan": dt_scan, "block": dt_block},
+        traces={
+            "fleet_sweep_scan": scan_traces,
+            "fleet_sweep_pallas": pal_traces,
+        },
+        bitdiff=bitdiff,
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -977,6 +1059,7 @@ def main(argv=None) -> None:
         bench_nhpp_sweep()
         bench_retry_sweep()
         bench_fused_rng()
+        bench_fleet_sweep()
     else:
         bench_table1()
         bench_fig3_instance_distribution()
@@ -990,6 +1073,7 @@ def main(argv=None) -> None:
         bench_nhpp_sweep()
         bench_retry_sweep()
         bench_fused_rng()
+        bench_fleet_sweep()
         bench_fig1_concurrency_value()
         bench_routing_policy()
         bench_fig6_cold_start_probability()

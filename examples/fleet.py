@@ -1,0 +1,104 @@
+"""Multi-function fleet: a SeBS-flavored catalog mix under one cluster.
+
+Builds a fleet from the workload catalog (`repro.data.catalog`), runs a
+keep-alive threshold sweep on the shared-capacity fleet engine
+(DESIGN.md §13), and prints the per-function cold-start/cost frontier:
+how raising the keep-alive threshold trades cold starts against
+developer cost, function by function, while the cluster budget binds.
+
+    PYTHONPATH=src python examples/fleet.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core.fleet import fleet_run, fleet_sweep
+from repro.data.catalog import fleet_of
+from repro.serving.autoscale import plan_fleet_thresholds
+
+NAMES = ["thumbnail", "dynamic-html", "crypto-sign", "ml-inference"]
+THRESHOLDS = [30.0, 120.0, 600.0]
+
+
+def main():
+    fleet = fleet_of(
+        NAMES, n_cluster=10, sim_time=2000.0, skip_time=50.0, slots=64
+    )
+    key = jax.random.key(0)
+
+    # one compiled call: fleet x threshold grid
+    grid = fleet_sweep(
+        fleet, over={"expiration_threshold": THRESHOLDS}, key=key, replicas=2
+    )
+    print(f"fleet of {len(NAMES)} functions, n_cluster={fleet.n_cluster}")
+    print(
+        "peak cluster occupancy over grid: "
+        f"{float(np.asarray(grid.peak_cluster).max()):.0f}"
+    )
+    print("\ncold-start probability / developer cost frontier:")
+    header = "threshold " + "".join(f"{n:>18}" for n in NAMES)
+    print(header)
+    for t in THRESHOLDS:
+        row = grid.sel(expiration_threshold=t)
+        cells = []
+        for name in NAMES:
+            cell = row.sel(function=name)
+            cells.append(
+                f"{float(cell.cold_start_prob):7.3f}/"
+                f"${float(cell.developer_cost):8.4f}"
+            )
+        print(f"{t:9.0f} " + "".join(f"{c:>18}" for c in cells))
+
+    # capacity planning: per-function thresholds under the shared budget
+    plan = plan_fleet_thresholds(
+        fleet,
+        cold_slo=0.3,
+        candidate_thresholds=THRESHOLDS,
+        sim_time=2000.0,
+        replicas=2,
+    )
+    print(
+        f"\nplanned thresholds (cold SLO 0.3, budget {plan.n_cluster:.0f}): "
+        f"feasible={plan.feasible} headroom={plan.cluster_headroom:.1f}"
+    )
+    for name, p in plan.plans.items():
+        print(
+            f"  {name:>14}: t_exp={p.expiration_threshold:6.0f}s "
+            f"cold={p.predicted_cold_prob:.3f} "
+            f"replicas={p.predicted_avg_replicas:.2f}"
+        )
+
+    # single run at the planned thresholds, per-function cost report
+    import dataclasses
+
+    planned = dataclasses.replace(
+        fleet,
+        functions=tuple(
+            dataclasses.replace(
+                f, expiration_threshold=plan.thresholds[f.name]
+            )
+            for f in fleet.functions
+        ),
+    )
+    res = fleet_run(planned, key, replicas=2)
+    print("\nat the planned thresholds:")
+    for name in NAMES:
+        s = res.summary[name]
+        print(
+            f"  {name:>14}: cold={float(np.mean(s.cold_start_prob)):.3f} "
+            f"resp={float(np.mean(s.avg_response_time)):.2f}s "
+            f"dev=${res.cost_of(name).developer_total:.4f}"
+        )
+    print(
+        f"fleet totals: dev=${res.developer_cost:.4f} "
+        f"infra=${res.provider_cost:.4f} "
+        f"util={float(np.mean(res.summary.cluster_utilization)):.2f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

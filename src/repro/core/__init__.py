@@ -75,6 +75,15 @@ from repro.core.temporal import (  # noqa: E402
     ServerlessTemporalSimulator,
 )
 from repro.core.par_simulator import ParServerlessSimulator  # noqa: E402
+from repro.core.fleet import (  # noqa: E402
+    FleetFunction,
+    FleetGridResult,
+    FleetResult,
+    FleetScenario,
+    FleetSummary,
+    fleet_run,
+    fleet_sweep,
+)
 
 __all__ = [
     "SimProcess",
@@ -115,4 +124,11 @@ __all__ = [
     "ServerlessTemporalSimulator",
     "InstanceSnapshot",
     "ParServerlessSimulator",
+    "FleetFunction",
+    "FleetScenario",
+    "FleetSummary",
+    "FleetResult",
+    "FleetGridResult",
+    "fleet_run",
+    "fleet_sweep",
 ]

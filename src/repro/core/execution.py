@@ -68,6 +68,10 @@ class EngineSpec:
     # DrawPlan (``Execution(draws="fused")``, DESIGN.md §12) instead of
     # consuming host-staged [C, K] sample buffers
     fused_backends: Tuple[str, ...] = ()
+    # backends on which this engine serves the multi-function fleet
+    # coupling (shared cluster capacity + per-function pools,
+    # DESIGN.md §13) — consumed by repro.core.fleet
+    fleet_backends: Tuple[str, ...] = ()
     description: str = ""
 
 
@@ -132,6 +136,7 @@ def register_engine(
     windowed_backends: Sequence[str] = (),
     reliability_backends: Sequence[str] = (),
     fused_backends: Sequence[str] = (),
+    fleet_backends: Sequence[str] = (),
     description: str = "",
 ):
     """Decorator: register ``fn`` as engine ``name``'s run entry point."""
@@ -145,6 +150,7 @@ def register_engine(
             windowed_backends=tuple(windowed_backends),
             reliability_backends=tuple(reliability_backends),
             fused_backends=tuple(fused_backends),
+            fleet_backends=tuple(fleet_backends),
             description=description,
         )
         return fn
@@ -461,8 +467,8 @@ def capability_markdown() -> str:
     engines = registered_engines()
     backends = registered_backends()
     lines = [
-        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability | draws |",
-        "|---|---|---|---|---|---|---|",
+        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability | draws | fleet |",
+        "|---|---|---|---|---|---|---|---|",
     ]
     for ename, espec in engines.items():
         for bname, bspec in backends.items():
@@ -475,7 +481,8 @@ def capability_markdown() -> str:
                 f"{'✓' if sweepable and bspec.shardable else '—'} | "
                 f"{'✓' if bname in espec.windowed_backends else '—'} | "
                 f"{'✓' if bname in espec.reliability_backends else '—'} | "
-                f"{'staged+fused' if fused else 'staged'} |"
+                f"{'staged+fused' if fused else 'staged'} | "
+                f"{'✓' if bname in espec.fleet_backends else '—'} |"
             )
     return "\n".join(lines)
 

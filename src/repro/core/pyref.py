@@ -291,3 +291,189 @@ def simulate_pyref(
             res.lifespan_count += 1
     res.histogram = hist
     return res
+
+
+@dataclasses.dataclass
+class PyRefFleetResults:
+    """Per-function + fleet counters of :func:`simulate_fleet_pyref`.
+
+    Every per-function field is an ``[F]`` array; ``peak_cluster`` is the
+    fleet-wide occupancy high-water mark.
+    """
+
+    n_cold: np.ndarray
+    n_warm: np.ndarray
+    n_reject: np.ndarray
+    arrivals: np.ndarray
+    enqueued: np.ndarray
+    queue_served: np.ndarray
+    queue_left: np.ndarray
+    queue_wait_sum: np.ndarray
+    time_running: np.ndarray
+    time_idle: np.ndarray
+    sum_cold_resp: np.ndarray
+    sum_warm_resp: np.ndarray
+    lifespan_sum: np.ndarray
+    lifespan_count: np.ndarray
+    peak_cluster: int
+
+
+def simulate_fleet_pyref(
+    times: np.ndarray,
+    fids: np.ndarray,
+    warms: np.ndarray,
+    colds: np.ndarray,
+    expiration_thresholds,
+    limits,
+    n_cluster: float,
+    queue_depth: int,
+    sim_time: float,
+    skip_time: float = 0.0,
+    prestamped: bool = True,
+) -> PyRefFleetResults:
+    """Decision-exact oracle for the fleet coupling (DESIGN.md §13).
+
+    Consumes the MERGED per-replica event stream the fleet engines run
+    (``times`` absolute f64 timestamps when ``prestamped``, else f32
+    gaps; ``fids`` names the acting function), with per-function pools,
+    the shared cluster-capacity gate on cold starts and a bounded FIFO
+    queue per function drained ahead of each arrival — the same
+    expire → drain → route order as ``fleet._make_fleet_step``, so
+    every cold/warm/enqueue/reject decision matches the scan engine.
+    """
+    F = len(expiration_thresholds)
+    t_exps = [float(x) for x in expiration_thresholds]
+    lims = [float(x) for x in limits]
+    Q = int(queue_depth)
+    pools: List[List[_Instance]] = [[] for _ in range(F)]
+    queues: List[List[tuple]] = [[] for _ in range(F)]  # (t_enq, warm, cold)
+    res = PyRefFleetResults(
+        n_cold=np.zeros(F, np.int64),
+        n_warm=np.zeros(F, np.int64),
+        n_reject=np.zeros(F, np.int64),
+        arrivals=np.zeros(F, np.int64),
+        enqueued=np.zeros(F, np.int64),
+        queue_served=np.zeros(F, np.int64),
+        queue_left=np.zeros(F, np.int64),
+        queue_wait_sum=np.zeros(F, np.float64),
+        time_running=np.zeros(F, np.float64),
+        time_idle=np.zeros(F, np.float64),
+        sum_cold_resp=np.zeros(F, np.float64),
+        sum_warm_resp=np.zeros(F, np.float64),
+        lifespan_sum=np.zeros(F, np.float64),
+        lifespan_count=np.zeros(F, np.int64),
+        peak_cluster=0,
+    )
+
+    def cluster() -> int:
+        return sum(len(p) for p in pools)
+
+    def integrate(lo: float, hi: float):
+        if hi <= lo:
+            return
+        for f in range(F):
+            for inst in pools[f]:
+                run = min(inst.busy_until, hi) - lo
+                if run > 0:
+                    res.time_running[f] += run
+                idle = min(inst.expire_time(t_exps[f]), hi) - max(
+                    inst.busy_until, lo
+                )
+                if idle > 0:
+                    res.time_idle[f] += idle
+
+    def try_start(f: int, t: float, warm_s: float, cold_s: float):
+        """warm / cold-with-cluster-gate; returns ("warm"|"cold"|None, resp)."""
+        idle = [i_ for i_ in pools[f] if i_.is_idle(t)]
+        if idle:
+            target = max(idle, key=lambda i_: i_.creation)
+            target.busy_until = t + float(warm_s)
+            return "warm", float(warm_s)
+        if len(pools[f]) < lims[f] and cluster() < n_cluster:
+            pools[f].append(
+                _Instance(creation=t, busy_until=t + float(cold_s))
+            )
+            return "cold", float(cold_s)
+        return None, 0.0
+
+    t_prev = 0.0
+    arr_dtype = np.float64 if prestamped else np.float32
+    for dt, fid, warm_s, cold_s in zip(
+        np.asarray(times, arr_dtype),
+        np.asarray(fids, np.int64),
+        np.asarray(warms, np.float32),
+        np.asarray(colds, np.float32),
+    ):
+        t = float(dt) if prestamped else t_prev + float(dt)
+        lo = min(max(t_prev, skip_time), sim_time)
+        hi = min(max(t, skip_time), sim_time)
+        integrate(lo, hi)
+
+        for f in range(F):
+            survivors = []
+            for inst in pools[f]:
+                e = inst.expire_time(t_exps[f])
+                if e <= t:
+                    if skip_time < e <= sim_time:
+                        res.lifespan_sum[f] += e - inst.creation
+                        res.lifespan_count[f] += 1
+                else:
+                    survivors.append(inst)
+            pools[f][:] = survivors
+
+        f = int(fid)
+        counted = t > skip_time
+        if t > sim_time:
+            t_prev = t
+            continue
+
+        # FIFO drain for the acting function: the head either starts now
+        # or nothing behind it can either
+        for _ in range(Q):
+            if not queues[f]:
+                break
+            t_enq, qwarm, qcold = queues[f][0]
+            kind, resp = try_start(f, t, qwarm, qcold)
+            if kind is None:
+                break
+            queues[f].pop(0)
+            if counted:
+                res.queue_served[f] += 1
+                res.queue_wait_sum[f] += t - t_enq
+                if kind == "warm":
+                    res.n_warm[f] += 1
+                    res.sum_warm_resp[f] += resp
+                else:
+                    res.n_cold[f] += 1
+                    res.sum_cold_resp[f] += resp
+            res.peak_cluster = max(res.peak_cluster, cluster())
+
+        if counted:
+            res.arrivals[f] += 1
+        kind, resp = try_start(f, t, warm_s, cold_s)
+        if kind == "warm":
+            if counted:
+                res.n_warm[f] += 1
+                res.sum_warm_resp[f] += resp
+        elif kind == "cold":
+            if counted:
+                res.n_cold[f] += 1
+                res.sum_cold_resp[f] += resp
+        elif len(queues[f]) < Q:
+            queues[f].append((t, float(warm_s), float(cold_s)))
+            if counted:
+                res.enqueued[f] += 1
+        elif counted:
+            res.n_reject[f] += 1
+        res.peak_cluster = max(res.peak_cluster, cluster())
+        t_prev = t
+
+    integrate(max(t_prev, skip_time), sim_time)
+    for f in range(F):
+        for inst in pools[f]:
+            e = inst.expire_time(t_exps[f])
+            if skip_time < e <= sim_time:
+                res.lifespan_sum[f] += e - inst.creation
+                res.lifespan_count[f] += 1
+        res.queue_left[f] = len(queues[f])
+    return res

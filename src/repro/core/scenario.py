@@ -760,6 +760,15 @@ class GridResult:
         try:
             return vals.index(value)
         except ValueError:
+            # Positional fallback: fleet grids carry a categorical
+            # ``function`` axis whose values are names — an int that is
+            # not itself an axis value selects by position.
+            if (
+                isinstance(value, int)
+                and not isinstance(value, bool)
+                and 0 <= value < len(vals)
+            ):
+                return value
             raise KeyError(
                 f"{value!r} is not on axis {name!r}; values: {vals}"
             ) from None

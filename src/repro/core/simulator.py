@@ -1058,6 +1058,7 @@ register_backend(
     windowed_backends=("scan", "pallas", "ref"),
     reliability_backends=("scan", "pallas", "ref"),
     fused_backends=("scan", "pallas", "ref"),
+    fleet_backends=("scan", "pallas", "ref"),
     description="steady-state scale-per-request simulator (paper §3/§4.1)",
 )
 def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

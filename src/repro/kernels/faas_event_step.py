@@ -88,6 +88,13 @@ RELY_COLS = 4
 # par acc columns: ACC_COLS + ∫in-flight-requests
 PAR_ACC_COLS = ACC_COLS + 1
 
+# fleet acc columns (DESIGN.md §13): the single-function layout 0..7
+# (cold, warm, reject, t_run, t_idle, resp_cold, resp_warm, overflow)
+# followed by arrivals, enqueued, queue_served, queue_wait_sum, and the
+# shared-capacity column — a cross-row MAX accumulator of cluster
+# occupancy (all rows of a block carry the block's peak)
+FLEET_ACC_COLS = 13
+
 # child_pos sentinel for a last attempt (mirrors core.reliability.NO_CHILD):
 # a power of two exactly representable in f32, larger than any padded
 # stream width, so the one-hot activation scatter never matches it
@@ -1033,6 +1040,401 @@ def par_sweep_pallas(
         colds,
     )
     return out[4]
+
+
+# ---------------------------------------------------------------------------
+# Fleet kernel: functions as the rows of one replica block, shared cluster
+# capacity as a cross-row sum (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def _fleet_kernel(
+    *refs,
+    n_steps: int,
+    queue_depth: int,
+    prestamped: bool,
+):
+    """One fleet (cell × replica) = one ``BLOCK_R``-row block: row f is
+    function f's ``[M]`` pool (padded functions get ``limit=0``), every
+    row carries the SAME merged event stream, and ``fids`` names the
+    acting row per event.  The shared capacity is the block-wide
+    ``alive.sum()`` — exact in f32 because occupancy counts are small
+    integers — gating cold starts against the per-row ``ncl``.  With
+    ``queue_depth > 0`` three revisited ``[Rb, Q]`` FIFO blocks (enqueue
+    time + the held warm/cold samples) drain ahead of each arrival.
+    """
+    Q = queue_depth
+    (
+        alive_in,
+        creation_in,
+        busy_in,
+        t0_ref,
+        texp_ref,
+        lim_ref,
+        ncl_ref,
+        tend_ref,
+        skip_ref,
+        dt_ref,
+        fid_ref,
+        warm_ref,
+        cold_ref,
+    ) = refs[:13]
+    if Q:
+        alive_out, creation_out, busy_out, t_out, acc_out, qt_out, qw_out, qc_out = refs[13:]
+    else:
+        alive_out, creation_out, busy_out, t_out, acc_out = refs[13:]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        alive_out[...] = alive_in[...]
+        creation_out[...] = creation_in[...]
+        busy_out[...] = busy_in[...]
+        t_out[...] = t0_ref[...]
+        acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
+        if Q:
+            qt_out[...] = jnp.full(qt_out.shape, NEG, qt_out.dtype)
+            qw_out[...] = jnp.full(qw_out.shape, NEG, qw_out.dtype)
+            qc_out[...] = jnp.full(qc_out.shape, NEG, qc_out.dtype)
+
+    alive = alive_out[...]
+    creation = creation_out[...]
+    busy = busy_out[...]
+    t = t_out[...][:, 0]
+    acc0 = acc_out[...]
+    t_exp = texp_ref[...][:, 0]  # [Rb]
+    limit = lim_ref[...][:, 0]
+    ncl = ncl_ref[...][:, 0]
+    t_end = tend_ref[...][:, 0]
+    skip = skip_ref[...][:, 0]
+    slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
+    rid = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 0)[:, 0]  # [Rb]
+    # the peak column is a MAX accumulator: seed from the prior chunk
+    peak0 = jnp.max(acc0[:, FLEET_ACC_COLS - 1])
+    if Q:
+        q_iota = jax.lax.broadcasted_iota(jnp.float32, (alive.shape[0], Q), 1)
+        qt0, qw0, qc0 = qt_out[...], qw_out[...], qc_out[...]
+
+    def routing(alive, creation, busy, t_new):
+        idle = (alive > 0) & (busy <= t_new[:, None])
+        best = jnp.max(jnp.where(idle, creation, NEG), axis=1)
+        any_idle = best > NEG * 0.5
+        is_best = idle & (creation >= best[:, None]) & any_idle[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+        free = alive <= 0
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+        return any_idle, first_best, any_free, first_free, n_alive
+
+    def step(i, carry):
+        if Q:
+            alive, creation, busy, t, acc, peak, qt, qw, qc = carry
+        else:
+            alive, creation, busy, t, acc, peak = carry
+        dt = dt_ref[:, i]
+        fid = fid_ref[:, i]
+        warm_s = warm_ref[:, i]
+        cold_s = cold_ref[:, i]
+        act = fid == rid
+        t_new = dt if prestamped else t + dt
+
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+        cc = t_new > skip
+
+        if Q:
+            # FIFO drain ahead of the arrival: at most one row acts per
+            # event, and freed capacity can only serve the head, so Q
+            # in-order passes are exact (later passes no-op when stuck)
+            def drain(_, dcarry):
+                alive, creation, busy, acc, qt, qw, qc = dcarry
+                any_idle, first_best, any_free, first_free, n_alive = routing(
+                    alive, creation, busy, t_new
+                )
+                cluster = alive.sum()
+                ht, hw, hc = qt[:, 0], qw[:, 0], qc[:, 0]
+                has = (ht > NEG * 0.5) & act & (t_new <= t_end)
+                can_warm = has & any_idle
+                can_cold = (
+                    has
+                    & (~any_idle)
+                    & (n_alive < limit)
+                    & any_free
+                    & (cluster < ncl)
+                )
+                serve = can_warm | can_cold
+                chosen = jnp.where(can_warm, first_best, first_free)
+                service = jnp.where(can_warm, hw, hc)
+                sel = (slot_iota == chosen[:, None]) & serve[:, None]
+                busy = jnp.where(sel, (t_new + service)[:, None], busy)
+                creation = jnp.where(
+                    sel & can_cold[:, None], t_new[:, None], creation
+                )
+                alive = jnp.where(sel & can_cold[:, None], 1.0, alive)
+                zero = jnp.zeros_like(run_sum)
+                delta = jnp.stack(
+                    [
+                        (can_cold & cc).astype(jnp.float32),
+                        (can_warm & cc).astype(jnp.float32),
+                        zero,
+                        zero,
+                        zero,
+                        jnp.where(can_cold & cc, hc, 0.0),
+                        jnp.where(can_warm & cc, hw, 0.0),
+                        zero,
+                        zero,
+                        zero,
+                        (serve & cc).astype(jnp.float32),
+                        jnp.where(serve & cc, t_new - ht, 0.0),
+                        zero,
+                    ],
+                    axis=1,
+                )
+                neg_col = jnp.full((alive.shape[0], 1), NEG, qt.dtype)
+                shift = lambda qx: jnp.where(
+                    serve[:, None],
+                    jnp.concatenate([qx[:, 1:], neg_col], axis=1),
+                    qx,
+                )
+                return alive, creation, busy, acc + delta, shift(qt), shift(qw), shift(qc)
+
+            alive, creation, busy, acc, qt, qw, qc = jax.lax.fori_loop(
+                0, Q, drain, (alive, creation, busy, acc, qt, qw, qc)
+            )
+
+        any_idle, first_best, any_free, first_free, n_alive = routing(
+            alive, creation, busy, t_new
+        )
+        cluster = alive.sum()
+        active = (t_new <= t_end) & act
+        can_cold = (~any_idle) & (n_alive < limit) & any_free & (cluster < ncl)
+        overflow = (~any_idle) & (n_alive < limit) & (~any_free) & active
+        is_warm = any_idle & active
+        is_cold = can_cold & active
+        if Q:
+            qlen = (qt > NEG * 0.5).sum(axis=1)
+            can_enq = (~any_idle) & (~can_cold) & (qlen < Q)
+            is_enq = can_enq & active
+            is_reject = (~any_idle) & (~can_cold) & (~can_enq) & active
+        else:
+            is_enq = jnp.zeros_like(active)
+            is_reject = (~any_idle) & (~can_cold) & active
+
+        chosen = jnp.where(is_warm, first_best, first_free)
+        service = jnp.where(is_warm, warm_s, cold_s)
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]
+        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if Q:
+            qsel = (q_iota == qlen[:, None]) & is_enq[:, None]
+            qt = jnp.where(qsel, t_new[:, None], qt)
+            qw = jnp.where(qsel, warm_s[:, None], qw)
+            qc = jnp.where(qsel, cold_s[:, None], qc)
+        peak = jnp.maximum(peak, alive.sum())
+
+        zero = jnp.zeros_like(run_sum)
+        delta = jnp.stack(
+            [
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold & cc, cold_s, 0.0),
+                jnp.where(is_warm & cc, warm_s, 0.0),
+                overflow.astype(jnp.float32),
+                (active & cc).astype(jnp.float32),
+                (is_enq & cc).astype(jnp.float32),
+                zero,
+                zero,
+                zero,
+            ],
+            axis=1,
+        )
+        acc = acc + delta
+        if Q:
+            return alive, creation, busy, t_new, acc, peak, qt, qw, qc
+        return alive, creation, busy, t_new, acc, peak
+
+    if Q:
+        carry = (alive, creation, busy, t, acc0, peak0, qt0, qw0, qc0)
+        alive, creation, busy, t, acc, peak, qt, qw, qc = jax.lax.fori_loop(
+            0, n_steps, step, carry
+        )
+        qt_out[...] = qt
+        qw_out[...] = qw
+        qc_out[...] = qc
+    else:
+        alive, creation, busy, t, acc, peak = jax.lax.fori_loop(
+            0, n_steps, step, (alive, creation, busy, t, acc0, peak0)
+        )
+    col_iota = jax.lax.broadcasted_iota(jnp.float32, acc.shape, 1)
+    acc = jnp.where(col_iota == float(FLEET_ACC_COLS - 1), peak, acc)
+    alive_out[...] = alive
+    creation_out[...] = creation
+    busy_out[...] = busy
+    t_out[...] = t[:, None]
+    acc_out[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "slots",
+        "queue_depth",
+        "block_r",
+        "block_k",
+        "interpret",
+        "prestamped",
+    ),
+)
+def fleet_sweep_pallas(
+    t_exp,  # f32 [R] per-row (function) expiration threshold
+    limit,  # f32 [R] per-row function concurrency limit (0 = padded row)
+    ncl,  # f32 [R] shared cluster capacity (same across a block; 1e30 = inf)
+    t_end,  # f32 [R]
+    skip,  # f32 [R]
+    dts,  # f32 [R, K] merged stream: gaps, or absolute times if prestamped
+    fids,  # f32 [R, K] acting-row id per event (same stream across a block)
+    warms,  # f32 [R, K]
+    colds,  # f32 [R, K]
+    *,
+    slots: int,
+    queue_depth: int = 0,
+    block_r: int = 8,
+    block_k: int = 512,
+    interpret: bool = False,
+    prestamped: bool = False,
+):
+    """Fleet block launch: ``R = fleets × block_r`` rows, one fleet per
+    block.  Returns ``(acc[R, FLEET_ACC_COLS], qt_final[R, Q] | None)``.
+    Every fleet axis value (thresholds, limits, capacity, horizon) is a
+    traced per-row input, so a fleet × threshold grid is ONE trace.
+    """
+    TRACE_COUNTS["fleet_sweep_pallas"] += 1
+    R, K = dts.shape
+    M = slots
+    Q = queue_depth
+    assert R % block_r == 0, (R, block_r)
+    assert K % block_k == 0, (K, block_k)
+    grid = (R // block_r, K // block_k)
+
+    state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
+    samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
+    t_spec = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, FLEET_ACC_COLS), lambda r, k: (r, 0))
+
+    kernel = functools.partial(
+        _fleet_kernel,
+        n_steps=block_k,
+        queue_depth=Q,
+        prestamped=prestamped,
+    )
+    frozen = jnp.full((R, M), NEG, jnp.float32)
+    inputs = [
+        jnp.zeros((R, M), jnp.float32),
+        frozen,
+        frozen,
+        jnp.zeros((R, 1), jnp.float32),
+        t_exp[:, None],
+        limit[:, None],
+        ncl[:, None],
+        t_end[:, None],
+        skip[:, None],
+        dts,
+        fids,
+        warms,
+        colds,
+    ]
+    in_specs = (
+        [state_spec, state_spec, state_spec]
+        + [t_spec] * 6
+        + [samp_spec] * 4
+    )
+    out_specs = [state_spec, state_spec, state_spec, t_spec, acc_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, M), jnp.float32),
+        jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        jax.ShapeDtypeStruct((R, FLEET_ACC_COLS), jnp.float32),
+    ]
+    if Q:
+        q_spec = pl.BlockSpec((block_r, Q), lambda r, k: (r, 0))
+        out_specs += [q_spec] * 3
+        out_shape += [jax.ShapeDtypeStruct((R, Q), jnp.float32)] * 3
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*inputs)
+    return out[4], (out[5] if Q else None)
+
+
+@register_backend("pallas", engines=("fleet",))
+def _pallas_fleet_rows(
+    t_exp, limit, ncl, t_end, skip, dts, fids, warms, colds,
+    *, slots, queue_depth, prestamped, block_k,
+):
+    """The fleet launcher (``BackendSpec.launch_for("fleet")``): chunk-pad
+    the merged stream and run :func:`fleet_sweep_pallas`.  Rows arrive
+    pre-blocked (``C = cells × replicas × BLOCK_R``, padded functions
+    inert via ``limit=0``), so only the arrival axis needs padding — the
+    1e30 time fill is inert as gap and timestamp alike, and padded fids
+    hit row 0 past its horizon (no-ops).  Returns
+    ``(acc[C, FLEET_ACC_COLS], qleft[C])``.
+    """
+    C, n = dts.shape
+    assert C % BLOCK_R == 0, (C, BLOCK_R)
+    block_k = min(block_k, max(n, 1))
+    pad_k = (-n) % block_k
+
+    def pad(x, col_fill):
+        if pad_k:
+            x = jnp.concatenate(
+                [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+            )
+        return x
+
+    acc, qt = fleet_sweep_pallas(
+        jnp.asarray(t_exp, jnp.float32),
+        jnp.asarray(limit, jnp.float32),
+        jnp.asarray(ncl, jnp.float32),
+        jnp.asarray(t_end, jnp.float32),
+        jnp.asarray(skip, jnp.float32),
+        pad(jnp.asarray(dts, jnp.float32), 1e30),
+        pad(jnp.asarray(fids, jnp.float32), 0.0),
+        pad(jnp.asarray(warms, jnp.float32), 1.0),
+        pad(jnp.asarray(colds, jnp.float32), 1.0),
+        slots=slots,
+        queue_depth=queue_depth,
+        block_r=BLOCK_R,
+        block_k=block_k,
+        interpret=jax.default_backend() != "tpu",
+        prestamped=prestamped,
+    )
+    if qt is None:
+        qleft = jnp.zeros((C,), jnp.float32)
+    else:
+        qleft = (qt > NEG * 0.5).sum(axis=1).astype(jnp.float32)
+    return acc, qleft
 
 
 @register_backend("pallas", engines=("par",))

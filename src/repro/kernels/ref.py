@@ -379,6 +379,276 @@ def _ref_sweep_rows(
     return out[4]
 
 
+def fleet_sweep_ref(
+    t_exp,  # f32 [R] per-row (function) expiration threshold
+    limit,  # f32 [R] per-row function concurrency limit (0 = padded row)
+    ncl,  # f32 [R] shared cluster capacity (same across a group; 1e30 = inf)
+    t_end,  # f32 [R]
+    skip,  # f32 [R]
+    dts,  # f32 [R, K] merged stream: gaps, or absolute times if prestamped
+    fids,  # f32 [R, K] acting-row id per event (same stream across a group)
+    warms,  # f32 [R, K]
+    colds,  # f32 [R, K]
+    *,
+    slots: int,
+    queue_depth: int = 0,
+    block_r: int = 8,
+    prestamped: bool = False,
+):
+    """f32 jnp mirror of ``fleet_sweep_pallas`` (DESIGN.md §13): every
+    group of ``block_r`` consecutive rows is one fleet (row f = function
+    f's pool), the shared capacity is the group-wide occupancy sum —
+    bitwise equal to the kernel's block-wide ``alive.sum()`` because
+    occupancy counts are small integers in f32 — and the acc layout is
+    ``FLEET_ACC_COLS`` with the peak column as a MAX accumulator."""
+    from repro.kernels.faas_event_step import FLEET_ACC_COLS
+
+    R, K = dts.shape
+    M = slots
+    Q = queue_depth
+    assert R % block_r == 0, (R, block_r)
+    G = R // block_r
+    t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
+    limit = jnp.broadcast_to(jnp.asarray(limit, jnp.float32), (R,))
+    ncl = jnp.broadcast_to(jnp.asarray(ncl, jnp.float32), (R,))
+    t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
+    skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
+    slot_iota = jnp.broadcast_to(
+        jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
+    )
+    rid = (jnp.arange(R) % block_r).astype(jnp.float32)
+    group_sum = lambda x: jnp.repeat(x.reshape(G, block_r).sum(axis=1), block_r)
+    if Q:
+        q_iota = jnp.broadcast_to(
+            jnp.arange(Q, dtype=jnp.float32)[None, :], (R, Q)
+        )
+
+    def routing(alive, creation, busy, t_new):
+        idle = (alive > 0) & (busy <= t_new[:, None])
+        best = jnp.max(jnp.where(idle, creation, NEG), axis=1)
+        any_idle = best > NEG * 0.5
+        is_best = idle & (creation >= best[:, None]) & any_idle[:, None]
+        first_best = jnp.min(jnp.where(is_best, slot_iota, 1e9), axis=1)
+        free = alive <= 0
+        any_free = free.any(axis=1)
+        first_free = jnp.min(jnp.where(free, slot_iota, 1e9), axis=1)
+        n_alive = alive.sum(axis=1)
+        return any_idle, first_best, any_free, first_free, n_alive
+
+    def step(i, carry):
+        if Q:
+            alive, creation, busy, t, acc, peak, qt, qw, qc = carry
+        else:
+            alive, creation, busy, t, acc, peak = carry
+        dt = dts[:, i]
+        fid = fids[:, i]
+        warm_s = warms[:, i]
+        cold_s = colds[:, i]
+        act = fid == rid
+        t_new = dt if prestamped else t + dt
+        lo = jnp.clip(t, skip, t_end)
+        hi = jnp.clip(t_new, skip, t_end)
+        expire = busy + t_exp[:, None]
+        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
+        idle_t = jnp.clip(
+            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+            0.0,
+            None,
+        )
+        run_sum = (run_t * alive).sum(axis=1)
+        idle_sum = (idle_t * alive).sum(axis=1)
+        expired = (alive > 0) & (expire <= t_new[:, None])
+        alive = jnp.where(expired, 0.0, alive)
+        cc = t_new > skip
+
+        if Q:
+
+            def drain(_, dcarry):
+                alive, creation, busy, acc, qt, qw, qc = dcarry
+                any_idle, first_best, any_free, first_free, n_alive = routing(
+                    alive, creation, busy, t_new
+                )
+                cluster = group_sum(alive.sum(axis=1))
+                ht, hw, hc = qt[:, 0], qw[:, 0], qc[:, 0]
+                has = (ht > NEG * 0.5) & act & (t_new <= t_end)
+                can_warm = has & any_idle
+                can_cold = (
+                    has
+                    & (~any_idle)
+                    & (n_alive < limit)
+                    & any_free
+                    & (cluster < ncl)
+                )
+                serve = can_warm | can_cold
+                chosen = jnp.where(can_warm, first_best, first_free)
+                service = jnp.where(can_warm, hw, hc)
+                sel = (slot_iota == chosen[:, None]) & serve[:, None]
+                busy = jnp.where(sel, (t_new + service)[:, None], busy)
+                creation = jnp.where(
+                    sel & can_cold[:, None], t_new[:, None], creation
+                )
+                alive = jnp.where(sel & can_cold[:, None], 1.0, alive)
+                zero = jnp.zeros_like(run_sum)
+                delta = jnp.stack(
+                    [
+                        (can_cold & cc).astype(jnp.float32),
+                        (can_warm & cc).astype(jnp.float32),
+                        zero,
+                        zero,
+                        zero,
+                        jnp.where(can_cold & cc, hc, 0.0),
+                        jnp.where(can_warm & cc, hw, 0.0),
+                        zero,
+                        zero,
+                        zero,
+                        (serve & cc).astype(jnp.float32),
+                        jnp.where(serve & cc, t_new - ht, 0.0),
+                        zero,
+                    ],
+                    axis=1,
+                )
+                neg_col = jnp.full((R, 1), NEG, qt.dtype)
+                shift = lambda qx: jnp.where(
+                    serve[:, None],
+                    jnp.concatenate([qx[:, 1:], neg_col], axis=1),
+                    qx,
+                )
+                return (
+                    alive,
+                    creation,
+                    busy,
+                    acc + delta,
+                    shift(qt),
+                    shift(qw),
+                    shift(qc),
+                )
+
+            alive, creation, busy, acc, qt, qw, qc = jax.lax.fori_loop(
+                0, Q, drain, (alive, creation, busy, acc, qt, qw, qc)
+            )
+
+        any_idle, first_best, any_free, first_free, n_alive = routing(
+            alive, creation, busy, t_new
+        )
+        cluster = group_sum(alive.sum(axis=1))
+        active = (t_new <= t_end) & act
+        can_cold = (~any_idle) & (n_alive < limit) & any_free & (cluster < ncl)
+        overflow = (~any_idle) & (n_alive < limit) & (~any_free) & active
+        is_warm = any_idle & active
+        is_cold = can_cold & active
+        if Q:
+            qlen = (qt > NEG * 0.5).sum(axis=1)
+            can_enq = (~any_idle) & (~can_cold) & (qlen < Q)
+            is_enq = can_enq & active
+            is_reject = (~any_idle) & (~can_cold) & (~can_enq) & active
+        else:
+            is_enq = jnp.zeros_like(active)
+            is_reject = (~any_idle) & (~can_cold) & active
+        chosen = jnp.where(is_warm, first_best, first_free)
+        service = jnp.where(is_warm, warm_s, cold_s)
+        assign = is_warm | is_cold
+        sel = (slot_iota == chosen[:, None]) & assign[:, None]
+        busy = jnp.where(sel, (t_new + service)[:, None], busy)
+        creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
+        alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if Q:
+            qsel = (q_iota == qlen[:, None]) & is_enq[:, None]
+            qt = jnp.where(qsel, t_new[:, None], qt)
+            qw = jnp.where(qsel, warm_s[:, None], qw)
+            qc = jnp.where(qsel, cold_s[:, None], qc)
+        peak = jnp.maximum(peak, group_sum(alive.sum(axis=1)))
+        zero = jnp.zeros_like(run_sum)
+        delta = jnp.stack(
+            [
+                (is_cold & cc).astype(jnp.float32),
+                (is_warm & cc).astype(jnp.float32),
+                (is_reject & cc).astype(jnp.float32),
+                run_sum,
+                idle_sum,
+                jnp.where(is_cold & cc, cold_s, 0.0),
+                jnp.where(is_warm & cc, warm_s, 0.0),
+                overflow.astype(jnp.float32),
+                (active & cc).astype(jnp.float32),
+                (is_enq & cc).astype(jnp.float32),
+                zero,
+                zero,
+                zero,
+            ],
+            axis=1,
+        )
+        acc = acc + delta
+        if Q:
+            return alive, creation, busy, t_new, acc, peak, qt, qw, qc
+        return alive, creation, busy, t_new, acc, peak
+
+    alive0 = jnp.zeros((R, M), jnp.float32)
+    frozen = jnp.full((R, M), NEG, jnp.float32)
+    t0 = jnp.zeros((R,), jnp.float32)
+    acc0 = jnp.zeros((R, FLEET_ACC_COLS), jnp.float32)
+    peak0 = jnp.zeros((R,), jnp.float32)
+    if Q:
+        qneg = jnp.full((R, Q), NEG, jnp.float32)
+        out = jax.lax.fori_loop(
+            0, K, step, (alive0, frozen, frozen, t0, acc0, peak0, qneg, qneg, qneg)
+        )
+    else:
+        out = jax.lax.fori_loop(
+            0, K, step, (alive0, frozen, frozen, t0, acc0, peak0)
+        )
+    acc, peak = out[4], out[5]
+    col_iota = jnp.broadcast_to(
+        jnp.arange(FLEET_ACC_COLS, dtype=jnp.float32)[None, :],
+        (R, FLEET_ACC_COLS),
+    )
+    acc = jnp.where(col_iota == float(FLEET_ACC_COLS - 1), peak[:, None], acc)
+    return acc, (out[6] if Q else None)
+
+
+@functools.lru_cache(maxsize=1)
+def _fleet_ref_jit():
+    def counted(*args, **kw):
+        from repro.core.scenario import TRACE_COUNTS
+
+        TRACE_COUNTS["fleet_block_ref"] += 1
+        return fleet_sweep_ref(*args, **kw)
+
+    return jax.jit(
+        counted,
+        static_argnames=("slots", "queue_depth", "block_r", "prestamped"),
+    )
+
+
+@register_backend("ref", engines=("fleet",))
+def _ref_fleet_rows(
+    t_exp, limit, ncl, t_end, skip, dts, fids, warms, colds,
+    *, slots, queue_depth, prestamped, block_k,
+):
+    """The fleet launcher's ``ref`` mirror: no chunk padding needed — the
+    jitted mirror consumes the merged rows directly.  Returns
+    ``(acc[C, FLEET_ACC_COLS], qleft[C])`` like the Pallas launcher."""
+    del block_k
+    acc, qt = _fleet_ref_jit()(
+        jnp.asarray(t_exp, jnp.float32),
+        jnp.asarray(limit, jnp.float32),
+        jnp.asarray(ncl, jnp.float32),
+        jnp.asarray(t_end, jnp.float32),
+        jnp.asarray(skip, jnp.float32),
+        jnp.asarray(dts, jnp.float32),
+        jnp.asarray(fids, jnp.float32),
+        jnp.asarray(warms, jnp.float32),
+        jnp.asarray(colds, jnp.float32),
+        slots=slots,
+        queue_depth=queue_depth,
+        prestamped=prestamped,
+    )
+    C = acc.shape[0]
+    if qt is None:
+        qleft = jnp.zeros((C,), jnp.float32)
+    else:
+        qleft = (qt > NEG * 0.5).sum(axis=1).astype(jnp.float32)
+    return acc, qleft
+
+
 def faas_par_sweep_ref(
     t_exp,  # f32 [R]
     dts,

@@ -9,7 +9,7 @@ what-if workflow, wired to the live platform's configuration.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -27,6 +27,7 @@ class PlanResult:
     predicted_avg_replicas: float
     predicted_wasted_ratio: float
     predicted_goodput: Optional[float] = None  # set under a failure model
+    cluster_headroom: Optional[float] = None  # n_cluster - sum(avg replicas)
 
 
 def plan_expiration_threshold(
@@ -78,4 +79,109 @@ def plan_expiration_threshold(
         predicted_goodput=(
             float(best.goodput) if reliability is not None else None
         ),
+    )
+
+
+@dataclasses.dataclass
+class FleetPlan:
+    """Per-function keep-alive plan under a shared cluster budget."""
+
+    plans: Dict[str, PlanResult]  # function name -> chosen plan
+    feasible: bool  # predicted total replicas fit in n_cluster
+    n_cluster: float
+    predicted_total_replicas: float
+    cluster_headroom: float  # n_cluster - predicted_total (can be < 0)
+
+    @property
+    def thresholds(self) -> Dict[str, float]:
+        return {n: p.expiration_threshold for n, p in self.plans.items()}
+
+
+def plan_fleet_thresholds(
+    fleet,
+    cold_slo: float,
+    candidate_thresholds=(30.0, 60.0, 120.0, 300.0, 600.0, 1200.0),
+    sim_time: float = 2e4,
+    seed: int = 0,
+    replicas: int = 4,
+    execution: Optional[Execution] = None,
+) -> FleetPlan:
+    """Plan per-function expiration thresholds for a fleet under the
+    shared capacity of ``fleet.n_cluster``.
+
+    Two-stage greedy: (1) per function, sweep the candidate thresholds
+    through the single-function simulator and take the smallest one
+    meeting ``cold_slo``; (2) if the summed predicted replica counts
+    exceed the cluster budget, repeatedly step *down* the threshold
+    whose reduction frees the most replicas, until the plan fits or
+    every function sits at the smallest candidate (then
+    ``feasible=False`` — the budget is undersized for the SLO).
+    All sweeps run once up front, so the greedy loop is table lookups.
+    """
+    thresholds = sorted(float(t) for t in candidate_thresholds)
+    names = list(fleet.names)
+    tables: Dict[str, Tuple[np.ndarray, np.ndarray, np.ndarray]] = {}
+    for fi, fn in enumerate(fleet.functions):
+        base = fn.as_scenario(
+            sim_time=sim_time,
+            skip_time=min(100.0, sim_time / 100),
+            slots=fleet.slots,
+        )
+        result = scenario_sweep(
+            base,
+            over={"expiration_threshold": thresholds},
+            key=jax.random.fold_in(jax.random.key(seed), fi),
+            replicas=replicas,
+            execution=execution,
+        )
+        tables[fn.name] = (
+            np.asarray(result.cold_start_prob, np.float64),
+            np.asarray(result.avg_server_count, np.float64),
+            np.asarray(result.wasted_ratio, np.float64),
+        )
+
+    # Stage 1: smallest threshold meeting the SLO (largest otherwise).
+    chosen = {}
+    for name in names:
+        ok = tables[name][0] <= cold_slo
+        chosen[name] = int(np.argmax(ok)) if ok.any() else len(thresholds) - 1
+
+    def total() -> float:
+        return float(sum(tables[n][1][chosen[n]] for n in names))
+
+    # Stage 2: step down the function freeing the most replicas.
+    n_cluster = float(fleet.n_cluster)
+    while total() > n_cluster:
+        savings = {
+            n: tables[n][1][chosen[n]] - tables[n][1][chosen[n] - 1]
+            for n in names
+            if chosen[n] > 0
+        }
+        movable = {n: s for n, s in savings.items() if s > 0}
+        if movable:
+            chosen[max(movable, key=movable.get)] -= 1
+        elif savings:  # all remaining steps are lateral/worse; take any
+            chosen[max(savings, key=savings.get)] -= 1
+        else:
+            break  # everything at the floor: infeasible
+
+    predicted_total = total()
+    headroom = n_cluster - predicted_total
+    plans = {}
+    for name in names:
+        i = chosen[name]
+        cold, avg, wasted = tables[name]
+        plans[name] = PlanResult(
+            expiration_threshold=thresholds[i],
+            predicted_cold_prob=float(cold[i]),
+            predicted_avg_replicas=float(avg[i]),
+            predicted_wasted_ratio=float(wasted[i]),
+            cluster_headroom=headroom,
+        )
+    return FleetPlan(
+        plans=plans,
+        feasible=predicted_total <= n_cluster,
+        n_cluster=n_cluster,
+        predicted_total_replicas=predicted_total,
+        cluster_headroom=headroom,
     )

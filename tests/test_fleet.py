@@ -1,0 +1,519 @@
+"""Fleet subsystem tests (DESIGN.md §13): per-function pools under a
+shared cluster-capacity constraint.
+
+Layers:
+
+* **trivial-fleet invariant** — a 1-function FleetScenario with
+  ``n_cluster=inf`` is bitwise-equal to the single-function engines on
+  every backend (scan / pallas / ref) under the same key;
+* **oracle** — the fleet scan engine is decision-exact against the
+  pure-Python per-function-pool oracle for F heterogeneous functions
+  under a *binding* shared capacity with a bounded FIFO queue;
+* **cross-backend** — pallas == ref bitwise (including padded function
+  tail rows), both within 1e-3 of the f64 scan on every time integral;
+* **invariants** — per-function mass conservation with ``skip=0`` and
+  cluster occupancy never exceeding ``n_cluster``, on scan AND blocks;
+* **plumbing** — one-compile sweep pins, ``function``-axis selection by
+  catalog name and by position, JSON round-trip, pointed capability
+  errors, sharded sweep (subprocess), planner + catalog smoke.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fleet as fleet_mod
+from repro.core import scenario as scenario_mod
+from repro.core.execution import Execution
+from repro.core.fleet import (
+    FleetFunction,
+    FleetScenario,
+    fleet_run,
+    fleet_sweep,
+)
+from repro.core.processes import ExpSimProcess, GaussianSimProcess
+from repro.core.pyref import simulate_fleet_pyref
+from repro.core.scenario import Scenario
+from repro.core.scenario import run as scenario_run
+from repro.data.catalog import CATALOG, catalog_names, fleet_of, get_function
+from repro.kernels import faas_event_step as fe
+from repro.serving.autoscale import plan_fleet_thresholds
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SUMMARY_FIELDS = (
+    "n_cold",
+    "n_warm",
+    "n_reject",
+    "sum_cold_resp",
+    "sum_warm_resp",
+    "time_running",
+    "time_idle",
+)
+
+
+def _mk_fn(name, rate, warm, cold, t_exp, limit):
+    return FleetFunction(
+        name=name,
+        arrival_process=ExpSimProcess(rate=rate),
+        warm_service_process=ExpSimProcess(rate=1.0 / warm),
+        cold_service_process=ExpSimProcess(rate=1.0 / cold),
+        expiration_threshold=t_exp,
+        max_concurrency=limit,
+    )
+
+
+def hetero_fleet(n_cluster=6.0, queue_depth=2, sim_time=400.0):
+    """4 heterogeneous functions under a binding shared capacity."""
+    fns = (
+        _mk_fn("hot", 1.0, 1.5, 3.0, 30.0, 4),
+        _mk_fn("slow", 0.5, 4.0, 6.0, 60.0, 3),
+        _mk_fn("chatty", 2.0, 0.5, 1.5, 20.0, 5),
+        _mk_fn("batch", 0.3, 8.0, 10.0, 90.0, 2),
+    )
+    return FleetScenario(
+        functions=fns,
+        n_cluster=n_cluster,
+        queue_depth=queue_depth,
+        sim_time=sim_time,
+        skip_time=0.0,
+        slots=16,
+    )
+
+
+# ---------------------------------------------------------------------------
+# trivial-fleet invariant
+# ---------------------------------------------------------------------------
+
+
+class TestTrivialFleet:
+    @pytest.mark.parametrize("backend", ["scan", "ref", "pallas"])
+    def test_single_function_fleet_matches_single_engine_bitwise(
+        self, backend
+    ):
+        kw = dict(
+            arrival_process=ExpSimProcess(rate=1.0),
+            warm_service_process=ExpSimProcess(rate=1.0 / 1.5),
+            cold_service_process=ExpSimProcess(rate=1.0 / 3.0),
+            expiration_threshold=60.0,
+            max_concurrency=8,
+        )
+        fleet = FleetScenario(
+            functions=(FleetFunction(name="solo", **kw),),
+            sim_time=500.0,
+            skip_time=0.0,
+            slots=16,
+        )
+        scn = Scenario(sim_time=500.0, skip_time=0.0, slots=16, **kw)
+        key = jax.random.key(0)
+        fl = fleet_run(fleet, key, replicas=2, backend=backend).summary[
+            "solo"
+        ]
+        si = scenario_run(scn, key, replicas=2, backend=backend).summary
+        for f in SUMMARY_FIELDS:
+            a = np.asarray(getattr(fl, f))
+            b = np.asarray(getattr(si, f))
+            assert np.array_equal(a, b), (f, a, b)
+
+
+# ---------------------------------------------------------------------------
+# decision-exact oracle + invariants under binding capacity
+# ---------------------------------------------------------------------------
+
+
+class TestFleetOracle:
+    def test_scan_decision_exact_vs_pyref_with_queue(self):
+        fleet = hetero_fleet()
+        key = jax.random.key(1)
+        res = fleet_run(fleet, key, replicas=2, backend="scan")
+        staged = fleet_mod._stage_fleet(fleet, key, 2, None, fleet.sim_time)
+        assert staged["prestamped"]
+        fs = res.summary
+        t_exps = [f.expiration_threshold for f in fleet.functions]
+        limits = [f.max_concurrency for f in fleet.functions]
+        for r in range(2):
+            py = simulate_fleet_pyref(
+                staged["times"][r],
+                staged["fids"][r],
+                staged["warms"][r],
+                staged["colds"][r],
+                t_exps,
+                limits,
+                fleet.n_cluster,
+                fleet.queue_depth,
+                fleet.sim_time,
+                fleet.skip_time,
+                prestamped=True,
+            )
+            F = len(fleet.functions)
+            for name in ("n_cold", "n_warm", "n_reject"):
+                got = np.array(
+                    [getattr(fs.summaries[i], name)[r] for i in range(F)]
+                )
+                assert np.array_equal(got, getattr(py, name)), name
+            assert np.array_equal(fs.arrivals[:, r], py.arrivals)
+            assert np.array_equal(fs.enqueued[:, r], py.enqueued)
+            assert np.array_equal(fs.queue_served[:, r], py.queue_served)
+            assert np.array_equal(fs.queue_left[:, r], py.queue_left)
+            assert int(fs.peak_cluster[r]) == py.peak_cluster
+            np.testing.assert_allclose(
+                fs.queue_wait_sum[:, r], py.queue_wait_sum, rtol=1e-9
+            )
+            np.testing.assert_allclose(
+                np.array(
+                    [fs.summaries[i].time_running[r] for i in range(F)]
+                ),
+                py.time_running,
+                rtol=1e-9,
+                atol=1e-9,
+            )
+
+    @pytest.mark.parametrize("backend", ["scan", "ref", "pallas"])
+    def test_mass_conservation_and_capacity_cap(self, backend):
+        fleet = hetero_fleet()
+        res = fleet_run(
+            fleet, jax.random.key(2), replicas=2, backend=backend
+        )
+        fs = res.summary
+        F = len(fleet.functions)
+        n_cold = np.stack(
+            [np.asarray(fs.summaries[i].n_cold) for i in range(F)]
+        )
+        n_warm = np.stack(
+            [np.asarray(fs.summaries[i].n_warm) for i in range(F)]
+        )
+        n_rej = np.stack(
+            [np.asarray(fs.summaries[i].n_reject) for i in range(F)]
+        )
+        # skip_time == 0: every merged arrival is accounted for exactly once
+        np.testing.assert_array_equal(
+            np.asarray(fs.arrivals, np.float64),
+            (n_cold + n_warm + n_rej + np.asarray(fs.queue_left)).astype(
+                np.float64
+            ),
+        )
+        # queue mass: enqueued = served-from-queue + still-queued at the end
+        np.testing.assert_array_equal(
+            np.asarray(fs.enqueued, np.float64),
+            np.asarray(fs.queue_served, np.float64)
+            + np.asarray(fs.queue_left, np.float64),
+        )
+        # the shared constraint actually binds and is never exceeded
+        assert (np.asarray(fs.peak_cluster) <= fleet.n_cluster).all()
+        assert (np.asarray(fs.peak_cluster) == fleet.n_cluster).any()
+
+    def test_blocks_bitwise_equal_and_close_to_scan(self):
+        fleet = hetero_fleet()
+        key = jax.random.key(1)
+        scan = fleet_run(fleet, key, replicas=2, backend="scan")
+        ref = fleet_run(fleet, key, replicas=2, backend="ref")
+        pal = fleet_run(fleet, key, replicas=2, backend="pallas")
+        for nm in fleet.names:
+            for f in SUMMARY_FIELDS:
+                a = np.asarray(getattr(ref.summary[nm], f))
+                b = np.asarray(getattr(pal.summary[nm], f))
+                assert np.array_equal(a, b), (nm, f)  # pallas == ref bitwise
+        assert np.array_equal(
+            np.asarray(ref.summary.peak_cluster),
+            np.asarray(pal.summary.peak_cluster),
+        )
+        for nm in fleet.names:
+            s, b = scan.summary[nm], ref.summary[nm]
+            for f in ("n_cold", "n_warm", "n_reject"):
+                assert np.array_equal(
+                    np.asarray(getattr(s, f), np.int64),
+                    np.asarray(getattr(b, f), np.int64),
+                ), (nm, f)
+            for f in ("time_running", "time_idle", "sum_warm_resp"):
+                a = np.asarray(getattr(s, f), np.float64)
+                c = np.asarray(getattr(b, f), np.float64)
+                rel = np.max(np.abs(a - c) / np.maximum(np.abs(a), 1e-9))
+                assert rel < 1e-3, (nm, f, rel)
+
+    def test_infinite_cluster_and_limits_never_queue_or_reject(self):
+        base = hetero_fleet(n_cluster=float("inf"), queue_depth=2)
+        fleet = FleetScenario(
+            functions=tuple(
+                dataclasses.replace(f, max_concurrency=50)
+                for f in base.functions
+            ),
+            n_cluster=float("inf"),
+            queue_depth=2,
+            sim_time=base.sim_time,
+            skip_time=0.0,
+            slots=64,
+        )
+        fs = fleet_run(fleet, jax.random.key(3), replicas=2).summary
+        assert int(np.asarray(fs.enqueued).sum()) == 0
+        for s in fs.summaries:
+            assert int(np.asarray(s.n_reject).sum()) == 0
+        assert fs.cluster_utilization == 0.0  # undefined under inf capacity
+
+
+# ---------------------------------------------------------------------------
+# sweep plumbing: one compile, function axis, JSON round-trip
+# ---------------------------------------------------------------------------
+
+
+class TestFleetSweep:
+    def test_sweep_compiles_once_and_function_axis_selects(self):
+        fleet = fleet_of(
+            ["thumbnail", "crypto-sign", "graph-bfs"],
+            n_cluster=10,
+            sim_time=300.0,
+            skip_time=0.0,
+            slots=16,
+        )
+        key = jax.random.key(0)
+        before = scenario_mod.TRACE_COUNTS.get("fleet_sweep_scan", 0)
+        grids = [
+            fleet_sweep(
+                fleet,
+                over={"expiration_threshold": thr},
+                key=key,
+                replicas=2,
+            )
+            for thr in (
+                [30.0, 60.0, 120.0],
+                [10.0, 45.0, 200.0],
+                [15.0, 55.0, 95.0],
+            )
+        ]
+        # fleet x threshold grid = ONE trace across same-shape sweeps
+        assert (
+            scenario_mod.TRACE_COUNTS.get("fleet_sweep_scan", 0) - before
+            == 1
+        )
+        g = grids[0]
+        assert list(g.axes) == ["expiration_threshold", "function"]
+        assert g.axes["function"] == ("thumbnail", "crypto-sign", "graph-bfs")
+        assert g.cold_start_prob.shape == (3, 3)
+        by_name = g.sel(function="crypto-sign")
+        by_index = g.sel(function=1)
+        for f in ("cold_start_prob", "avg_response_time", "peak_cluster"):
+            np.testing.assert_array_equal(
+                getattr(by_name, f), getattr(by_index, f)
+            )
+        assert "function" not in by_name.axes
+
+    def test_to_dict_round_trips_through_json(self):
+        fleet = fleet_of(
+            ["thumbnail", "dynamic-html"],
+            n_cluster=8,
+            sim_time=250.0,
+            skip_time=0.0,
+            slots=16,
+        )
+        g = fleet_sweep(
+            fleet,
+            over={"expiration_threshold": [30.0, 90.0]},
+            key=jax.random.key(0),
+            replicas=1,
+        )
+        d = json.loads(json.dumps(g.to_dict()))
+        assert d["axes"]["function"] == ["thumbnail", "dynamic-html"]
+        np.testing.assert_allclose(
+            np.asarray(d["cold_start_prob"]), g.cold_start_prob
+        )
+        np.testing.assert_allclose(
+            np.asarray(d["cluster_utilization"]), g.cluster_utilization
+        )
+        assert np.asarray(d["peak_cluster"]).shape == (2, 2)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas"])
+    def test_block_sweep_traces_pinned(self, backend):
+        fleet = hetero_fleet(sim_time=250.0)
+        counters = (
+            scenario_mod.TRACE_COUNTS
+            if backend == "ref"
+            else fe.TRACE_COUNTS
+        )
+        cname = (
+            "fleet_block_ref" if backend == "ref" else "fleet_sweep_pallas"
+        )
+        before = counters.get(cname, 0)
+        for thr in ([20.0, 40.0], [25.0, 70.0]):
+            fleet_sweep(
+                fleet,
+                over={"expiration_threshold": thr},
+                key=jax.random.key(0),
+                replicas=1,
+                backend=backend,
+            )
+        assert counters.get(cname, 0) - before == 1
+
+
+# ---------------------------------------------------------------------------
+# capability scoping: pointed errors through the execution registry
+# ---------------------------------------------------------------------------
+
+
+class TestFleetCapability:
+    def setup_method(self):
+        self.fleet = hetero_fleet(sim_time=200.0)
+        self.key = jax.random.key(0)
+
+    def test_fused_draws_raises_pointed_error(self):
+        with pytest.raises(ValueError, match="draws='staged'"):
+            fleet_run(
+                self.fleet,
+                self.key,
+                replicas=1,
+                execution=Execution(draws="fused"),
+            )
+
+    def test_grid_shard_on_block_backend_raises_pointed_error(self):
+        with pytest.raises(ValueError, match="backend='scan'"):
+            fleet_run(
+                self.fleet,
+                self.key,
+                replicas=1,
+                backend="ref",
+                execution=Execution(
+                    devices=jax.devices(), shard="grid", backend="ref"
+                ),
+            )
+
+    def test_non_fleet_engine_raises_and_names_working_combo(self):
+        with pytest.raises(ValueError, match="scan"):
+            fleet_run(self.fleet, self.key, replicas=1, engine="temporal")
+
+    def test_too_many_functions_for_block_row_width(self):
+        fns = tuple(
+            _mk_fn(f"f{i}", 0.5, 1.0, 2.0, 30.0, 2) for i in range(9)
+        )
+        fleet = FleetScenario(
+            functions=fns, sim_time=120.0, skip_time=0.0, slots=8
+        )
+        with pytest.raises(ValueError, match="backend='scan'"):
+            fleet_run(fleet, self.key, replicas=1, backend="pallas")
+        fleet_run(fleet, self.key, replicas=1, backend="scan")  # works
+
+    def test_compile_time_axes_rejected(self):
+        with pytest.raises(ValueError, match="compile-time"):
+            fleet_sweep(
+                self.fleet,
+                over={"queue_depth": [0, 1]},
+                key=self.key,
+                replicas=1,
+            )
+
+
+def test_sharded_fleet_sweep_matches_single_device():
+    """`Execution(shard='grid')` on 4 fake CPU devices == unsharded."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = """
+    import jax, numpy as np
+    import repro.core  # x64
+    from repro.core import scenario as scenario_mod
+    from repro.core.execution import Execution
+    from repro.core.fleet import fleet_sweep
+    from repro.data.catalog import fleet_of
+    fleet = fleet_of(['thumbnail', 'crypto-sign', 'graph-bfs'],
+                     n_cluster=10, sim_time=250.0, skip_time=0.0, slots=16)
+    key = jax.random.key(0)
+    over = {'expiration_threshold': [20.0, 40.0, 80.0, 160.0, 320.0]}
+    plain = fleet_sweep(fleet, over=over, key=key, replicas=2)
+    shard = fleet_sweep(fleet, over=over, key=key, replicas=2,
+                        execution=Execution(devices=jax.devices(),
+                                            shard='grid'))
+    assert scenario_mod.TRACE_COUNTS.get('fleet_sweep_sharded') == 1
+    np.testing.assert_array_equal(plain.cold_start_prob,
+                                  shard.cold_start_prob)
+    np.testing.assert_array_equal(plain.peak_cluster, shard.peak_cluster)
+    print('SHARDED-OK')
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, (
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    )
+    assert "SHARDED-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# catalog + planner
+# ---------------------------------------------------------------------------
+
+
+class TestCatalogAndPlanner:
+    def test_catalog_profiles_are_well_formed(self):
+        assert len(catalog_names()) == 8
+        for name in catalog_names():
+            fn = CATALOG[name]
+            assert fn.name == name
+            assert fn.memory_gb > 0
+            assert fn.warm_service_process.mean() < (
+                fn.cold_service_process.mean()
+            )
+
+    def test_get_function_rate_override(self):
+        fn = get_function("thumbnail", rate=2.0)
+        assert fn.arrival_process.rate == pytest.approx(2.0)
+        assert CATALOG["thumbnail"].arrival_process.rate != 2.0
+
+    def test_fleet_of_unknown_override_rejected(self):
+        with pytest.raises(KeyError, match="not in the fleet"):
+            fleet_of(["thumbnail"], overrides={"nope": {"rate": 1.0}})
+
+    def test_fleet_costing_uses_per_function_memory(self):
+        fleet = fleet_of(
+            ["thumbnail", "ml-inference"],
+            n_cluster=16,
+            sim_time=250.0,
+            skip_time=0.0,
+            slots=16,
+        )
+        res = fleet_run(fleet, jax.random.key(0), replicas=2)
+        a = res.cost_of("thumbnail")
+        b = res.cost_of("ml-inference")
+        assert b.developer_total > a.developer_total  # 3GB vs 128MB
+        assert res.developer_cost == pytest.approx(
+            a.developer_total + b.developer_total
+        )
+
+    def test_plan_fleet_thresholds_respects_cluster_budget(self):
+        fleet = fleet_of(
+            ["thumbnail", "crypto-sign"],
+            n_cluster=4.0,
+            sim_time=2000.0,
+            skip_time=20.0,
+            slots=16,
+        )
+        plan = plan_fleet_thresholds(
+            fleet,
+            cold_slo=0.5,
+            candidate_thresholds=(5.0, 30.0, 120.0),
+            sim_time=2000.0,
+            replicas=2,
+        )
+        assert set(plan.plans) == {"thumbnail", "crypto-sign"}
+        assert plan.predicted_total_replicas >= 0
+        assert plan.cluster_headroom == pytest.approx(
+            plan.n_cluster - plan.predicted_total_replicas
+        )
+        for p in plan.plans.values():
+            assert p.cluster_headroom == pytest.approx(
+                plan.cluster_headroom
+            )
+        if plan.feasible:
+            assert plan.predicted_total_replicas <= plan.n_cluster
+        else:
+            # greedy exhausted: every function sits at the smallest candidate
+            assert all(
+                p.expiration_threshold == 5.0 for p in plan.plans.values()
+            )
