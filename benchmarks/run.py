@@ -979,6 +979,88 @@ def bench_fleet_sweep():
     )
 
 
+def bench_online_service():
+    """Online what-if service (DESIGN.md §14): the live re-fit→re-sweep
+    control loop.
+
+    ``us_per_call`` is the steady-state wall time per tick (dispatch +
+    drain of the previous tick, i.e. the overlapped cadence the service
+    sustains).  Derived pins the acceptance bars: traces=(warmup,steady)
+    must be (>=1, 0) — zero recompiles per tick after warmup — and
+    bitdiff=0 between a tick's grid and an offline ``sweep()`` on the
+    same fitted profile and key.
+    """
+    from repro.serving import (
+        OnlineConfig,
+        OnlineWhatIfService,
+        replay_arrivals,
+    )
+
+    if QUICK:
+        n_ticks, batch_span, replicas = 6, 60.0, 2
+        cfg = OnlineConfig(
+            rate_ceiling=4.0, n_bins=8, bin_width=30.0,
+            thresholds=(30.0, 120.0, 600.0), replicas=replicas,
+        )
+    else:
+        n_ticks, batch_span, replicas = 12, 120.0, 4
+        cfg = OnlineConfig(
+            rate_ceiling=4.0, n_bins=16, bin_width=60.0,
+            thresholds=(30.0, 60.0, 120.0, 300.0, 600.0, 1200.0),
+            replicas=replicas,
+        )
+    base = Scenario(
+        arrival_process=ExpSimProcess(rate=0.9),
+        warm_service_process=ExpSimProcess(rate=1 / 1.991),
+        cold_service_process=ExpSimProcess(rate=1 / 2.244),
+        slots=64,
+    )
+    svc = OnlineWhatIfService(base, cfg)
+    truth = SinusoidalRate(base=1.2, amplitude=0.6, period=800.0)
+    stream = replay_arrivals(truth, n_ticks * batch_span, key=jax.random.key(3))
+
+    tick_s, deltas = [], []
+    t_edge = 0.0
+    for i in range(n_ticks):
+        batch = stream[(stream >= t_edge) & (stream < t_edge + batch_span)]
+        t_edge += batch_span
+        svc.observe(batch)
+        before = scn_api.TRACE_COUNTS["online_tick"]
+        t0 = time.perf_counter()
+        svc.tick()
+        tick_s.append(time.perf_counter() - t0)
+        deltas.append(scn_api.TRACE_COUNTS["online_tick"] - before)
+    last = svc.flush()
+    warm_traces, steady_traces = deltas[0], max(deltas[1:])
+    steady = float(np.mean(tick_s[1:]))
+
+    off = svc.offline_equivalent(last)
+    bitdiff = max(
+        float(
+            np.abs(
+                np.asarray(getattr(off, f), np.float64)
+                - np.asarray(getattr(last.grid, f), np.float64)
+            ).max()
+        )
+        for f in ("cold_start_prob", "developer_cost", "goodput")
+    )
+    emit(
+        "bench_online_service",
+        steady * 1e6,
+        f"ticks={n_ticks} grid={len(cfg.thresholds)}x{replicas}rep "
+        f"steady_tick={steady*1e3:.1f}ms warmup={tick_s[0]*1e3:.1f}ms "
+        f"traces=({warm_traces},{steady_traces})(expect (>=1,0)) "
+        f"offline_bitdiff={bitdiff}(expect 0) "
+        f"thr={last.applied_threshold:.0f}s",
+        wall_clock_s={"warmup_tick": tick_s[0], "steady_tick": steady},
+        traces={
+            "online_tick_warmup": warm_traces,
+            "online_tick_steady": steady_traces,
+        },
+        bitdiff=bitdiff,
+    )
+
+
 def bench_kernel_event_step():
     """FaaS event-step kernel (jnp ref vs Pallas-interpret parity timing is
     covered in tests; here: throughput of the jit'd kernel ref)."""
@@ -1060,6 +1142,7 @@ def main(argv=None) -> None:
         bench_retry_sweep()
         bench_fused_rng()
         bench_fleet_sweep()
+        bench_online_service()
     else:
         bench_table1()
         bench_fig3_instance_distribution()
@@ -1074,6 +1157,7 @@ def main(argv=None) -> None:
         bench_retry_sweep()
         bench_fused_rng()
         bench_fleet_sweep()
+        bench_online_service()
         bench_fig1_concurrency_value()
         bench_routing_policy()
         bench_fig6_cold_start_probability()

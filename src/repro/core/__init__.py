@@ -57,6 +57,7 @@ from repro.core.reliability import (  # noqa: E402
 )
 from repro.core.scenario import (  # noqa: E402
     GridResult,
+    PendingSweep,
     Result,
     Scenario,
     StaticConfig,
@@ -105,6 +106,7 @@ __all__ = [
     "Scenario",
     "Result",
     "GridResult",
+    "PendingSweep",
     "Reliability",
     "FailurePolicy",
     "RetryPolicy",

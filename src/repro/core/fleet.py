@@ -180,6 +180,37 @@ class FleetScenario:
     def names(self) -> Tuple[str, ...]:
         return tuple(f.name for f in self.functions)
 
+    def with_rates(self, rates: Dict[str, float]) -> "FleetScenario":
+        """Copy with the named functions' arrival processes re-rated
+        (shape-preserving ``with_rate``; unnamed functions untouched).
+
+        The online fleet service's re-fit hook: each tick it re-levels
+        the catalog profiles to the observed per-function rates without
+        rebuilding the fleet.  Unknown names raise a pointed KeyError.
+        """
+        unknown = [n for n in rates if n not in self.names]
+        if unknown:
+            raise KeyError(
+                f"unknown function(s) {unknown}; fleet functions: "
+                f"{list(self.names)}"
+            )
+        fns = []
+        for f in self.functions:
+            if f.name in rates:
+                r = float(rates[f.name])
+                if not r > 0:
+                    raise ValueError(
+                        f"rate for {f.name!r} must be > 0, got {r}"
+                    )
+                fns.append(
+                    dataclasses.replace(
+                        f, arrival_process=f.arrival_process.with_rate(r)
+                    )
+                )
+            else:
+                fns.append(f)
+        return dataclasses.replace(self, functions=tuple(fns))
+
 
 # --------------------------------------------------------------------------
 # Static config / staging

@@ -368,6 +368,19 @@ class RateProfile:
     def max_rate(self) -> float:
         raise NotImplementedError
 
+    def with_rate(self, rate: float) -> "RateProfile":
+        """Return a copy rescaled so the *time-averaged* rate is ``rate``.
+
+        The profile's shape (relative bin heights / waveform) is
+        preserved; only the overall level moves.  This is the profile
+        analogue of :meth:`SimProcess.with_rate` — it lets rate sweeps
+        and the online what-if service re-level a fitted profile without
+        refitting it.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support rate rescaling"
+        )
+
 
 @dataclasses.dataclass(frozen=True)
 class PiecewiseConstantRate(RateProfile):
@@ -400,12 +413,37 @@ class PiecewiseConstantRate(RateProfile):
     def max_rate(self):
         return float(max(self.rates))
 
+    def mean_rate(self) -> float:
+        """Time-averaged rate over the covered span.
+
+        Bin weights are the edge-to-edge widths; the final (open) bin is
+        weighted by the mean finite-bin width — exact for fitted
+        profiles, whose bins are uniform.  With no interior edges the
+        profile is constant and its single rate is returned.
+        """
+        r = np.asarray(self.rates, dtype=np.float64)
+        if len(self.edges) == 0:
+            return float(r[0])
+        e = np.asarray(self.edges, dtype=np.float64)
+        widths = np.diff(np.concatenate([[0.0], e]))
+        widths = np.concatenate([widths, [widths.mean()]])
+        return float((r * widths).sum() / widths.sum())
+
+    def with_rate(self, rate):
+        if not rate > 0:
+            raise ValueError(f"rate must be > 0, got {rate}")
+        f = float(rate) / self.mean_rate()
+        return dataclasses.replace(
+            self, rates=tuple(float(r) * f for r in self.rates)
+        )
+
     @classmethod
     def fit(
         cls,
         timestamps,
         bin_width: float,
         rate_floor: float = 1e-9,
+        n_bins: Optional[int] = None,
     ) -> "PiecewiseConstantRate":
         """Estimate a profile from recorded arrival timestamps.
 
@@ -414,20 +452,68 @@ class PiecewiseConstantRate(RateProfile):
         invocation counts → ``bin_width=3600``), and turn per-bin counts
         into per-bin rates — the profile a what-if sweep (or an NHPP
         re-simulation) then consumes, closing the trace → profile →
-        what-if loop.  Empty bins clamp to ``rate_floor`` (rates must stay
-        positive for the thinning envelope); the final bin's rate extends
-        past the last edge, so re-simulating beyond the recorded horizon
-        holds the last observed level.
+        what-if loop.
+
+        Input hardening (this runs *live* in the online what-if service,
+        so a bad batch must fail loudly instead of poisoning the stream):
+        timestamps must be a 1-D, finite, non-negative, sorted array —
+        violations raise a pointed ``ValueError`` naming the first
+        offending index.  **Empty bins clamp to ``rate_floor``** (default
+        ``1e-9``): rates must stay strictly positive for the NHPP
+        thinning envelope, so a quiet bin can never produce a zero or
+        NaN rate mid-stream.  The final bin's rate extends past the last
+        edge, so re-simulating beyond the recorded horizon holds the
+        last observed level.
+
+        ``n_bins`` pins the bin count (timestamps are binned over
+        ``[0, n_bins * bin_width)``; any timestamp at or past that span
+        is rejected).  A pinned bin count gives live re-fits a stable
+        profile *shape* tick over tick — only the rate values move —
+        which is what keeps the online service's incremental sweeps on
+        the compile cache.
         """
         ts = np.asarray(timestamps, dtype=np.float64)
         if ts.ndim != 1 or len(ts) < 1:
-            raise ValueError("need a 1-D array of >= 1 arrival timestamps")
-        if (ts < 0).any() or (np.diff(ts) < 0).any():
-            raise ValueError("timestamps must be non-negative and sorted")
-        if bin_width <= 0:
-            raise ValueError("bin_width must be positive")
-        # half-open bin membership [k·w, (k+1)·w), like the metric windows
-        n_bins = int(np.floor(ts.max() / bin_width)) + 1
+            raise ValueError(
+                "need a 1-D array of >= 1 arrival timestamps, got shape "
+                f"{ts.shape}"
+            )
+        if not np.isfinite(ts).all():
+            bad = int(np.flatnonzero(~np.isfinite(ts))[0])
+            raise ValueError(
+                f"timestamps must be finite; timestamps[{bad}] = {ts[bad]}"
+            )
+        if (ts < 0).any():
+            bad = int(np.flatnonzero(ts < 0)[0])
+            raise ValueError(
+                f"timestamps must be >= 0; timestamps[{bad}] = {ts[bad]}"
+            )
+        diffs = np.diff(ts)
+        if (diffs < 0).any():
+            bad = int(np.flatnonzero(diffs < 0)[0]) + 1
+            raise ValueError(
+                "timestamps must be sorted ascending; timestamps"
+                f"[{bad}] = {ts[bad]} < timestamps[{bad - 1}] = {ts[bad - 1]}"
+            )
+        if not bin_width > 0:
+            raise ValueError(f"bin_width must be positive, got {bin_width}")
+        if not rate_floor > 0:
+            raise ValueError(
+                f"rate_floor must be positive (rates feed the thinning "
+                f"envelope), got {rate_floor}"
+            )
+        if n_bins is None:
+            # half-open bin membership [k·w, (k+1)·w), like metric windows
+            n_bins = int(np.floor(ts.max() / bin_width)) + 1
+        else:
+            n_bins = int(n_bins)
+            if n_bins < 1:
+                raise ValueError(f"n_bins must be >= 1, got {n_bins}")
+            if ts.max() >= n_bins * bin_width:
+                raise ValueError(
+                    f"timestamps must lie in [0, n_bins * bin_width) = "
+                    f"[0, {n_bins * bin_width}); max is {ts.max()}"
+                )
         counts, _ = np.histogram(
             ts, bins=n_bins, range=(0.0, n_bins * bin_width)
         )
@@ -464,6 +550,12 @@ class SinusoidalRate(RateProfile):
     def max_rate(self):
         return self.base * (1.0 + self.amplitude)
 
+    def with_rate(self, rate):
+        # time-averaged rate over a full period is exactly ``base``
+        if not rate > 0:
+            raise ValueError(f"rate must be > 0, got {rate}")
+        return dataclasses.replace(self, base=float(rate))
+
 
 @dataclasses.dataclass(frozen=True)
 class NHPPArrivalProcess(SimProcess, ArrivalTimeProcess):
@@ -486,6 +578,11 @@ class NHPPArrivalProcess(SimProcess, ArrivalTimeProcess):
 
     def mean(self):
         return 1.0 / self.profile.max_rate()
+
+    def with_rate(self, rate):
+        """Re-level the intensity profile to a time-averaged ``rate``
+        (shape-preserving; delegates to ``profile.with_rate``)."""
+        return dataclasses.replace(self, profile=self.profile.with_rate(rate))
 
     def _raw_sample(self, key, shape):
         raise NotImplementedError(

@@ -323,11 +323,19 @@ class Scenario:
             )
         if self.arrival_rate is not None:
             if isinstance(ap, ArrivalTimeProcess):
-                raise ValueError(
-                    "arrival_rate cannot re-rate a timestamp process "
-                    "(NHPP/MMPP/trace); sweep over rate profiles instead"
-                )
-            ap = _rated(ap, self.arrival_rate)
+                # NHPP re-levels its profile shape-preservingly via
+                # with_rate; MMPP/trace have no rate handle and must not
+                # silently fall back to exponential (_rated would).
+                try:
+                    ap = ap.with_rate(float(self.arrival_rate))
+                except NotImplementedError:
+                    raise ValueError(
+                        "arrival_rate cannot re-rate a timestamp process "
+                        f"({type(ap).__name__}); sweep over rate profiles "
+                        "instead"
+                    ) from None
+            else:
+                ap = _rated(ap, self.arrival_rate)
             # Fold the rate into the process and clear the field: a stale
             # arrival_rate would silently re-rate any later
             # replace(arrival_process=...) override (e.g. a per-cell grid
@@ -749,6 +757,10 @@ class GridResult:
         return tuple(len(v) for v in self.axes.values())
 
     def axis(self, name: str) -> tuple:
+        if name not in self.axes:
+            raise KeyError(
+                f"unknown axis {name!r}; axes: {list(self.axes)}"
+            )
         return self.axes[name]
 
     def _index_of(self, name: str, value) -> int:
@@ -827,6 +839,29 @@ class GridResult:
         return out
 
 
+class PendingSweep:
+    """A dispatched-but-not-yet-drained :func:`sweep`.
+
+    ``sweep(..., deferred=True)`` returns one of these immediately after
+    the jitted device call(s) are enqueued (JAX async dispatch);
+    :meth:`result` blocks on the device→host transfer and assembles the
+    :class:`GridResult`.  Because the deferred path dispatches the exact
+    same executable on the exact same operands, ``result()`` is
+    bitwise-equal to the synchronous sweep.  ``result()`` memoizes, so
+    draining twice is free.
+    """
+
+    def __init__(self, finish):
+        self._finish = finish
+        self._result: Optional[GridResult] = None
+
+    def result(self) -> GridResult:
+        if self._result is None:
+            self._result = self._finish()
+            self._finish = None  # drop the captured device buffers
+        return self._result
+
+
 def _apply_axis(scn: Scenario, name: str, value) -> Scenario:
     """One scenario-field override, with the workload conveniences."""
     if name == "profile":
@@ -866,7 +901,8 @@ def sweep(
     backend: Optional[str] = None,
     execution: Optional[Execution] = None,
     steps: Optional[int] = None,
-) -> GridResult:
+    deferred: bool = False,
+):
     """Product-grid what-if sweep over arbitrary scenario fields.
 
     ``over`` maps field names to value lists; the result grid has one
@@ -881,6 +917,14 @@ def sweep(
     split across a 1-D device mesh via ``shard_map`` — padded to a
     multiple of the device count, still one compile, and bitwise-equal
     per cell to the single-device sweep.
+
+    ``deferred=True`` returns a :class:`PendingSweep` as soon as the
+    device launch(es) are *enqueued* (JAX async dispatch) instead of a
+    finished :class:`GridResult`; call ``.result()`` to drain.  Native
+    scan backend only — the ops and executable are the synchronous
+    path's, so the drained grid is bitwise-equal to ``deferred=False``.
+    The online what-if service uses this to overlap a tick's simulation
+    with arrival ingestion.
     """
     plan = plan_of(execution, None, backend)
     espec, bspec = plan.resolve()
@@ -1109,13 +1153,21 @@ def sweep(
                 n_steps=int(n_steps),
             )
 
-    # ---- static combos: one compile each (outermost Python loop)
+    # ---- static combos: one compile each (outermost Python loop).
+    # Native (scan) launches are *dispatched* here and drained in
+    # _finish(); block launchers convert to numpy internally, so their
+    # collector is the already-materialized result.
     static_combos = list(
         itertools.product(*[vals[n] for n in static_names])
     ) or [()]
     S = len(static_combos)
-    all_summaries: list = []
-    windowed: list = []
+    if deferred and bspec.kind != "native":
+        raise ValueError(
+            "deferred=True needs the native scan backend (block backends "
+            f"drain device results inside their launcher); got backend="
+            f"{plan.backend!r}"
+        )
+    collectors: list = []
     shared_bounds: Optional[np.ndarray] = None
     for combo in static_combos:
         scn_s = base
@@ -1128,91 +1180,112 @@ def sweep(
             else samples
         )
         if bspec.kind == "native":
-            cells, win = _scan_cells(
-                scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
-                prestamped, plan, rely_rows=rely_rows, fused=fused_scan,
+            collectors.append(
+                _scan_dispatch(
+                    scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
+                    prestamped, plan, rely_rows=rely_rows, fused=fused_scan,
+                )
             )
         else:
-            cells, win = _block_cells(
+            res = _block_cells(
                 scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
                 bspec, plan, rely_rows=rely_rows, fused=fused_block,
             )
-        all_summaries.extend(cells)
-        windowed.append(win)
+            collectors.append(lambda res=res: res)
         if "window_bounds" not in static_names and scn_s.window_bounds:
             shared_bounds = np.asarray(scn_s.window_bounds)
 
-    # ---- assemble the named-axis grid (internal order: static, draw, param)
-    internal_names = static_names + draw_names + param_names
-    internal_dims = tuple(dims[n] for n in internal_names) or (1,)
-    perm = [internal_names.index(n) for n in names]
+    def _finish() -> GridResult:
+        all_summaries: list = []
+        windowed: list = []
+        for col in collectors:
+            cells, win = col()
+            all_summaries.extend(cells)
+            windowed.append(win)
 
-    def _grid(values, trailing=0):
-        arr = np.asarray(values).reshape(
-            internal_dims + ((values.shape[-1],) if trailing else ())
-        )
-        return np.transpose(arr, perm + ([len(internal_dims)] if trailing else []))
+        # ---- assemble the named-axis grid (internal order: static,
+        # draw, param)
+        internal_names = static_names + draw_names + param_names
+        internal_dims = tuple(dims[n] for n in internal_names) or (1,)
+        perm = [internal_names.index(n) for n in names]
 
-    billing = base.billing
-    costs = [estimate_cost(s, billing) for s in all_summaries]
-    metric = lambda f: _grid(
-        np.asarray([f(s) for s in all_summaries], np.float64)
-    )
-    summaries_grid = np.empty((len(all_summaries),), dtype=object)
-    summaries_grid[:] = all_summaries
-    summaries_grid = _grid(summaries_grid)
-
-    w_cold = w_arr = w_inst = None
-    # Windowed grids need one shared window grid: a swept window_bounds
-    # axis yields per-combo W's that cannot stack (summaries keep the
-    # per-cell windows either way).
-    if (
-        "window_bounds" not in static_names
-        and windowed
-        and all(w is not None for w in windowed)
-    ):
-        stack = {
-            k: np.concatenate([w[k] for w in windowed])
-            for k in ("cold", "arrivals")
-        }
-        w_cold = _grid(stack["cold"], trailing=1)
-        w_arr = _grid(stack["arrivals"], trailing=1)
-        if all(w.get("instances") is not None for w in windowed):
-            w_inst = _grid(
-                np.concatenate([w["instances"] for w in windowed]), trailing=1
+        def _grid(values, trailing=0):
+            arr = np.asarray(values).reshape(
+                internal_dims + ((values.shape[-1],) if trailing else ())
+            )
+            return np.transpose(
+                arr, perm + ([len(internal_dims)] if trailing else [])
             )
 
-    metrics = dict(
-        cold_start_prob=metric(lambda s: s.cold_start_prob),
-        rejection_prob=metric(lambda s: s.rejection_prob),
-        avg_server_count=metric(lambda s: s.avg_server_count),
-        avg_running_count=metric(lambda s: s.avg_running_count),
-        avg_idle_count=metric(lambda s: s.avg_idle_count),
-        wasted_ratio=metric(lambda s: s.avg_wasted_ratio),
-        avg_response_time=metric(lambda s: s.avg_response_time),
-        developer_cost=_grid(np.asarray([c.developer_total for c in costs])),
-        provider_cost=_grid(np.asarray([c.provider_infra_cost for c in costs])),
-        goodput=metric(lambda s: s.goodput),
-    )
-    ok = np.ones(metrics["cold_start_prob"].shape, bool)
-    for m in metrics.values():
-        ok &= np.isfinite(m)
-    if not ok.all():
-        _warn_nonfinite({n: vals[n] for n in names}, ok)
+        billing = base.billing
+        costs = [estimate_cost(s, billing) for s in all_summaries]
+        metric = lambda f: _grid(
+            np.asarray([f(s) for s in all_summaries], np.float64)
+        )
+        summaries_grid = np.empty((len(all_summaries),), dtype=object)
+        summaries_grid[:] = all_summaries
+        summaries_grid = _grid(summaries_grid)
 
-    return GridResult(
-        axes={n: vals[n] for n in names},
-        replicas=R,
-        backend=plan.backend,
-        execution=plan,
-        summaries=summaries_grid,
-        **metrics,
-        ok=ok,
-        window_bounds=shared_bounds,
-        windowed_cold_prob=w_cold,
-        windowed_arrivals=w_arr,
-        windowed_instance_count=w_inst,
-    )
+        w_cold = w_arr = w_inst = None
+        # Windowed grids need one shared window grid: a swept window_bounds
+        # axis yields per-combo W's that cannot stack (summaries keep the
+        # per-cell windows either way).
+        if (
+            "window_bounds" not in static_names
+            and windowed
+            and all(w is not None for w in windowed)
+        ):
+            stack = {
+                k: np.concatenate([w[k] for w in windowed])
+                for k in ("cold", "arrivals")
+            }
+            w_cold = _grid(stack["cold"], trailing=1)
+            w_arr = _grid(stack["arrivals"], trailing=1)
+            if all(w.get("instances") is not None for w in windowed):
+                w_inst = _grid(
+                    np.concatenate([w["instances"] for w in windowed]),
+                    trailing=1,
+                )
+
+        metrics = dict(
+            cold_start_prob=metric(lambda s: s.cold_start_prob),
+            rejection_prob=metric(lambda s: s.rejection_prob),
+            avg_server_count=metric(lambda s: s.avg_server_count),
+            avg_running_count=metric(lambda s: s.avg_running_count),
+            avg_idle_count=metric(lambda s: s.avg_idle_count),
+            wasted_ratio=metric(lambda s: s.avg_wasted_ratio),
+            avg_response_time=metric(lambda s: s.avg_response_time),
+            developer_cost=_grid(
+                np.asarray([c.developer_total for c in costs])
+            ),
+            provider_cost=_grid(
+                np.asarray([c.provider_infra_cost for c in costs])
+            ),
+            goodput=metric(lambda s: s.goodput),
+        )
+        ok = np.ones(metrics["cold_start_prob"].shape, bool)
+        for m in metrics.values():
+            ok &= np.isfinite(m)
+        if not ok.all():
+            _warn_nonfinite({n: vals[n] for n in names}, ok)
+
+        return GridResult(
+            axes={n: vals[n] for n in names},
+            replicas=R,
+            backend=plan.backend,
+            execution=plan,
+            summaries=summaries_grid,
+            **metrics,
+            ok=ok,
+            window_bounds=shared_bounds,
+            windowed_cold_prob=w_cold,
+            windowed_arrivals=w_arr,
+            windowed_instance_count=w_inst,
+        )
+
+    if deferred:
+        return PendingSweep(_finish)
+    return _finish()
 
 
 def _warn_nonfinite(axes: dict, ok: np.ndarray) -> None:
@@ -1238,7 +1311,26 @@ def _scan_cells(
     scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
     rely_rows=None, fused=None,
 ):
-    """One f64 sweep launch → per-cell summaries.
+    """One f64 sweep launch → per-cell summaries (dispatch + drain)."""
+    return _scan_dispatch(
+        scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped,
+        plan, rely_rows=rely_rows, fused=fused,
+    )()
+
+
+def _scan_dispatch(
+    scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
+    rely_rows=None, fused=None,
+):
+    """Enqueue one f64 sweep launch; return a zero-arg collector.
+
+    The jitted device call is *dispatched* (JAX async dispatch) before
+    this returns — the collector then blocks on the device→host transfer
+    (``np.asarray``) and builds the per-cell summaries.  Splitting the
+    two lets ``sweep(deferred=True)`` overlap the simulation with host
+    work (the online service ingests arrivals while the sweep runs);
+    the ops and executable are identical either way, so a deferred
+    sweep's results are bitwise-equal to the synchronous path's.
 
     ``plan.shard == "grid"`` runs the same vmapped scan under a
     ``shard_map`` over the plan's 1-D device mesh: the flattened row axis
@@ -1297,73 +1389,81 @@ def _scan_cells(
                 "ignore", message="Some donated buffers were not usable"
             )
             acc, t_last = fn(scfg, params, *samples)
-    acc = jax.tree.map(lambda x: np.asarray(x)[:C], acc)
-    t_last = np.asarray(t_last)[:C]
-    if not prestamped and (t_last < sim_rows).any():
-        raise RuntimeError(
-            "pre-drawn arrivals ended before sim_time "
-            f"(min final t {t_last.min():.1f}); pass a larger `steps`"
-        )
-    if acc["overflow"].sum() > 0:
-        raise RuntimeError(
-            "instance-pool overflow during sweep; raise Scenario.slots"
-        )
-    n_cells = C // R
-    cell = jax.tree.map(lambda x: x.reshape((n_cells, R) + x.shape[1:]), acc)
-    bounds = np.asarray(wb, np.float64) if wb else None
-    widths = np.diff(bounds) if wb else None
-    summaries = []
-    w_cold = np.zeros((n_cells, W)) if W else None
-    w_arr = np.zeros((n_cells, W)) if W else None
-    w_inst = np.zeros((n_cells, W)) if W else None
-    for c in range(n_cells):
-        row = c * R
-        windows = None
-        if W:
-            windows = WindowedMetrics(
-                bounds=bounds,
-                n_cold=cell["w_cold"][c],
-                n_warm=cell["w_warm"][c],
-                n_arrivals=cell["w_arrivals"][c],
-                time_running=cell["w_run_t"][c],
-                time_idle=cell["w_idle_t"][c],
-                n_fail=cell["w_fail"][c] if scfg.reliability else None,
+
+    def collect():
+        acc_h = jax.tree.map(lambda x: np.asarray(x)[:C], acc)
+        t_h = np.asarray(t_last)[:C]
+        if not prestamped and (t_h < sim_rows).any():
+            raise RuntimeError(
+                "pre-drawn arrivals ended before sim_time "
+                f"(min final t {t_h.min():.1f}); pass a larger `steps`"
             )
-            w_cold[c] = windows.cold_start_prob
-            w_arr[c] = windows.n_arrivals.mean(axis=0)
-            w_inst[c] = (
-                windows.time_running + windows.time_idle
-            ).mean(axis=0) / widths
-        rely_kw = {}
-        if scfg.reliability:
-            rely_kw = dict(
-                n_timeout=cell["n_timeout"][c],
-                n_fail=cell["n_fail"][c],
-                n_retry=cell["n_retry"][c],
-                n_abandon=cell["n_abandon"][c],
+        if acc_h["overflow"].sum() > 0:
+            raise RuntimeError(
+                "instance-pool overflow during sweep; raise Scenario.slots"
             )
-        summaries.append(
-            SimulationSummary(
-                n_cold=cell["n_cold"][c],
-                n_warm=cell["n_warm"][c],
-                n_reject=cell["n_reject"][c],
-                time_running=cell["time_running"][c],
-                time_idle=cell["time_idle"][c],
-                sum_cold_resp=cell["sum_cold_resp"][c],
-                sum_warm_resp=cell["sum_warm_resp"][c],
-                lifespan_sum=cell["lifespan_sum"][c],
-                lifespan_count=cell["lifespan_count"][c],
-                measured_time=float(sim_rows[row] - skip_rows[row]),
-                histogram=cell["hist"][c] if scfg.track_histogram else None,
-                overflow=cell["overflow"][c],
-                windows=windows,
-                **rely_kw,
-            )
+        n_cells = C // R
+        cell = jax.tree.map(
+            lambda x: x.reshape((n_cells, R) + x.shape[1:]), acc_h
         )
-    win = (
-        dict(cold=w_cold, arrivals=w_arr, instances=w_inst) if W else None
-    )
-    return summaries, win
+        bounds = np.asarray(wb, np.float64) if wb else None
+        widths = np.diff(bounds) if wb else None
+        summaries = []
+        w_cold = np.zeros((n_cells, W)) if W else None
+        w_arr = np.zeros((n_cells, W)) if W else None
+        w_inst = np.zeros((n_cells, W)) if W else None
+        for c in range(n_cells):
+            row = c * R
+            windows = None
+            if W:
+                windows = WindowedMetrics(
+                    bounds=bounds,
+                    n_cold=cell["w_cold"][c],
+                    n_warm=cell["w_warm"][c],
+                    n_arrivals=cell["w_arrivals"][c],
+                    time_running=cell["w_run_t"][c],
+                    time_idle=cell["w_idle_t"][c],
+                    n_fail=cell["w_fail"][c] if scfg.reliability else None,
+                )
+                w_cold[c] = windows.cold_start_prob
+                w_arr[c] = windows.n_arrivals.mean(axis=0)
+                w_inst[c] = (
+                    windows.time_running + windows.time_idle
+                ).mean(axis=0) / widths
+            rely_kw = {}
+            if scfg.reliability:
+                rely_kw = dict(
+                    n_timeout=cell["n_timeout"][c],
+                    n_fail=cell["n_fail"][c],
+                    n_retry=cell["n_retry"][c],
+                    n_abandon=cell["n_abandon"][c],
+                )
+            summaries.append(
+                SimulationSummary(
+                    n_cold=cell["n_cold"][c],
+                    n_warm=cell["n_warm"][c],
+                    n_reject=cell["n_reject"][c],
+                    time_running=cell["time_running"][c],
+                    time_idle=cell["time_idle"][c],
+                    sum_cold_resp=cell["sum_cold_resp"][c],
+                    sum_warm_resp=cell["sum_warm_resp"][c],
+                    lifespan_sum=cell["lifespan_sum"][c],
+                    lifespan_count=cell["lifespan_count"][c],
+                    measured_time=float(sim_rows[row] - skip_rows[row]),
+                    histogram=cell["hist"][c]
+                    if scfg.track_histogram
+                    else None,
+                    overflow=cell["overflow"][c],
+                    windows=windows,
+                    **rely_kw,
+                )
+            )
+        win = (
+            dict(cold=w_cold, arrivals=w_arr, instances=w_inst) if W else None
+        )
+        return summaries, win
+
+    return collect
 
 
 @functools.lru_cache(maxsize=None)

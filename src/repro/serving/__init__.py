@@ -1,4 +1,22 @@
 """Serverless model-serving platform: SimFaaS semantics as the control
 plane over model replicas (scale-per-request, newest-first routing,
 expiration-threshold reaping), with the core simulator as its offline
-capacity planner."""
+capacity planner (:mod:`repro.serving.autoscale`) and as a live
+what-if service (:mod:`repro.serving.online`)."""
+
+from repro.serving.autoscale import (  # noqa: F401
+    FleetPlan,
+    PlanResult,
+    ThresholdGovernor,
+    plan_expiration_threshold,
+    plan_fleet_thresholds,
+    select_threshold,
+)
+from repro.serving.online import (  # noqa: F401
+    FleetRecommendation,
+    OnlineConfig,
+    OnlineFleetWhatIfService,
+    OnlineWhatIfService,
+    Recommendation,
+    replay_arrivals,
+)

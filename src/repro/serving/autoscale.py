@@ -28,6 +28,75 @@ class PlanResult:
     predicted_wasted_ratio: float
     predicted_goodput: Optional[float] = None  # set under a failure model
     cluster_headroom: Optional[float] = None  # n_cluster - sum(avg replicas)
+    predicted_cost: Optional[float] = None  # developer cost at the choice
+
+
+def select_threshold(result, cold_slo: float) -> PlanResult:
+    """Pick the smallest threshold on a swept ``expiration_threshold``
+    axis whose predicted cold-start probability meets ``cold_slo`` (the
+    largest candidate when none does) and read the cell's metrics into a
+    :class:`PlanResult`.
+
+    The one selection rule shared by the offline planners and the online
+    what-if service — both consume the same :class:`GridResult`
+    plumbing, so a live recommendation and an offline plan on the same
+    grid are the same numbers.
+    """
+    thresholds = list(result.axis("expiration_threshold"))
+    ok = np.asarray(result.cold_start_prob) <= cold_slo
+    chosen = thresholds[int(np.argmax(ok))] if ok.any() else thresholds[-1]
+    best = result.sel(expiration_threshold=chosen)
+    return PlanResult(
+        expiration_threshold=float(chosen),
+        predicted_cold_prob=float(best.cold_start_prob),
+        predicted_avg_replicas=float(best.avg_server_count),
+        predicted_wasted_ratio=float(best.wasted_ratio),
+        predicted_goodput=float(best.goodput),
+        predicted_cost=float(best.developer_cost),
+    )
+
+
+@dataclasses.dataclass
+class ThresholdGovernor:
+    """Hysteresis between raw per-tick recommendations and the applied
+    keep-alive threshold, so a noisy rate estimate cannot thrash the
+    platform's configuration.
+
+    Two filters compose: a proposal whose relative distance from the
+    applied threshold is within ``deadband`` is ignored outright, and a
+    proposal outside the deadband must repeat for ``patience``
+    consecutive ticks before it is applied.  ``update`` returns the
+    (possibly unchanged) applied threshold.
+    """
+
+    patience: int = 2
+    deadband: float = 0.0
+    applied: Optional[float] = None
+    _candidate: Optional[float] = dataclasses.field(default=None, repr=False)
+    _streak: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.patience < 1:
+            raise ValueError(f"patience must be >= 1, got {self.patience}")
+        if self.deadband < 0:
+            raise ValueError(f"deadband must be >= 0, got {self.deadband}")
+
+    def update(self, proposed: float) -> float:
+        proposed = float(proposed)
+        if self.applied is None:  # first proposal seeds the state
+            self.applied = proposed
+            return self.applied
+        if abs(proposed - self.applied) <= self.deadband * abs(self.applied):
+            self._candidate, self._streak = None, 0
+            return self.applied
+        if proposed == self._candidate:
+            self._streak += 1
+        else:
+            self._candidate, self._streak = proposed, 1
+        if self._streak >= self.patience:
+            self.applied = self._candidate
+            self._candidate, self._streak = None, 0
+        return self.applied
 
 
 def plan_expiration_threshold(
@@ -68,18 +137,10 @@ def plan_expiration_threshold(
         replicas=replicas,
         execution=execution,
     )
-    ok = result.cold_start_prob <= cold_slo
-    chosen = thresholds[int(np.argmax(ok))] if ok.any() else thresholds[-1]
-    best = result.sel(expiration_threshold=chosen)
-    return PlanResult(
-        expiration_threshold=chosen,
-        predicted_cold_prob=float(best.cold_start_prob),
-        predicted_avg_replicas=float(best.avg_server_count),
-        predicted_wasted_ratio=float(best.wasted_ratio),
-        predicted_goodput=(
-            float(best.goodput) if reliability is not None else None
-        ),
-    )
+    plan = select_threshold(result, cold_slo)
+    if reliability is None:  # goodput is a failure-model metric here
+        plan.predicted_goodput = None
+    return plan
 
 
 @dataclasses.dataclass

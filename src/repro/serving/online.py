@@ -1,0 +1,562 @@
+"""Online what-if service — the live control loop (DESIGN.md §14).
+
+Everything else in the repo is offline: fit a profile once, sweep once,
+read the grid.  This module closes the loop the paper's provider-facing
+pitch implies: ingest a *live* arrival stream, maintain a rolling-window
+EMA-blended rate estimate, periodically re-fit a
+:class:`PiecewiseConstantRate`, re-sweep the keep-alive threshold grid
+on the existing one-compile machinery, and emit a
+:class:`Recommendation` through the :class:`ThresholdGovernor`
+hysteresis in :mod:`repro.serving.autoscale`.
+
+The hot requirement is **zero recompiles per tick after warmup**.  Every
+shape that reaches the jitted sweep is pinned at construction time:
+
+* the profile's *bin count* (``OnlineConfig.n_bins`` — ``fit``'s
+  ``n_bins=`` keeps the re-fit shape-stable while only the rate values
+  move, and rates/boundaries are traced ``WorkloadParams``),
+* the candidate-stream width (``steps`` sized once from the
+  ``rate_ceiling`` envelope: NHPP thinning draws candidates at the
+  profile's ``max_rate``, so a buffer that covers the horizon at the
+  ceiling covers it for every estimate the clamp can produce),
+* the threshold grid, replica count, and ``StaticConfig``.
+
+``TRACE_COUNTS["online_tick"]`` accumulates the number of *new traces*
+each tick caused (the delta of every underlying trace counter around the
+dispatch): 1 on the warmup tick, 0 in steady state.
+
+Ticks overlap simulation with ingestion via JAX async dispatch:
+``sweep(deferred=True)`` enqueues tick *t*'s device call and returns
+immediately; the service then drains tick *t−1*'s results while the
+device crunches *t*.  The deferred path dispatches the exact same
+executable as the synchronous one, so a tick's recommendation is
+bitwise-equal to an offline ``sweep()`` on the same fitted profile and
+key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.execution import Execution, plan_of
+from repro.core.processes import (
+    ArrivalTimeProcess,
+    NHPPArrivalProcess,
+    PiecewiseConstantRate,
+    RateProfile,
+    TraceArrivalProcess,
+)
+from repro.core.scenario import Scenario, TRACE_COUNTS
+from repro.core.scenario import sweep as scenario_sweep
+from repro.serving.autoscale import (
+    PlanResult,
+    ThresholdGovernor,
+    select_threshold,
+)
+
+
+def _trace_total() -> int:
+    """Sum of every underlying trace counter (scenario + kernels)."""
+    total = sum(v for k, v in TRACE_COUNTS.items() if k != "online_tick")
+    kmod = sys.modules.get("repro.kernels.faas_event_step")
+    if kmod is not None:
+        total += sum(kmod.TRACE_COUNTS.values())
+    return total
+
+
+def replay_arrivals(source, t_end: float, key=None) -> np.ndarray:
+    """Materialize arrival timestamps on ``[0, t_end)`` from a recorded
+    trace, a :class:`RateProfile`, or a timestamp arrival process — the
+    replay feed for :meth:`OnlineWhatIfService.observe`.
+
+    Traces replay exactly; profiles are lowered to NHPP and sampled
+    (``key`` required), growing the candidate buffer until the thinning
+    stream covers the horizon.
+    """
+    if not t_end > 0:
+        raise ValueError(f"t_end must be > 0, got {t_end}")
+    if isinstance(source, TraceArrivalProcess):
+        ts = np.asarray(source.timestamps, np.float64)
+        return ts[ts < t_end]
+    if isinstance(source, RateProfile):
+        source = NHPPArrivalProcess(profile=source)
+    if not isinstance(source, ArrivalTimeProcess):
+        raise TypeError(
+            "replay_arrivals needs a TraceArrivalProcess, RateProfile, or "
+            f"timestamp arrival process; got {type(source).__name__}"
+        )
+    if key is None:
+        raise ValueError(
+            "replaying a stochastic arrival process needs key= (traces "
+            "replay exactly and don't)"
+        )
+    lam = 1.0 / source.mean()  # candidate envelope rate
+    n = t_end * lam
+    steps = int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
+    while True:
+        times, coverage = source.arrival_times(key, (1, steps))
+        if float(coverage[0]) >= t_end:
+            break
+        steps *= 2  # unlucky gap draw: widen and redraw
+    ts = np.asarray(times[0], np.float64)
+    return ts[ts < t_end]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    """Knobs for the online services.
+
+    ``rate_ceiling`` is the envelope the estimate is clamped to *and*
+    what sizes the pinned candidate buffer — it must upper-bound any
+    plausible peak arrival rate (headroom costs only simulated steps;
+    undershooting would clip the estimate).
+    """
+
+    rate_ceiling: float
+    cold_slo: float = 0.1
+    thresholds: Tuple[float, ...] = (
+        30.0, 60.0, 120.0, 300.0, 600.0, 1200.0,
+    )
+    bin_width: float = 60.0  # profile bin width (stream seconds)
+    n_bins: int = 16  # pinned bin count; rolling window = n_bins*bin_width
+    ema_alpha: float = 0.3  # EMA weight of the newest window estimate
+    rate_floor: float = 1e-9  # empty-bin / idle-function clamp
+    sim_time: Optional[float] = None  # what-if horizon; None = window span
+    skip_time: float = 0.0
+    replicas: int = 4
+    seed: int = 0
+    execution: Optional[Execution] = None
+    overlap: bool = True  # async-dispatch ticks (native scan backend)
+    patience: int = 2  # governor: consecutive ticks before switching
+    deadband: float = 0.0  # governor: relative no-op band
+    capacity: Optional[float] = None  # headroom base; None = Scenario.slots
+
+    def __post_init__(self):
+        if not self.rate_ceiling > 0:
+            raise ValueError(
+                f"rate_ceiling must be > 0, got {self.rate_ceiling}"
+            )
+        if not self.thresholds:
+            raise ValueError("thresholds must name at least one candidate")
+        if not self.bin_width > 0:
+            raise ValueError(f"bin_width must be > 0, got {self.bin_width}")
+        if self.n_bins < 1:
+            raise ValueError(f"n_bins must be >= 1, got {self.n_bins}")
+        if not 0.0 < self.ema_alpha <= 1.0:
+            raise ValueError(
+                f"ema_alpha must be in (0, 1], got {self.ema_alpha}"
+            )
+        if not self.rate_floor > 0:
+            raise ValueError(
+                f"rate_floor must be > 0, got {self.rate_floor}"
+            )
+
+    @property
+    def span(self) -> float:
+        return self.n_bins * self.bin_width
+
+    @property
+    def horizon(self) -> float:
+        return float(self.sim_time) if self.sim_time is not None else self.span
+
+
+@dataclasses.dataclass(frozen=True)
+class Recommendation:
+    """One tick's output: the keep-alive advice and its evidence."""
+
+    tick: int
+    t_now: float  # stream time the estimate was fitted at
+    threshold: float  # raw grid choice this tick
+    applied_threshold: float  # after ThresholdGovernor hysteresis
+    predicted_cold_prob: float
+    predicted_cost: float  # developer cost at the chosen threshold
+    predicted_goodput: float
+    predicted_avg_replicas: float
+    headroom: float  # capacity - predicted avg replicas
+    rate_mean: float  # time-averaged EMA rate estimate
+    profile: PiecewiseConstantRate  # the fitted+blended profile swept
+    key: jax.Array  # the sweep key (offline reproduction handle)
+    grid: "object"  # the full GridResult the choice was read from
+
+
+class OnlineWhatIfService:
+    """Live keep-alive tuner for one function (module docstring).
+
+    ``base`` supplies the service processes and platform fields; its
+    arrival side is replaced each tick by the live estimate.  Push
+    timestamps with :meth:`observe` (batches, ascending stream time),
+    then call :meth:`tick` at the re-plan cadence.  With ``overlap``
+    (default), ``tick`` returns the *previous* tick's recommendation —
+    the current one is still on the device — and :meth:`flush` drains
+    the last pending tick.
+    """
+
+    def __init__(self, base: Scenario, config: OnlineConfig):
+        if not isinstance(config, OnlineConfig):
+            raise TypeError(
+                f"config must be an OnlineConfig, got {type(config).__name__}"
+            )
+        self.config = config
+        if not config.skip_time < config.horizon:
+            raise ValueError(
+                f"skip_time {config.skip_time} must be < horizon "
+                f"{config.horizon}"
+            )
+        self._edges = tuple(
+            float(e) for e in np.arange(1, config.n_bins) * config.bin_width
+        )
+        # the tick scenario template: what-if horizon pinned, arrival side
+        # swapped per tick (StaticConfig is identical across ticks)
+        ceiling = PiecewiseConstantRate(
+            edges=self._edges, rates=(config.rate_ceiling,) * config.n_bins
+        )
+        self._base = Scenario.of(
+            base,
+            arrival_process=NHPPArrivalProcess(profile=ceiling),
+            rate_profile=None,
+            arrival_rate=None,
+            sim_time=config.horizon,
+            skip_time=config.skip_time,
+        )
+        # candidate-buffer width at the ceiling covers any clamped estimate
+        self._steps = self._base.steps_needed()
+        _, bspec = plan_of(config.execution, None, None).resolve()
+        self._deferred = config.overlap and bspec.kind == "native"
+        self._buf = np.empty((0,), np.float64)
+        self._now = 0.0
+        self._ema: Optional[np.ndarray] = None
+        self._ticks = 0
+        self._key = jax.random.key(config.seed)
+        self._pending = None  # (PendingSweep-or-GridResult, tick metadata)
+        self.governor = ThresholdGovernor(
+            patience=config.patience, deadband=config.deadband
+        )
+        self.history: List[Recommendation] = []
+        cap = config.capacity
+        self._capacity = float(cap) if cap is not None else float(base.slots)
+
+    # ---- ingestion ------------------------------------------------------
+
+    def observe(self, timestamps) -> None:
+        """Push a batch of arrival timestamps (ascending stream time)."""
+        ts = np.asarray(timestamps, np.float64).ravel()
+        if len(ts) == 0:
+            return
+        if not np.isfinite(ts).all():
+            bad = int(np.flatnonzero(~np.isfinite(ts))[0])
+            raise ValueError(
+                f"timestamps must be finite; batch[{bad}] = {ts[bad]}"
+            )
+        if (np.diff(ts) < 0).any():
+            bad = int(np.flatnonzero(np.diff(ts) < 0)[0]) + 1
+            raise ValueError(
+                f"batch must be sorted ascending; batch[{bad}] = {ts[bad]} "
+                f"< batch[{bad - 1}] = {ts[bad - 1]}"
+            )
+        if ts[0] < self._now:
+            raise ValueError(
+                f"batch starts at {ts[0]} but the stream is already at "
+                f"{self._now}; batches must arrive in stream order"
+            )
+        self._buf = np.concatenate([self._buf, ts])
+        self._now = float(ts[-1])
+        # rolling window: drop what can never enter an estimate again
+        self._buf = self._buf[self._buf >= self._now - self.config.span]
+
+    def observe_trace(self, trace: TraceArrivalProcess) -> None:
+        """Replay a recorded trace into the stream in one push."""
+        self.observe(np.asarray(trace.timestamps, np.float64))
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    # ---- estimation -----------------------------------------------------
+
+    def estimate(self) -> PiecewiseConstantRate:
+        """The EMA-blended rolling-window profile a tick would sweep now
+        (also advances the EMA — called once per tick)."""
+        cfg = self.config
+        t0 = max(0.0, self._now - cfg.span)
+        rel = self._buf[self._buf >= t0] - t0
+        if len(rel):
+            # fold the right edge in: the newest arrival sits exactly at
+            # the window end, one ulp past fit()'s half-open range
+            rel = np.minimum(rel, np.nextafter(cfg.span, 0.0))
+            fitted = PiecewiseConstantRate.fit(
+                rel, cfg.bin_width, rate_floor=cfg.rate_floor,
+                n_bins=cfg.n_bins,
+            )
+            rates = np.asarray(fitted.rates, np.float64)
+        else:
+            rates = np.full((cfg.n_bins,), cfg.rate_floor)
+        if self._ema is None:
+            self._ema = rates
+        else:
+            self._ema = cfg.ema_alpha * rates + (1 - cfg.ema_alpha) * self._ema
+        clamped = np.clip(self._ema, cfg.rate_floor, cfg.rate_ceiling)
+        return PiecewiseConstantRate(
+            edges=self._edges, rates=tuple(float(r) for r in clamped)
+        )
+
+    # ---- the tick loop --------------------------------------------------
+
+    def tick(self) -> Optional[Recommendation]:
+        """Re-fit, re-sweep, recommend.
+
+        Dispatches this tick's sweep and (with ``overlap``) drains the
+        *previous* tick's — returns ``None`` on the first overlapped
+        tick.  The sweep's trace-count delta lands in
+        ``TRACE_COUNTS["online_tick"]``: 1 for the warmup tick, 0 in
+        steady state.
+        """
+        cfg = self.config
+        profile = self.estimate()
+        scn = Scenario.of(
+            self._base,
+            arrival_process=NHPPArrivalProcess(profile=profile),
+            rate_profile=None,
+            arrival_rate=None,
+        )
+        self._key, sub = jax.random.split(self._key)
+        before = _trace_total()
+        out = scenario_sweep(
+            scn,
+            over={"expiration_threshold": list(cfg.thresholds)},
+            key=sub,
+            replicas=cfg.replicas,
+            execution=cfg.execution,
+            steps=self._steps,
+            deferred=self._deferred,
+        )
+        TRACE_COUNTS["online_tick"] += _trace_total() - before
+        item = (out, (self._ticks, self._now, profile, sub))
+        self._ticks += 1
+        if self._deferred:
+            prev, self._pending = self._pending, item
+            return self._drain(prev) if prev is not None else None
+        return self._drain(item)
+
+    def flush(self) -> Optional[Recommendation]:
+        """Drain the pending overlapped tick, if any."""
+        if self._pending is None:
+            return None
+        prev, self._pending = self._pending, None
+        return self._drain(prev)
+
+    def _drain(self, item) -> Recommendation:
+        out, (tick, t_now, profile, key) = item
+        grid = out.result() if hasattr(out, "result") else out
+        plan: PlanResult = select_threshold(grid, self.config.cold_slo)
+        applied = self.governor.update(plan.expiration_threshold)
+        rec = Recommendation(
+            tick=tick,
+            t_now=t_now,
+            threshold=plan.expiration_threshold,
+            applied_threshold=applied,
+            predicted_cold_prob=plan.predicted_cold_prob,
+            predicted_cost=plan.predicted_cost,
+            predicted_goodput=plan.predicted_goodput,
+            predicted_avg_replicas=plan.predicted_avg_replicas,
+            headroom=self._capacity - plan.predicted_avg_replicas,
+            rate_mean=profile.mean_rate(),
+            profile=profile,
+            key=key,
+            grid=grid,
+        )
+        self.history.append(rec)
+        return rec
+
+    def offline_equivalent(self, rec: Recommendation):
+        """Re-run ``rec``'s sweep offline (synchronously) on the recorded
+        profile and key — bitwise-equal to ``rec.grid`` by construction;
+        the acceptance check and the trust story in one call."""
+        scn = Scenario.of(
+            self._base,
+            arrival_process=NHPPArrivalProcess(profile=rec.profile),
+            rate_profile=None,
+            arrival_rate=None,
+        )
+        return scenario_sweep(
+            scn,
+            over={"expiration_threshold": list(self.config.thresholds)},
+            key=rec.key,
+            replicas=self.config.replicas,
+            execution=self.config.execution,
+            steps=self._steps,
+        )
+
+
+# --------------------------------------------------------------------------
+# Fleet service mode
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetRecommendation:
+    """One fleet tick: per-function keep-alive advice under the shared
+    cluster budget."""
+
+    tick: int
+    t_now: float
+    plans: Dict[str, PlanResult]  # per-function grid choice
+    applied: Dict[str, float]  # per-function governed threshold
+    rates: Dict[str, float]  # per-function EMA rate estimate
+    predicted_total_replicas: float
+    headroom: float  # n_cluster - predicted total
+    key: jax.Array
+    grid: "object"  # the FleetGridResult
+
+    @property
+    def thresholds(self) -> Dict[str, float]:
+        return {n: p.expiration_threshold for n, p in self.plans.items()}
+
+
+class OnlineFleetWhatIfService:
+    """The fleet-mode service: one scalar EMA rate per function, the
+    catalog profiles re-leveled via :meth:`FleetScenario.with_rates`,
+    one ``fleet_sweep`` per tick (one compile total), per-function
+    threshold choice plus cluster headroom.
+
+    ``fleet_sweep`` drains device results inside its launcher, so fleet
+    ticks are synchronous; the zero-recompile guarantee is the same
+    (pinned steps, fixed grid, fixed fleet structure).
+    """
+
+    def __init__(self, fleet, config: OnlineConfig):
+        from repro.core.fleet import FleetScenario
+
+        if not isinstance(fleet, FleetScenario):
+            raise TypeError(
+                f"fleet must be a FleetScenario, got {type(fleet).__name__}"
+            )
+        if not isinstance(config, OnlineConfig):
+            raise TypeError(
+                f"config must be an OnlineConfig, got {type(config).__name__}"
+            )
+        self.config = config
+        if not config.skip_time < config.horizon:
+            raise ValueError(
+                f"skip_time {config.skip_time} must be < horizon "
+                f"{config.horizon}"
+            )
+        self._fleet = dataclasses.replace(
+            fleet, sim_time=config.horizon, skip_time=config.skip_time
+        )
+        # Per-function peak-to-mean ratio of the re-leveled process: the
+        # EMA clamp must keep max_rate (the thinning envelope) under the
+        # ceiling, not just the mean.  with_rate(1.0) normalizes, so its
+        # candidate rate IS the ratio; rate-less families would raise in
+        # with_rates anyway, stationary ones have ratio 1.
+        self._ratio = {}
+        for f in self._fleet.functions:
+            p1 = f.arrival_process.with_rate(1.0)
+            self._ratio[f.name] = (
+                float(p1.profile.max_rate())
+                if isinstance(p1, NHPPArrivalProcess)
+                else 1.0
+            )
+        # candidate width: every function simulated at the ceiling
+        n = config.horizon * config.rate_ceiling
+        self._steps = int(n + 6.0 * np.sqrt(max(n, 1.0)) + 16)
+        self._buf: Dict[str, np.ndarray] = {
+            n_: np.empty((0,), np.float64) for n_ in self._fleet.names
+        }
+        self._now = 0.0
+        self._ema: Dict[str, float] = {}
+        self._ticks = 0
+        self._key = jax.random.key(config.seed)
+        self.governors: Dict[str, ThresholdGovernor] = {
+            n_: ThresholdGovernor(
+                patience=config.patience, deadband=config.deadband
+            )
+            for n_ in self._fleet.names
+        }
+        self.history: List[FleetRecommendation] = []
+
+    def observe(self, name: str, timestamps) -> None:
+        """Push a batch of one function's arrival timestamps."""
+        if name not in self._buf:
+            raise KeyError(
+                f"unknown function {name!r}; fleet functions: "
+                f"{list(self._fleet.names)}"
+            )
+        ts = np.asarray(timestamps, np.float64).ravel()
+        if len(ts) == 0:
+            return
+        if not np.isfinite(ts).all() or (ts < 0).any():
+            raise ValueError("timestamps must be finite and >= 0")
+        if (np.diff(ts) < 0).any():
+            raise ValueError("batch must be sorted ascending")
+        self._buf[name] = np.concatenate([self._buf[name], ts])
+        self._now = max(self._now, float(ts[-1]))
+        span = self.config.span
+        for n_ in self._buf:
+            self._buf[n_] = self._buf[n_][self._buf[n_] >= self._now - span]
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def estimate(self) -> Dict[str, float]:
+        """Per-function EMA-blended windowed mean rates (advances the
+        EMA — called once per tick)."""
+        cfg = self.config
+        span = min(cfg.span, self._now) or cfg.span
+        rates = {}
+        for n_, buf in self._buf.items():
+            inst = len(buf[buf >= self._now - cfg.span]) / span
+            prev = self._ema.get(n_)
+            ema = (
+                inst
+                if prev is None
+                else cfg.ema_alpha * inst + (1 - cfg.ema_alpha) * prev
+            )
+            self._ema[n_] = ema
+            ceiling = cfg.rate_ceiling / self._ratio[n_]
+            rates[n_] = float(np.clip(ema, cfg.rate_floor, ceiling))
+        return rates
+
+    def tick(self) -> FleetRecommendation:
+        """Re-estimate, re-level the fleet, re-sweep, recommend."""
+        from repro.core.fleet import fleet_sweep
+
+        cfg = self.config
+        rates = self.estimate()
+        fleet_t = self._fleet.with_rates(rates)
+        self._key, sub = jax.random.split(self._key)
+        before = _trace_total()
+        grid = fleet_sweep(
+            fleet_t,
+            over={"expiration_threshold": list(cfg.thresholds)},
+            key=sub,
+            replicas=cfg.replicas,
+            execution=cfg.execution,
+            steps=self._steps,
+        )
+        TRACE_COUNTS["online_tick"] += _trace_total() - before
+        plans, applied, total = {}, {}, 0.0
+        for n_ in self._fleet.names:
+            plan = select_threshold(grid.sel(function=n_), cfg.cold_slo)
+            plans[n_] = plan
+            applied[n_] = self.governors[n_].update(plan.expiration_threshold)
+            total += plan.predicted_avg_replicas
+        rec = FleetRecommendation(
+            tick=self._ticks,
+            t_now=self._now,
+            plans=plans,
+            applied=applied,
+            rates=rates,
+            predicted_total_replicas=total,
+            headroom=float(self._fleet.n_cluster) - total,
+            key=sub,
+            grid=grid,
+        )
+        self._ticks += 1
+        self.history.append(rec)
+        return rec

@@ -459,12 +459,28 @@ class TestProfileSweep:
             atol=1e-3,
         )
 
-    def test_rate_sweep_refuses_timestamp_processes(self):
+    def test_rate_sweep_relevels_nhpp_processes(self):
+        """arrival_rate over an NHPP process re-levels the profile
+        shape-preservingly per cell (with_rate), so the sweep runs."""
         cfg = base_cfg(
             arrival_process=NHPPArrivalProcess(
                 profile=SinusoidalRate(1.0, 0.5, 100.0)
             )
         )
+        res = scenario_mod.sweep(
+            cfg,
+            over={"arrival_rate": [0.5, 2.0]},
+            key=jax.random.key(0),
+            replicas=1,
+        )
+        assert res.cold_start_prob.shape == (2,)
+        assert (
+            res.avg_server_count[1] > res.avg_server_count[0]
+        ), "higher mean rate should hold more servers"
+
+    def test_rate_sweep_refuses_rateless_timestamp_processes(self):
+        ts = tuple(float(t) for t in np.linspace(1.0, 400.0, 50))
+        cfg = base_cfg(arrival_process=TraceArrivalProcess(timestamps=ts))
         with pytest.raises(ValueError, match="rate profiles"):
             scenario_mod.sweep(
                 cfg,

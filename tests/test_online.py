@@ -1,0 +1,632 @@
+"""Online what-if service tests (DESIGN.md §14): the live control loop.
+
+Layers:
+
+* **fit hardening** — pointed ValueErrors on bad live batches
+  (non-finite / negative / unsorted timestamps, bad ``bin_width`` /
+  ``rate_floor``), the documented empty-bin floor, and the pinned
+  ``n_bins`` re-fit shape;
+* **profile re-leveling** — ``with_rate`` on piecewise/sinusoidal
+  profiles, NHPP, and ``Scenario(arrival_rate=)``;
+* **selection plumbing** — pointed ``KeyError`` listing the valid axis
+  names from ``GridResult.sel``/``axis`` and ``FleetGridResult.sel``;
+* **deferred sweeps** — ``sweep(deferred=True)`` is bitwise-equal to
+  the synchronous sweep and rejects block backends pointedly;
+* **the tick loop** — ≥5 re-fit→re-sweep cycles with changing rates
+  hold ``TRACE_COUNTS["online_tick"]`` at 1 (warmup) then 0, on the
+  scan AND block (ref) backends, plus a 4-fake-device sharded
+  subprocess variant; a tick's recommendation is bitwise-equal to an
+  offline ``sweep()`` on the recorded profile and key;
+* **governor + fleet mode** — hysteresis (patience/deadband) and the
+  ``fleet_sweep``-backed per-function service with cluster headroom.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Scenario
+from repro.core import scenario as scenario_mod
+from repro.core.execution import Execution
+from repro.core.processes import (
+    ExpSimProcess,
+    NHPPArrivalProcess,
+    PiecewiseConstantRate,
+    SinusoidalRate,
+    TraceArrivalProcess,
+)
+from repro.core.scenario import PendingSweep, TRACE_COUNTS, sweep
+from repro.serving import (
+    OnlineConfig,
+    OnlineFleetWhatIfService,
+    OnlineWhatIfService,
+    ThresholdGovernor,
+    replay_arrivals,
+    select_threshold,
+)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def base_scn(**kw):
+    kw.setdefault("arrival_process", ExpSimProcess(rate=1.0))
+    kw.setdefault("warm_service_process", ExpSimProcess(rate=1.0))
+    kw.setdefault("cold_service_process", ExpSimProcess(rate=0.5))
+    kw.setdefault("slots", 32)
+    return Scenario(**kw)
+
+
+def small_config(**kw):
+    kw.setdefault("rate_ceiling", 4.0)
+    kw.setdefault("n_bins", 6)
+    kw.setdefault("bin_width", 25.0)
+    kw.setdefault("thresholds", (30.0, 120.0, 600.0))
+    kw.setdefault("replicas", 2)
+    return OnlineConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# satellite: fit hardening
+# ---------------------------------------------------------------------------
+
+
+class TestFitHardening:
+    def test_nan_timestamp_pointed(self):
+        with pytest.raises(ValueError, match=r"timestamps\[1\]"):
+            PiecewiseConstantRate.fit([1.0, np.nan, 2.0], bin_width=1.0)
+
+    def test_inf_timestamp_pointed(self):
+        with pytest.raises(ValueError, match="finite"):
+            PiecewiseConstantRate.fit([1.0, np.inf], bin_width=1.0)
+
+    def test_negative_timestamp_pointed(self):
+        with pytest.raises(ValueError, match=r">= 0.*timestamps\[0\]"):
+            PiecewiseConstantRate.fit([-0.5, 2.0], bin_width=1.0)
+
+    def test_unsorted_pointed_names_index(self):
+        with pytest.raises(ValueError, match=r"sorted.*timestamps\[2\]"):
+            PiecewiseConstantRate.fit([1.0, 3.0, 2.0], bin_width=1.0)
+
+    def test_bad_bin_width_and_rate_floor(self):
+        with pytest.raises(ValueError, match="bin_width"):
+            PiecewiseConstantRate.fit([1.0], bin_width=0.0)
+        with pytest.raises(ValueError, match="rate_floor"):
+            PiecewiseConstantRate.fit([1.0], bin_width=1.0, rate_floor=0.0)
+
+    def test_empty_bins_clamp_to_floor(self):
+        """The documented floor: quiet bins yield rate_floor, never 0/NaN."""
+        p = PiecewiseConstantRate.fit(
+            [0.5, 3.5], bin_width=1.0, rate_floor=1e-6
+        )
+        rates = np.asarray(p.rates)
+        assert rates[1] == 1e-6 and rates[2] == 1e-6
+        assert np.isfinite(rates).all() and (rates > 0).all()
+
+    def test_pinned_n_bins_is_shape_stable(self):
+        """n_bins= pins the profile shape across re-fits (the online
+        service's zero-recompile prerequisite)."""
+        a = PiecewiseConstantRate.fit([0.5], bin_width=1.0, n_bins=8)
+        b = PiecewiseConstantRate.fit(
+            np.linspace(0.1, 7.9, 300), bin_width=1.0, n_bins=8
+        )
+        assert len(a.rates) == len(b.rates) == 8
+        assert a.edges == b.edges
+
+    def test_pinned_n_bins_rejects_out_of_range(self):
+        with pytest.raises(ValueError, match=r"\[0, 2\.0\)"):
+            PiecewiseConstantRate.fit([5.0], bin_width=1.0, n_bins=2)
+
+    def test_n_bins_must_be_positive(self):
+        with pytest.raises(ValueError, match="n_bins"):
+            PiecewiseConstantRate.fit([0.5], bin_width=1.0, n_bins=0)
+
+
+# ---------------------------------------------------------------------------
+# profile re-leveling (with_rate)
+# ---------------------------------------------------------------------------
+
+
+class TestWithRate:
+    def test_piecewise_with_rate_preserves_shape(self):
+        p = PiecewiseConstantRate(edges=(10.0, 20.0), rates=(1.0, 3.0, 2.0))
+        q = p.with_rate(4.0)
+        np.testing.assert_allclose(q.mean_rate(), 4.0, rtol=1e-12)
+        np.testing.assert_allclose(
+            np.asarray(q.rates) / np.asarray(p.rates),
+            q.rates[0] / p.rates[0],  # one uniform scale factor
+        )
+
+    def test_constant_profile_mean_rate(self):
+        p = PiecewiseConstantRate(edges=(), rates=(2.5,))
+        assert p.mean_rate() == 2.5
+        assert p.with_rate(7.0).rates == (7.0,)
+
+    def test_sinusoidal_with_rate_moves_base_only(self):
+        s = SinusoidalRate(base=2.0, amplitude=0.4, period=50.0, phase=0.1)
+        q = s.with_rate(5.0)
+        assert (q.base, q.amplitude, q.period, q.phase) == (
+            5.0, 0.4, 50.0, 0.1,
+        )
+
+    def test_nhpp_with_rate_delegates_to_profile(self):
+        p = PiecewiseConstantRate(edges=(10.0,), rates=(1.0, 3.0))
+        n = NHPPArrivalProcess(profile=p).with_rate(6.0)
+        np.testing.assert_allclose(n.profile.mean_rate(), 6.0, rtol=1e-12)
+
+    def test_with_rate_rejects_nonpositive(self):
+        p = PiecewiseConstantRate(edges=(), rates=(1.0,))
+        with pytest.raises(ValueError, match="rate must be > 0"):
+            p.with_rate(0.0)
+
+    def test_trace_process_still_has_no_rate_handle(self):
+        with pytest.raises(NotImplementedError):
+            TraceArrivalProcess(timestamps=(1.0, 2.0)).with_rate(2.0)
+
+
+# ---------------------------------------------------------------------------
+# satellite: pointed axis errors
+# ---------------------------------------------------------------------------
+
+
+class TestAxisErrors:
+    def _grid(self):
+        return sweep(
+            base_scn(sim_time=150.0, skip_time=0.0),
+            over={"expiration_threshold": [20.0, 60.0]},
+            key=jax.random.key(0),
+            replicas=2,
+        )
+
+    def test_sel_unknown_axis_lists_valid_names(self):
+        g = self._grid()
+        with pytest.raises(KeyError, match=r"threshhold.*expiration_threshold"):
+            g.sel(threshhold=20.0)
+
+    def test_sel_unknown_value_lists_values(self):
+        g = self._grid()
+        with pytest.raises(KeyError, match=r"99\.0.*20\.0"):
+            g.sel(expiration_threshold=99.0)
+
+    def test_axis_unknown_name_pointed(self):
+        g = self._grid()
+        with pytest.raises(KeyError, match="unknown axis.*expiration"):
+            g.axis("rate")
+
+    def test_fleet_sel_unknown_axis_and_function(self):
+        from repro.core.fleet import fleet_sweep
+        from repro.data.catalog import fleet_of
+
+        fleet = fleet_of(
+            ["thumbnail", "crypto-sign"],
+            n_cluster=10, sim_time=150.0, skip_time=0.0, slots=16,
+        )
+        g = fleet_sweep(
+            fleet,
+            over={"expiration_threshold": [20.0, 60.0]},
+            key=jax.random.key(0),
+            replicas=1,
+        )
+        with pytest.raises(KeyError, match="unknown axis.*function"):
+            g.sel(nonsense=1)
+        with pytest.raises(KeyError, match="'nope' is not on axis"):
+            g.sel(function="nope")
+
+
+# ---------------------------------------------------------------------------
+# deferred sweeps
+# ---------------------------------------------------------------------------
+
+
+class TestDeferredSweep:
+    def test_deferred_bitwise_equals_sync(self):
+        scn = base_scn(sim_time=200.0, skip_time=0.0)
+        over = {"expiration_threshold": [20.0, 60.0, 180.0]}
+        key = jax.random.key(3)
+        ref = sweep(scn, over=over, key=key, replicas=2)
+        pend = sweep(scn, over=over, key=key, replicas=2, deferred=True)
+        assert isinstance(pend, PendingSweep)
+        got = pend.result()
+        np.testing.assert_array_equal(got.cold_start_prob, ref.cold_start_prob)
+        np.testing.assert_array_equal(got.developer_cost, ref.developer_cost)
+        np.testing.assert_array_equal(got.goodput, ref.goodput)
+        assert pend.result() is got  # memoized drain
+
+    def test_deferred_rejects_block_backends(self):
+        scn = base_scn(sim_time=100.0, skip_time=0.0)
+        with pytest.raises(ValueError, match="deferred.*native"):
+            sweep(
+                scn,
+                over={"expiration_threshold": [20.0]},
+                key=jax.random.key(0),
+                backend="ref",
+                deferred=True,
+            )
+
+
+# ---------------------------------------------------------------------------
+# tentpole: the tick loop
+# ---------------------------------------------------------------------------
+
+
+def drive(svc, n_ticks=6, seed=0, rate0=1.0):
+    """Push n_ticks batches with a drifting rate; tick after each."""
+    rng = np.random.default_rng(seed)
+    t, recs = svc.now, []
+    for i in range(n_ticks):
+        rate = rate0 * (1.0 + 0.5 * np.sin(i))
+        n = max(1, rng.poisson(rate * 30.0))
+        ts = np.sort(t + rng.uniform(0.0, 30.0, n))
+        svc.observe(ts)
+        t += 30.0
+        rec = svc.tick()
+        if rec is not None:
+            recs.append(rec)
+    last = svc.flush()
+    if last is not None:
+        recs.append(last)
+    return recs
+
+
+class TestOnlineService:
+    def test_zero_recompiles_after_warmup_scan(self):
+        """≥5 ticks with changing rates: online_tick goes 1 then 0."""
+        svc = OnlineWhatIfService(base_scn(), small_config())
+        before = TRACE_COUNTS["online_tick"]
+        rng = np.random.default_rng(1)
+        t = 0.0
+        deltas = []
+        for i in range(6):
+            rate = 1.0 + 0.6 * np.sin(i * 1.3)
+            n = max(1, rng.poisson(rate * 30.0))
+            svc.observe(np.sort(t + rng.uniform(0.0, 30.0, n)))
+            t += 30.0
+            snap = TRACE_COUNTS["online_tick"]
+            svc.tick()
+            deltas.append(TRACE_COUNTS["online_tick"] - snap)
+        svc.flush()
+        assert deltas[0] >= 1  # warmup traced
+        assert deltas[1:] == [0] * 5  # steady state: zero recompiles
+        assert TRACE_COUNTS["online_tick"] == before + deltas[0]
+
+    def test_zero_recompiles_after_warmup_ref_block(self):
+        """Block (ref) backend ticks cache too (sync drain path)."""
+        svc = OnlineWhatIfService(
+            base_scn(),
+            small_config(execution=Execution(backend="ref")),
+        )
+        assert not svc._deferred  # block backends drain synchronously
+        deltas = []
+        rng = np.random.default_rng(2)
+        t = 0.0
+        for i in range(6):
+            n = max(1, rng.poisson((1.0 + 0.5 * np.cos(i)) * 30.0))
+            svc.observe(np.sort(t + rng.uniform(0.0, 30.0, n)))
+            t += 30.0
+            snap = TRACE_COUNTS["online_tick"]
+            assert svc.tick() is not None
+            deltas.append(TRACE_COUNTS["online_tick"] - snap)
+        assert deltas[0] >= 1
+        assert deltas[1:] == [0] * 5
+
+    def test_recommendation_bitwise_equals_offline_sweep(self):
+        """The acceptance criterion: a tick's grid == offline sweep()
+        on the same fitted profile and key."""
+        svc = OnlineWhatIfService(base_scn(), small_config())
+        recs = drive(svc)
+        assert len(recs) >= 5
+        for rec in recs[:3]:
+            off = svc.offline_equivalent(rec)
+            np.testing.assert_array_equal(
+                np.asarray(off.cold_start_prob),
+                np.asarray(rec.grid.cold_start_prob),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(off.developer_cost),
+                np.asarray(rec.grid.developer_cost),
+            )
+            off_plan = select_threshold(off, svc.config.cold_slo)
+            assert off_plan.expiration_threshold == rec.threshold
+
+    def test_overlap_returns_previous_tick(self):
+        svc = OnlineWhatIfService(base_scn(), small_config())
+        svc.observe(np.linspace(0.5, 29.5, 40))
+        assert svc.tick() is None  # tick 0 dispatched, nothing to drain
+        svc.observe(np.linspace(30.5, 59.5, 40))
+        rec = svc.tick()
+        assert rec is not None and rec.tick == 0
+        last = svc.flush()
+        assert last.tick == 1
+        assert svc.flush() is None
+        assert [r.tick for r in svc.history] == [0, 1]
+
+    def test_recommendation_fields_sane(self):
+        svc = OnlineWhatIfService(base_scn(), small_config())
+        rec = drive(svc, n_ticks=3)[0]
+        assert rec.threshold in svc.config.thresholds
+        assert 0.0 <= rec.predicted_cold_prob <= 1.0
+        assert rec.predicted_cost > 0 and rec.predicted_goodput > 0
+        assert rec.headroom == pytest.approx(
+            32 - rec.predicted_avg_replicas
+        )
+        assert rec.rate_mean > 0
+        assert isinstance(rec.profile, PiecewiseConstantRate)
+
+    def test_ema_blending(self):
+        """EMA: tick-2 estimate = alpha*new + (1-alpha)*prev, per bin."""
+        cfg = small_config(ema_alpha=0.25, n_bins=2, bin_width=50.0)
+        svc = OnlineWhatIfService(base_scn(), cfg)
+        svc.observe(np.linspace(0.1, 99.9, 100))  # ~1/s over both bins
+        p1 = svc.estimate()
+        e1 = np.asarray(svc._ema).copy()
+        ts2 = np.linspace(100.1, 200.0, 300)  # ~3/s window [100, 200]
+        svc.observe(ts2)
+        p2 = svc.estimate()
+        fitted = PiecewiseConstantRate.fit(
+            np.minimum(ts2 - 100.0, np.nextafter(100.0, 0.0)),
+            bin_width=50.0,
+            n_bins=2,
+        )
+        expect = 0.25 * np.asarray(fitted.rates) + 0.75 * e1
+        np.testing.assert_allclose(np.asarray(p2.rates), expect, rtol=1e-12)
+        assert p1.edges == p2.edges  # pinned shape
+
+    def test_estimate_clamps_to_ceiling(self):
+        cfg = small_config(rate_ceiling=2.0, ema_alpha=1.0)
+        svc = OnlineWhatIfService(base_scn(), cfg)
+        span = cfg.span
+        svc.observe(np.sort(np.random.default_rng(0).uniform(0, span, 2000)))
+        prof = svc.estimate()
+        assert max(prof.rates) <= 2.0
+
+    def test_observe_validates_stream_order(self):
+        svc = OnlineWhatIfService(base_scn(), small_config())
+        svc.observe([1.0, 2.0])
+        with pytest.raises(ValueError, match="stream order"):
+            svc.observe([0.5])
+        with pytest.raises(ValueError, match="sorted"):
+            svc.observe([5.0, 4.0])
+        with pytest.raises(ValueError, match="finite"):
+            svc.observe([np.nan])
+
+    def test_observe_trace_and_rolling_window_prune(self):
+        cfg = small_config(n_bins=2, bin_width=10.0)  # span 20
+        svc = OnlineWhatIfService(base_scn(), cfg)
+        svc.observe_trace(
+            TraceArrivalProcess(timestamps=tuple(np.linspace(0.5, 99.5, 50)))
+        )
+        assert svc.now == pytest.approx(99.5)
+        assert (svc._buf >= 99.5 - 20.0).all()
+
+    def test_config_validation_pointed(self):
+        with pytest.raises(ValueError, match="rate_ceiling"):
+            OnlineConfig(rate_ceiling=0.0)
+        with pytest.raises(ValueError, match="ema_alpha"):
+            OnlineConfig(rate_ceiling=1.0, ema_alpha=0.0)
+        with pytest.raises(ValueError, match="n_bins"):
+            OnlineConfig(rate_ceiling=1.0, n_bins=0)
+        with pytest.raises(ValueError, match="thresholds"):
+            OnlineConfig(rate_ceiling=1.0, thresholds=())
+
+
+class TestReplay:
+    def test_replay_trace_exact(self):
+        tr = TraceArrivalProcess(timestamps=(1.0, 2.0, 5.0, 9.0))
+        np.testing.assert_array_equal(
+            replay_arrivals(tr, 6.0), [1.0, 2.0, 5.0]
+        )
+
+    def test_replay_profile_covers_horizon(self):
+        prof = SinusoidalRate(base=2.0, amplitude=0.3, period=40.0)
+        ts = replay_arrivals(prof, 300.0, key=jax.random.key(0))
+        assert len(ts) > 300  # ~600 expected
+        assert (np.diff(ts) >= 0).all() and ts[-1] < 300.0
+
+    def test_replay_needs_key_for_stochastic(self):
+        with pytest.raises(ValueError, match="key"):
+            replay_arrivals(SinusoidalRate(2.0, 0.3, 40.0), 100.0)
+
+    def test_replay_rejects_wrong_type(self):
+        with pytest.raises(TypeError, match="replay_arrivals"):
+            replay_arrivals(ExpSimProcess(rate=1.0), 100.0)
+
+
+# ---------------------------------------------------------------------------
+# governor
+# ---------------------------------------------------------------------------
+
+
+class TestGovernor:
+    def test_patience_blocks_single_tick_flips(self):
+        g = ThresholdGovernor(patience=2)
+        assert g.update(60.0) == 60.0  # seed
+        assert g.update(120.0) == 60.0  # streak 1/2
+        assert g.update(60.0) == 60.0  # streak reset
+        assert g.update(120.0) == 60.0
+        assert g.update(120.0) == 120.0  # streak 2/2: switch
+
+    def test_deadband_ignores_small_moves(self):
+        g = ThresholdGovernor(patience=1, deadband=0.5)
+        assert g.update(100.0) == 100.0
+        assert g.update(120.0) == 100.0  # 20% < 50% band
+        assert g.update(200.0) == 200.0  # 100% move applies
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="patience"):
+            ThresholdGovernor(patience=0)
+        with pytest.raises(ValueError, match="deadband"):
+            ThresholdGovernor(deadband=-0.1)
+
+    def test_service_applies_hysteresis(self):
+        """applied_threshold only moves after `patience` repeats."""
+        svc = OnlineWhatIfService(
+            base_scn(), small_config(patience=3)
+        )
+        recs = drive(svc, n_ticks=6)
+        for rec in recs:
+            if rec.threshold != rec.applied_threshold:
+                break
+        applied = {r.applied_threshold for r in recs[:2]}
+        assert len(applied) == 1  # cannot switch before patience elapses
+
+
+# ---------------------------------------------------------------------------
+# fleet service mode
+# ---------------------------------------------------------------------------
+
+
+class TestFleetService:
+    def _svc(self, **kw):
+        from repro.data.catalog import fleet_of
+
+        fleet = fleet_of(
+            ["thumbnail", "crypto-sign"],
+            n_cluster=24, sim_time=500.0, skip_time=0.0, slots=16,
+        )
+        cfg = small_config(
+            rate_ceiling=3.0, sim_time=150.0, **kw
+        )
+        return OnlineFleetWhatIfService(fleet, cfg)
+
+    def drive_fleet(self, svc, n_ticks=6):
+        rng = np.random.default_rng(5)
+        t = 0.0
+        recs = []
+        for i in range(n_ticks):
+            for name, rate in [("thumbnail", 0.6), ("crypto-sign", 0.2)]:
+                n = max(1, rng.poisson(rate * 30.0 * (1 + 0.4 * np.sin(i))))
+                svc.observe(name, np.sort(t + rng.uniform(0.0, 30.0, n)))
+            t += 30.0
+            recs.append(svc.tick())
+        return recs
+
+    def test_fleet_ticks_zero_recompiles_after_warmup(self):
+        svc = self._svc()
+        deltas = []
+        rng = np.random.default_rng(6)
+        t = 0.0
+        for i in range(6):
+            for name in ("thumbnail", "crypto-sign"):
+                n = max(1, rng.poisson(12 + 6 * np.sin(i + hash(name) % 3)))
+                svc.observe(name, np.sort(t + rng.uniform(0.0, 30.0, n)))
+            t += 30.0
+            snap = TRACE_COUNTS["online_tick"]
+            svc.tick()
+            deltas.append(TRACE_COUNTS["online_tick"] - snap)
+        assert deltas[0] >= 1
+        assert deltas[1:] == [0] * 5
+
+    def test_fleet_recommendation_shape(self):
+        svc = self._svc()
+        rec = self.drive_fleet(svc, n_ticks=2)[-1]
+        assert set(rec.plans) == {"thumbnail", "crypto-sign"}
+        assert set(rec.thresholds.values()) <= set(svc.config.thresholds)
+        assert rec.headroom == pytest.approx(
+            24.0 - rec.predicted_total_replicas
+        )
+        assert all(r > 0 for r in rec.rates.values())
+
+    def test_fleet_observe_unknown_function_pointed(self):
+        svc = self._svc()
+        with pytest.raises(KeyError, match="unknown function.*thumbnail"):
+            svc.observe("nope", [1.0])
+
+    def test_with_rates_relevels_and_rejects_unknown(self):
+        from repro.data.catalog import fleet_of
+
+        fleet = fleet_of(["thumbnail", "crypto-sign"], sim_time=500.0)
+        lifted = fleet.with_rates({"thumbnail": 2.0})
+        f0 = {f.name: f for f in lifted.functions}
+        p = f0["thumbnail"].arrival_process
+        np.testing.assert_allclose(p.mean(), 0.5, rtol=1e-9)  # 1/rate
+        # untouched function keeps its process
+        assert f0["crypto-sign"] == {
+            f.name: f for f in fleet.functions
+        }["crypto-sign"]
+        with pytest.raises(KeyError, match="unknown function.*ghost"):
+            fleet.with_rates({"ghost": 1.0})
+        with pytest.raises(ValueError, match="must be > 0"):
+            fleet.with_rates({"thumbnail": 0.0})
+
+    def test_with_rates_relevels_nhpp_profile_function(self):
+        """A profiled function re-levels via its profile (shape kept)."""
+        from repro.core.fleet import FleetFunction, FleetScenario
+
+        fleet = FleetScenario(
+            functions=(
+                FleetFunction(
+                    name="diurnal",
+                    rate_profile=SinusoidalRate(1.0, 0.5, 100.0),
+                    warm_service_process=ExpSimProcess(rate=1.0),
+                    cold_service_process=ExpSimProcess(rate=0.5),
+                ),
+            ),
+            sim_time=500.0,
+        )
+        lifted = fleet.with_rates({"diurnal": 3.0})
+        p = lifted.functions[0].arrival_process
+        assert isinstance(p, NHPPArrivalProcess)
+        assert p.profile.base == 3.0 and p.profile.amplitude == 0.5
+
+
+# ---------------------------------------------------------------------------
+# sharded subprocess variant
+# ---------------------------------------------------------------------------
+
+
+def test_online_service_sharded_zero_recompiles():
+    """4 fake CPU devices, shard='grid': warm tick traces once, 5 more
+    re-fit→re-sweep cycles with changing rates trace nothing."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = SRC
+    code = """
+    import jax, numpy as np
+    import repro.core  # x64
+    from repro.core import Scenario
+    from repro.core.processes import ExpSimProcess
+    from repro.core.scenario import TRACE_COUNTS
+    from repro.core.execution import Execution
+    from repro.serving import OnlineConfig, OnlineWhatIfService
+    base = Scenario(
+        arrival_process=ExpSimProcess(rate=1.0),
+        warm_service_process=ExpSimProcess(rate=1.0),
+        cold_service_process=ExpSimProcess(rate=0.5),
+        slots=32,
+    )
+    cfg = OnlineConfig(
+        rate_ceiling=4.0, n_bins=4, bin_width=25.0,
+        thresholds=(30.0, 120.0, 600.0), replicas=2,
+        execution=Execution(devices=jax.devices(), shard='grid'),
+    )
+    svc = OnlineWhatIfService(base, cfg)
+    rng = np.random.default_rng(0)
+    t, deltas = 0.0, []
+    for i in range(6):
+        n = max(1, rng.poisson((1.0 + 0.5 * np.sin(i)) * 25.0))
+        svc.observe(np.sort(t + rng.uniform(0.0, 25.0, n)))
+        t += 25.0
+        snap = TRACE_COUNTS['online_tick']
+        svc.tick()
+        deltas.append(TRACE_COUNTS['online_tick'] - snap)
+    svc.flush()
+    assert TRACE_COUNTS.get('simulate_sweep_sharded', 0) >= 1, deltas
+    assert deltas[0] >= 1, deltas
+    assert deltas[1:] == [0] * 5, deltas
+    print('ONLINE-SHARDED-OK')
+    """
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert out.returncode == 0, (
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-3000:]}"
+    )
+    assert "ONLINE-SHARDED-OK" in out.stdout

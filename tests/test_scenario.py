@@ -95,11 +95,28 @@ class TestScenarioDeclaration:
             [c.arrival_process.rate for c in cells], [0.5, 2.0]
         )
 
-    def test_arrival_rate_refused_for_timestamp_processes(self):
+    def test_arrival_rate_relevels_nhpp_shape_preserving(self):
+        """arrival_rate on an NHPP scenario re-levels the profile via
+        with_rate (time-averaged rate -> target, waveform preserved)."""
+        s = base_scn(
+            arrival_process=NHPPArrivalProcess(
+                profile=SinusoidalRate(1.0, 0.5, 100.0)
+            ),
+            arrival_rate=2.0,
+        )
+        prof = s.arrival_process.profile
+        assert isinstance(prof, SinusoidalRate)
+        assert prof.base == 2.0
+        assert prof.amplitude == 0.5  # shape untouched
+        assert s.arrival_rate is None  # folded in, not lingering
+
+    def test_arrival_rate_refused_for_rateless_timestamp_processes(self):
+        from repro.core.processes import TraceArrivalProcess
+
         with pytest.raises(ValueError, match="profiles instead"):
             base_scn(
-                arrival_process=NHPPArrivalProcess(
-                    profile=SinusoidalRate(1.0, 0.5, 100.0)
+                arrival_process=TraceArrivalProcess(
+                    timestamps=(1.0, 2.0, 3.0)
                 ),
                 arrival_rate=2.0,
             )
