@@ -979,6 +979,102 @@ def bench_fleet_sweep():
     )
 
 
+def bench_fault_sweep():
+    """Platform fault injection (DESIGN.md §15): a crash-rate x
+    keep-alive-threshold grid with capacity churn on, ONE compile per
+    backend (crash rate and capacity edges/values are traced axes).
+
+    ``us_per_call`` is the f64 scan's warm wall-time per simulated
+    arrival over the whole grid.  Derived pins the acceptance bars:
+    traces=(0,0) on the warm pass (scan + pallas) and bitdiff=0 between
+    the pallas kernel and its jnp ref mirror across every cell — the
+    fault columns ride the same accumulator, so agreement here covers
+    crashes, evictions, and interrupted work too.
+    """
+    from repro.core.faults import CapacityProfile, FaultModel
+    from repro.kernels import faas_event_step as fe_mod
+
+    if QUICK:
+        rates = [1e-3, 1e-2]
+        thresholds = [60.0, 300.0]
+        sim_time, steps, replicas = 1000.0, 1400, 1
+    else:
+        rates = [1e-4, 1e-3, 5e-3, 2e-2]
+        thresholds = [30.0, 120.0, 600.0]
+        sim_time, steps, replicas = 4000.0, 5400, 2
+    flt = FaultModel(
+        crash_rate=rates[0],
+        capacity=CapacityProfile(
+            edges=(sim_time * 0.4, sim_time * 0.7),
+            values=(40.0, 2.0, 40.0),
+        ),
+    )
+    cfg = paper_cfg(
+        sim_time=sim_time, skip_time=50.0, expiration_threshold=120.0,
+        max_concurrency=30, faults=flt,
+    )
+    over = {"crash_rate": rates, "expiration_threshold": thresholds}
+    kw = dict(key=jax.random.key(15), replicas=replicas, steps=steps)
+
+    scn_api.sweep(cfg, over=over, **kw)  # warm the scan compile
+    scn_api.sweep(cfg, over=over, backend="pallas", **kw)  # warm the kernel
+    before = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"],
+        fe_mod.TRACE_COUNTS["faas_sweep_pallas"],
+    )
+    t0 = time.perf_counter()
+    scan = scn_api.sweep(cfg, over=over, **kw)
+    dt_scan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    pal = scn_api.sweep(cfg, over=over, backend="pallas", **kw)
+    dt_block = time.perf_counter() - t0
+    traces = (
+        sim_mod.TRACE_COUNTS["simulate_sweep"] - before[0],
+        fe_mod.TRACE_COUNTS["faas_sweep_pallas"] - before[1],
+    )
+    ref = scn_api.sweep(cfg, over=over, backend="ref", **kw)
+
+    bitdiff = max(
+        float(
+            np.abs(
+                np.asarray(getattr(pal, f), np.float64)
+                - np.asarray(getattr(ref, f), np.float64)
+            ).max()
+        )
+        for f in ("cold_start_prob", "avg_response_time", "availability")
+    )
+    crashes = float(
+        np.array(
+            [[s.n_crash.sum() for s in row] for row in scan.summaries]
+        ).sum()
+    )
+    evictions = float(
+        np.array(
+            [[s.n_evict.sum() for s in row] for row in scan.summaries]
+        ).sum()
+    )
+    worst = float(np.asarray(scan.availability).min())
+    arrivals = float(
+        cfg.arrival_process.rate
+        * (sim_time - 50.0)
+        * len(rates)
+        * len(thresholds)
+        * replicas
+    )
+    emit(
+        "bench_fault_sweep",
+        dt_scan / arrivals * 1e6,
+        f"cells={len(rates)}x{len(thresholds)} "
+        f"traces={traces}(expect (0, 0) warm) "
+        f"scan={dt_scan:.2f}s block={dt_block:.2f}s "
+        f"crashes={crashes:.0f} evictions={evictions:.0f} "
+        f"worst_availability={worst:.4f} bitdiff={bitdiff}(expect 0)",
+        traces={"simulate_sweep": traces[0], "faas_sweep_pallas": traces[1]},
+        wall_clock_s={"scan": dt_scan, "block": dt_block},
+        bitdiff=bitdiff,
+    )
+
+
 def bench_online_service():
     """Online what-if service (DESIGN.md §14): the live re-fit→re-sweep
     control loop.
@@ -1142,6 +1238,7 @@ def main(argv=None) -> None:
         bench_retry_sweep()
         bench_fused_rng()
         bench_fleet_sweep()
+        bench_fault_sweep()
         bench_online_service()
     else:
         bench_table1()
@@ -1157,6 +1254,7 @@ def main(argv=None) -> None:
         bench_retry_sweep()
         bench_fused_rng()
         bench_fleet_sweep()
+        bench_fault_sweep()
         bench_online_service()
         bench_fig1_concurrency_value()
         bench_routing_policy()

@@ -1,0 +1,197 @@
+"""Platform fault injection: chaos engineering for the simulator (DESIGN.md §15).
+
+Two studies in one script:
+
+1. **Availability/cost frontier** — sweep crash hazard x keep-alive
+   threshold in ONE compiled trace and print the availability each cell
+   buys against the instance-time it costs.  Longer keep-alive holds
+   more warm instances, which is more surface area for the crash hazard
+   — the frontier quantifies that trade.
+2. **Capacity-dip recovery timeline** — run a fleet through a cluster
+   capacity dip (40 -> 10 -> 40 slots) and read the eviction counts,
+   crash-interrupted work, and per-function availability on the other
+   side, on the scan engine and both block kernels (which must agree).
+
+Then a chaos tick for the online service: the base scenario carries the
+fault model, ingest stalls mid-stream, and the service holds its last
+good recommendation flagged ``degraded=True`` — with zero recompiles.
+
+    PYTHONPATH=src python examples/chaos.py
+    PYTHONPATH=src python examples/chaos.py --replicas 4 --sim-time 2000
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.core import Scenario
+from repro.core.faults import CapacityProfile, FaultModel
+from repro.core.fleet import FleetFunction, FleetScenario, fleet_run
+from repro.core.metrics import reliability_report
+from repro.core.processes import ExpSimProcess
+from repro.core.scenario import sweep
+from repro.serving.online import OnlineConfig, OnlineWhatIfService
+
+
+def frontier(args):
+    print("=== availability/cost frontier (crash_rate x threshold) ===")
+    scn = Scenario(
+        arrival_process=ExpSimProcess(rate=1.0),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=1.0 / 3.0),
+        sim_time=args.sim_time,
+        skip_time=args.sim_time * 0.1,
+        max_concurrency=30,
+        slots=64,
+        faults=FaultModel(crash_rate=1e-3),
+    )
+    rates = [1e-4, 1e-3, 5e-3, 2e-2]
+    thresholds = [30.0, 120.0, 600.0]
+    grid = sweep(
+        scn,
+        over={"crash_rate": rates, "expiration_threshold": thresholds},
+        key=jax.random.key(0),
+        replicas=args.replicas,
+    )
+    print(f"{'crash_rate':>10} | " + " | ".join(
+        f"thr={t:>5.0f}" for t in thresholds
+    ))
+    for i, cr in enumerate(rates):
+        cells = " | ".join(
+            f"{grid.availability[i, j]:.4f}/{grid.avg_server_count[i, j]:>5.2f}"
+            for j in range(len(thresholds))
+        )
+        print(f"{cr:>10.0e} | {cells}   (availability/avg-instances)")
+    # the report satellite: one dict per cell, fault block included
+    rep = reliability_report(grid.summaries[-1, -1])
+    print(
+        f"worst cell: crashes={rep['crashes']:.0f} "
+        f"evictions={rep['evictions']:.0f} "
+        f"interrupted={rep['interrupted']:.0f} "
+        f"availability={rep['availability']:.4f}"
+    )
+
+
+def capacity_dip(args):
+    print("\n=== fleet capacity-dip recovery (40 -> 10 -> 40 slots) ===")
+    dip_lo = args.sim_time * 0.4
+    dip_hi = args.sim_time * 0.7
+    fleet = FleetScenario(
+        functions=(
+            FleetFunction(
+                name="api",
+                arrival_process=ExpSimProcess(rate=0.8),
+                warm_service_process=ExpSimProcess(rate=0.5),
+                cold_service_process=ExpSimProcess(rate=0.25),
+                expiration_threshold=60.0,
+                max_concurrency=25,
+            ),
+            FleetFunction(
+                name="batch",
+                arrival_process=ExpSimProcess(rate=0.3),
+                warm_service_process=ExpSimProcess(rate=0.2),
+                cold_service_process=ExpSimProcess(rate=0.1),
+                expiration_threshold=120.0,
+                max_concurrency=20,
+            ),
+        ),
+        n_cluster=40,
+        sim_time=args.sim_time,
+        skip_time=0.0,
+        faults=FaultModel(
+            crash_rate=2e-3,
+            capacity=CapacityProfile(
+                edges=(dip_lo, dip_hi), values=(40.0, 10.0, 40.0)
+            ),
+        ),
+    )
+    key = jax.random.key(1)
+    rows = {}
+    for backend in ("scan", "pallas", "ref"):
+        fs = fleet_run(fleet, key, replicas=args.replicas, backend=backend)
+        rows[backend] = [
+            (
+                int(np.asarray(s.n_crash).sum()),
+                int(np.asarray(s.n_evict).sum()),
+                int(np.asarray(s.n_interrupt).sum()),
+                s.availability,
+            )
+            for s in fs.summary.summaries
+        ]
+    for f_i, name in enumerate(fleet.names):
+        c, e, i, a = rows["scan"][f_i]
+        print(
+            f"  {name:>6}: crashes={c:>4} evictions={e:>3} "
+            f"interrupted={i:>4} availability={a:.4f}"
+        )
+    agree = all(
+        rows["scan"][f_i][:3] == rows[b][f_i][:3]
+        for b in ("pallas", "ref")
+        for f_i in range(len(fleet.names))
+    )
+    print(f"  scan/pallas/ref fault counts agree: {agree}")
+    if not agree:
+        raise SystemExit("backend disagreement under faults")
+
+
+def chaos_tick(args):
+    print("\n=== online service through a chaos tick ===")
+    base = Scenario(
+        arrival_process=ExpSimProcess(rate=1.0),
+        warm_service_process=ExpSimProcess(rate=0.5),
+        cold_service_process=ExpSimProcess(rate=1.0 / 3.0),
+        max_concurrency=20,
+        sim_time=120.0,
+        skip_time=0.0,
+        faults=FaultModel(
+            crash_rate=5e-3,
+            capacity=CapacityProfile(edges=(60.0,), values=(20.0, 5.0)),
+        ),
+    )
+    cfg = OnlineConfig(
+        rate_ceiling=4.0,
+        n_bins=4,
+        bin_width=30.0,
+        overlap=False,
+        thresholds=(30.0, 120.0, 600.0),
+        replicas=args.replicas,
+    )
+    svc = OnlineWhatIfService(base, cfg)
+    rng = np.random.default_rng(11)
+    svc.observe(np.cumsum(rng.exponential(1.0, 100)))
+    r0 = svc.tick()
+    print(
+        f"  tick 0: threshold={r0.applied_threshold:.0f}s "
+        f"degraded={r0.degraded}"
+    )
+    # the feed dies; the next tick must hold, not thrash
+    r1 = svc.tick()
+    print(
+        f"  tick 1: threshold={r1.applied_threshold:.0f}s "
+        f"degraded={r1.degraded} ({r1.degraded_reason})"
+    )
+    snap = svc.checkpoint()
+    svc2 = OnlineWhatIfService(base, cfg)
+    svc2.restore(snap)
+    print(f"  checkpoint/restore: resumed at tick {svc2._ticks}")
+    if not (r1.degraded and r1.applied_threshold == r0.applied_threshold):
+        raise SystemExit("chaos tick did not hold the last good advice")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--sim-time", type=float, default=1000.0)
+    args = ap.parse_args()
+    frontier(args)
+    capacity_dip(args)
+    chaos_tick(args)
+    print("\nchaos studies complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -72,6 +72,9 @@ class EngineSpec:
     # coupling (shared cluster capacity + per-function pools,
     # DESIGN.md §13) — consumed by repro.core.fleet
     fleet_backends: Tuple[str, ...] = ()
+    # backends on which this engine serves platform fault injection
+    # (instance crashes + capacity churn, DESIGN.md §15)
+    faults_backends: Tuple[str, ...] = ()
     description: str = ""
 
 
@@ -137,6 +140,7 @@ def register_engine(
     reliability_backends: Sequence[str] = (),
     fused_backends: Sequence[str] = (),
     fleet_backends: Sequence[str] = (),
+    faults_backends: Sequence[str] = (),
     description: str = "",
 ):
     """Decorator: register ``fn`` as engine ``name``'s run entry point."""
@@ -151,6 +155,7 @@ def register_engine(
             reliability_backends=tuple(reliability_backends),
             fused_backends=tuple(fused_backends),
             fleet_backends=tuple(fleet_backends),
+            faults_backends=tuple(faults_backends),
             description=description,
         )
         return fn
@@ -467,8 +472,8 @@ def capability_markdown() -> str:
     engines = registered_engines()
     backends = registered_backends()
     lines = [
-        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability | draws | fleet |",
-        "|---|---|---|---|---|---|---|---|",
+        "| engine | backend | precision | `shard=\"grid\"` | windowed metrics | reliability | draws | fleet | faults |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for ename, espec in engines.items():
         for bname, bspec in backends.items():
@@ -482,7 +487,8 @@ def capability_markdown() -> str:
                 f"{'✓' if bname in espec.windowed_backends else '—'} | "
                 f"{'✓' if bname in espec.reliability_backends else '—'} | "
                 f"{'staged+fused' if fused else 'staged'} | "
-                f"{'✓' if bname in espec.fleet_backends else '—'} |"
+                f"{'✓' if bname in espec.fleet_backends else '—'} | "
+                f"{'✓' if bname in espec.faults_backends else '—'} |"
             )
     return "\n".join(lines)
 

@@ -1,0 +1,126 @@
+"""Platform fault models: instance crashes and capacity churn (DESIGN.md §15).
+
+The reliability layer (DESIGN.md §11) models *invocation*-level faults —
+timeouts, per-attempt failures, retries.  This module models the
+*platform*-level faults underneath them:
+
+* an instance-crash hazard — every provisioned instance (idle or
+  running) dies after an Exp(``crash_rate``) lifetime, drawn once at
+  cold start from a dedicated fold_in-salted uniform stream (the
+  exponential is memoryless, so a single lifetime draw is equivalent to
+  a per-unit-time hazard);
+* cluster capacity churn — a piecewise-constant :class:`CapacityProfile`
+  (the ``RateProfile`` shape re-used for a capacity ceiling) that steps
+  the admissible instance count down and up at traced event times.  A
+  downward step evicts the newest idle instances first; while degraded,
+  cold-start admission is gated at the current ceiling.
+
+A default-constructed ``FaultModel()`` is inert: the static flags it
+contributes to :class:`repro.core.scenario.StaticConfig` stay off, so
+every engine runs the exact pre-fault trace and the results are bitwise
+identical to not passing ``faults=`` at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+# fold_in salt for the per-event crash-lifetime uniforms; continues the
+# reliability stream chain (1013..1016, see repro.core.simulator) and is
+# pinned by tests like drawplan's _FAIL_SALT.
+CRASH_SALT = 1017
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityProfile:
+    """A piecewise-constant cluster-capacity ceiling.
+
+    ``values[i]`` instances are admissible on ``[edges[i-1], edges[i])``
+    (with ``edges[-1] = 0`` and ``edges[len(edges)] = inf`` implied) —
+    the same shape as :class:`repro.core.processes.PiecewiseConstantRate`,
+    but stepping the cluster's slot budget instead of the arrival rate.
+    Edges and values are traced (sweepable); only ``len(values)`` is
+    static, so profiles sharing a step count share one compiled trace.
+    """
+
+    edges: Tuple[float, ...]
+    values: Tuple[float, ...]
+
+    def __post_init__(self):
+        edges = tuple(float(e) for e in self.edges)
+        values = tuple(float(v) for v in self.values)
+        object.__setattr__(self, "edges", edges)
+        object.__setattr__(self, "values", values)
+        if len(values) != len(edges) + 1:
+            raise ValueError(
+                f"need len(values) == len(edges) + 1 (one capacity per "
+                f"segment); got {len(edges)} edges and {len(values)} values"
+            )
+        if any(e <= 0 for e in edges) or any(
+            b <= a for a, b in zip(edges, edges[1:])
+        ):
+            raise ValueError(
+                f"edges must be positive and strictly increasing; got {edges}"
+            )
+        if any(v < 0 or not np.isfinite(v) for v in values):
+            raise ValueError(
+                f"capacity values must be finite and >= 0; got {values}"
+            )
+
+    def value(self, t: float) -> float:
+        """The capacity ceiling in effect at time ``t``."""
+        return self.values[int(np.searchsorted(self.edges, t, side="right"))]
+
+    @property
+    def floor(self) -> float:
+        """The lowest ceiling anywhere on the profile."""
+        return min(self.values)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Platform fault injection: crash hazard + capacity churn.
+
+    ``crash_rate`` is the per-unit-time exponential crash hazard applied
+    to every provisioned instance (0 disables crashes); ``capacity`` is
+    an optional :class:`CapacityProfile` ceiling on the live instance
+    count (``None`` disables churn).  ``FaultModel()`` with both defaults
+    is a bitwise no-op.
+    """
+
+    crash_rate: float = 0.0
+    capacity: Optional[CapacityProfile] = None
+
+    def __post_init__(self):
+        rate = float(self.crash_rate)
+        object.__setattr__(self, "crash_rate", rate)
+        if not np.isfinite(rate) or rate < 0:
+            raise ValueError(
+                f"crash_rate must be finite and >= 0, got {self.crash_rate}"
+            )
+        if self.capacity is not None and not isinstance(
+            self.capacity, CapacityProfile
+        ):
+            raise TypeError(
+                "capacity must be a CapacityProfile (or None), got "
+                f"{type(self.capacity).__name__}"
+            )
+
+    @property
+    def crashes(self) -> bool:
+        """Whether the crash hazard is active."""
+        return self.crash_rate > 0.0
+
+    @property
+    def cap_steps(self) -> int:
+        """Number of capacity segments (0 = churn off) — the static leg
+        of the profile; edges/values themselves are traced."""
+        return 0 if self.capacity is None else len(self.capacity.values)
+
+    @property
+    def enabled(self) -> bool:
+        """Whether any fault channel is active (False = bitwise no-op)."""
+        return self.crashes or self.capacity is not None

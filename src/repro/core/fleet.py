@@ -49,12 +49,15 @@ import numpy as np
 
 from repro.core.cost import BillingModel, CostEstimate, estimate_cost
 from repro.core.execution import Execution, plan_of, resolve_engine
+from repro.core.faults import FaultModel
 from repro.core.processes import RateProfile, SimProcess
 from repro.core.scenario import GridResult, Scenario, TRACE_COUNTS
 from repro.core.simulator import (
     SimulationSummary,
     _NEG_INF,
+    draw_crash_uniforms,
     draw_workload_samples,
+    fault_interval_integrals,
     interval_integrals,
 )
 
@@ -154,6 +157,7 @@ class FleetScenario:
     skip_time: float = 100.0
     slots: int = 64
     billing: BillingModel = BillingModel()
+    faults: Optional[FaultModel] = None
 
     def __post_init__(self):
         fns = tuple(self.functions)
@@ -169,6 +173,21 @@ class FleetScenario:
             raise ValueError(f"n_cluster must be > 0, got {self.n_cluster}")
         if self.queue_depth < 0:
             raise ValueError("queue_depth must be >= 0")
+        if self.faults is not None and not isinstance(self.faults, FaultModel):
+            raise ValueError(
+                "FleetScenario.faults must be a FaultModel (or None), got "
+                f"{type(self.faults).__name__}"
+            )
+        if (
+            self.faults is not None
+            and self.faults.enabled
+            and self.queue_depth > 0
+        ):
+            raise ValueError(
+                "platform faults do not serve fleet FIFO queues yet "
+                "(eviction would have to reconcile queued work); set "
+                "queue_depth=0 or drop the FaultModel"
+            )
         if not self.sim_time > 0:
             raise ValueError(f"sim_time must be > 0, got {self.sim_time}")
         if self.skip_time < 0 or self.skip_time >= self.sim_time:
@@ -225,6 +244,11 @@ class FleetStatic:
     n_functions: int
     queue_depth: int
     prestamped: bool
+    # platform faults (DESIGN.md §15): crash-hazard flag and the
+    # capacity-profile step count — the only static legs; rate/edges/
+    # values stay traced so fault grids share the one fleet trace
+    crashes: bool = False
+    cap_steps: int = 0
 
 
 def _stage_fleet(
@@ -325,6 +349,9 @@ def _fleet_empty_acc(F: int) -> Dict[str, Any]:
         qserved=zi,
         qwait=zf,
         peak=jnp.zeros((), jnp.float64),
+        n_crash=zi,
+        n_evict=zi,
+        n_interrupt=zi,
     )
 
 
@@ -344,14 +371,24 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
     t_end = p["sim_time"]
     skip = p["skip_time"]
     Q = cfg.queue_depth
+    crashes = cfg.crashes
+    capped = cfg.cap_steps > 0
+    if Q and (crashes or capped):  # rejected at FleetScenario construction
+        raise AssertionError("fleet faults are incompatible with queue_depth > 0")
     integ = jax.vmap(interval_integrals, in_axes=(0, 0, 0, None, None))
+    fault_integ = jax.vmap(fault_interval_integrals, in_axes=(0, 0, 0, 0, None, None))
 
     def step(state, xs):
         if Q:
             alive, creation, busy_until, qt, qw, qc, t_prev, acc = state
+        elif crashes:
+            alive, creation, busy_until, doom, t_prev, acc = state
         else:
             alive, creation, busy_until, t_prev, acc = state
-        dt, fid, warm_s, cold_s = xs
+        if crashes:
+            dt, fid, warm_s, cold_s, crash_u = xs
+        else:
+            dt, fid, warm_s, cold_s = xs
         if cfg.prestamped:
             t = dt.astype(jnp.float64)
         else:
@@ -359,16 +396,66 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
 
         lo = jnp.clip(t_prev, skip, t_end)
         hi = jnp.clip(t, skip, t_end)
-        run_t, idle_t = integ(alive, busy_until, t_exp, lo, hi)
+        if crashes:
+            run_t, idle_t = fault_integ(alive, busy_until, t_exp, doom, lo, hi)
+        else:
+            run_t, idle_t = integ(alive, busy_until, t_exp, lo, hi)
 
         expire_time = busy_until + t_exp[:, None]
-        expired_now = alive & (expire_time <= t)
-        lifespan_ok = expired_now & (expire_time > skip) & (expire_time <= t_end)
-        lifespan_sum = acc["lifespan_sum"] + jnp.where(
-            lifespan_ok, expire_time - creation, 0.0
-        ).sum(axis=1)
+        if crashes:
+            # A stamped doom inside the lease ends the instance early; the
+            # exit is an expiry otherwise.  Strictly-before keeps the
+            # doom == expire tie classified as a normal expiry, matching
+            # the single-function scan and both block kernels.
+            exit_time = jnp.minimum(expire_time, doom)
+            expired_now = alive & (exit_time <= t)
+            crash_ok = (
+                expired_now
+                & (doom < expire_time)
+                & (doom > skip)
+                & (doom <= t_end)
+            )
+            n_crash_inc = crash_ok.sum(axis=1)
+            lifespan_ok = expired_now & (exit_time > skip) & (exit_time <= t_end)
+            lifespan_sum = acc["lifespan_sum"] + jnp.where(
+                lifespan_ok, exit_time - creation, 0.0
+            ).sum(axis=1)
+        else:
+            expired_now = alive & (expire_time <= t)
+            lifespan_ok = expired_now & (expire_time > skip) & (expire_time <= t_end)
+            lifespan_sum = acc["lifespan_sum"] + jnp.where(
+                lifespan_ok, expire_time - creation, 0.0
+            ).sum(axis=1)
         lifespan_count = acc["lifespan_count"] + lifespan_ok.sum(axis=1)
         alive = alive & ~expired_now
+
+        if capped:
+            # Cluster capacity churn: when the profile steps below the
+            # current cluster occupancy, shed newest-idle instances
+            # fleet-wide (flat index f*M+m breaks creation-time ties,
+            # matching the block kernels' lane order).
+            cap_now = p["cap_values"][
+                jnp.searchsorted(p["cap_edges"], t, side="right")
+            ]
+            idle_now = alive & (busy_until <= t)
+            over = alive.sum().astype(jnp.float64) - cap_now
+            crf = creation.reshape(-1)
+            idf = idle_now.reshape(-1)
+            ids = jnp.arange(crf.shape[0])
+            newer = (crf[None, :] > crf[:, None]) | (
+                (crf[None, :] == crf[:, None]) & (ids[None, :] < ids[:, None])
+            )
+            rank = (idf[None, :] & newer).sum(axis=1)
+            evict = (
+                idf & (rank.astype(jnp.float64) < over) & (t <= t_end)
+            ).reshape(alive.shape)
+            evict_ok = evict & (t > skip)
+            lifespan_sum = lifespan_sum + jnp.where(
+                evict_ok, t - creation, 0.0
+            ).sum(axis=1)
+            lifespan_count = lifespan_count + evict_ok.sum(axis=1)
+            n_evict_inc = evict_ok.sum(axis=1)
+            alive = alive & ~evict
 
         active = t <= t_end
         counted = t > skip
@@ -379,6 +466,10 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
             lifespan_sum=lifespan_sum,
             lifespan_count=lifespan_count,
         )
+        if crashes:
+            acc = dict(acc, n_crash=acc["n_crash"] + n_crash_inc)
+        if capped:
+            acc = dict(acc, n_evict=acc["n_evict"] + n_evict_inc)
 
         if Q:
             # FIFO drain: freed capacity serves queued requests of the
@@ -455,6 +546,9 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
             & any_free[fid]
             & (cluster < ncl)
         )
+        if capped:
+            # admission gate while degraded: no cold start over the ceiling
+            can_cold_f = can_cold_f & (cluster.astype(jnp.float64) < cap_now)
         overflow_f = (
             (~any_idle_f) & (n_alive[fid] < limit[fid]) & (~any_free[fid]) & active
         )
@@ -476,6 +570,16 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
         new_creation = jnp.where(is_cold, t, creation[fid, chosen])
         creation = creation.at[fid, chosen].set(new_creation)
         alive = alive.at[fid, chosen].set(alive[fid, chosen] | is_cold)
+        if crashes:
+            # A cold start draws the instance's Exp(crash_rate) lifetime
+            # from its pre-drawn uniform (memoryless hazard); warm serves
+            # keep the instance's existing doom.  The fleet has no
+            # reliability layer, so an interrupted attempt is just one the
+            # serving instance does not survive.
+            life = -jnp.log(1.0 - crash_u.astype(jnp.float64)) / p["crash_rate"]
+            doom_chosen = jnp.where(is_cold, t + life, doom[fid, chosen])
+            doom = doom.at[fid, chosen].set(doom_chosen)
+            interrupted = assign & (doom_chosen < t + service)
         if Q:
             pos = jnp.minimum(qlen_f, Q - 1)
             qt = qt.at[fid, pos].set(jnp.where(is_enq, t, qt[fid, pos]))
@@ -497,9 +601,16 @@ def _make_fleet_step(cfg: FleetStatic, p: Dict[str, Any]):
             arrivals=acc["arrivals"].at[fid].add(active & counted),
             peak=jnp.maximum(acc["peak"], alive.sum().astype(jnp.float64)),
         )
+        if crashes:
+            acc = dict(
+                acc,
+                n_interrupt=acc["n_interrupt"].at[fid].add(interrupted & counted),
+            )
         if Q:
             acc = dict(acc, enq=acc["enq"].at[fid].add(is_enq & counted))
             return (alive, creation, busy_until, qt, qw, qc, t, acc), None
+        if crashes:
+            return (alive, creation, busy_until, doom, t, acc), None
         return (alive, creation, busy_until, t, acc), None
 
     return step
@@ -510,6 +621,8 @@ def _fleet_flush(cfg: FleetStatic, p: Dict[str, Any], state):
     Q = cfg.queue_depth
     if Q:
         alive, creation, busy_until, qt, _, _, t_prev, acc = state
+    elif cfg.crashes:
+        alive, creation, busy_until, doom, t_prev, acc = state
     else:
         alive, creation, busy_until, t_prev, acc = state
     t_exp = p["expiration_threshold"]
@@ -517,16 +630,29 @@ def _fleet_flush(cfg: FleetStatic, p: Dict[str, Any], state):
     skip = p["skip_time"]
     lo = jnp.clip(t_prev, skip, t_end)
     hi = jnp.asarray(t_end, jnp.float64)
-    integ = jax.vmap(interval_integrals, in_axes=(0, 0, 0, None, None))
-    run_t, idle_t = integ(alive, busy_until, t_exp, lo, hi)
-    expire_time = busy_until + t_exp[:, None]
-    tail_exp = alive & (expire_time <= hi) & (expire_time > skip)
+    if cfg.crashes:
+        fault_integ = jax.vmap(
+            fault_interval_integrals, in_axes=(0, 0, 0, 0, None, None)
+        )
+        run_t, idle_t = fault_integ(alive, busy_until, t_exp, doom, lo, hi)
+        expire_time = busy_until + t_exp[:, None]
+        exit_time = jnp.minimum(expire_time, doom)
+        tail_exp = alive & (exit_time <= hi) & (exit_time > skip)
+        acc = dict(
+            acc,
+            n_crash=acc["n_crash"] + (tail_exp & (doom < expire_time)).sum(axis=1),
+        )
+    else:
+        integ = jax.vmap(interval_integrals, in_axes=(0, 0, 0, None, None))
+        run_t, idle_t = integ(alive, busy_until, t_exp, lo, hi)
+        exit_time = busy_until + t_exp[:, None]
+        tail_exp = alive & (exit_time <= hi) & (exit_time > skip)
     acc = dict(
         acc,
         time_running=acc["time_running"] + run_t,
         time_idle=acc["time_idle"] + idle_t,
         lifespan_sum=acc["lifespan_sum"]
-        + jnp.where(tail_exp, expire_time - creation, 0.0).sum(axis=1),
+        + jnp.where(tail_exp, exit_time - creation, 0.0).sum(axis=1),
         lifespan_count=acc["lifespan_count"] + tail_exp.sum(axis=1),
         qleft=(
             (qt > _NEG_INF * 0.5).sum(axis=1)
@@ -547,9 +673,15 @@ def _fleet_scan_one(cfg: FleetStatic, p, dt_row, fid_row, warm_row, cold_row):
     if Q:
         qneg = jnp.full((F, Q), _NEG_INF, jnp.float64)
         state0 = (alive0, neg, neg, qneg, qneg, qneg, jnp.zeros((), jnp.float64), acc)
+    elif cfg.crashes:
+        doom0 = jnp.full((F, M), jnp.inf, jnp.float64)
+        state0 = (alive0, neg, neg, doom0, jnp.zeros((), jnp.float64), acc)
     else:
         state0 = (alive0, neg, neg, jnp.zeros((), jnp.float64), acc)
-    state, _ = jax.lax.scan(step, state0, (dt_row, fid_row, warm_row, cold_row))
+    xs = (dt_row, fid_row, warm_row, cold_row)
+    if cfg.crashes:
+        xs = xs + (p["crash_u"],)
+    state, _ = jax.lax.scan(step, state0, xs)
     return _fleet_flush(cfg, p, state)
 
 
@@ -708,6 +840,19 @@ def _scan_fleet_cells(fleet, staged, cells, plan, replicas):
         sim_time=jnp.asarray(np.repeat(cells["sim_time"], R), jnp.float64),
         skip_time=jnp.asarray(np.repeat(cells["skip_time"], R), jnp.float64),
     )
+    flt = fleet.faults if fleet.faults is not None and fleet.faults.enabled else None
+    if flt is not None and flt.crashes:
+        params["crash_rate"] = jnp.full((C,), flt.crash_rate, jnp.float64)
+        params["crash_u"] = jnp.asarray(
+            np.tile(staged["crash_u"], (n_cells, 1)), jnp.float64
+        )
+    if flt is not None and flt.cap_steps:
+        params["cap_edges"] = jnp.asarray(
+            np.tile(np.asarray(flt.capacity.edges, np.float64), (C, 1))
+        )
+        params["cap_values"] = jnp.asarray(
+            np.tile(np.asarray(flt.capacity.values, np.float64), (C, 1))
+        )
     times = jnp.asarray(np.tile(staged["times"], (n_cells, 1)))
     fids = jnp.asarray(np.tile(staged["fids"], (n_cells, 1)))
     warms = jnp.asarray(np.tile(staged["warms"], (n_cells, 1)))
@@ -718,6 +863,8 @@ def _scan_fleet_cells(fleet, staged, cells, plan, replicas):
         n_functions=F,
         queue_depth=fleet.queue_depth,
         prestamped=staged["prestamped"],
+        crashes=bool(flt is not None and flt.crashes),
+        cap_steps=flt.cap_steps if flt is not None else 0,
     )
 
     mesh = plan.mesh() if plan.shard == "grid" else None
@@ -762,6 +909,15 @@ def _scan_fleet_cells(fleet, staged, cells, plan, replicas):
                 lifespan_count=per_f("lifespan_count", c)[:, f],
                 measured_time=measured,
                 overflow=per_f("overflow", c)[:, f],
+                **(
+                    dict(
+                        n_crash=per_f("n_crash", c)[:, f],
+                        n_evict=per_f("n_evict", c)[:, f],
+                        n_interrupt=per_f("n_interrupt", c)[:, f],
+                    )
+                    if flt is not None
+                    else {}
+                ),
             )
             for f in range(F)
         ]
@@ -812,6 +968,18 @@ def _block_fleet_cells(fleet, staged, cells, plan, bspec, replicas):
     tile8 = lambda a, dt: np.repeat(
         np.tile(np.asarray(a, dt), (n_cells, 1)), BLOCK_R, axis=0
     )
+    flt = fleet.faults if fleet.faults is not None and fleet.faults.enabled else None
+    fault_kw = {}
+    if flt is not None and flt.crashes:
+        fault_kw["crash_rate"] = per_cell_rows(np.full(n_cells, flt.crash_rate))
+        fault_kw["crash_u"] = tile8(staged["crash_u"], np.float32)
+    if flt is not None and flt.cap_steps:
+        fault_kw["cap_edges"] = np.tile(
+            np.asarray(flt.capacity.edges, np.float32), (rows, 1)
+        )
+        fault_kw["cap_values"] = np.tile(
+            np.asarray(flt.capacity.values, np.float32), (rows, 1)
+        )
     launch = bspec.launch_for("fleet")
     acc, qleft = launch(
         per_fn_rows(cells["expiration_threshold"], 1.0),
@@ -827,8 +995,10 @@ def _block_fleet_cells(fleet, staged, cells, plan, bspec, replicas):
         queue_depth=fleet.queue_depth,
         prestamped=staged["prestamped"],
         block_k=plan.resolved_block_k(K),
+        **fault_kw,
     )
-    acc = np.asarray(acc).reshape(n_cells, R, BLOCK_R, FLEET_ACC_COLS)
+    acc_cols = FLEET_ACC_COLS + (3 if flt is not None else 0)
+    acc = np.asarray(acc).reshape(n_cells, R, BLOCK_R, acc_cols)
     qleft = np.asarray(qleft).reshape(n_cells, R, BLOCK_R)
     if acc[:, :, :, 7].sum() > 0:
         raise RuntimeError(
@@ -853,6 +1023,15 @@ def _block_fleet_cells(fleet, staged, cells, plan, bspec, replicas):
                 lifespan_count=zeros,
                 measured_time=measured,
                 overflow=a[:, f, 7],
+                **(
+                    dict(
+                        n_crash=a[:, f, FLEET_ACC_COLS + 0],
+                        n_evict=a[:, f, FLEET_ACC_COLS + 1],
+                        n_interrupt=a[:, f, FLEET_ACC_COLS + 2],
+                    )
+                    if flt is not None
+                    else {}
+                ),
             )
             for f in range(F)
         ]
@@ -1027,6 +1206,14 @@ def _fleet_cells(fleet, over, key, replicas, plan, bspec, steps):
     per_cell = [_cell_params(fleet, names, c) for c in combos]
     max_sim = max(p[2] for p in per_cell)
     staged = _stage_fleet(fleet, key, replicas, steps, max_sim)
+    if fleet.faults is not None and fleet.faults.enabled and fleet.faults.crashes:
+        # One crash uniform per merged event, positional — drawn after the
+        # per-function streams are merged so the stream stays one [R, K]
+        # plane regardless of F (fold_in-salted; see CRASH_SALT).
+        staged["crash_u"] = np.asarray(
+            draw_crash_uniforms(key, replicas, staged["times"].shape[1]),
+            np.float32,
+        )
     cells = dict(
         expiration_threshold=np.array([p[0] for p in per_cell], np.float64),
         limit=np.broadcast_to(
@@ -1134,6 +1321,7 @@ def fleet_sweep(
             "developer_cost",
             "provider_cost",
             "goodput",
+            "availability",
             "queue_wait_avg",
             "cluster_utilization",
             "peak_cluster",
@@ -1155,6 +1343,7 @@ def fleet_sweep(
             grids["developer_cost"][c, f] = costs[f].developer_total
             grids["provider_cost"][c, f] = costs[f].provider_infra_cost
             grids["goodput"][c, f] = s.goodput
+            grids["availability"][c, f] = s.availability
             grids["queue_wait_avg"][c, f] = qwa[f]
             grids["cluster_utilization"][c, f] = fsum.cluster_utilization
             grids["peak_cluster"][c, f] = fsum.max_peak_cluster
@@ -1180,6 +1369,7 @@ def fleet_sweep(
         developer_cost=grids["developer_cost"],
         provider_cost=grids["provider_cost"],
         goodput=grids["goodput"],
+        availability=grids["availability"],
         ok=ok,
         execution=plan,
         queue_wait_avg=grids["queue_wait_avg"],

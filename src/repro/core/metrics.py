@@ -72,28 +72,43 @@ def reliability_report(summary) -> dict:
     """Attempts-vs-completions view of a reliability run (DESIGN.md §11).
 
     Takes any :class:`~repro.core.simulator.SimulationSummary` from a run
-    with ``Scenario.reliability=`` set and flattens its derived
-    reliability metrics into one plain dict — served attempts (cold +
-    warm starts, i.e. the retry-amplified load the platform actually
-    carried), successful completions, per-outcome counts, goodput
-    (completions per second of measured time) and the retry
-    amplification factor (attempts per distinct request served).
+    with ``Scenario.reliability=`` and/or ``Scenario.faults=`` set and
+    flattens its derived metrics into one plain dict — served attempts
+    (cold + warm starts, i.e. the retry-amplified load the platform
+    actually carried), successful completions, per-outcome counts,
+    goodput (completions per second of measured time) and the retry
+    amplification factor (attempts per distinct request served).  Runs
+    with a fault model additionally report instance crashes, capacity
+    evictions, crash-interrupted attempts and availability (DESIGN.md
+    §15); either layer alone is enough — missing counters read as zero.
     """
-    if summary.n_timeout is None:
+    rely = summary.n_timeout is not None
+    faults = summary.n_crash is not None
+    if not (rely or faults):
         raise ValueError(
-            "summary has no reliability counters; run with "
-            "Scenario.reliability= set"
+            "summary has no reliability or fault counters; run with "
+            "Scenario.reliability= or Scenario.faults= set"
         )
-    return {
+    zero = np.zeros_like(np.asarray(summary.n_cold))
+    rel = lambda x: x if x is not None else zero  # noqa: E731
+    report = {
         "attempts": float(summary.n_attempts.sum()),
         "completions": float(summary.n_completions.sum()),
-        "timeouts": float(summary.n_timeout.sum()),
-        "failures": float(summary.n_fail.sum()),
-        "retries": float(summary.n_retry.sum()),
-        "abandoned": float(summary.n_abandon.sum()),
+        "timeouts": float(rel(summary.n_timeout).sum()),
+        "failures": float(rel(summary.n_fail).sum()),
+        "retries": float(rel(summary.n_retry).sum()),
+        "abandoned": float(rel(summary.n_abandon).sum()),
         "rejected": float(summary.n_reject.sum()),
         "timeout_prob": summary.timeout_prob,
         "failure_prob": summary.failure_prob,
         "goodput": summary.goodput,
         "retry_amplification": summary.retry_amplification,
     }
+    if faults:
+        report.update(
+            crashes=float(summary.n_crash.sum()),
+            evictions=float(summary.n_evict.sum()),
+            interrupted=float(summary.n_interrupt.sum()),
+            availability=summary.availability,
+        )
+    return report

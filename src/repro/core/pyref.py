@@ -13,6 +13,7 @@ AWS traces (no AWS access in this environment).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional
 
 import numpy as np
@@ -22,12 +23,17 @@ import numpy as np
 class _Instance:
     creation: float
     busy_until: float  # running until here, idle afterwards
+    doom: float = math.inf  # crash instant (faults, DESIGN.md §15)
 
     def is_idle(self, t: float) -> bool:
         return self.busy_until <= t
 
     def expire_time(self, t_exp: float) -> float:
         return self.busy_until + t_exp
+
+    def exit_time(self, t_exp: float) -> float:
+        """Expiry or crash, whichever clock fires first."""
+        return min(self.busy_until + t_exp, self.doom)
 
 
 @dataclasses.dataclass
@@ -54,6 +60,10 @@ class PyRefResults:
     n_retry: int = 0
     n_abandon: int = 0
     w_fail: Optional[np.ndarray] = None
+    # platform-fault counters (DESIGN.md §15)
+    n_crash: int = 0
+    n_evict: int = 0
+    n_interrupt: int = 0
 
     @property
     def cold_start_prob(self) -> float:
@@ -82,6 +92,10 @@ def simulate_pyref(
     fail_u=None,
     is_first=None,
     child_pos=None,
+    crash_rate: float = 0.0,
+    crash_u=None,
+    cap_edges=None,
+    cap_values=None,
 ) -> PyRefResults:
     """Event-driven simulation consuming pre-drawn samples.
 
@@ -115,6 +129,14 @@ def simulate_pyref(
     retries = is_first is not None
     t_to = float("inf") if t_timeout is None else float(t_timeout)
     p_f = float(p_fail)
+    crashes = crash_u is not None
+    capped = cap_values is not None
+    if crashes:
+        crash_arr = np.asarray(crash_u, np.float32)
+        c_rate = float(crash_rate)
+    if capped:
+        edges = np.asarray(cap_edges, np.float64)
+        values = np.asarray(cap_values, np.float64)
     if rely:
         fail_arr = np.asarray(fail_u, np.float32)
     if retries:
@@ -145,10 +167,12 @@ def simulate_pyref(
         if hi <= lo:
             return
         for inst in pool:
-            run = min(inst.busy_until, hi) - lo
+            # a crashed instance stops accruing run/idle time at its doom
+            stop = min(hi, inst.doom)
+            run = min(inst.busy_until, stop) - lo
             if run > 0:
                 res.time_running += run
-            idle = min(inst.expire_time(t_exp), hi) - max(inst.busy_until, lo)
+            idle = min(inst.expire_time(t_exp), stop) - max(inst.busy_until, lo)
             if idle > 0:
                 res.time_idle += idle
         if hist is not None:
@@ -196,17 +220,47 @@ def simulate_pyref(
         integrate(lo, hi)
         integrate_windows(t_prev, t)
 
-        # expire-first tie rule, matching the vectorised simulator
+        # expire-first tie rule, matching the vectorised simulator; under
+        # faults the exit clock is min(expiry, doom), a strictly-earlier
+        # doom classifying the exit as a crash
         survivors = []
         for inst in pool:
-            e = inst.expire_time(t_exp)
+            e = inst.exit_time(t_exp)
             if e <= t:
                 if skip_time < e <= sim_time:
                     res.lifespan_sum += e - inst.creation
                     res.lifespan_count += 1
+                if (
+                    crashes
+                    and inst.doom < inst.expire_time(t_exp)
+                    and skip_time < inst.doom <= sim_time
+                ):
+                    res.n_crash += 1
             else:
                 survivors.append(inst)
         pool[:] = survivors
+
+        if capped and t <= sim_time:
+            # capacity churn: evict the newest idle instances above the
+            # ceiling in effect at this arrival (DESIGN.md §15)
+            cap_now = float(
+                values[int(np.searchsorted(edges, t, side="right"))]
+            )
+            over = len(pool) - cap_now
+            if over > 0:
+                idle_new = sorted(
+                    (i_ for i_ in pool if i_.is_idle(t)),
+                    key=lambda i_: i_.creation,
+                    reverse=True,
+                )
+                for rank, inst in enumerate(idle_new):
+                    if not rank < over:
+                        break
+                    pool.remove(inst)
+                    if t > skip_time:
+                        res.n_evict += 1
+                        res.lifespan_sum += t - inst.creation
+                        res.lifespan_count += 1
 
         if t > sim_time:
             t_prev = t
@@ -232,20 +286,30 @@ def simulate_pyref(
         counted = t > skip_time
         is_warm_e = is_cold_e = is_reject_e = False
         service = 0.0
+        doom_chosen = math.inf
         if idle:
             pick = max if routing == "newest" else min
             target = pick(idle, key=lambda i_: i_.creation)
             service = float(warm_s)
             target.busy_until = t + min(service, t_to)
+            doom_chosen = target.doom
             is_warm_e = True
             if counted:
                 res.n_warm += 1
                 res.sum_warm_resp += min(service, t_to)
             if w >= 0:
                 res.w_warm[w] += 1
-        elif len(pool) < max_concurrency:
+        elif len(pool) < max_concurrency and (
+            not capped or len(pool) < cap_now
+        ):
             service = float(cold_s)
-            pool.append(_Instance(creation=t, busy_until=t + min(service, t_to)))
+            inst = _Instance(creation=t, busy_until=t + min(service, t_to))
+            if crashes:
+                # Exp(crash_rate) lifetime from the event's pre-drawn
+                # uniform, stamped at cold start (memoryless hazard)
+                inst.doom = t + -math.log(1.0 - float(crash_arr[i])) / c_rate
+            doom_chosen = inst.doom
+            pool.append(inst)
             is_cold_e = True
             if counted:
                 res.n_cold += 1
@@ -256,16 +320,25 @@ def simulate_pyref(
             is_reject_e = True
             if counted:
                 res.n_reject += 1
+        assign = is_warm_e or is_cold_e
+        occupancy = min(service, t_to)
         if rely:
-            assign = is_warm_e or is_cold_e
             timed_out = assign and service > t_to
             failed = (
                 assign and not timed_out and float(fail_arr[i]) < p_f
             )
-            trigger = timed_out or failed or is_reject_e
+            interrupted = (
+                crashes
+                and assign
+                and not timed_out
+                and not failed
+                and doom_chosen < t + occupancy
+            )
+            trigger = timed_out or failed or interrupted or is_reject_e
             if counted:
                 res.n_timeout += int(timed_out)
                 res.n_fail += int(failed)
+                res.n_interrupt += int(interrupted)
             if w >= 0 and (timed_out or failed):
                 res.w_fail[w] += 1
             if retries:
@@ -279,16 +352,22 @@ def simulate_pyref(
                         res.n_abandon += 1
             elif trigger and counted:
                 res.n_abandon += 1
+        elif crashes:
+            interrupted = assign and doom_chosen < t + occupancy
+            if counted:
+                res.n_interrupt += int(interrupted)
         t_prev = t
 
     # tail flush (t_last, sim_time]
     integrate(max(t_prev, skip_time), sim_time)
     integrate_windows(t_prev, sim_time)
     for inst in pool:
-        e = inst.expire_time(t_exp)
+        e = inst.exit_time(t_exp)
         if skip_time < e <= sim_time:
             res.lifespan_sum += e - inst.creation
             res.lifespan_count += 1
+            if crashes and inst.doom < inst.expire_time(t_exp):
+                res.n_crash += 1
     res.histogram = hist
     return res
 
@@ -316,6 +395,10 @@ class PyRefFleetResults:
     lifespan_sum: np.ndarray
     lifespan_count: np.ndarray
     peak_cluster: int
+    # platform-fault counters (faults, DESIGN.md §15): [F] arrays
+    n_crash: Optional[np.ndarray] = None
+    n_evict: Optional[np.ndarray] = None
+    n_interrupt: Optional[np.ndarray] = None
 
 
 def simulate_fleet_pyref(
@@ -330,6 +413,10 @@ def simulate_fleet_pyref(
     sim_time: float,
     skip_time: float = 0.0,
     prestamped: bool = True,
+    crash_rate: float = 0.0,
+    crash_u=None,
+    cap_edges=None,
+    cap_values=None,
 ) -> PyRefFleetResults:
     """Decision-exact oracle for the fleet coupling (DESIGN.md §13).
 
@@ -345,6 +432,16 @@ def simulate_fleet_pyref(
     t_exps = [float(x) for x in expiration_thresholds]
     lims = [float(x) for x in limits]
     Q = int(queue_depth)
+    crashes = crash_u is not None
+    capped = cap_values is not None
+    if (crashes or capped) and Q:
+        raise ValueError("fleet faults are incompatible with queue_depth > 0")
+    if crashes:
+        crash_arr = np.asarray(crash_u, np.float32)
+        c_rate = float(crash_rate)
+    if capped:
+        edges = np.asarray(cap_edges, np.float64)
+        values = np.asarray(cap_values, np.float64)
     pools: List[List[_Instance]] = [[] for _ in range(F)]
     queues: List[List[tuple]] = [[] for _ in range(F)]  # (t_enq, warm, cold)
     res = PyRefFleetResults(
@@ -363,6 +460,9 @@ def simulate_fleet_pyref(
         lifespan_sum=np.zeros(F, np.float64),
         lifespan_count=np.zeros(F, np.int64),
         peak_cluster=0,
+        n_crash=np.zeros(F, np.int64),
+        n_evict=np.zeros(F, np.int64),
+        n_interrupt=np.zeros(F, np.int64),
     )
 
     def cluster() -> int:
@@ -373,36 +473,44 @@ def simulate_fleet_pyref(
             return
         for f in range(F):
             for inst in pools[f]:
-                run = min(inst.busy_until, hi) - lo
+                stop = min(hi, inst.doom)
+                run = min(inst.busy_until, stop) - lo
                 if run > 0:
                     res.time_running[f] += run
-                idle = min(inst.expire_time(t_exps[f]), hi) - max(
+                idle = min(inst.expire_time(t_exps[f]), stop) - max(
                     inst.busy_until, lo
                 )
                 if idle > 0:
                     res.time_idle[f] += idle
 
-    def try_start(f: int, t: float, warm_s: float, cold_s: float):
-        """warm / cold-with-cluster-gate; returns ("warm"|"cold"|None, resp)."""
+    def try_start(f: int, t: float, warm_s: float, cold_s: float, doom: float):
+        """warm / cold-with-cluster-gate; returns (kind, resp, doom_chosen)."""
         idle = [i_ for i_ in pools[f] if i_.is_idle(t)]
         if idle:
             target = max(idle, key=lambda i_: i_.creation)
             target.busy_until = t + float(warm_s)
-            return "warm", float(warm_s)
-        if len(pools[f]) < lims[f] and cluster() < n_cluster:
+            return "warm", float(warm_s), target.doom
+        if (
+            len(pools[f]) < lims[f]
+            and cluster() < n_cluster
+            and (not capped or cluster() < cap_now[0])
+        ):
             pools[f].append(
-                _Instance(creation=t, busy_until=t + float(cold_s))
+                _Instance(creation=t, busy_until=t + float(cold_s), doom=doom)
             )
-            return "cold", float(cold_s)
-        return None, 0.0
+            return "cold", float(cold_s), doom
+        return None, 0.0, math.inf
 
     t_prev = 0.0
+    cap_now = [math.inf]
     arr_dtype = np.float64 if prestamped else np.float32
-    for dt, fid, warm_s, cold_s in zip(
-        np.asarray(times, arr_dtype),
-        np.asarray(fids, np.int64),
-        np.asarray(warms, np.float32),
-        np.asarray(colds, np.float32),
+    for i, (dt, fid, warm_s, cold_s) in enumerate(
+        zip(
+            np.asarray(times, arr_dtype),
+            np.asarray(fids, np.int64),
+            np.asarray(warms, np.float32),
+            np.asarray(colds, np.float32),
+        )
     ):
         t = float(dt) if prestamped else t_prev + float(dt)
         lo = min(max(t_prev, skip_time), sim_time)
@@ -412,14 +520,49 @@ def simulate_fleet_pyref(
         for f in range(F):
             survivors = []
             for inst in pools[f]:
-                e = inst.expire_time(t_exps[f])
+                e = inst.exit_time(t_exps[f])
                 if e <= t:
                     if skip_time < e <= sim_time:
                         res.lifespan_sum[f] += e - inst.creation
                         res.lifespan_count[f] += 1
+                    if (
+                        crashes
+                        and inst.doom < inst.expire_time(t_exps[f])
+                        and skip_time < inst.doom <= sim_time
+                    ):
+                        res.n_crash[f] += 1
                 else:
                     survivors.append(inst)
             pools[f][:] = survivors
+
+        if capped:
+            cap_now[0] = float(
+                values[int(np.searchsorted(edges, t, side="right"))]
+            )
+            if t <= sim_time:
+                # cluster-wide eviction of the newest idle instances over
+                # the ceiling (ties broken by flat pool position, which
+                # cannot collide for distinct f64 arrival times)
+                over = cluster() - cap_now[0]
+                if over > 0:
+                    idle_new = sorted(
+                        (
+                            (inst, f)
+                            for f in range(F)
+                            for inst in pools[f]
+                            if inst.is_idle(t)
+                        ),
+                        key=lambda p: p[0].creation,
+                        reverse=True,
+                    )
+                    for rank, (inst, f) in enumerate(idle_new):
+                        if not rank < over:
+                            break
+                        pools[f].remove(inst)
+                        if t > skip_time:
+                            res.n_evict[f] += 1
+                            res.lifespan_sum[f] += t - inst.creation
+                            res.lifespan_count[f] += 1
 
         f = int(fid)
         counted = t > skip_time
@@ -433,7 +576,7 @@ def simulate_fleet_pyref(
             if not queues[f]:
                 break
             t_enq, qwarm, qcold = queues[f][0]
-            kind, resp = try_start(f, t, qwarm, qcold)
+            kind, resp, _ = try_start(f, t, qwarm, qcold, math.inf)
             if kind is None:
                 break
             queues[f].pop(0)
@@ -450,7 +593,10 @@ def simulate_fleet_pyref(
 
         if counted:
             res.arrivals[f] += 1
-        kind, resp = try_start(f, t, warm_s, cold_s)
+        doom = math.inf
+        if crashes:
+            doom = t + -math.log(1.0 - float(crash_arr[i])) / c_rate
+        kind, resp, doom_chosen = try_start(f, t, warm_s, cold_s, doom)
         if kind == "warm":
             if counted:
                 res.n_warm[f] += 1
@@ -465,15 +611,20 @@ def simulate_fleet_pyref(
                 res.enqueued[f] += 1
         elif counted:
             res.n_reject[f] += 1
+        if crashes and kind is not None and doom_chosen < t + resp:
+            if counted:
+                res.n_interrupt[f] += 1
         res.peak_cluster = max(res.peak_cluster, cluster())
         t_prev = t
 
     integrate(max(t_prev, skip_time), sim_time)
     for f in range(F):
         for inst in pools[f]:
-            e = inst.expire_time(t_exps[f])
+            e = inst.exit_time(t_exps[f])
             if skip_time < e <= sim_time:
                 res.lifespan_sum[f] += e - inst.creation
                 res.lifespan_count[f] += 1
+                if crashes and inst.doom < inst.expire_time(t_exps[f]):
+                    res.n_crash[f] += 1
         res.queue_left[f] = len(queues[f])
     return res

@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.core.cost import BillingModel, CostEstimate, estimate_cost
 from repro.core.execution import Execution, plan_of, resolve_backend
+from repro.core.faults import CapacityProfile, FaultModel
 from repro.core.processes import (
     ArrivalTimeProcess,
     ExpSimProcess,
@@ -108,6 +109,13 @@ class StaticConfig:
     # retry budget — static because it sets the attempt-table width
     # (each base arrival expands to max_retries+1 pre-sorted events).
     max_retries: int = 0
+    # platform-fault layer (DESIGN.md §15): when True the step carries a
+    # per-slot crash time and consumes a per-event crash uniform; the
+    # crash *rate* stays traced in WorkloadParams.
+    crashes: bool = False
+    # number of capacity-profile segments (0 = capacity churn off); the
+    # edge times and ceilings themselves are traced values.
+    cap_steps: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +157,20 @@ class WorkloadParams:
     backoff_jitter: Array = dataclasses.field(
         default_factory=lambda: jnp.asarray(0.0, dtype=jnp.float64)
     )
+    # Platform-fault values (DESIGN.md §15): the crash hazard rate and the
+    # capacity-profile step times/ceilings.  crash_rate=0 is inert; the
+    # capacity arrays are [E]/[E+1] for a single run (shared by replicas),
+    # [C, E]/[C, E+1] for a sweep, and empty when churn is off
+    # (StaticConfig.cap_steps == 0).
+    crash_rate: Array = dataclasses.field(
+        default_factory=lambda: jnp.asarray(0.0, dtype=jnp.float64)
+    )
+    cap_edges: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
+    )
+    cap_values: Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((0,), dtype=jnp.float64)
+    )
 
     @classmethod
     def of(
@@ -162,6 +184,9 @@ class WorkloadParams:
         backoff_base=None,
         backoff_mult=None,
         backoff_jitter=None,
+        crash_rate=None,
+        cap_edges=None,
+        cap_values=None,
     ) -> "WorkloadParams":
         as64 = lambda x: jnp.asarray(x, dtype=jnp.float64)
         thr = as64(expiration_threshold)
@@ -175,6 +200,9 @@ class WorkloadParams:
         fill = lambda x, d: (
             jnp.full(thr.shape, d, jnp.float64) if x is None else as64(x)
         )
+        empty = lambda x: (
+            jnp.zeros((0,), dtype=jnp.float64) if x is None else as64(x)
+        )
         return cls(
             thr,
             as64(sim_time),
@@ -185,6 +213,9 @@ class WorkloadParams:
             fill(backoff_base, 1.0),
             fill(backoff_mult, 2.0),
             fill(backoff_jitter, 0.0),
+            fill(crash_rate, 0.0),
+            empty(cap_edges),
+            empty(cap_values),
         )
 
 
@@ -200,6 +231,9 @@ jax.tree_util.register_dataclass(
         "backoff_base",
         "backoff_mult",
         "backoff_jitter",
+        "crash_rate",
+        "cap_edges",
+        "cap_values",
     ),
     meta_fields=(),
 )
@@ -262,6 +296,9 @@ class Scenario:
     billing: BillingModel = BillingModel()
     # Failure/timeout/retry model (DESIGN.md §11); None = ideal platform.
     reliability: Optional[Reliability] = None
+    # Platform fault injection (DESIGN.md §15); None = faultless platform.
+    # FaultModel() (all defaults) is bitwise-identical to None.
+    faults: Optional[FaultModel] = None
 
     def __post_init__(self):
         if self.slots < 1:
@@ -295,6 +332,22 @@ class Scenario:
             )
         if self.concurrency_value < 1:
             raise ValueError("concurrency_value must be >= 1")
+        if self.faults is not None:
+            if not isinstance(self.faults, FaultModel):
+                raise ValueError(
+                    "Scenario.faults must be a FaultModel (or None), got "
+                    f"{type(self.faults).__name__}"
+                )
+            if self.faults.enabled and self.window_bounds is not None:
+                raise ValueError(
+                    "platform faults do not serve windowed metrics yet; "
+                    "drop window_bounds or the FaultModel"
+                )
+            if self.faults.enabled and self.track_histogram:
+                raise ValueError(
+                    "platform faults do not serve the instance-count "
+                    "histogram; drop track_histogram or the FaultModel"
+                )
         if self.window_bounds is not None:
             wb = np.asarray(self.window_bounds, dtype=np.float64)
             if wb.ndim != 1 or len(wb) < 2 or (np.diff(wb) <= 0).any():
@@ -366,6 +419,7 @@ class Scenario:
         """The compile-relevant slice of this config."""
         rel = self.reliability
         retries = int(rel.retry.max_retries) if rel is not None else 0
+        flt = self.faults
         return StaticConfig(
             slots=self.slots,
             max_concurrency=self.max_concurrency,
@@ -378,11 +432,15 @@ class Scenario:
             n_windows=len(self.window_bounds) - 1 if self.window_bounds else 0,
             reliability=rel is not None,
             max_retries=retries,
+            crashes=flt.crashes if flt is not None else False,
+            cap_steps=flt.cap_steps if flt is not None else 0,
         )
 
     def workload_params(self) -> WorkloadParams:
         """The traced (run-time) slice of this config."""
         rel = self.reliability
+        flt = self.faults
+        cap = flt.capacity if flt is not None else None
         return WorkloadParams.of(
             self.expiration_threshold,
             self.sim_time,
@@ -393,6 +451,9 @@ class Scenario:
             backoff_base=rel.retry.backoff_base if rel else None,
             backoff_mult=rel.retry.backoff_mult if rel else None,
             backoff_jitter=rel.retry.backoff_jitter if rel else None,
+            crash_rate=flt.crash_rate if flt is not None else None,
+            cap_edges=cap.edges if cap is not None else None,
+            cap_values=cap.values if cap is not None else None,
         )
 
 
@@ -486,6 +547,19 @@ def run(
             "in a single run)"
         )
     scn = Scenario.of(scenario)
+    if scn.faults is not None and scn.faults.enabled:
+        if plan.backend not in espec.faults_backends:
+            raise ValueError(
+                f"engine {plan.engine!r} does not serve platform faults on "
+                f"backend {plan.backend!r}; fault-capable backends "
+                f"(EngineSpec.faults_backends): "
+                f"{espec.faults_backends or '()'}"
+            )
+        if plan.resolved_draws == "fused":
+            raise ValueError(
+                "draws='fused' does not serve platform faults (the crash "
+                "stream is host-staged); use draws='staged'"
+            )
     summary, temporal = espec.run(
         scn,
         key,
@@ -549,6 +623,7 @@ def _run_block_single(scn, key, replicas, steps, plan):
         raise ValueError("histograms need the f64 scan backend")
     n = steps or scn.steps_needed()
     rel = scn.reliability
+    flt = scn.faults if scn.faults is not None and scn.faults.enabled else None
     rows = lambda v: np.full((replicas,), v)
     if plan.resolved_draws == "fused":
         fused = _fused_stream_state(scn, key, replicas, n)
@@ -602,6 +677,29 @@ def _run_block_single(scn, key, replicas, steps, plan):
             prestamped=prestamped,
             n_windows=0,
         )
+        fault_kw = {}
+        if flt is not None:
+            from repro.core.simulator import draw_crash_uniforms
+
+            cap = flt.capacity
+            fault_kw = dict(
+                crash_rate_rows=rows(flt.crash_rate) if flt.crashes else None,
+                crash_u=(
+                    draw_crash_uniforms(key, replicas, dts.shape[1])
+                    if flt.crashes
+                    else None
+                ),
+                cap_edges=(
+                    np.tile(np.asarray(cap.edges, np.float64), (replicas, 1))
+                    if cap is not None
+                    else None
+                ),
+                cap_values=(
+                    np.tile(np.asarray(cap.values, np.float64), (replicas, 1))
+                    if cap is not None
+                    else None
+                ),
+            )
         acc = _block_launch(
             scn,
             rows(scn.expiration_threshold),
@@ -616,6 +714,7 @@ def _run_block_single(scn, key, replicas, steps, plan):
             t_to_rows=rows(rel.failure.timeout_or_inf) if rel else None,
             pf_rows=rows(rel.failure.p_fail) if rel else None,
             extras=extras,
+            **fault_kw,
         )
     zeros = np.zeros((replicas,))
     rely_kw = {}
@@ -627,6 +726,15 @@ def _run_block_single(scn, key, replicas, steps, plan):
             n_fail=acc[:, ACC_COLS + 1],
             n_retry=acc[:, ACC_COLS + 2],
             n_abandon=acc[:, ACC_COLS + 3],
+        )
+    if flt is not None:
+        from repro.kernels.faas_event_step import ACC_COLS, RELY_COLS
+
+        fb = ACC_COLS + (RELY_COLS if rel is not None else 0)
+        rely_kw.update(
+            n_crash=acc[:, fb + 0],
+            n_evict=acc[:, fb + 1],
+            n_interrupt=acc[:, fb + 2],
         )
     return SimulationSummary(
         n_cold=acc[:, 0],
@@ -684,8 +792,18 @@ _DRAW_FIELDS = _DRAW_FIELDS + (
 # buffers (common random numbers across horizons/warm-ups).  t_timeout and
 # p_fail are pure per-row comparisons against pre-drawn uniforms, so a
 # (t_timeout × threshold) reliability grid shares one set of draws and ONE
-# compile.
-_PARAM_FIELDS = ("sim_time", "skip_time", "t_timeout", "p_fail")
+# compile.  crash_rate scales the shared crash uniforms into lifetimes
+# per row, and capacity moves the traced profile edges/ceilings — so a
+# (crash_rate × threshold) fault grid is likewise one trace (DESIGN.md
+# §15); capacity values are CapacityProfile objects sharing a step count.
+_PARAM_FIELDS = (
+    "sim_time",
+    "skip_time",
+    "t_timeout",
+    "p_fail",
+    "crash_rate",
+    "capacity",
+)
 
 # Axes that require Scenario.reliability to be set (the static flag and
 # the failure uniforms come from it).
@@ -696,6 +814,10 @@ _RELY_AXES = (
     "backoff_mult",
     "backoff_jitter",
 )
+
+# Axes that require Scenario.faults to be set (the static fault structure
+# and the crash-uniform stream come from it).
+_FAULT_AXES = ("crash_rate", "capacity")
 
 
 @dataclasses.dataclass
@@ -724,6 +846,7 @@ class GridResult:
     developer_cost: np.ndarray
     provider_cost: np.ndarray
     goodput: Optional[np.ndarray] = None  # [*dims] completions/s
+    availability: Optional[np.ndarray] = None  # [*dims] 1 - crash-interrupt share
     ok: Optional[np.ndarray] = None  # [*dims] all-finite-metrics mask
     window_bounds: Optional[np.ndarray] = None  # [W+1]
     windowed_cold_prob: Optional[np.ndarray] = None  # [*dims, W]
@@ -744,6 +867,7 @@ class GridResult:
         "developer_cost",
         "provider_cost",
         "goodput",
+        "availability",
         "ok",
     )
     _WINDOWED_FIELDS = (
@@ -974,6 +1098,63 @@ def sweep(
         if not 0.0 <= float(v) < 1.0:
             raise ValueError(f"p_fail values must be in [0, 1), got {v}")
 
+    # ---- platform-fault axes (DESIGN.md §15)
+    fault_axes = [n for n in names if n in _FAULT_AXES]
+    flt = base.faults
+    if fault_axes and flt is None:
+        raise ValueError(
+            f"sweeping {fault_axes} needs Scenario.faults= to be set on "
+            "the base scenario (it provides the static fault structure "
+            "and the crash stream)"
+        )
+    for v in vals.get("crash_rate", ()):
+        if not np.isfinite(float(v)) or float(v) < 0:
+            raise ValueError(
+                f"crash_rate values must be finite and >= 0, got {v}"
+            )
+    caps = tuple(vals.get("capacity", ()))
+    for v in caps:
+        if not isinstance(v, CapacityProfile):
+            raise TypeError(
+                "capacity axis values must be CapacityProfile, got "
+                f"{type(v).__name__}"
+            )
+    if caps and len({len(v.values) for v in caps}) > 1:
+        raise ValueError(
+            "capacity profiles on one sweep axis must share a step count "
+            "(len(values) is compile-time static); split the sweep"
+        )
+    crashes_on = flt is not None and (flt.crashes or "crash_rate" in names)
+    cap_n = (
+        len(caps[0].values)
+        if caps
+        else (flt.cap_steps if flt is not None else 0)
+    )
+    faults_on = crashes_on or cap_n > 0
+    if faults_on:
+        if plan.backend not in espec.faults_backends:
+            raise ValueError(
+                "platform faults are not served by engine "
+                f"{plan.engine!r} on backend {plan.backend!r}; "
+                "fault-capable backends (EngineSpec.faults_backends): "
+                f"{espec.faults_backends or '()'}"
+            )
+        if plan.resolved_draws == "fused":
+            raise ValueError(
+                "draws='fused' does not serve platform faults (the crash "
+                "stream is host-staged); use draws='staged'"
+            )
+        if base.window_bounds or "window_bounds" in names:
+            raise ValueError(
+                "platform faults do not serve windowed metrics yet; drop "
+                "window_bounds or the fault axes"
+            )
+        if base.track_histogram or "track_histogram" in names:
+            raise ValueError(
+                "platform faults do not serve the instance-count "
+                "histogram; drop track_histogram or the fault axes"
+            )
+
     # ---- draw cells: product over draw axes, one chained key split each
     draw_combos = list(
         itertools.product(*[vals[n] for n in draw_names])
@@ -999,6 +1180,7 @@ def sweep(
     max_sim = float(max(sim_vals))
 
     from repro.core.simulator import (
+        draw_crash_uniforms,
         draw_reliability_stream,
         draw_workload_samples,
     )
@@ -1071,11 +1253,18 @@ def sweep(
             c_sim = Scenario.of(c, sim_time=max_sim)
             if rel is not None:
                 smp_c, ext_c = draw_reliability_stream(c_sim, sub, R, n_steps)
-                parts.append(tuple(smp_c) + tuple(ext_c))
+                part = tuple(smp_c) + tuple(ext_c)
             else:
-                parts.append(
-                    tuple(draw_workload_samples(c_sim, sub, R, n_steps))
+                part = tuple(draw_workload_samples(c_sim, sub, R, n_steps))
+            if crashes_on:
+                # fold_in-salted off the cell key, so the base streams are
+                # bitwise-unchanged by the fault layer; positional per
+                # event (i.i.d.), so it need not ride the attempt-table
+                # sort — a cold start at event k consumes crash_u[k].
+                part = part + (
+                    draw_crash_uniforms(sub, R, part[0].shape[1]),
                 )
+            parts.append(part)
         # [D*R, K] per buffer; with retries K = n_steps * (max_retries + 1)
         bufs = tuple(
             jnp.concatenate([p[j] for p in parts]) for j in range(len(parts[0]))
@@ -1117,6 +1306,25 @@ def sweep(
                 [c.reliability.retry.backoff_jitter for c in draw_cfgs]
             ),
         )
+    fault_rows = None
+    if faults_on:
+        fault_rows = dict(crashes=crashes_on, cap_steps=cap_n)
+        if crashes_on:
+            fault_rows["crash_rate"] = _param_col(
+                "crash_rate", flt.crash_rate
+            )
+        if cap_n:
+            if "capacity" in param_names:
+                i = param_names.index("capacity")
+                profs = [pc[i] for pc in param_combos]
+            else:
+                profs = [flt.capacity] * Wn
+            # [Wn, E] -> [C, E] in the (draw, param, replica) row order
+            mat = lambda a: np.tile(
+                np.repeat(np.asarray(a, np.float64), R, axis=0), (D, 1)
+            )
+            fault_rows["cap_edges"] = mat([p.edges for p in profs])
+            fault_rows["cap_values"] = mat([p.values for p in profs])
 
     def _expand(x):
         if Wn == 1:
@@ -1173,7 +1381,14 @@ def sweep(
         scn_s = base
         for n, v in zip(static_names, combo):
             scn_s = _apply_axis(scn_s, n, v)
-        scfg = dataclasses.replace(scn_s.static_config(), prestamped=prestamped)
+        scfg = dataclasses.replace(
+            scn_s.static_config(),
+            prestamped=prestamped,
+            # fault axes widen the static structure past the base model
+            # (e.g. a crash_rate axis over a crash_rate=0 base)
+            crashes=crashes_on,
+            cap_steps=cap_n,
+        )
         smp = (
             tuple(jnp.array(x, copy=True) for x in samples)
             if S > 1
@@ -1184,12 +1399,14 @@ def sweep(
                 _scan_dispatch(
                     scfg, scn_s, thr_rows, sim_rows, skip_rows, smp, R,
                     prestamped, plan, rely_rows=rely_rows, fused=fused_scan,
+                    fault_rows=fault_rows,
                 )
             )
         else:
             res = _block_cells(
                 scn_s, thr_rows, sim_rows, skip_rows, smp, R, prestamped,
                 bspec, plan, rely_rows=rely_rows, fused=fused_block,
+                fault_rows=fault_rows,
             )
             collectors.append(lambda res=res: res)
         if "window_bounds" not in static_names and scn_s.window_bounds:
@@ -1262,6 +1479,7 @@ def sweep(
                 np.asarray([c.provider_infra_cost for c in costs])
             ),
             goodput=metric(lambda s: s.goodput),
+            availability=metric(lambda s: s.availability),
         )
         ok = np.ones(metrics["cold_start_prob"].shape, bool)
         for m in metrics.values():
@@ -1309,18 +1527,18 @@ def _warn_nonfinite(axes: dict, ok: np.ndarray) -> None:
 
 def _scan_cells(
     scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
-    rely_rows=None, fused=None,
+    rely_rows=None, fused=None, fault_rows=None,
 ):
     """One f64 sweep launch → per-cell summaries (dispatch + drain)."""
     return _scan_dispatch(
         scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped,
-        plan, rely_rows=rely_rows, fused=fused,
+        plan, rely_rows=rely_rows, fused=fused, fault_rows=fault_rows,
     )()
 
 
 def _scan_dispatch(
     scfg, scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, plan,
-    rely_rows=None, fused=None,
+    rely_rows=None, fused=None, fault_rows=None,
 ):
     """Enqueue one f64 sweep launch; return a zero-arg collector.
 
@@ -1353,6 +1571,13 @@ def _scan_dispatch(
         else np.zeros((C, 0))
     )
     rr = rely_rows or {}
+    fr = fault_rows or {}
+    # every leaf needs the sweep's leading [C] axis (vmap requirement),
+    # so the capacity matrices default to [C, 0] like window_bounds
+    ce = fr.get("cap_edges")
+    cv = fr.get("cap_values")
+    if ce is None:
+        ce, cv = np.zeros((C, 0)), np.zeros((C, 0))
     params = WorkloadParams.of(
         thr_rows, sim_rows, skip_rows, wb_rows,
         t_timeout=rr.get("t_timeout"),
@@ -1360,6 +1585,9 @@ def _scan_dispatch(
         backoff_base=rr.get("backoff_base"),
         backoff_mult=rr.get("backoff_mult"),
         backoff_jitter=rr.get("backoff_jitter"),
+        crash_rate=fr.get("crash_rate"),
+        cap_edges=ce,
+        cap_values=cv,
     )
     if fused is not None:
         # one device execution over [C, 2] key/param rows; the counter
@@ -1438,6 +1666,12 @@ def _scan_dispatch(
                     n_retry=cell["n_retry"][c],
                     n_abandon=cell["n_abandon"][c],
                 )
+            if scfg.crashes or scfg.cap_steps:
+                rely_kw.update(
+                    n_crash=cell["n_crash"][c],
+                    n_evict=cell["n_evict"][c],
+                    n_interrupt=cell["n_interrupt"][c],
+                )
             summaries.append(
                 SimulationSummary(
                     n_cold=cell["n_cold"][c],
@@ -1511,7 +1745,8 @@ def _block_sharded_executable(backend: str, mesh, kw_items: tuple):
 def _block_launch(
     scn, t_exp, t_end, skip, dts, warms, colds, bspec, kw, block_k=512,
     plan=None, window_rows=None, t_to_rows=None, pf_rows=None, extras=(),
-    fused=None,
+    fused=None, crash_rate_rows=None, crash_u=None, cap_edges=None,
+    cap_values=None,
 ):
     """Shared f32 block-engine launch: prepare the per-row f32 state and
     sample buffers and hand them to the registered backend's row launcher
@@ -1574,6 +1809,17 @@ def _block_launch(
             rely_kw["fail_u"] = ex[0]
             if len(ex) == 3:
                 rely_kw.update(is_first=ex[1], child_pos=ex[2])
+    fault_kw = {}
+    if crash_rate_rows is not None:
+        fault_kw.update(
+            crash_rate=as_rows(crash_rate_rows),
+            crash_u=jnp.asarray(crash_u, jnp.float32),
+        )
+    if cap_edges is not None:
+        fault_kw.update(
+            cap_edges=jnp.asarray(cap_edges, jnp.float32),
+            cap_values=jnp.asarray(cap_values, jnp.float32),
+        )
     if fused is not None:
         # Execution.resolve() already rejects fused × shard='grid'; the
         # launcher returns (acc, t_final) — the kernel clock replaces the
@@ -1593,6 +1839,11 @@ def _block_launch(
         if rely_kw:
             raise ValueError(
                 "reliability sweeps on block backends are single-device; "
+                "drop shard='grid' or use backend='scan'"
+            )
+        if fault_kw:
+            raise ValueError(
+                "fault sweeps on block backends are single-device; "
                 "drop shard='grid' or use backend='scan'"
             )
         mesh = plan.mesh()
@@ -1616,7 +1867,7 @@ def _block_launch(
         )
         acc = np.asarray(fn(*args), np.float64)[:C]
     else:
-        launch_kw = dict(kw, block_k=block_k, **rely_kw)
+        launch_kw = dict(kw, block_k=block_k, **rely_kw, **fault_kw)
         if window_rows is not None:
             launch_kw["window_bounds"] = window_rows
         acc = np.asarray(bspec.launch(*args, **launch_kw), np.float64)
@@ -1629,7 +1880,7 @@ def _block_launch(
 
 def _block_cells(
     scn_s, thr_rows, sim_rows, skip_rows, samples, R, prestamped, bspec, plan,
-    rely_rows=None, fused=None,
+    rely_rows=None, fused=None, fault_rows=None,
 ):
     """One f32 block-engine launch → per-cell summaries.
 
@@ -1639,11 +1890,18 @@ def _block_cells(
     instance-time integrals — exactly like the f64 scan path.
     """
     from repro.core.simulator import SimulationSummary, WindowedMetrics
-    from repro.kernels.faas_event_step import ACC_COLS, RELY_COLS, WINDOW_COLS
+    from repro.kernels.faas_event_step import (
+        ACC_COLS,
+        FAULT_COLS,
+        RELY_COLS,
+        WINDOW_COLS,
+    )
 
     if scn_s.track_histogram:
         raise ValueError("histograms need the f64 scan backend")
     rel = scn_s.reliability
+    fr = fault_rows or {}
+    crash_u = None
     if fused is not None:
         dts = warms = colds = None
         extras = ()
@@ -1651,6 +1909,10 @@ def _block_cells(
     else:
         dts, warms, colds = samples[:3]
         extras = tuple(samples[3:])
+        if fr.get("crashes"):
+            # the crash uniforms ride the sample tuple after the rely
+            # extras (same order the scan consumes)
+            crash_u, extras = extras[-1], extras[:-1]
         n_draws = dts.shape[1]
         if not prestamped:
             # Coverage guard on the REAL draws (before any padding): every
@@ -1686,6 +1948,10 @@ def _block_cells(
         pf_rows=rr.get("p_fail") if rel is not None else None,
         extras=extras,
         fused=fused,
+        crash_rate_rows=fr.get("crash_rate"),
+        crash_u=crash_u,
+        cap_edges=fr.get("cap_edges"),
+        cap_values=fr.get("cap_values"),
     )
     if fused is not None:
         acc, t_last = acc
@@ -1695,10 +1961,17 @@ def _block_cells(
                 f"(min final t {t_last.min():.1f}); pass a larger `steps`"
             )
     n_cells = len(thr_rows) // R
-    cols = ACC_COLS + WINDOW_COLS * W + (RELY_COLS if rel is not None else 0)
+    fault_on = bool(fr)
+    cols = (
+        ACC_COLS
+        + WINDOW_COLS * W
+        + (RELY_COLS if rel is not None else 0)
+        + (FAULT_COLS if fault_on else 0)
+    )
     cell = acc.reshape(n_cells, R, cols)
     A = ACC_COLS
-    RB = ACC_COLS + WINDOW_COLS * W  # reliability cols sit at the very end
+    RB = ACC_COLS + WINDOW_COLS * W  # reliability cols, then fault cols
+    FB = RB + (RELY_COLS if rel is not None else 0)
     zeros = lambda: np.zeros((R,))
     summaries = []
     w_cold = np.zeros((n_cells, W)) if W else None
@@ -1730,6 +2003,12 @@ def _block_cells(
                 n_fail=cell[c, :, RB + 1],
                 n_retry=cell[c, :, RB + 2],
                 n_abandon=cell[c, :, RB + 3],
+            )
+        if fault_on:
+            rely_kw.update(
+                n_crash=cell[c, :, FB + 0],
+                n_evict=cell[c, :, FB + 1],
+                n_interrupt=cell[c, :, FB + 2],
             )
         summaries.append(
             SimulationSummary(

@@ -156,6 +156,10 @@ class SimulationSummary:
     n_fail: Optional[np.ndarray] = None  # served, completed, then failed
     n_retry: Optional[np.ndarray] = None  # re-enqueued attempts processed
     n_abandon: Optional[np.ndarray] = None  # gave up (retry budget spent)
+    # ---- platform-fault counters (None unless Scenario.faults is set) ----
+    n_crash: Optional[np.ndarray] = None  # instances lost to the crash hazard
+    n_evict: Optional[np.ndarray] = None  # idle instances evicted by churn
+    n_interrupt: Optional[np.ndarray] = None  # served attempts cut by a crash
 
     # ---- paper metrics -------------------------------------------------
     @property
@@ -174,12 +178,14 @@ class SimulationSummary:
 
     @property
     def n_completions(self) -> np.ndarray:
-        """Served attempts that neither timed out nor failed."""
+        """Served attempts that neither timed out, failed, nor were
+        interrupted by an instance crash."""
         return (
             self.n_cold
             + self.n_warm
             - self._rely(self.n_timeout)
             - self._rely(self.n_fail)
+            - self._rely(self.n_interrupt)
         )
 
     @property
@@ -196,6 +202,21 @@ class SimulationSummary:
     def goodput(self) -> float:
         """Successful completions per second (replica mean)."""
         return float(self.n_completions.mean() / max(self.measured_time, 1e-12))
+
+    @property
+    def interrupt_prob(self) -> float:
+        """Served attempts cut short by an instance crash, per served."""
+        served = (self.n_cold + self.n_warm).sum()
+        return float(
+            self._rely(self.n_interrupt).sum() / np.maximum(served, 1)
+        )
+
+    @property
+    def availability(self) -> float:
+        """Fraction of served attempts the platform carried to completion
+        without losing the instance underneath them: 1 − interrupt_prob.
+        1.0 when no fault model is active."""
+        return 1.0 - self.interrupt_prob
 
     @property
     def retry_amplification(self) -> float:
@@ -269,6 +290,10 @@ class SimulationSummary:
             "n_abandoned": int(self._rely(self.n_abandon).sum()),
             "goodput": self.goodput,
             "retry_amplification": self.retry_amplification,
+            "n_crashes": int(self._rely(self.n_crash).sum()),
+            "n_evictions": int(self._rely(self.n_evict).sum()),
+            "n_interrupted": int(self._rely(self.n_interrupt).sum()),
+            "availability": self.availability,
         }
 
 
@@ -287,6 +312,21 @@ def interval_integrals(alive, busy_until, exp_threshold, lo, hi):
     run_t = jnp.clip(jnp.minimum(busy_until, hi) - lo, 0.0, None)
     idle_t = jnp.clip(
         jnp.minimum(expire, hi) - jnp.maximum(busy_until, lo), 0.0, None
+    )
+    run_t = jnp.where(alive, run_t, 0.0)
+    idle_t = jnp.where(alive, idle_t, 0.0)
+    return run_t.sum(), idle_t.sum()
+
+
+def fault_interval_integrals(alive, busy_until, exp_threshold, doom, lo, hi):
+    """:func:`interval_integrals` under a crash hazard: per-slot accrual
+    stops at the instance's crash time ``doom`` (the slot is removed at
+    the next event, but it stops existing — and billing — at ``doom``)."""
+    expire = busy_until + exp_threshold
+    stop = jnp.minimum(hi, doom)
+    run_t = jnp.clip(jnp.minimum(busy_until, stop) - lo, 0.0, None)
+    idle_t = jnp.clip(
+        jnp.minimum(expire, stop) - jnp.maximum(busy_until, lo), 0.0, None
     )
     run_t = jnp.where(alive, run_t, 0.0)
     idle_t = jnp.where(alive, idle_t, 0.0)
@@ -363,6 +403,21 @@ _RELY_SALT_JITTER = 1013
 _RELY_SALT_WARM = 1014
 _RELY_SALT_COLD = 1015
 _RELY_SALT_FAIL = 1016
+
+
+def draw_crash_uniforms(key: Array, replicas: int, n: int):
+    """Per-event crash-lifetime uniforms for the fault layer.
+
+    Drawn from ``fold_in(key, CRASH_SALT)`` (salt 1017, continuing the
+    reliability chain above), so enabling a trivial :class:`FaultModel`
+    leaves every base and reliability stream bitwise unchanged.  ``n``
+    must match the event-stream width the engine consumes (the attempt
+    table's ``n·(J+1)`` under retries).
+    """
+    from repro.core.faults import CRASH_SALT
+
+    kx = jax.random.fold_in(key, CRASH_SALT)
+    return jax.random.uniform(kx, (replicas, n), dtype=jnp.float32)
 
 
 def draw_reliability_stream(cfg: Scenario, key: Array, replicas: int, n: int):
@@ -446,20 +501,34 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
     max_c = cfg.max_concurrency
     rely = cfg.reliability
     retries = cfg.max_retries > 0
+    crashes = cfg.crashes
+    capped = cfg.cap_steps > 0
 
     def step(state, xs):
-        (alive, creation, busy_until, t_prev, acc) = state
+        if crashes:
+            (alive, creation, busy_until, doom, t_prev, acc) = state
+        else:
+            (alive, creation, busy_until, t_prev, acc) = state
+            doom = None
         u_acc = None
+        crash_u = None
         if retries:
             # Attempt-table stream: per-event failure uniform, first-attempt
             # flag, retry-successor position and the event's own position.
-            dt, warm_s, cold_s, fail_u, is_first, child_pos, pos = xs
+            if crashes:
+                dt, warm_s, cold_s, fail_u, is_first, child_pos, crash_u, pos = xs
+            else:
+                dt, warm_s, cold_s, fail_u, is_first, child_pos, pos = xs
         elif thin is not None and rely:
             dt, warm_s, cold_s, u_acc, fail_u = xs
         elif thin is not None:
             dt, warm_s, cold_s, u_acc = xs
+        elif rely and crashes:
+            dt, warm_s, cold_s, fail_u, crash_u = xs
         elif rely:
             dt, warm_s, cold_s, fail_u = xs
+        elif crashes:
+            dt, warm_s, cold_s, crash_u = xs
         else:
             dt, warm_s, cold_s = xs
         if cfg.prestamped:
@@ -471,7 +540,14 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
         # ---- exact integrals over the measurement window of this interval
         lo = jnp.clip(t_prev, skip, t_end)
         hi = jnp.clip(t, skip, t_end)
-        run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
+        if crashes:
+            run_t, idle_t = fault_interval_integrals(
+                alive, busy_until, t_exp, doom, lo, hi
+            )
+        else:
+            run_t, idle_t = interval_integrals(
+                alive, busy_until, t_exp, lo, hi
+            )
 
         if cfg.n_windows:
             run_w, idle_w = _window_integrals(
@@ -489,13 +565,60 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
 
         # ---- expirations strictly before (or at) the arrival
         expire_time = busy_until + t_exp
-        expired_now = alive & (expire_time <= t)
-        lifespan_ok = expired_now & (expire_time > skip) & (expire_time <= t_end)
-        lifespan_sum = acc["lifespan_sum"] + jnp.where(
-            lifespan_ok, expire_time - creation, 0.0
-        ).sum()
-        lifespan_count = acc["lifespan_count"] + lifespan_ok.sum()
-        alive = alive & ~expired_now
+        if crashes:
+            # An instance exits at min(expiry, crash); a strictly earlier
+            # doom classifies the exit as a crash (tie resolves expiry).
+            exit_time = jnp.minimum(expire_time, doom)
+            exited_now = alive & (exit_time <= t)
+            crash_ok = (
+                exited_now
+                & (doom < expire_time)
+                & (doom > skip)
+                & (doom <= t_end)
+            )
+            n_crash_inc = crash_ok.sum()
+            lifespan_ok = (
+                exited_now & (exit_time > skip) & (exit_time <= t_end)
+            )
+            lifespan_sum = acc["lifespan_sum"] + jnp.where(
+                lifespan_ok, exit_time - creation, 0.0
+            ).sum()
+            lifespan_count = acc["lifespan_count"] + lifespan_ok.sum()
+            alive = alive & ~exited_now
+        else:
+            expired_now = alive & (expire_time <= t)
+            lifespan_ok = (
+                expired_now & (expire_time > skip) & (expire_time <= t_end)
+            )
+            lifespan_sum = acc["lifespan_sum"] + jnp.where(
+                lifespan_ok, expire_time - creation, 0.0
+            ).sum()
+            lifespan_count = acc["lifespan_count"] + lifespan_ok.sum()
+            alive = alive & ~expired_now
+
+        # ---- capacity churn: evict newest idle instances over the ceiling
+        if capped:
+            cap_now = params.cap_values[
+                jnp.searchsorted(params.cap_edges, t, side="right")
+            ]
+            idle_now = alive & (busy_until <= t)
+            over = alive.sum().astype(jnp.float64) - cap_now
+            slot_ids = jnp.arange(alive.shape[0])
+            newer = (creation[None, :] > creation[:, None]) | (
+                (creation[None, :] == creation[:, None])
+                & (slot_ids[None, :] < slot_ids[:, None])
+            )
+            rank = (idle_now[None, :] & newer).sum(axis=1)
+            evict = (
+                idle_now & (rank.astype(jnp.float64) < over) & (t <= t_end)
+            )
+            evict_ok = evict & (t > skip)
+            n_evict_inc = evict_ok.sum()
+            lifespan_sum = lifespan_sum + jnp.where(
+                evict_ok, t - creation, 0.0
+            ).sum()
+            lifespan_count = lifespan_count + evict_ok.sum()
+            alive = alive & ~evict
 
         # ---- routing
         active = t <= t_end
@@ -522,6 +645,9 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
         n_alive = alive.sum()
 
         can_cold = (~any_idle) & (n_alive < max_c) & any_free
+        if capped:
+            # admission gate while degraded: no cold start over the ceiling
+            can_cold = can_cold & (n_alive.astype(jnp.float64) < cap_now)
         overflow = (~any_idle) & (n_alive < max_c) & (~any_free) & active
         is_warm = any_idle & active
         is_cold = can_cold & active
@@ -542,6 +668,16 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
         new_creation = jnp.where(is_cold, t, creation[chosen])
         creation = creation.at[chosen].set(new_creation)
         alive = alive.at[chosen].set(alive[chosen] | is_cold)
+        if crashes:
+            # A cold start draws the instance's Exp(crash_rate) lifetime
+            # from its pre-drawn uniform (memoryless hazard); warm serves
+            # keep the instance's existing doom.
+            life = (
+                -jnp.log(1.0 - crash_u.astype(jnp.float64))
+                / params.crash_rate
+            )
+            doom_chosen = jnp.where(is_cold, t + life, doom[chosen])
+            doom = doom.at[chosen].set(doom_chosen)
 
         counted = t > skip  # warm-up exclusion for request-level metrics
         if rely:
@@ -554,10 +690,24 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
                 & ~timed_out
                 & (fail_u.astype(jnp.float64) < params.p_fail)
             )
-            trigger = timed_out | failed | is_reject
+            if crashes:
+                # The serving instance dies before the attempt completes:
+                # the attempt is interrupted — a platform-side failure the
+                # retry path replays like any other trigger.
+                interrupted = (
+                    assign
+                    & ~timed_out
+                    & ~failed
+                    & (doom_chosen < t + occupancy)
+                )
+                trigger = timed_out | failed | interrupted | is_reject
+            else:
+                trigger = timed_out | failed | is_reject
             cold_resp = jnp.minimum(cold_s.astype(jnp.float64), params.t_timeout)
             warm_resp = jnp.minimum(warm_s.astype(jnp.float64), params.t_timeout)
         else:
+            if crashes:
+                interrupted = assign & (doom_chosen < t + occupancy)
             cold_resp, warm_resp = cold_s, warm_s
         acc = dict(
             n_cold=acc["n_cold"] + (is_cold & counted),
@@ -583,7 +733,15 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
             n_retry=acc["n_retry"],
             n_abandon=acc["n_abandon"],
             w_fail=acc["w_fail"],
+            n_crash=acc["n_crash"],
+            n_evict=acc["n_evict"],
+            n_interrupt=acc["n_interrupt"],
         )
+        if crashes:
+            acc["n_crash"] = acc["n_crash"] + n_crash_inc
+            acc["n_interrupt"] = acc["n_interrupt"] + (interrupted & counted)
+        if capped:
+            acc["n_evict"] = acc["n_evict"] + n_evict_inc
         if rely:
             acc["n_timeout"] = acc["n_timeout"] + (timed_out & counted)
             acc["n_fail"] = acc["n_fail"] + (failed & counted)
@@ -620,6 +778,8 @@ def _make_scan_fn(cfg: StaticConfig, params: WorkloadParams, thin=None):
                 acc["w_fail"] = acc["w_fail"] + (
                     onehot & (timed_out | failed)
                 )
+        if crashes:
+            return (alive, creation, busy_until, doom, t, acc), None
         return (alive, creation, busy_until, t, acc), None
 
     return step
@@ -650,25 +810,40 @@ def _empty_acc(cfg: StaticConfig):
         n_retry=zi,
         n_abandon=zi,
         w_fail=jnp.zeros((cfg.n_windows,), dtype=jnp.int64),
+        n_crash=zi,
+        n_evict=zi,
+        n_interrupt=zi,
     )
 
 
 def _empty_pool(cfg: StaticConfig):
     m = cfg.slots
-    return (
+    pool = (
         jnp.zeros((m,), dtype=bool),
         jnp.full((m,), _NEG_INF, dtype=jnp.float64),
         jnp.full((m,), _NEG_INF, dtype=jnp.float64),
     )
+    if cfg.crashes:
+        # per-slot crash time; +inf until a cold start draws a lifetime
+        pool = pool + (jnp.full((m,), jnp.inf, dtype=jnp.float64),)
+    return pool
 
 
 def _flush(cfg: StaticConfig, params: WorkloadParams, state):
     """Integrate the tail (t_last, sim_time] after the final arrival."""
-    alive, creation, busy_until, t_prev, acc = state
+    if cfg.crashes:
+        alive, creation, busy_until, doom, t_prev, acc = state
+    else:
+        alive, creation, busy_until, t_prev, acc = state
     t_exp = params.expiration_threshold
     lo = jnp.clip(t_prev, params.skip_time, params.sim_time)
     hi = jnp.asarray(params.sim_time, dtype=jnp.float64)
-    run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
+    if cfg.crashes:
+        run_t, idle_t = fault_interval_integrals(
+            alive, busy_until, t_exp, doom, lo, hi
+        )
+    else:
+        run_t, idle_t = interval_integrals(alive, busy_until, t_exp, lo, hi)
     acc["time_running"] = acc["time_running"] + run_t
     acc["time_idle"] = acc["time_idle"] + idle_t
     if cfg.n_windows:
@@ -685,6 +860,19 @@ def _flush(cfg: StaticConfig, params: WorkloadParams, state):
     if cfg.track_histogram:
         acc["hist"] = histogram_update(acc["hist"], alive, busy_until, t_exp, lo, hi)
     expire_time = busy_until + t_exp
+    if cfg.crashes:
+        exit_time = jnp.minimum(expire_time, doom)
+        tail_exp = (
+            alive & (exit_time <= hi) & (exit_time > params.skip_time)
+        )
+        acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
+            tail_exp, exit_time - creation, 0.0
+        ).sum()
+        acc["lifespan_count"] = acc["lifespan_count"] + tail_exp.sum()
+        acc["n_crash"] = acc["n_crash"] + (
+            tail_exp & (doom < expire_time)
+        ).sum()
+        return acc, t_prev
     tail_exp = alive & (expire_time <= hi) & (expire_time > params.skip_time)
     acc["lifespan_sum"] = acc["lifespan_sum"] + jnp.where(
         tail_exp, expire_time - creation, 0.0
@@ -710,7 +898,11 @@ def _scan_one(
     position is appended as an iota column).
     """
     step = _make_scan_fn(cfg, params)
-    pool = _empty_pool(cfg) if pool0 is None else pool0
+    pool = _empty_pool(cfg) if pool0 is None else tuple(pool0)
+    if cfg.crashes and len(pool) == 3:
+        # caller-provided pools predate the fault layer: no slot has drawn
+        # a lifetime yet, so every doom starts at +inf
+        pool = pool + (jnp.full((cfg.slots,), jnp.inf, dtype=jnp.float64),)
     acc = _empty_acc(cfg)
     xs = (dt_row, warm_row, cold_row) + tuple(extra_rows)
     if cfg.max_retries > 0:
@@ -925,6 +1117,12 @@ def _summarize_scan(cfg: Scenario, acc: dict, t_last) -> SimulationSummary:
             n_retry=acc["n_retry"],
             n_abandon=acc["n_abandon"],
         )
+    if cfg.faults is not None:
+        rely_kw.update(
+            n_crash=acc["n_crash"],
+            n_evict=acc["n_evict"],
+            n_interrupt=acc["n_interrupt"],
+        )
     return SimulationSummary(
         n_cold=acc["n_cold"],
         n_warm=acc["n_warm"],
@@ -947,6 +1145,11 @@ def _run_scan_fused(scn: Scenario, key, replicas: int, steps: Optional[int]):
     """Single-scenario fused run on the f64 scan backend."""
     from repro.core import drawplan as dp
 
+    if scn.faults is not None and scn.faults.enabled:
+        raise ValueError(
+            "draws='fused' does not serve platform faults (the crash "
+            "stream is host-staged); use draws='staged'"
+        )
     fplan, pvals = dp.lower_scenario(scn)
     n = steps or scn.steps_needed()
     krows = dp.stream_row_keys(key, replicas, fail=fplan.fail)
@@ -1028,9 +1231,19 @@ class ServerlessSimulator:
                 "(samples, extras) pair)"
             )
         dts, warms, colds = samples
+        extras = tuple(extras)
+        flt = cfg.faults
+        if flt is not None and flt.crashes:
+            # the crash stream rides behind the reliability extras; append
+            # it here when the caller staged only the base/rely draws
+            n_rely = 0 if rel is None else (1 if rel.retry.max_retries == 0 else 3)
+            if len(extras) == n_rely:
+                extras = extras + (
+                    draw_crash_uniforms(key, replicas, dts.shape[1]),
+                )
         acc, t_last = _simulate_batch(
             cfg.static_config(), cfg.workload_params(), dts, warms, colds,
-            extras=tuple(extras),
+            extras=extras,
         )
         return _summarize_scan(
             cfg, jax.tree.map(np.asarray, acc), np.asarray(t_last)
@@ -1059,6 +1272,7 @@ register_backend(
     reliability_backends=("scan", "pallas", "ref"),
     fused_backends=("scan", "pallas", "ref"),
     fleet_backends=("scan", "pallas", "ref"),
+    faults_backends=("scan", "pallas", "ref"),
     description="steady-state scale-per-request simulator (paper §3/§4.1)",
 )
 def _scan_engine_run(scn, key, plan, *, replicas, steps, grid, initial_instances):

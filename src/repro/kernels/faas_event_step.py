@@ -85,6 +85,9 @@ GRID_COLS = 3
 # appended at the very END of the accumulator (after window and grid
 # columns) so every pre-existing column offset is unchanged
 RELY_COLS = 4
+# platform-fault columns (DESIGN.md §15): crashes, evictions, interrupted
+# attempts — appended after the reliability columns, same append-only rule
+FAULT_COLS = 3
 # par acc columns: ACC_COLS + ∫in-flight-requests
 PAR_ACC_COLS = ACC_COLS + 1
 
@@ -111,6 +114,8 @@ def _faas_kernel(
     reliability: bool = False,
     retries: bool = False,
     fused_dists=None,
+    crashes: bool = False,
+    cap_steps: int = 0,
 ):
     # inputs (VMEM blocks): state [Rb, M] ×3, per-row scalars [Rb, 1] ×4
     # (+2 reliability scalars), optional window bounds [Rb, W+1] and curve
@@ -133,6 +138,13 @@ def _faas_kernel(
     if reliability:
         tto_ref, pf_ref = refs[i : i + 2]
         i += 2
+    crate_ref = cape_ref = capv_ref = None
+    if crashes:
+        crate_ref = refs[i]
+        i += 1
+    if cap_steps:
+        cape_ref, capv_ref = refs[i : i + 2]
+        i += 2
     dt_ref = warm_ref = cold_ref = None
     akey_ref = wkey_ref = ckey_ref = fkey_ref = None
     apar_ref = wpar_ref = cpar_ref = None
@@ -150,14 +162,21 @@ def _faas_kernel(
         else:
             fail_ref = refs[i]
         i += 1
+    crashu_ref = None
+    if crashes:
+        crashu_ref = refs[i]
+        i += 1
     if retries:
         first_ref, child_ref = refs[i : i + 2]
         i += 2
-    act_out = None
+    act_out = doom_out = None
+    outs = refs[i:]
+    if crashes:
+        *outs, doom_out = outs  # the doom plane rides last
     if retries:
-        alive_out, creation_out, busy_out, t_out, acc_out, act_out = refs[i:]
+        alive_out, creation_out, busy_out, t_out, acc_out, act_out = outs
     else:
-        alive_out, creation_out, busy_out, t_out, acc_out = refs[i:]
+        alive_out, creation_out, busy_out, t_out, acc_out = outs
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -168,6 +187,9 @@ def _faas_kernel(
         acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
         if retries:
             act_out[...] = jnp.zeros(act_out.shape, act_out.dtype)
+        if crashes:
+            # fresh pools carry no crash clock; cold starts stamp one
+            doom_out[...] = jnp.full(doom_out.shape, jnp.inf, doom_out.dtype)
 
     alive = alive_out[...]
     creation = creation_out[...]
@@ -179,6 +201,11 @@ def _faas_kernel(
     skip = skip_ref[...][:, 0]  # [Rb]
     t_to = tto_ref[...][:, 0] if reliability else None  # [Rb]
     p_fail = pf_ref[...][:, 0] if reliability else None  # [Rb]
+    crate = crate_ref[...][:, 0] if crashes else None  # [Rb]
+    # cap_e carries a leading 0.0 edge so the segment lookup is a plain
+    # count (launcher prepends it); cap_v is the per-segment ceiling
+    cap_e = cape_ref[...] if cap_steps else None  # [Rb, cap_steps]
+    cap_v = capv_ref[...] if cap_steps else None  # [Rb, cap_steps]
     w_lo = wb_ref[...][:, :-1] if n_windows else None  # [Rb, W]
     w_hi = wb_ref[...][:, 1:] if n_windows else None
     g_times = grid_ref[...] if n_grid else None  # [Rb, G]
@@ -204,12 +231,14 @@ def _faas_kernel(
         act0 = act_out[...]
         k_iota = jax.lax.broadcasted_iota(jnp.float32, act0.shape, 1)
         k0 = pl.program_id(1) * n_steps
+    if crashes:
+        doom0 = doom_out[...]
 
     def step(i, carry):
-        if retries:
-            alive, creation, busy, t, acc, act = carry
-        else:
-            alive, creation, busy, t, acc = carry
+        alive, creation, busy, t, acc = carry[:5]
+        rest = list(carry[5:])
+        act = rest.pop(0) if retries else None
+        doom = rest.pop(0) if crashes else None
         if fused:
             gk = gk0 + i.astype(jnp.uint32)
             a_u0, a_u1 = dp.event_uniforms(a_keys[:, 0], a_keys[:, 1], gk)
@@ -234,12 +263,24 @@ def _faas_kernel(
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
-        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
-        idle_t = jnp.clip(
-            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
-            0.0,
-            None,
-        )
+        if crashes:
+            # a crashed instance stops accruing run/idle time at its doom
+            stop = jnp.minimum(hi[:, None], doom)
+            run_t = jnp.clip(jnp.minimum(busy, stop) - lo[:, None], 0.0, None)
+            idle_t = jnp.clip(
+                jnp.minimum(expire, stop) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
+        else:
+            run_t = jnp.clip(
+                jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None
+            )
+            idle_t = jnp.clip(
+                jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
 
@@ -285,9 +326,48 @@ def _faas_kernel(
             g_idle = jnp.where(in_win, idle_g.astype(jnp.float32), 0.0)
             g_cold = (in_win & (idle_g == 0)).astype(jnp.float32)
 
-        # expirations
-        expired = (alive > 0) & (expire <= t_new[:, None])
+        # expirations (and crash exits: whichever clock fires first)
+        exit_time = jnp.minimum(expire, doom) if crashes else expire
+        expired = (alive > 0) & (exit_time <= t_new[:, None])
+        if crashes:
+            # a crash only counts when the doom instant itself is inside
+            # the measured window — pad events past t_end stay inert
+            crash_ok = (
+                expired
+                & (doom < expire)
+                & (doom > skip[:, None])
+                & (doom <= t_end[:, None])
+            )
+            n_crash = crash_ok.astype(jnp.float32).sum(axis=1)
         alive = jnp.where(expired, 0.0, alive)
+
+        if cap_steps:
+            # capacity churn: ceiling in effect at this arrival, then
+            # evict the newest idle instances above it (DESIGN.md §15);
+            # cap_e's leading 0-edge makes the segment index a plain count
+            seg = (cap_e <= t_new[:, None]).astype(jnp.float32).sum(axis=1) - 1.0
+            cap_col = jax.lax.broadcasted_iota(jnp.float32, cap_v.shape, 1)
+            cap_now = (cap_v * (cap_col == seg[:, None])).sum(axis=1)  # [Rb]
+            idle_now = (alive > 0) & (busy <= t_new[:, None])
+            over = alive.sum(axis=1) - cap_now
+            cre_a = creation[:, :, None]
+            cre_b = creation[:, None, :]
+            shape3 = (creation.shape[0], creation.shape[1], creation.shape[1])
+            ia = jax.lax.broadcasted_iota(jnp.float32, shape3, 1)
+            ib = jax.lax.broadcasted_iota(jnp.float32, shape3, 2)
+            newer = (cre_b > cre_a) | ((cre_b == cre_a) & (ib < ia))
+            rank = (
+                (idle_now[:, None, :] & newer).astype(jnp.float32).sum(axis=2)
+            )  # [Rb, M] idle instances strictly newer than each slot
+            evict = (
+                idle_now
+                & (rank < over[:, None])
+                & (t_new <= t_end)[:, None]
+            )
+            n_evict = (
+                (evict & (t_new > skip)[:, None]).astype(jnp.float32).sum(axis=1)
+            )
+            alive = jnp.where(evict, 0.0, alive)
 
         # routing: newest idle instance
         idle = (alive > 0) & (busy <= t_new[:, None])
@@ -314,6 +394,9 @@ def _faas_kernel(
             active = active & ((is_first > 0) | (act_i > 0))
         counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
+        if cap_steps:
+            # admission gate while degraded: no cold start over the ceiling
+            can_cold = can_cold & (n_alive < cap_now)
         overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
         is_warm = any_idle & active
         is_cold = can_cold & active
@@ -332,15 +415,35 @@ def _faas_kernel(
         busy = jnp.where(sel, (t_new + occupancy)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if crashes:
+            # Exp(crash_rate) lifetime stamped at cold start (memoryless ⇒
+            # hazard-equivalent); warm hits keep the instance's old doom
+            crash_i = crashu_ref[:, i]
+            life = -jnp.log(1.0 - crash_i) / crate
+            doom = jnp.where(
+                sel & is_cold[:, None], (t_new + life)[:, None], doom
+            )
+            doom_chosen = jnp.min(jnp.where(sel, doom, jnp.inf), axis=1)
 
         cc = counted
         if reliability:
             timed_out = assign & (service > t_to)
             failed = assign & ~timed_out & (fail_i < p_fail)
-            trigger = timed_out | failed | is_reject
+            if crashes:
+                interrupted = (
+                    assign
+                    & ~timed_out
+                    & ~failed
+                    & (doom_chosen < t_new + occupancy)
+                )
+                trigger = timed_out | failed | interrupted | is_reject
+            else:
+                trigger = timed_out | failed | is_reject
             cold_resp = jnp.minimum(cold_s, t_to)
             warm_resp = jnp.minimum(warm_s, t_to)
         else:
+            if crashes:
+                interrupted = assign & (doom_chosen < t_new + occupancy)
             cold_resp, warm_resp = cold_s, warm_s
         delta = jnp.stack(
             [
@@ -399,20 +502,36 @@ def _faas_kernel(
                 ],
                 axis=1,
             )
+        if crashes or cap_steps:
+            zero = jnp.zeros_like(run_sum)
+            f_crash = n_crash if crashes else zero
+            f_evict = n_evict if cap_steps else zero
+            f_int = (
+                (interrupted & cc).astype(jnp.float32) if crashes else zero
+            )
+            delta = jnp.concatenate(
+                [delta, jnp.stack([f_crash, f_evict, f_int], axis=1)], axis=1
+            )
         acc = acc + delta
+        out = (alive, creation, busy, t_new, acc)
         if retries:
-            return alive, creation, busy, t_new, acc, act
-        return alive, creation, busy, t_new, acc
+            out = out + (act,)
+        if crashes:
+            out = out + (doom,)
+        return out
 
+    carry0 = (alive, creation, busy, t, acc0)
     if retries:
-        alive, creation, busy, t, acc, act = jax.lax.fori_loop(
-            0, n_steps, step, (alive, creation, busy, t, acc0, act0)
-        )
-        act_out[...] = act
-    else:
-        alive, creation, busy, t, acc = jax.lax.fori_loop(
-            0, n_steps, step, (alive, creation, busy, t, acc0)
-        )
+        carry0 = carry0 + (act0,)
+    if crashes:
+        carry0 = carry0 + (doom0,)
+    carry = jax.lax.fori_loop(0, n_steps, step, carry0)
+    alive, creation, busy, t, acc = carry[:5]
+    rest = list(carry[5:])
+    if retries:
+        act_out[...] = rest.pop(0)
+    if crashes:
+        doom_out[...] = rest.pop(0)
     alive_out[...] = alive
     creation_out[...] = creation
     busy_out[...] = busy
@@ -458,6 +577,10 @@ def faas_sweep_pallas(
     fused_keys=None,  # uint32 [R, 2] ×3 (arrival, warm, cold) stream keys
     fused_params=None,  # f32 [R, 2] ×3 per-row (p0, p1) dist params
     fused_fail_keys=None,  # uint32 [R, 2] failure-stream keys (reliability)
+    crash_rate=None,  # f32 [R] per-row crash hazard (faults, DESIGN.md §15)
+    crash_u=None,  # f32 [R, K] per-event crash-lifetime uniforms (faults)
+    cap_edges=None,  # f32 [R, E] capacity-profile step times (faults)
+    cap_values=None,  # f32 [R, E+1] per-segment capacity ceilings (faults)
     max_concurrency: int,
     block_r: int = 8,
     block_k: int = 512,
@@ -494,6 +617,15 @@ def faas_sweep_pallas(
     fused = fused_dists is not None
     if fused:
         assert not retries, "fused draws do not serve retry streams"
+    # the fault flags are pytree-structural (None vs array), not extra
+    # static args: crash_rate stays a traced row vector, so a crash-rate
+    # sweep shares one trace
+    crashes = crash_u is not None
+    cap_steps = 0 if cap_values is None else cap_values.shape[1]
+    if fused:
+        assert not crashes and not cap_steps, (
+            "fused draws do not serve platform faults"
+        )
     R, M = alive.shape
     K = fused_k if fused else dts.shape[1]
     assert R % block_r == 0, (R, block_r)
@@ -506,6 +638,7 @@ def faas_sweep_pallas(
         + WINDOW_COLS * n_windows
         + GRID_COLS * n_grid
         + (RELY_COLS if reliability else 0)
+        + (FAULT_COLS if crashes or cap_steps else 0)
     )
 
     state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
@@ -523,6 +656,8 @@ def faas_sweep_pallas(
         reliability=reliability,
         retries=retries,
         fused_dists=fused_dists,
+        crashes=crashes,
+        cap_steps=cap_steps,
     )
     in_specs = [state_spec, state_spec, state_spec, t_spec, t_spec, t_spec, t_spec]
     inputs = [
@@ -546,6 +681,26 @@ def faas_sweep_pallas(
             jnp.broadcast_to(jnp.asarray(t_timeout, jnp.float32), (R,))[:, None],
             jnp.broadcast_to(jnp.asarray(p_fail, jnp.float32), (R,))[:, None],
         ]
+    if crashes:
+        in_specs.append(t_spec)
+        inputs.append(
+            jnp.broadcast_to(jnp.asarray(crash_rate, jnp.float32), (R,))[:, None]
+        )
+    if cap_steps:
+        cap_spec = pl.BlockSpec((block_r, cap_steps), lambda r, k: (r, 0))
+        in_specs += [cap_spec, cap_spec]
+        # prepend the implicit t=0 edge so the in-kernel segment lookup is
+        # a plain count (and the block is never zero-width for E == 0)
+        inputs += [
+            jnp.concatenate(
+                [
+                    jnp.zeros((R, 1), jnp.float32),
+                    jnp.asarray(cap_edges, jnp.float32),
+                ],
+                axis=1,
+            ),
+            jnp.asarray(cap_values, jnp.float32),
+        ]
     if fused:
         # the entire per-row sample state: three 8-byte key pairs and three
         # (p0, p1) param pairs — no [R, K] buffers exist anywhere
@@ -562,6 +717,9 @@ def faas_sweep_pallas(
         if reliability:
             in_specs.append(samp_spec)
             inputs.append(jnp.asarray(fail_u, jnp.float32))
+        if crashes:
+            in_specs.append(samp_spec)
+            inputs.append(jnp.asarray(crash_u, jnp.float32))
     if retries:
         in_specs += [samp_spec, samp_spec]
         inputs += [
@@ -582,6 +740,10 @@ def faas_sweep_pallas(
         # block is full-width and stays pinned in VMEM like the acc
         out_specs.append(pl.BlockSpec((block_r, K), lambda r, k: (r, 0)))
         out_shape.append(jax.ShapeDtypeStruct((R, K), jnp.float32))
+    if crashes:
+        # the per-slot doom plane persists across k chunks like the pool
+        out_specs.append(state_spec)
+        out_shape.append(jax.ShapeDtypeStruct((R, M), jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -617,6 +779,7 @@ def _pallas_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
     *, block_k, window_bounds=None, grid_times=None,
     t_timeout=None, p_fail=None, fail_u=None, is_first=None, child_pos=None,
+    crash_rate=None, crash_u=None, cap_edges=None, cap_values=None,
     fused=None,
     **kw,
 ):
@@ -723,6 +886,19 @@ def _pallas_sweep_rows(
                 is_first=pad(is_first, 0.0),
                 child_pos=pad(child_pos, NO_CHILD_F),
             )
+    fault_kw = {}
+    if crash_u is not None:
+        # padded events sit past t_end (dt fill 1e30), so any doom they
+        # stamp is > t_end and never counted; the 0.0 fill just keeps the
+        # log finite
+        fault_kw.update(
+            crash_rate=row_pad(crash_rate), crash_u=pad(crash_u, 0.0)
+        )
+    if cap_values is not None:
+        fault_kw.update(
+            cap_edges=_pad_rows(jnp.asarray(cap_edges, jnp.float32), pad_c),
+            cap_values=_pad_rows(jnp.asarray(cap_values, jnp.float32), pad_c),
+        )
     out = faas_sweep_pallas(
         _pad_rows(alive0, pad_c),
         _pad_rows(creation0, pad_c),
@@ -746,6 +922,7 @@ def _pallas_sweep_rows(
         reliability=reliability,
         retries=retries,
         **rely_kw,
+        **fault_kw,
         **kw,
     )
     return out[4][:C]
@@ -1053,6 +1230,8 @@ def _fleet_kernel(
     n_steps: int,
     queue_depth: int,
     prestamped: bool,
+    crashes: bool = False,
+    cap_steps: int = 0,
 ):
     """One fleet (cell × replica) = one ``BLOCK_R``-row block: row f is
     function f's ``[M]`` pool (padded functions get ``limit=0``), every
@@ -1064,6 +1243,8 @@ def _fleet_kernel(
     time + the held warm/cold samples) drain ahead of each arrival.
     """
     Q = queue_depth
+    if Q and (crashes or cap_steps):
+        raise AssertionError("fleet faults are incompatible with queue_depth > 0")
     (
         alive_in,
         creation_in,
@@ -1074,15 +1255,30 @@ def _fleet_kernel(
         ncl_ref,
         tend_ref,
         skip_ref,
-        dt_ref,
-        fid_ref,
-        warm_ref,
-        cold_ref,
-    ) = refs[:13]
+    ) = refs[:9]
+    i = 9
+    crate_ref = None
+    if crashes:
+        crate_ref = refs[i]
+        i += 1
+    cape_ref = capv_ref = None
+    if cap_steps:
+        cape_ref, capv_ref = refs[i], refs[i + 1]
+        i += 2
+    dt_ref, fid_ref, warm_ref, cold_ref = refs[i : i + 4]
+    i += 4
+    crashu_ref = None
+    if crashes:
+        crashu_ref = refs[i]
+        i += 1
+    outs = refs[i:]
+    doom_out = None
+    if crashes:
+        *outs, doom_out = outs  # the doom plane rides last
     if Q:
-        alive_out, creation_out, busy_out, t_out, acc_out, qt_out, qw_out, qc_out = refs[13:]
+        alive_out, creation_out, busy_out, t_out, acc_out, qt_out, qw_out, qc_out = outs
     else:
-        alive_out, creation_out, busy_out, t_out, acc_out = refs[13:]
+        alive_out, creation_out, busy_out, t_out, acc_out = outs
 
     @pl.when(pl.program_id(1) == 0)
     def _init():
@@ -1091,6 +1287,9 @@ def _fleet_kernel(
         busy_out[...] = busy_in[...]
         t_out[...] = t0_ref[...]
         acc_out[...] = jnp.zeros(acc_out.shape, acc_out.dtype)
+        if crashes:
+            # fresh pools carry no crash clock; cold starts stamp one
+            doom_out[...] = jnp.full(doom_out.shape, jnp.inf, doom_out.dtype)
         if Q:
             qt_out[...] = jnp.full(qt_out.shape, NEG, qt_out.dtype)
             qw_out[...] = jnp.full(qw_out.shape, NEG, qw_out.dtype)
@@ -1106,6 +1305,12 @@ def _fleet_kernel(
     ncl = ncl_ref[...][:, 0]
     t_end = tend_ref[...][:, 0]
     skip = skip_ref[...][:, 0]
+    crate = crate_ref[...][:, 0] if crashes else None  # [Rb]
+    # cap_e carries a leading 0.0 edge so the segment lookup is a plain
+    # count (launcher prepends it); cap_v is the per-segment ceiling
+    cap_e = cape_ref[...] if cap_steps else None  # [Rb, cap_steps]
+    cap_v = capv_ref[...] if cap_steps else None  # [Rb, cap_steps]
+    doom0 = doom_out[...] if crashes else None
     slot_iota = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 1)
     rid = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 0)[:, 0]  # [Rb]
     # the peak column is a MAX accumulator: seed from the prior chunk
@@ -1129,8 +1334,11 @@ def _fleet_kernel(
     def step(i, carry):
         if Q:
             alive, creation, busy, t, acc, peak, qt, qw, qc = carry
+        elif crashes:
+            alive, creation, busy, t, acc, peak, doom = carry
         else:
             alive, creation, busy, t, acc, peak = carry
+            doom = None
         dt = dt_ref[:, i]
         fid = fid_ref[:, i]
         warm_s = warm_ref[:, i]
@@ -1141,18 +1349,69 @@ def _fleet_kernel(
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
-        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
-        idle_t = jnp.clip(
-            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
-            0.0,
-            None,
-        )
+        if crashes:
+            # a crashed instance stops accruing run/idle time at its doom
+            stop = jnp.minimum(hi[:, None], doom)
+            run_t = jnp.clip(jnp.minimum(busy, stop) - lo[:, None], 0.0, None)
+            idle_t = jnp.clip(
+                jnp.minimum(expire, stop) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
+        else:
+            run_t = jnp.clip(
+                jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None
+            )
+            idle_t = jnp.clip(
+                jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
 
-        expired = (alive > 0) & (expire <= t_new[:, None])
+        # expirations (and crash exits: whichever clock fires first)
+        exit_time = jnp.minimum(expire, doom) if crashes else expire
+        expired = (alive > 0) & (exit_time <= t_new[:, None])
+        if crashes:
+            crash_ok = (
+                expired
+                & (doom < expire)
+                & (doom > skip[:, None])
+                & (doom <= t_end[:, None])
+            )
+            n_crash = crash_ok.astype(jnp.float32).sum(axis=1)
         alive = jnp.where(expired, 0.0, alive)
         cc = t_new > skip
+
+        if cap_steps:
+            # cluster capacity churn: the ceiling applies to the whole
+            # block (one fleet), so idle instances are ranked fleet-wide —
+            # the flat id row*M + slot breaks creation ties exactly like
+            # the f64 scan's flattened [F*M] pool (DESIGN.md §15).  The
+            # static loop over block rows keeps every tensor rank <= 3.
+            seg = (cap_e <= t_new[:, None]).astype(jnp.float32).sum(axis=1) - 1.0
+            cap_col = jax.lax.broadcasted_iota(jnp.float32, cap_v.shape, 1)
+            cap_now = (cap_v * (cap_col == seg[:, None])).sum(axis=1)  # [Rb]
+            idle_now = (alive > 0) & (busy <= t_new[:, None])
+            over = alive.sum() - cap_now  # [Rb] (all rows agree)
+            row2 = jax.lax.broadcasted_iota(jnp.float32, alive.shape, 0)
+            flat = row2 * float(alive.shape[1]) + slot_iota  # [Rb, M]
+            rank = jnp.zeros(alive.shape, jnp.float32)
+            for br in range(alive.shape[0]):
+                cre_b = creation[br][None, None, :]  # row br's slots
+                flat_b = flat[br][None, None, :]
+                idle_b = idle_now[br][None, None, :]
+                newer = (cre_b > creation[:, :, None]) | (
+                    (cre_b == creation[:, :, None])
+                    & (flat_b < flat[:, :, None])
+                )
+                rank = rank + (idle_b & newer).astype(jnp.float32).sum(axis=2)
+            evict = idle_now & (rank < over[:, None]) & (t_new <= t_end)[:, None]
+            n_evict = (
+                (evict & (t_new > skip)[:, None]).astype(jnp.float32).sum(axis=1)
+            )
+            alive = jnp.where(evict, 0.0, alive)
 
         if Q:
             # FIFO drain ahead of the arrival: at most one row acts per
@@ -1220,6 +1479,9 @@ def _fleet_kernel(
         cluster = alive.sum()
         active = (t_new <= t_end) & act
         can_cold = (~any_idle) & (n_alive < limit) & any_free & (cluster < ncl)
+        if cap_steps:
+            # admission gate while degraded: no cold start over the ceiling
+            can_cold = can_cold & (cluster < cap_now)
         overflow = (~any_idle) & (n_alive < limit) & (~any_free) & active
         is_warm = any_idle & active
         is_cold = can_cold & active
@@ -1239,6 +1501,18 @@ def _fleet_kernel(
         busy = jnp.where(sel, (t_new + service)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if crashes:
+            # Exp(crash_rate) lifetime stamped at cold start (memoryless ⇒
+            # hazard-equivalent); warm hits keep the instance's old doom.
+            # No reliability layer in the fleet: an interrupted attempt is
+            # one whose instance dies before the service completes.
+            crash_i = crashu_ref[:, i]
+            life = -jnp.log(1.0 - crash_i) / crate
+            doom = jnp.where(
+                sel & is_cold[:, None], (t_new + life)[:, None], doom
+            )
+            doom_chosen = jnp.min(jnp.where(sel, doom, jnp.inf), axis=1)
+            interrupted = assign & (doom_chosen < t_new + service)
         if Q:
             qsel = (q_iota == qlen[:, None]) & is_enq[:, None]
             qt = jnp.where(qsel, t_new[:, None], qt)
@@ -1265,9 +1539,19 @@ def _fleet_kernel(
             ],
             axis=1,
         )
+        if crashes or cap_steps:
+            # fault columns ride after the fleet layout (DESIGN.md §15)
+            f_crash = n_crash if crashes else zero
+            f_evict = n_evict if cap_steps else zero
+            f_int = (interrupted & cc).astype(jnp.float32) if crashes else zero
+            delta = jnp.concatenate(
+                [delta, jnp.stack([f_crash, f_evict, f_int], axis=1)], axis=1
+            )
         acc = acc + delta
         if Q:
             return alive, creation, busy, t_new, acc, peak, qt, qw, qc
+        if crashes:
+            return alive, creation, busy, t_new, acc, peak, doom
         return alive, creation, busy, t_new, acc, peak
 
     if Q:
@@ -1278,6 +1562,11 @@ def _fleet_kernel(
         qt_out[...] = qt
         qw_out[...] = qw
         qc_out[...] = qc
+    elif crashes:
+        alive, creation, busy, t, acc, peak, doom = jax.lax.fori_loop(
+            0, n_steps, step, (alive, creation, busy, t, acc0, peak0, doom0)
+        )
+        doom_out[...] = doom
     else:
         alive, creation, busy, t, acc, peak = jax.lax.fori_loop(
             0, n_steps, step, (alive, creation, busy, t, acc0, peak0)
@@ -1312,6 +1601,10 @@ def fleet_sweep_pallas(
     fids,  # f32 [R, K] acting-row id per event (same stream across a block)
     warms,  # f32 [R, K]
     colds,  # f32 [R, K]
+    crash_rate=None,  # f32 [R] per-row crash hazard (faults, DESIGN.md §15)
+    crash_u=None,  # f32 [R, K] per-event crash-lifetime uniforms (faults)
+    cap_edges=None,  # f32 [R, E] capacity-profile step times (faults)
+    cap_values=None,  # f32 [R, E+1] per-segment capacity ceilings (faults)
     *,
     slots: int,
     queue_depth: int = 0,
@@ -1321,7 +1614,8 @@ def fleet_sweep_pallas(
     prestamped: bool = False,
 ):
     """Fleet block launch: ``R = fleets × block_r`` rows, one fleet per
-    block.  Returns ``(acc[R, FLEET_ACC_COLS], qt_final[R, Q] | None)``.
+    block.  Returns ``(acc[R, cols], qt_final[R, Q] | None)`` where
+    ``cols = FLEET_ACC_COLS`` plus ``FAULT_COLS`` when faults are on.
     Every fleet axis value (thresholds, limits, capacity, horizon) is a
     traced per-row input, so a fleet × threshold grid is ONE trace.
     """
@@ -1329,20 +1623,28 @@ def fleet_sweep_pallas(
     R, K = dts.shape
     M = slots
     Q = queue_depth
+    crashes = crash_u is not None
+    cap_steps = 0 if cap_values is None else cap_values.shape[1]
+    assert not (Q and (crashes or cap_steps)), (
+        "fleet faults are incompatible with queue_depth > 0"
+    )
     assert R % block_r == 0, (R, block_r)
     assert K % block_k == 0, (K, block_k)
     grid = (R // block_r, K // block_k)
+    acc_cols = FLEET_ACC_COLS + (FAULT_COLS if crashes or cap_steps else 0)
 
     state_spec = pl.BlockSpec((block_r, M), lambda r, k: (r, 0))
     samp_spec = pl.BlockSpec((block_r, block_k), lambda r, k: (r, k))
     t_spec = pl.BlockSpec((block_r, 1), lambda r, k: (r, 0))
-    acc_spec = pl.BlockSpec((block_r, FLEET_ACC_COLS), lambda r, k: (r, 0))
+    acc_spec = pl.BlockSpec((block_r, acc_cols), lambda r, k: (r, 0))
 
     kernel = functools.partial(
         _fleet_kernel,
         n_steps=block_k,
         queue_depth=Q,
         prestamped=prestamped,
+        crashes=crashes,
+        cap_steps=cap_steps,
     )
     frozen = jnp.full((R, M), NEG, jnp.float32)
     inputs = [
@@ -1355,28 +1657,47 @@ def fleet_sweep_pallas(
         ncl[:, None],
         t_end[:, None],
         skip[:, None],
-        dts,
-        fids,
-        warms,
-        colds,
     ]
-    in_specs = (
-        [state_spec, state_spec, state_spec]
-        + [t_spec] * 6
-        + [samp_spec] * 4
-    )
+    in_specs = [state_spec, state_spec, state_spec] + [t_spec] * 6
+    if crashes:
+        inputs.append(
+            jnp.broadcast_to(jnp.asarray(crash_rate, jnp.float32), (R,))[:, None]
+        )
+        in_specs.append(t_spec)
+    if cap_steps:
+        cap_spec = pl.BlockSpec((block_r, cap_steps), lambda r, k: (r, 0))
+        # prepend the 0.0 edge so the kernel's segment lookup is a count
+        inputs.append(
+            jnp.concatenate(
+                [
+                    jnp.zeros((R, 1), jnp.float32),
+                    jnp.asarray(cap_edges, jnp.float32),
+                ],
+                axis=1,
+            )
+        )
+        inputs.append(jnp.asarray(cap_values, jnp.float32))
+        in_specs += [cap_spec, cap_spec]
+    inputs += [dts, fids, warms, colds]
+    in_specs += [samp_spec] * 4
+    if crashes:
+        inputs.append(jnp.asarray(crash_u, jnp.float32))
+        in_specs.append(samp_spec)
     out_specs = [state_spec, state_spec, state_spec, t_spec, acc_spec]
     out_shape = [
         jax.ShapeDtypeStruct((R, M), jnp.float32),
         jax.ShapeDtypeStruct((R, M), jnp.float32),
         jax.ShapeDtypeStruct((R, M), jnp.float32),
         jax.ShapeDtypeStruct((R, 1), jnp.float32),
-        jax.ShapeDtypeStruct((R, FLEET_ACC_COLS), jnp.float32),
+        jax.ShapeDtypeStruct((R, acc_cols), jnp.float32),
     ]
     if Q:
         q_spec = pl.BlockSpec((block_r, Q), lambda r, k: (r, 0))
         out_specs += [q_spec] * 3
         out_shape += [jax.ShapeDtypeStruct((R, Q), jnp.float32)] * 3
+    if crashes:
+        out_specs.append(state_spec)
+        out_shape.append(jax.ShapeDtypeStruct((R, M), jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid=grid,
@@ -1392,6 +1713,7 @@ def fleet_sweep_pallas(
 def _pallas_fleet_rows(
     t_exp, limit, ncl, t_end, skip, dts, fids, warms, colds,
     *, slots, queue_depth, prestamped, block_k,
+    crash_rate=None, crash_u=None, cap_edges=None, cap_values=None,
 ):
     """The fleet launcher (``BackendSpec.launch_for("fleet")``): chunk-pad
     the merged stream and run :func:`fleet_sweep_pallas`.  Rows arrive
@@ -1413,6 +1735,15 @@ def _pallas_fleet_rows(
             )
         return x
 
+    fault_kw = {}
+    if crash_u is not None:
+        # padded events sit past t_end (1e30 time fill), so any doom they
+        # stamp is > t_end and never counted; 0.0 keeps the log finite
+        fault_kw["crash_rate"] = jnp.asarray(crash_rate, jnp.float32)
+        fault_kw["crash_u"] = pad(jnp.asarray(crash_u, jnp.float32), 0.0)
+    if cap_values is not None:
+        fault_kw["cap_edges"] = jnp.asarray(cap_edges, jnp.float32)
+        fault_kw["cap_values"] = jnp.asarray(cap_values, jnp.float32)
     acc, qt = fleet_sweep_pallas(
         jnp.asarray(t_exp, jnp.float32),
         jnp.asarray(limit, jnp.float32),
@@ -1429,6 +1760,7 @@ def _pallas_fleet_rows(
         block_k=block_k,
         interpret=jax.default_backend() != "tpu",
         prestamped=prestamped,
+        **fault_kw,
     )
     if qt is None:
         qleft = jnp.zeros((C,), jnp.float32)

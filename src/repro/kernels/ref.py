@@ -66,6 +66,10 @@ def faas_sweep_ref(
     fused_keys=None,  # uint32 [R, 2] ×3 (arrival, warm, cold) stream keys
     fused_params=None,  # f32 [R, 2] ×3 per-row (p0, p1) dist params
     fused_fail_keys=None,  # uint32 [R, 2] failure-stream keys (reliability)
+    crash_rate=None,  # f32 [R] per-row crash hazard (faults, DESIGN.md §15)
+    crash_u=None,  # f32 [R, K] per-event crash-lifetime uniforms (faults)
+    cap_edges=None,  # f32 [R, E] capacity-profile step times (faults)
+    cap_values=None,  # f32 [R, E+1] per-segment capacity ceilings (faults)
     max_concurrency,
     prestamped: bool = False,
     n_windows: int = 0,
@@ -81,14 +85,19 @@ def faas_sweep_ref(
     ∫running/∫idle) and transient-curve (``3*n_grid`` columns) extensions;
     ``t_end``/``skip``/the boundary rows are per-row traced values like
     ``t_exp``, so horizon and window-grid sweeps share one compile."""
-    from repro.kernels.faas_event_step import NO_CHILD_F, RELY_COLS
+    from repro.kernels.faas_event_step import FAULT_COLS, NO_CHILD_F, RELY_COLS
 
     fused = fused_dists is not None
     R, M = alive.shape
     K = fused_k if fused else dts.shape[1]
     reliability = t_timeout is not None
     retries = is_first is not None
+    crashes = crash_u is not None
+    cap_steps = 0 if cap_values is None else cap_values.shape[1]
     assert not (fused and retries), "fused draws do not serve retry streams"
+    assert not (fused and (crashes or cap_steps)), (
+        "fused draws do not serve platform faults"
+    )
     if fused:
         a_keys, w_keys, c_keys = (
             jnp.asarray(k, jnp.uint32) for k in fused_keys
@@ -120,12 +129,23 @@ def faas_sweep_ref(
         w_lo, w_hi = wb[:, :-1], wb[:, 1:]
     if n_grid:
         g_times = jnp.asarray(grid_times, jnp.float32)
+    if crashes:
+        crate = jnp.broadcast_to(jnp.asarray(crash_rate, jnp.float32), (R,))
+        crash_u = jnp.asarray(crash_u, jnp.float32)
+    if cap_steps:
+        # same leading 0.0 edge the Pallas launcher prepends, so the
+        # segment lookup is the identical plain count
+        cap_e = jnp.concatenate(
+            [jnp.zeros((R, 1), jnp.float32), jnp.asarray(cap_edges, jnp.float32)],
+            axis=1,
+        )
+        cap_v = jnp.asarray(cap_values, jnp.float32)
 
     def step(i, carry):
-        if retries:
-            alive, creation, busy, t, acc, act = carry
-        else:
-            alive, creation, busy, t, acc = carry
+        alive, creation, busy, t, acc = carry[:5]
+        rest = list(carry[5:])
+        act = rest.pop(0) if retries else None
+        doom = rest.pop(0) if crashes else None
         if fused:
             # same counter scheme as the Pallas kernel: global event index
             # (chunk base 0 here — the ref is unchunked), bitwise-equal
@@ -152,12 +172,23 @@ def faas_sweep_ref(
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
-        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
-        idle_t = jnp.clip(
-            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
-            0.0,
-            None,
-        )
+        if crashes:
+            stop = jnp.minimum(hi[:, None], doom)
+            run_t = jnp.clip(jnp.minimum(busy, stop) - lo[:, None], 0.0, None)
+            idle_t = jnp.clip(
+                jnp.minimum(expire, stop) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
+        else:
+            run_t = jnp.clip(
+                jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None
+            )
+            idle_t = jnp.clip(
+                jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
         if n_windows:
@@ -194,8 +225,41 @@ def faas_sweep_ref(
             g_run = jnp.where(in_win, running_g.astype(jnp.float32), 0.0)
             g_idle = jnp.where(in_win, idle_g.astype(jnp.float32), 0.0)
             g_cold = (in_win & (idle_g == 0)).astype(jnp.float32)
-        expired = (alive > 0) & (expire <= t_new[:, None])
+        exit_time = jnp.minimum(expire, doom) if crashes else expire
+        expired = (alive > 0) & (exit_time <= t_new[:, None])
+        if crashes:
+            crash_ok = (
+                expired
+                & (doom < expire)
+                & (doom > skip[:, None])
+                & (doom <= t_end[:, None])
+            )
+            n_crash = crash_ok.astype(jnp.float32).sum(axis=1)
         alive = jnp.where(expired, 0.0, alive)
+        if cap_steps:
+            seg = (cap_e <= t_new[:, None]).astype(jnp.float32).sum(axis=1) - 1.0
+            cap_col = jax.lax.broadcasted_iota(jnp.float32, cap_v.shape, 1)
+            cap_now = (cap_v * (cap_col == seg[:, None])).sum(axis=1)
+            idle_now = (alive > 0) & (busy <= t_new[:, None])
+            over = alive.sum(axis=1) - cap_now
+            cre_a = creation[:, :, None]
+            cre_b = creation[:, None, :]
+            shape3 = (creation.shape[0], creation.shape[1], creation.shape[1])
+            ia = jax.lax.broadcasted_iota(jnp.float32, shape3, 1)
+            ib = jax.lax.broadcasted_iota(jnp.float32, shape3, 2)
+            newer = (cre_b > cre_a) | ((cre_b == cre_a) & (ib < ia))
+            rank = (
+                (idle_now[:, None, :] & newer).astype(jnp.float32).sum(axis=2)
+            )
+            evict = (
+                idle_now
+                & (rank < over[:, None])
+                & (t_new <= t_end)[:, None]
+            )
+            n_evict = (
+                (evict & (t_new > skip)[:, None]).astype(jnp.float32).sum(axis=1)
+            )
+            alive = jnp.where(evict, 0.0, alive)
         idle = (alive > 0) & (busy <= t_new[:, None])
         best = jnp.max(jnp.where(idle, creation, NEG), axis=1)
         any_idle = best > NEG * 0.5
@@ -214,6 +278,8 @@ def faas_sweep_ref(
             active = active & ((first_i > 0) | (act_i > 0))
         counted = t_new > skip
         can_cold = (~any_idle) & (n_alive < max_concurrency) & any_free
+        if cap_steps:
+            can_cold = can_cold & (n_alive < cap_now)
         overflow = (~any_idle) & (n_alive < max_concurrency) & (~any_free) & active
         is_warm = any_idle & active
         is_cold = can_cold & active
@@ -229,14 +295,32 @@ def faas_sweep_ref(
         busy = jnp.where(sel, (t_new + occupancy)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if crashes:
+            crash_i = crash_u[:, i]
+            life = -jnp.log(1.0 - crash_i) / crate
+            doom = jnp.where(
+                sel & is_cold[:, None], (t_new + life)[:, None], doom
+            )
+            doom_chosen = jnp.min(jnp.where(sel, doom, jnp.inf), axis=1)
         cc = counted
         if reliability:
             timed_out = assign & (service > t_to)
             failed = assign & ~timed_out & (fail_i < p_f)
-            trigger = timed_out | failed | is_reject
+            if crashes:
+                interrupted = (
+                    assign
+                    & ~timed_out
+                    & ~failed
+                    & (doom_chosen < t_new + occupancy)
+                )
+                trigger = timed_out | failed | interrupted | is_reject
+            else:
+                trigger = timed_out | failed | is_reject
             cold_resp = jnp.minimum(cold_i, t_to)
             warm_resp = jnp.minimum(warm_i, t_to)
         else:
+            if crashes:
+                interrupted = assign & (doom_chosen < t_new + occupancy)
             cold_resp, warm_resp = cold_i, warm_i
         delta = jnp.stack(
             [
@@ -290,22 +374,42 @@ def faas_sweep_ref(
                 ],
                 axis=1,
             )
+        if crashes or cap_steps:
+            zero = jnp.zeros_like(run_sum)
+            f_crash = n_crash if crashes else zero
+            f_evict = n_evict if cap_steps else zero
+            f_int = (
+                (interrupted & cc).astype(jnp.float32) if crashes else zero
+            )
+            delta = jnp.concatenate(
+                [delta, jnp.stack([f_crash, f_evict, f_int], axis=1)], axis=1
+            )
         acc = acc + delta
+        out = (alive, creation, busy, t_new, acc)
         if retries:
-            return alive, creation, busy, t_new, acc, act
-        return alive, creation, busy, t_new, acc
+            out = out + (act,)
+        if crashes:
+            out = out + (doom,)
+        return out
 
     acc0 = jnp.zeros(
-        (R, 8 + 5 * n_windows + 3 * n_grid + (RELY_COLS if reliability else 0)),
+        (
+            R,
+            8
+            + 5 * n_windows
+            + 3 * n_grid
+            + (RELY_COLS if reliability else 0)
+            + (FAULT_COLS if crashes or cap_steps else 0),
+        ),
         jnp.float32,
     )
+    carry0 = (alive, creation, busy, t0, acc0)
     if retries:
-        act0 = jnp.zeros((R, K), jnp.float32)
-        out = jax.lax.fori_loop(
-            0, K, step, (alive, creation, busy, t0, acc0, act0)
-        )
-        return out[:5]
-    return jax.lax.fori_loop(0, K, step, (alive, creation, busy, t0, acc0))
+        carry0 = carry0 + (jnp.zeros((R, K), jnp.float32),)
+    if crashes:
+        carry0 = carry0 + (jnp.full((R, M), jnp.inf, jnp.float32),)
+    out = jax.lax.fori_loop(0, K, step, carry0)
+    return out[:5]
 
 
 @functools.lru_cache(maxsize=1)
@@ -341,42 +445,132 @@ def _sweep_ref_jit():
 )
 def _ref_sweep_rows(
     alive0, creation0, busy0, t0, t_exp, t_end, skip, dts, warms, colds,
-    *, block_k, window_bounds=None, grid_times=None, fused=None, **kw,
+    *, block_k, window_bounds=None, grid_times=None, fused=None,
+    t_timeout=None, p_fail=None, fail_u=None, is_first=None, child_pos=None,
+    crash_rate=None, crash_u=None, cap_edges=None, cap_values=None,
+    **kw,
 ):
     """The sweep engine's ``ref`` row launcher (``BackendSpec.launch``):
-    no padding needed — the jitted mirror consumes the rows directly.
-    Serves both the steady-state (scan) and transient (temporal, via
-    ``grid_times``) engines.  With ``fused`` (DrawPlan lowering dict,
-    DESIGN.md §12) draws are regenerated inline from the counter scheme
-    and the return value is ``(acc, t_final)`` for the coverage guard."""
-    del block_k  # chunking is a Pallas grid concept
+    pads rows and arrivals exactly like the Pallas launcher so the twin
+    programs consume identically-shaped buffers — XLA may associate the
+    per-row slot reductions differently for different row counts, and a
+    shape mismatch between the twins shows up as rare 1-ulp drift in the
+    f32 integrals.  Serves both the steady-state (scan) and transient
+    (temporal, via ``grid_times``) engines.  With ``fused`` (DrawPlan
+    lowering dict, DESIGN.md §12) draws are regenerated inline from the
+    counter scheme and the return value is ``(acc, t_final)`` for the
+    coverage guard."""
+    from repro.kernels.faas_event_step import BLOCK_R, NO_CHILD_F, _pad_rows
+
     if fused is not None:
+        C = alive0.shape[0]
+        n = int(fused["n_steps"])
+        block_k = min(block_k, max(n, 1))
+        pad_c = (-C) % BLOCK_R
+        Kp = n + ((-n) % block_k)
+        row_pad = lambda x: _pad_rows(x, pad_c, fill=1.0)
+        rely_kw = {}
+        if t_timeout is not None:
+            rely_kw = dict(
+                t_timeout=row_pad(t_timeout),
+                p_fail=_pad_rows(p_fail, pad_c, fill=0.0),
+            )
         out = _sweep_ref_jit()(
-            alive0, creation0, busy0, t0, t_exp, None, None, None,
-            t_end=t_end, skip=skip, window_bounds=window_bounds,
-            grid_times=grid_times,
+            _pad_rows(alive0, pad_c),
+            _pad_rows(creation0, pad_c),
+            _pad_rows(busy0, pad_c),
+            _pad_rows(t0, pad_c, fill=0.0),
+            row_pad(t_exp),
+            None,
+            None,
+            None,
+            t_end=row_pad(t_end),
+            skip=row_pad(skip),
+            window_bounds=(
+                None if window_bounds is None else _pad_rows(window_bounds, pad_c)
+            ),
+            grid_times=(
+                None if grid_times is None else _pad_rows(grid_times, pad_c)
+            ),
             fused_dists=tuple(fused["dists"]),
-            fused_k=int(fused["n_steps"]),
+            fused_k=Kp,
             fused_keys=tuple(
-                jnp.asarray(k, jnp.uint32) for k in fused["keys"]
+                _pad_rows(jnp.asarray(k, jnp.uint32), pad_c)
+                for k in fused["keys"]
             ),
             fused_params=tuple(
-                jnp.asarray(p, jnp.float32) for p in fused["params"]
+                _pad_rows(jnp.asarray(p, jnp.float32), pad_c)
+                for p in fused["params"]
             ),
             fused_fail_keys=(
                 None
                 if fused.get("fail_keys") is None
-                else jnp.asarray(fused["fail_keys"], jnp.uint32)
+                else _pad_rows(jnp.asarray(fused["fail_keys"], jnp.uint32), pad_c)
             ),
+            **rely_kw,
             **kw,
         )
-        return out[4], out[3]
+        return out[4][:C], out[3][:C]
+    C, n = dts.shape
+    block_k = min(block_k, max(n, 1))
+    pad_c = (-C) % BLOCK_R
+    pad_k = (-n) % block_k
+
+    def pad(x, col_fill):
+        if pad_k:
+            x = jnp.concatenate(
+                [x, jnp.full((x.shape[0], pad_k), col_fill, x.dtype)], axis=1
+            )
+        return _pad_rows(x, pad_c)
+
+    row_pad = lambda x: _pad_rows(x, pad_c, fill=1.0)
+    rely_kw = {}
+    if t_timeout is not None:
+        # same inert sample fills as the Pallas launcher: fail_u=1.0 never
+        # fails, is_first=0 keeps padded events inactive, NO_CHILD never
+        # scatters
+        rely_kw = dict(
+            t_timeout=row_pad(t_timeout),
+            p_fail=_pad_rows(p_fail, pad_c, fill=0.0),
+            fail_u=pad(fail_u, 1.0),
+        )
+        if is_first is not None:
+            rely_kw.update(
+                is_first=pad(is_first, 0.0),
+                child_pos=pad(child_pos, NO_CHILD_F),
+            )
+    fault_kw = {}
+    if crash_u is not None:
+        fault_kw.update(
+            crash_rate=row_pad(crash_rate), crash_u=pad(crash_u, 0.0)
+        )
+    if cap_values is not None:
+        fault_kw.update(
+            cap_edges=_pad_rows(jnp.asarray(cap_edges, jnp.float32), pad_c),
+            cap_values=_pad_rows(jnp.asarray(cap_values, jnp.float32), pad_c),
+        )
     out = _sweep_ref_jit()(
-        alive0, creation0, busy0, t0, t_exp, dts, warms, colds,
-        t_end=t_end, skip=skip, window_bounds=window_bounds,
-        grid_times=grid_times, **kw,
+        _pad_rows(alive0, pad_c),
+        _pad_rows(creation0, pad_c),
+        _pad_rows(busy0, pad_c),
+        _pad_rows(t0, pad_c, fill=0.0),
+        row_pad(t_exp),
+        pad(dts, 1e30),
+        pad(warms, 1.0),
+        pad(colds, 1.0),
+        t_end=row_pad(t_end),
+        skip=row_pad(skip),
+        window_bounds=(
+            None if window_bounds is None else _pad_rows(window_bounds, pad_c)
+        ),
+        grid_times=(
+            None if grid_times is None else _pad_rows(grid_times, pad_c)
+        ),
+        **rely_kw,
+        **fault_kw,
+        **kw,
     )
-    return out[4]
+    return out[4][:C]
 
 
 def fleet_sweep_ref(
@@ -389,6 +583,10 @@ def fleet_sweep_ref(
     fids,  # f32 [R, K] acting-row id per event (same stream across a group)
     warms,  # f32 [R, K]
     colds,  # f32 [R, K]
+    crash_rate=None,  # f32 [R] per-row crash hazard (faults, DESIGN.md §15)
+    crash_u=None,  # f32 [R, K] per-event crash-lifetime uniforms (faults)
+    cap_edges=None,  # f32 [R, E] capacity-profile step times (faults)
+    cap_values=None,  # f32 [R, E+1] per-segment capacity ceilings (faults)
     *,
     slots: int,
     queue_depth: int = 0,
@@ -400,12 +598,18 @@ def fleet_sweep_ref(
     f's pool), the shared capacity is the group-wide occupancy sum —
     bitwise equal to the kernel's block-wide ``alive.sum()`` because
     occupancy counts are small integers in f32 — and the acc layout is
-    ``FLEET_ACC_COLS`` with the peak column as a MAX accumulator."""
-    from repro.kernels.faas_event_step import FLEET_ACC_COLS
+    ``FLEET_ACC_COLS`` (+``FAULT_COLS`` under faults) with the peak
+    column as a MAX accumulator."""
+    from repro.kernels.faas_event_step import FAULT_COLS, FLEET_ACC_COLS
 
     R, K = dts.shape
     M = slots
     Q = queue_depth
+    crashes = crash_u is not None
+    cap_steps = 0 if cap_values is None else cap_values.shape[1]
+    assert not (Q and (crashes or cap_steps)), (
+        "fleet faults are incompatible with queue_depth > 0"
+    )
     assert R % block_r == 0, (R, block_r)
     G = R // block_r
     t_exp = jnp.broadcast_to(jnp.asarray(t_exp, jnp.float32), (R,))
@@ -413,11 +617,27 @@ def fleet_sweep_ref(
     ncl = jnp.broadcast_to(jnp.asarray(ncl, jnp.float32), (R,))
     t_end = jnp.broadcast_to(jnp.asarray(t_end, jnp.float32), (R,))
     skip = jnp.broadcast_to(jnp.asarray(skip, jnp.float32), (R,))
+    if crashes:
+        crate = jnp.broadcast_to(jnp.asarray(crash_rate, jnp.float32), (R,))
+        crash_u = jnp.asarray(crash_u, jnp.float32)
+    if cap_steps:
+        # leading 0.0 edge keeps the segment lookup a plain count, as the
+        # Pallas launcher prepends it
+        cap_e = jnp.concatenate(
+            [jnp.zeros((R, 1), jnp.float32), jnp.asarray(cap_edges, jnp.float32)],
+            axis=1,
+        )
+        cap_v = jnp.asarray(cap_values, jnp.float32)
     slot_iota = jnp.broadcast_to(
         jnp.arange(M, dtype=jnp.float32)[None, :], (R, M)
     )
     rid = (jnp.arange(R) % block_r).astype(jnp.float32)
     group_sum = lambda x: jnp.repeat(x.reshape(G, block_r).sum(axis=1), block_r)
+    # the group's row br, broadcast back over its block_r rows — mirrors
+    # the kernel's static ``creation[br]`` row pick inside one block
+    sel_grow = lambda x, br: jnp.repeat(
+        x.reshape(G, block_r, M)[:, br], block_r, axis=0
+    )
     if Q:
         q_iota = jnp.broadcast_to(
             jnp.arange(Q, dtype=jnp.float32)[None, :], (R, Q)
@@ -438,8 +658,11 @@ def fleet_sweep_ref(
     def step(i, carry):
         if Q:
             alive, creation, busy, t, acc, peak, qt, qw, qc = carry
+        elif crashes:
+            alive, creation, busy, t, acc, peak, doom = carry
         else:
             alive, creation, busy, t, acc, peak = carry
+            doom = None
         dt = dts[:, i]
         fid = fids[:, i]
         warm_s = warms[:, i]
@@ -449,17 +672,67 @@ def fleet_sweep_ref(
         lo = jnp.clip(t, skip, t_end)
         hi = jnp.clip(t_new, skip, t_end)
         expire = busy + t_exp[:, None]
-        run_t = jnp.clip(jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None)
-        idle_t = jnp.clip(
-            jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
-            0.0,
-            None,
-        )
+        if crashes:
+            # a crashed instance stops accruing run/idle time at its doom
+            stop = jnp.minimum(hi[:, None], doom)
+            run_t = jnp.clip(jnp.minimum(busy, stop) - lo[:, None], 0.0, None)
+            idle_t = jnp.clip(
+                jnp.minimum(expire, stop) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
+        else:
+            run_t = jnp.clip(
+                jnp.minimum(busy, hi[:, None]) - lo[:, None], 0.0, None
+            )
+            idle_t = jnp.clip(
+                jnp.minimum(expire, hi[:, None]) - jnp.maximum(busy, lo[:, None]),
+                0.0,
+                None,
+            )
         run_sum = (run_t * alive).sum(axis=1)
         idle_sum = (idle_t * alive).sum(axis=1)
-        expired = (alive > 0) & (expire <= t_new[:, None])
+        exit_time = jnp.minimum(expire, doom) if crashes else expire
+        expired = (alive > 0) & (exit_time <= t_new[:, None])
+        if crashes:
+            crash_ok = (
+                expired
+                & (doom < expire)
+                & (doom > skip[:, None])
+                & (doom <= t_end[:, None])
+            )
+            n_crash = crash_ok.astype(jnp.float32).sum(axis=1)
         alive = jnp.where(expired, 0.0, alive)
         cc = t_new > skip
+
+        if cap_steps:
+            # cluster capacity churn, ranked fleet-wide (flat id row*M +
+            # slot breaks creation ties) — op-for-op with the kernel's
+            # static loop over its block rows
+            seg = (cap_e <= t_new[:, None]).astype(jnp.float32).sum(axis=1) - 1.0
+            cap_col = jnp.broadcast_to(
+                jnp.arange(cap_v.shape[1], dtype=jnp.float32)[None, :],
+                cap_v.shape,
+            )
+            cap_now = (cap_v * (cap_col == seg[:, None])).sum(axis=1)
+            idle_now = (alive > 0) & (busy <= t_new[:, None])
+            over = group_sum(alive.sum(axis=1)) - cap_now
+            flat = rid[:, None] * float(M) + slot_iota  # [R, M]
+            rank = jnp.zeros(alive.shape, jnp.float32)
+            for br in range(block_r):
+                cre_b = sel_grow(creation, br)[:, None, :]
+                flat_b = sel_grow(flat, br)[:, None, :]
+                idle_b = sel_grow(idle_now, br)[:, None, :]
+                newer = (cre_b > creation[:, :, None]) | (
+                    (cre_b == creation[:, :, None])
+                    & (flat_b < flat[:, :, None])
+                )
+                rank = rank + (idle_b & newer).astype(jnp.float32).sum(axis=2)
+            evict = idle_now & (rank < over[:, None]) & (t_new <= t_end)[:, None]
+            n_evict = (
+                (evict & (t_new > skip)[:, None]).astype(jnp.float32).sum(axis=1)
+            )
+            alive = jnp.where(evict, 0.0, alive)
 
         if Q:
 
@@ -533,6 +806,9 @@ def fleet_sweep_ref(
         cluster = group_sum(alive.sum(axis=1))
         active = (t_new <= t_end) & act
         can_cold = (~any_idle) & (n_alive < limit) & any_free & (cluster < ncl)
+        if cap_steps:
+            # admission gate while degraded: no cold start over the ceiling
+            can_cold = can_cold & (cluster < cap_now)
         overflow = (~any_idle) & (n_alive < limit) & (~any_free) & active
         is_warm = any_idle & active
         is_cold = can_cold & active
@@ -551,6 +827,17 @@ def fleet_sweep_ref(
         busy = jnp.where(sel, (t_new + service)[:, None], busy)
         creation = jnp.where(sel & is_cold[:, None], t_new[:, None], creation)
         alive = jnp.where(sel & is_cold[:, None], 1.0, alive)
+        if crashes:
+            # Exp(crash_rate) lifetime stamped at cold start; warm hits
+            # keep the instance's old doom (no reliability layer here —
+            # interrupted = the serving instance dies mid-service)
+            crash_i = crash_u[:, i]
+            life = -jnp.log(1.0 - crash_i) / crate
+            doom = jnp.where(
+                sel & is_cold[:, None], (t_new + life)[:, None], doom
+            )
+            doom_chosen = jnp.min(jnp.where(sel, doom, jnp.inf), axis=1)
+            interrupted = assign & (doom_chosen < t_new + service)
         if Q:
             qsel = (q_iota == qlen[:, None]) & is_enq[:, None]
             qt = jnp.where(qsel, t_new[:, None], qt)
@@ -576,20 +863,35 @@ def fleet_sweep_ref(
             ],
             axis=1,
         )
+        if crashes or cap_steps:
+            f_crash = n_crash if crashes else zero
+            f_evict = n_evict if cap_steps else zero
+            f_int = (interrupted & cc).astype(jnp.float32) if crashes else zero
+            delta = jnp.concatenate(
+                [delta, jnp.stack([f_crash, f_evict, f_int], axis=1)], axis=1
+            )
         acc = acc + delta
         if Q:
             return alive, creation, busy, t_new, acc, peak, qt, qw, qc
+        if crashes:
+            return alive, creation, busy, t_new, acc, peak, doom
         return alive, creation, busy, t_new, acc, peak
 
     alive0 = jnp.zeros((R, M), jnp.float32)
     frozen = jnp.full((R, M), NEG, jnp.float32)
     t0 = jnp.zeros((R,), jnp.float32)
-    acc0 = jnp.zeros((R, FLEET_ACC_COLS), jnp.float32)
+    acc_cols = FLEET_ACC_COLS + (FAULT_COLS if crashes or cap_steps else 0)
+    acc0 = jnp.zeros((R, acc_cols), jnp.float32)
     peak0 = jnp.zeros((R,), jnp.float32)
     if Q:
         qneg = jnp.full((R, Q), NEG, jnp.float32)
         out = jax.lax.fori_loop(
             0, K, step, (alive0, frozen, frozen, t0, acc0, peak0, qneg, qneg, qneg)
+        )
+    elif crashes:
+        doom0 = jnp.full((R, M), jnp.inf, jnp.float32)
+        out = jax.lax.fori_loop(
+            0, K, step, (alive0, frozen, frozen, t0, acc0, peak0, doom0)
         )
     else:
         out = jax.lax.fori_loop(
@@ -597,8 +899,8 @@ def fleet_sweep_ref(
         )
     acc, peak = out[4], out[5]
     col_iota = jnp.broadcast_to(
-        jnp.arange(FLEET_ACC_COLS, dtype=jnp.float32)[None, :],
-        (R, FLEET_ACC_COLS),
+        jnp.arange(acc_cols, dtype=jnp.float32)[None, :],
+        (R, acc_cols),
     )
     acc = jnp.where(col_iota == float(FLEET_ACC_COLS - 1), peak[:, None], acc)
     return acc, (out[6] if Q else None)
@@ -622,11 +924,19 @@ def _fleet_ref_jit():
 def _ref_fleet_rows(
     t_exp, limit, ncl, t_end, skip, dts, fids, warms, colds,
     *, slots, queue_depth, prestamped, block_k,
+    crash_rate=None, crash_u=None, cap_edges=None, cap_values=None,
 ):
     """The fleet launcher's ``ref`` mirror: no chunk padding needed — the
     jitted mirror consumes the merged rows directly.  Returns
-    ``(acc[C, FLEET_ACC_COLS], qleft[C])`` like the Pallas launcher."""
+    ``(acc[C, cols], qleft[C])`` like the Pallas launcher."""
     del block_k
+    fault_kw = {}
+    if crash_u is not None:
+        fault_kw["crash_rate"] = jnp.asarray(crash_rate, jnp.float32)
+        fault_kw["crash_u"] = jnp.asarray(crash_u, jnp.float32)
+    if cap_values is not None:
+        fault_kw["cap_edges"] = jnp.asarray(cap_edges, jnp.float32)
+        fault_kw["cap_values"] = jnp.asarray(cap_values, jnp.float32)
     acc, qt = _fleet_ref_jit()(
         jnp.asarray(t_exp, jnp.float32),
         jnp.asarray(limit, jnp.float32),
@@ -640,6 +950,7 @@ def _ref_fleet_rows(
         slots=slots,
         queue_depth=queue_depth,
         prestamped=prestamped,
+        **fault_kw,
     )
     C = acc.shape[0]
     if qt is None:

@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import sys
+import warnings
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -182,6 +183,11 @@ class Recommendation:
     profile: PiecewiseConstantRate  # the fitted+blended profile swept
     key: jax.Array  # the sweep key (offline reproduction handle)
     grid: "object"  # the full GridResult the choice was read from
+    # degradation flags (DESIGN.md §15): a tick whose sweep came back
+    # non-finite or whose ingest stalled re-issues the last good advice
+    # instead of acting on garbage, and says so here
+    degraded: bool = False
+    degraded_reason: Optional[str] = None
 
 
 class OnlineWhatIfService:
@@ -233,6 +239,9 @@ class OnlineWhatIfService:
         self._ticks = 0
         self._key = jax.random.key(config.seed)
         self._pending = None  # (PendingSweep-or-GridResult, tick metadata)
+        self._seen = False  # any timestamp ever observed
+        self._warned_unsorted = False  # one-time out-of-order warning
+        self._last_tick_now = None  # stream clock at the previous tick
         self.governor = ThresholdGovernor(
             patience=config.patience, deadband=config.deadband
         )
@@ -243,7 +252,15 @@ class OnlineWhatIfService:
     # ---- ingestion ------------------------------------------------------
 
     def observe(self, timestamps) -> None:
-        """Push a batch of arrival timestamps (ascending stream time)."""
+        """Push a batch of arrival timestamps (stream time).
+
+        Out-of-order stamps *within* a batch are tolerated — the batch is
+        sorted, with a one-time warning (collectors deliver near-sorted
+        feeds; re-sorting silently forever would hide a broken one).
+        NaN/infinite stamps, negative stamps, and duplicates (within the
+        batch or replaying the stream head) are rejected outright: each
+        means the feed is corrupt, not merely jittered.
+        """
         ts = np.asarray(timestamps, np.float64).ravel()
         if len(ts) == 0:
             return
@@ -252,19 +269,37 @@ class OnlineWhatIfService:
             raise ValueError(
                 f"timestamps must be finite; batch[{bad}] = {ts[bad]}"
             )
-        if (np.diff(ts) < 0).any():
-            bad = int(np.flatnonzero(np.diff(ts) < 0)[0]) + 1
+        if (ts < 0).any():
+            bad = int(np.flatnonzero(ts < 0)[0])
             raise ValueError(
-                f"batch must be sorted ascending; batch[{bad}] = {ts[bad]} "
-                f"< batch[{bad - 1}] = {ts[bad - 1]}"
+                f"timestamps must be >= 0; batch[{bad}] = {ts[bad]}"
             )
-        if ts[0] < self._now:
+        if (np.diff(ts) < 0).any():
+            if not self._warned_unsorted:
+                warnings.warn(
+                    "observe() received an out-of-order batch and sorted "
+                    "it; deliver sorted batches to silence this (warned "
+                    "once per service)",
+                    RuntimeWarning,
+                    stacklevel=2,
+                )
+                self._warned_unsorted = True
+            ts = np.sort(ts, kind="stable")
+        if (np.diff(ts) == 0).any():
+            bad = int(np.flatnonzero(np.diff(ts) == 0)[0]) + 1
+            raise ValueError(
+                f"duplicate timestamp in batch: batch[{bad}] = {ts[bad]} "
+                "appears twice; arrival stamps must be distinct"
+            )
+        if self._seen and ts[0] <= self._now:
             raise ValueError(
                 f"batch starts at {ts[0]} but the stream is already at "
-                f"{self._now}; batches must arrive in stream order"
+                f"{self._now}; batches must arrive in stream order "
+                "without duplicating the stream head"
             )
         self._buf = np.concatenate([self._buf, ts])
         self._now = float(ts[-1])
+        self._seen = True
         # rolling window: drop what can never enter an estimate again
         self._buf = self._buf[self._buf >= self._now - self.config.span]
 
@@ -316,6 +351,13 @@ class OnlineWhatIfService:
         steady state.
         """
         cfg = self.config
+        stall = None
+        if self._last_tick_now is not None and self._now <= self._last_tick_now:
+            stall = (
+                "ingest stalled: no arrivals observed since the previous "
+                f"tick (stream clock held at t={self._now})"
+            )
+        self._last_tick_now = self._now
         profile = self.estimate()
         scn = Scenario.of(
             self._base,
@@ -335,7 +377,7 @@ class OnlineWhatIfService:
             deferred=self._deferred,
         )
         TRACE_COUNTS["online_tick"] += _trace_total() - before
-        item = (out, (self._ticks, self._now, profile, sub))
+        item = (out, (self._ticks, self._now, profile, sub, stall))
         self._ticks += 1
         if self._deferred:
             prev, self._pending = self._pending, item
@@ -350,8 +392,32 @@ class OnlineWhatIfService:
         return self._drain(prev)
 
     def _drain(self, item) -> Recommendation:
-        out, (tick, t_now, profile, key) = item
+        out, (tick, t_now, profile, key, stall) = item
         grid = out.result() if hasattr(out, "result") else out
+        reason = stall
+        ok = np.asarray(grid.ok)
+        if reason is None and not ok.all():
+            reason = (
+                f"sweep produced non-finite metrics in {int((~ok).sum())} "
+                f"of {ok.size} grid cell(s)"
+            )
+        if reason is not None:
+            last_good = next(
+                (r for r in reversed(self.history) if not r.degraded), None
+            )
+            if last_good is not None:
+                # hold: re-issue the last healthy advice untouched — the
+                # governor must not be fed a choice read off garbage
+                rec = dataclasses.replace(
+                    last_good,
+                    tick=tick,
+                    t_now=t_now,
+                    degraded=True,
+                    degraded_reason=reason,
+                )
+                self.history.append(rec)
+                return rec
+            # nothing good to hold yet: emit this tick's advice, flagged
         plan: PlanResult = select_threshold(grid, self.config.cold_slo)
         applied = self.governor.update(plan.expiration_threshold)
         rec = Recommendation(
@@ -368,9 +434,60 @@ class OnlineWhatIfService:
             profile=profile,
             key=key,
             grid=grid,
+            degraded=reason is not None,
+            degraded_reason=reason,
         )
         self.history.append(rec)
         return rec
+
+    # ---- checkpoint / restore -------------------------------------------
+
+    def checkpoint(self) -> dict:
+        """Snapshot the mutable service state as plain numpy/python data.
+
+        Covers everything a restarted process needs to continue the
+        stream bit-for-bit: the rolling buffer, stream clock, EMA state,
+        tick counter, RNG key (raw key data) and governor hysteresis.  A
+        pending overlapped tick is deliberately NOT captured — it lives
+        on the device; callers restore and simply tick again.
+        """
+        return {
+            "version": 1,
+            "buf": self._buf.copy(),
+            "now": self._now,
+            "seen": self._seen,
+            "ema": None if self._ema is None else np.asarray(self._ema).copy(),
+            "ticks": self._ticks,
+            "last_tick_now": self._last_tick_now,
+            "key": np.asarray(jax.random.key_data(self._key)).copy(),
+            "governor": {
+                "applied": self.governor.applied,
+                "candidate": self.governor._candidate,
+                "streak": self.governor._streak,
+            },
+        }
+
+    def restore(self, state: dict) -> None:
+        """Restore a :meth:`checkpoint` snapshot (drops any pending
+        overlapped tick; ``history`` is a log and is left alone)."""
+        if state.get("version") != 1:
+            raise ValueError(
+                f"unknown checkpoint version {state.get('version')!r}; "
+                "this service reads version 1"
+            )
+        self._buf = np.asarray(state["buf"], np.float64).copy()
+        self._now = float(state["now"])
+        self._seen = bool(state["seen"])
+        ema = state["ema"]
+        self._ema = None if ema is None else np.asarray(ema, np.float64).copy()
+        self._ticks = int(state["ticks"])
+        self._last_tick_now = state["last_tick_now"]
+        self._key = jax.random.wrap_key_data(jax.numpy.asarray(state["key"]))
+        gov = state["governor"]
+        self.governor.applied = gov["applied"]
+        self.governor._candidate = gov["candidate"]
+        self.governor._streak = gov["streak"]
+        self._pending = None
 
     def offline_equivalent(self, rec: Recommendation):
         """Re-run ``rec``'s sweep offline (synchronously) on the recorded

@@ -25,6 +25,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import numpy as np
@@ -388,10 +389,21 @@ class TestOnlineService:
         svc.observe([1.0, 2.0])
         with pytest.raises(ValueError, match="stream order"):
             svc.observe([0.5])
-        with pytest.raises(ValueError, match="sorted"):
+        # out-of-order *within* a batch is tolerated: sorted, warned once
+        with pytest.warns(RuntimeWarning, match="out-of-order"):
             svc.observe([5.0, 4.0])
+        assert list(svc._buf[-2:]) == [4.0, 5.0]
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # second offense stays silent
+            svc.observe([7.0, 6.0])
         with pytest.raises(ValueError, match="finite"):
             svc.observe([np.nan])
+        with pytest.raises(ValueError, match=">= 0"):
+            svc.observe([-1.0])
+        with pytest.raises(ValueError, match="duplicate"):
+            svc.observe([8.0, 8.0])
+        with pytest.raises(ValueError, match="stream order"):
+            svc.observe([7.0])  # replays the stream head exactly
 
     def test_observe_trace_and_rolling_window_prune(self):
         cfg = small_config(n_bins=2, bin_width=10.0)  # span 20
